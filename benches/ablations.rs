@@ -1,0 +1,103 @@
+//! Ablations (DESIGN.md experiment index, Abl A–D):
+//!
+//! * **A** — coherent vs non-coherent I-cache: the paper blames
+//!   `clear_cache` for the small-payload loss and lists a coherent-I-cache
+//!   machine as future work (§4.4/§5.1); this runs it.
+//! * **B** — auto-registration cache off: every message pays the full
+//!   relink (what the §3.4 hash table saves).
+//! * **C** — AM rendezvous threshold (`UCX_RNDV_THRESH`) sensitivity: the
+//!   position of the AM throughput *step*.
+//! * **D** — code-section size: flush + verify scale with shipped code
+//!   ("the code sent in the ifunc messages dominate the message size").
+//!
+//! Run: `cargo bench --bench ablations` (QUICK=1 for a smoke run).
+
+use two_chains::bench::harness::{BenchConfig, BenchPair};
+use two_chains::bench::{latency, report, throughput};
+use two_chains::ifunc::icache::IcacheConfig;
+use two_chains::ucp::AmParams;
+
+fn lat_series(cfg: &BenchConfig) -> Vec<report::SeriesPoint> {
+    cfg.sizes
+        .iter()
+        .map(|&size| {
+            let pair = BenchPair::new(cfg.clone()).expect("pair");
+            let ifunc = latency::ifunc_pingpong(&pair, size, cfg.pingpong_iters).unwrap();
+            let am = latency::am_pingpong(&pair, size, cfg.pingpong_iters).unwrap();
+            eprint!(".");
+            report::SeriesPoint { size, ifunc, am }
+        })
+        .collect()
+}
+
+fn tput_series(cfg: &BenchConfig) -> Vec<report::SeriesPoint> {
+    cfg.sizes
+        .iter()
+        .map(|&size| {
+            let msgs = cfg.msgs_per_size.min((64 << 20) / size.max(1)).max(50);
+            let pair = BenchPair::new(cfg.clone()).expect("pair");
+            let ifunc = throughput::ifunc_throughput(&pair, size, msgs).unwrap();
+            let am = throughput::am_throughput(&pair, size, msgs).unwrap();
+            eprint!(".");
+            report::SeriesPoint { size, ifunc, am }
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let base = BenchConfig {
+        sizes: if quick {
+            vec![64, 8192]
+        } else {
+            vec![64, 1024, 4096, 8192, 65536, 1 << 20]
+        },
+        pingpong_iters: if quick { 20 } else { 100 },
+        msgs_per_size: if quick { 100 } else { 400 },
+        ..BenchConfig::default()
+    };
+
+    // Abl A — I-cache coherence.
+    for (label, icache) in [
+        ("non-coherent I-cache (paper testbed)", IcacheConfig::non_coherent()),
+        ("coherent I-cache (paper §5.1 future work)", IcacheConfig::coherent()),
+    ] {
+        let cfg = BenchConfig { icache, ..base.clone() };
+        let s = lat_series(&cfg);
+        report::print_series(&format!("Abl A — latency, {label}"), "ns", &s, true);
+    }
+
+    // Abl B — auto-registration cache.
+    for (label, cache) in [("cache on (paper)", true), ("cache off", false)] {
+        let cfg = BenchConfig { cache_enabled: cache, ..base.clone() };
+        let s = lat_series(&cfg);
+        report::print_series(&format!("Abl B — latency, {label}"), "ns", &s, true);
+    }
+
+    // Abl C — rendezvous threshold.
+    for thresh in [1024usize, 2000, 8192, 16384] {
+        let cfg = BenchConfig {
+            am: AmParams { rndv_threshold: thresh, ..base.am },
+            ..base.clone()
+        };
+        let s = tput_series(&cfg);
+        report::print_series(
+            &format!("Abl C — throughput, UCX_RNDV_THRESH={thresh}"),
+            "msg/s",
+            &s,
+            false,
+        );
+    }
+
+    // Abl D — shipped-code size.
+    for pad in [0usize, 64, 512] {
+        let cfg = BenchConfig { code_pad: pad, ..base.clone() };
+        let s = lat_series(&cfg);
+        report::print_series(
+            &format!("Abl D — latency, +{pad} padding instrs (+{} code bytes)", pad * 8),
+            "ns",
+            &s,
+            true,
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! Fig. 3 — ping-pong one-way latency, ifunc vs UCX AM (paper §4.3).
+//!
+//! Sweeps payload sizes 1 B .. 1 MB over the CX-6-calibrated wire model
+//! and prints the paper-style series: latency per transport, ifunc
+//! latency reduction vs AM, and the crossover point.
+//!
+//! Paper shape to reproduce: ifunc up to ~42% slower at small payloads
+//! (code bytes + clear_cache dominate), crossover between 8 KB and 16 KB,
+//! ~35% latency reduction at 1 MB (AM pays rendezvous round-trips and
+//! pipelined GET overheads; the ifunc is one PUT).
+//!
+//! Run: `cargo bench --bench fig3_latency` (QUICK=1 for a CI smoke run).
+
+use two_chains::bench::harness::{BenchConfig, BenchPair};
+use two_chains::bench::{latency, report};
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let cfg = if quick {
+        BenchConfig { sizes: vec![1, 4096, 65536], pingpong_iters: 30, ..BenchConfig::quick() }
+    } else {
+        BenchConfig::default()
+    };
+    eprintln!(
+        "fig3: sweeping {} sizes, {} iters each (wire model {})",
+        cfg.sizes.len(),
+        cfg.pingpong_iters,
+        if cfg.wire.enabled { "on: CX-6" } else { "off" }
+    );
+
+    let mut series = Vec::new();
+    for &size in &cfg.sizes {
+        let pair = BenchPair::new(cfg.clone()).expect("bench pair");
+        let ifunc =
+            latency::ifunc_pingpong(&pair, size, cfg.pingpong_iters).expect("ifunc pingpong");
+        let am = latency::am_pingpong(&pair, size, cfg.pingpong_iters).expect("am pingpong");
+        series.push(report::SeriesPoint { size, ifunc, am });
+        eprint!(".");
+    }
+    eprintln!();
+    report::print_series("Fig. 3 — one-way latency, ifunc vs UCX AM", "ns", &series, true);
+    println!("{}", report::series_json("fig3", &series));
+}

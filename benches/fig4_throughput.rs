@@ -1,0 +1,44 @@
+//! Fig. 4 — message throughput, ifunc vs UCX AM (paper §4.3).
+//!
+//! ifunc protocol: fill the target ring with frames, flush, wait for the
+//! target's consumed-all notification, repeat. AM protocol: stream sends
+//! and flush once (§4.1).
+//!
+//! Paper shape to reproduce: ifunc rate ~81% lower at 1 B; AM protocol
+//! *steps* (short → bcopy → rendezvous) with a sharp falloff at the
+//! 1 KB → 2 KB rendezvous switch, where ifuncs take over (spiking, then
+//! settling to a persistent win at large payloads).
+//!
+//! Run: `cargo bench --bench fig4_throughput` (QUICK=1 for a smoke run).
+
+use two_chains::bench::harness::{BenchConfig, BenchPair};
+use two_chains::bench::{report, throughput};
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let cfg = if quick {
+        BenchConfig { sizes: vec![64, 4096, 65536], msgs_per_size: 200, ..BenchConfig::quick() }
+    } else {
+        BenchConfig::default()
+    };
+    eprintln!(
+        "fig4: sweeping {} sizes, {} msgs each (wire model {})",
+        cfg.sizes.len(),
+        cfg.msgs_per_size,
+        if cfg.wire.enabled { "on: CX-6" } else { "off" }
+    );
+
+    let mut series = Vec::new();
+    for &size in &cfg.sizes {
+        // Cap total moved bytes so the 1 MB point stays fast.
+        let msgs = cfg.msgs_per_size.min((256 << 20) / size.max(1)).max(50);
+        let pair = BenchPair::new(cfg.clone()).expect("bench pair");
+        let ifunc = throughput::ifunc_throughput(&pair, size, msgs).expect("ifunc tput");
+        let am = throughput::am_throughput(&pair, size, msgs).expect("am tput");
+        series.push(report::SeriesPoint { size, ifunc, am });
+        eprint!(".");
+    }
+    eprintln!();
+    report::print_series("Fig. 4 — message throughput, ifunc vs UCX AM", "msg/s", &series, false);
+    println!("{}", report::series_json("fig4", &series));
+}

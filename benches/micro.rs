@@ -1,0 +1,132 @@
+//! Component microbenchmarks — the profile behind the §Perf pass.
+//!
+//! Times each stage of the ifunc hot path in isolation (criterion is
+//! unavailable offline; this uses a median-of-batches timer):
+//! frame assembly, header decode, code-image decode, bytecode verify,
+//! VM dispatch, GOT resolve, fabric put+flush, poll round trip.
+//!
+//! Run: `cargo bench --bench micro`
+
+use std::time::Instant;
+
+use two_chains::fabric::{Fabric, MemPerm, WireConfig};
+use two_chains::ifunc::builtin::CounterIfunc;
+use two_chains::ifunc::message::{CodeImage, Header, IfuncMsg};
+use two_chains::ifunc::{IfuncLibrary, IfuncRing, SenderCursor, SourceArgs, TargetArgs};
+use two_chains::ucp::{Context, ContextConfig, Worker};
+use two_chains::vm;
+
+/// Median ns/op over `batches` batches of `per_batch` iterations.
+fn bench(name: &str, batches: usize, per_batch: usize, mut f: impl FnMut()) {
+    let mut times: Vec<f64> = (0..batches)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..per_batch {
+                f();
+            }
+            t0.elapsed().as_nanos() as f64 / per_batch as f64
+        })
+        .collect();
+    times.sort_by(f64::total_cmp);
+    let med = times[times.len() / 2];
+    let best = times[0];
+    println!("{name:<44} {med:>12.0} ns/op   (best {best:>10.0})");
+}
+
+fn main() {
+    println!("== component microbenchmarks (hot-path stages) ==\n");
+    let lib = CounterIfunc::default();
+    let code = lib.code();
+    let args = SourceArgs::bytes(vec![7u8; 256]);
+
+    // Source-side stages.
+    bench("msg_create (assemble 256B payload frame)", 30, 2000, || {
+        let msg = IfuncMsg::assemble_with("counter", &code, 256, Default::default(), |p| {
+            p.copy_from_slice(args.as_bytes());
+            Ok(256)
+        })
+        .unwrap();
+        std::hint::black_box(msg);
+    });
+
+    let msg = IfuncMsg::assemble("counter", &code, args.as_bytes(), Default::default()).unwrap();
+    bench("header decode + validate", 30, 20000, || {
+        std::hint::black_box(Header::decode(msg.frame()).unwrap());
+    });
+
+    let h = Header::decode(msg.frame()).unwrap().unwrap();
+    let code_bytes = &msg.frame()[h.code_offset as usize..(h.code_offset + h.code_len) as usize];
+    bench("code-image decode", 30, 20000, || {
+        std::hint::black_box(CodeImage::decode(code_bytes).unwrap());
+    });
+
+    let (_, image) = CodeImage::decode(code_bytes).unwrap();
+    bench("bytecode verify (counter, 3 instrs)", 30, 20000, || {
+        std::hint::black_box(vm::verify(&image.vm_code, image.imports.len()).unwrap());
+    });
+
+    let prog = vm::verify(&image.vm_code, image.imports.len()).unwrap();
+    let syms = two_chains::ifunc::Symbols::with_builtins();
+    let got = syms.table().resolve(&image.imports).unwrap();
+    bench("GOT resolve (1 import)", 30, 20000, || {
+        std::hint::black_box(syms.table().resolve(&image.imports).unwrap());
+    });
+
+    let cfg = vm::VmConfig::default();
+    let mut payload = vec![0u8; 256];
+    bench("VM run (counter body)", 30, 20000, || {
+        std::hint::black_box(
+            vm::run(&prog, &got, &mut payload, &mut (), &cfg).unwrap(),
+        );
+    });
+
+    // Fabric stages (wire model off: pure software path).
+    let fabric = Fabric::new(2, WireConfig::off());
+    let mr = fabric.node(1).register(1 << 20, MemPerm::RWX);
+    let qp = fabric.connect(0, 1);
+    for (label, size) in [("64B", 64usize), ("4KB", 4096), ("64KB", 65536)] {
+        let data = vec![0xABu8; size];
+        bench(&format!("fabric put_nbi+flush ({label})"), 20, 2000, || {
+            qp.put_nbi(mr.rkey(), 0, &data).unwrap();
+            qp.flush().unwrap();
+        });
+    }
+
+    // Full poll round trip (send + poll execute), software-only.
+    let src = Context::new(fabric.node(0), ContextConfig::default()).unwrap();
+    let dst = Context::new(fabric.node(1), ContextConfig::default()).unwrap();
+    src.library_dir().install(Box::new(CounterIfunc::default()));
+    let ws = Worker::new(&src);
+    let wd = Worker::new(&dst);
+    let ep = ws.connect(&wd).unwrap();
+    let mut ring = IfuncRing::new(&dst, 1 << 20).unwrap();
+    let mut cursor = SenderCursor::new(ring.size());
+    let handle = src.register_ifunc("counter").unwrap();
+    let m = handle.msg_create(&SourceArgs::bytes(vec![0u8; 64])).unwrap();
+    let mut targs = TargetArgs::none();
+    bench("ifunc send+flush+poll+execute (64B)", 20, 2000, || {
+        ep.ifunc_msg_send_cursor(&m, &mut cursor, ring.rkey()).unwrap();
+        ep.flush().unwrap();
+        dst.poll_ifunc_blocking(&mut ring, &mut targs).unwrap();
+    });
+
+    // AM counterpart.
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    let hits = Arc::new(AtomicU64::new(0));
+    let h2 = hits.clone();
+    wd.set_am_handler(9, move |_, _| {
+        h2.fetch_add(1, Ordering::Relaxed);
+    });
+    let data = vec![0u8; 64];
+    bench("AM send+flush+progress (64B eager)", 20, 2000, || {
+        let before = hits.load(Ordering::Relaxed);
+        ep.am_send(9, &data).unwrap();
+        ep.flush().unwrap();
+        while hits.load(Ordering::Relaxed) == before {
+            wd.progress();
+        }
+    });
+
+    println!("\n(see EXPERIMENTS.md §Perf for the before/after log)");
+}

@@ -1,0 +1,76 @@
+"""AOT lowering: JAX/Pallas (L2+L1) → HLO text artifacts for the rust
+runtime.
+
+For every entry in `model.ARTIFACTS`, emits
+  artifacts/<name>.hlo.txt   — HLO text of the jitted function
+  artifacts/<name>.json      — manifest (shapes, dtype, description)
+
+HLO *text*, not `lowered.compile().serialize()`: jax >= 0.5 emits protos
+with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser on the rust side
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README).
+
+Run via `make artifacts` (a no-op when outputs are newer than inputs).
+
+Usage:
+    python -m compile.aot [--out-dir DIR] [--only NAME[,NAME...]]
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (return_tuple=True, so
+    the rust side always unwraps a 1-tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str, out_dir: pathlib.Path) -> dict:
+    fn, n_in, n_out, desc = model.ARTIFACTS[name]
+    spec = jax.ShapeDtypeStruct((n_in,), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    (out_dir / f"{name}.hlo.txt").write_text(text)
+    manifest = {
+        "name": name,
+        "input_shape": [n_in],
+        "output_shape": [n_out],
+        "dtype": "f32",
+        "description": desc,
+    }
+    (out_dir / f"{name}.json").write_text(json.dumps(manifest, indent=1))
+    return {"name": name, "hlo_bytes": len(text), **manifest}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--only", default="", help="comma-separated artifact names")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    names = [n for n in args.only.split(",") if n] or list(model.ARTIFACTS)
+    for name in names:
+        info = lower_artifact(name, out_dir)
+        print(
+            f"  {name:10s}  f32[{info['input_shape'][0]}] -> "
+            f"f32[{info['output_shape'][0]}]  ({info['hlo_bytes']} bytes HLO)"
+        )
+    print(f"wrote {len(names)} artifacts to {out_dir.resolve()}")
+
+
+if __name__ == "__main__":
+    main()

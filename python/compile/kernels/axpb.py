@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: blocked elementwise a*x + b*y combine.
+
+The graph-analytics example's rank update: new_rank = a*rank + b*contrib,
+the elementwise combine step of damped iterative propagation (PageRank
+style). Purely memory-bound; blocks are 1-D VMEM tiles.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 2048
+
+
+def _axpb_kernel(a, b, x_ref, y_ref, o_ref):
+    o_ref[...] = a * x_ref[...] + b * y_ref[...]
+
+
+def combine(x, y, a=0.85, b=0.15):
+    """o = a*x + b*y over 1-D f32 arrays (length multiple of BLOCK)."""
+    if x.shape != y.shape or x.ndim != 1 or x.shape[0] % BLOCK != 0:
+        raise ValueError(f"bad shapes {x.shape} / {y.shape}")
+    n = x.shape[0] // BLOCK
+    import functools
+
+    # a/b are baked in as *python* floats: static constants in the kernel,
+    # not captured tracers.
+    return pl.pallas_call(
+        functools.partial(_axpb_kernel, float(a), float(b)),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, y)

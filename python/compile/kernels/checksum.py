@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: Fletcher-style f32 checksum.
+
+Produces [s1, s2] with s1 = sum(x) and s2 = sum((i+1) * x[i]) — the float
+analog of a Fletcher checksum, position-sensitive so reorderings are
+caught. The grid walks BLOCK-sized VMEM tiles and accumulates into a
+2-element output block that every grid step revisits (the standard Pallas
+reduction pattern; the paper's db example would run this after decode to
+validate the record).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _fletcher_kernel(x_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    base = (step * BLOCK).astype(jnp.float32)
+    idx = base + jnp.arange(1, BLOCK + 1, dtype=jnp.float32)
+    o_ref[...] += jnp.array(
+        [jnp.sum(x), jnp.sum(idx * x)], dtype=o_ref.dtype
+    )
+
+
+def fletcher(x):
+    """Checksum a 1-D f32 signal; returns f32[2] = [s1, s2]."""
+    if x.ndim != 1 or x.shape[0] % BLOCK != 0:
+        raise ValueError(f"length must be a multiple of {BLOCK}, got {x.shape}")
+    n = x.shape[0] // BLOCK
+    return pl.pallas_call(
+        _fletcher_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), x.dtype),
+        interpret=True,
+    )(x)

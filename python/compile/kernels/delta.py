@@ -1,0 +1,59 @@
+"""L1 Pallas kernels: frame-local delta codec.
+
+The paper's usage example (§3.2) ships compressed voice recordings and
+decodes them on the target. Our codec is a frame-local delta transform —
+the standard first stage of waveform compressors: the signal is split into
+independent FRAME-sample frames; within a frame, sample i stores the
+difference from sample i-1. Frames are independent, so the Pallas grid
+parallelizes over them and each block is a clean VMEM tile.
+
+VMEM budget per grid step: in-block + out-block = 2 * FRAME * 4 B = 8 KiB,
+far under the ~16 MiB VMEM of a TPU core; FRAME=1024 keeps the lane
+dimension a multiple of 128 for the VPU (DESIGN.md §10).
+
+All kernels run under interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness (vs `ref.py`) is what the pytest
+suite asserts.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Samples per codec frame (and per Pallas block).
+FRAME = 1024
+
+
+def _encode_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    shifted = jnp.concatenate([jnp.zeros((1,), x.dtype), x[:-1]])
+    o_ref[...] = x - shifted
+
+
+def _decode_kernel(y_ref, o_ref):
+    # Inverse of the delta transform: prefix sum within the frame.
+    o_ref[...] = jnp.cumsum(y_ref[...])
+
+
+def _frames_call(kernel, x):
+    if x.ndim != 1 or x.shape[0] % FRAME != 0:
+        raise ValueError(f"signal length must be a multiple of {FRAME}, got {x.shape}")
+    n_frames = x.shape[0] // FRAME
+    return pl.pallas_call(
+        kernel,
+        grid=(n_frames,),
+        in_specs=[pl.BlockSpec((FRAME,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((FRAME,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def encode_frames(x):
+    """Delta-encode a 1-D f32 signal, frame by frame."""
+    return _frames_call(_encode_kernel, x)
+
+
+def decode_frames(y):
+    """Invert :func:`encode_frames`."""
+    return _frames_call(_decode_kernel, y)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: tiled matmul — the compute-offload workload.
+
+The paper's vision (§1) dispatches user compute to DPUs/CSDs; the
+canonical dense payload is a GEMM. Classic three-axis tiling: grid
+(M/bm, N/bn, K/bk), A tiles (bm, bk), B tiles (bk, bn), accumulation into
+a revisited (bm, bn) output tile.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): 128x128 tiles are exactly
+MXU-systolic-array shaped; VMEM per step = (bm*bk + bk*bn + bm*bn) * 4 B
+= 192 KiB at 128³ — comfortably resident, leaving room for double
+buffering. On real hardware the dtype would be bf16 into an f32
+accumulator; interpret-mode keeps f32 throughout for exactness against
+the reference.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = BN = BK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul(a, b):
+    """C = A @ B for f32 matrices with dims divisible by 128."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2 or m % BM or n % BN or k % BK:
+        raise ValueError(f"shapes {a.shape} @ {b.shape} must tile by {BM}")
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // BM, n // BN, k // BK),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((BK, BN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernels: mu-law companding (G.711-style).
+
+The actual lossy stage of the voice-record codec: mu-law compresses the
+dynamic range of each sample (the classic telephony companding curve),
+which is what makes the delta-coded record quantizable. Elementwise and
+memory-bound; blocked over 1-D VMEM tiles.
+
+    encode:  y = sign(x) * ln(1 + mu*|x|) / ln(1 + mu)      x in [-1, 1]
+    decode:  x = sign(y) * ((1 + mu)^|y| - 1) / mu
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+MU = 255.0
+
+
+def _encode_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.sign(x) * jnp.log1p(MU * jnp.abs(x)) / jnp.log1p(MU)
+
+
+def _decode_kernel(y_ref, o_ref):
+    y = y_ref[...]
+    o_ref[...] = jnp.sign(y) * (jnp.exp(jnp.abs(y) * jnp.log1p(MU)) - 1.0) / MU
+
+
+def _call(kernel, x):
+    if x.ndim != 1 or x.shape[0] % BLOCK != 0:
+        raise ValueError(f"length must be a multiple of {BLOCK}, got {x.shape}")
+    return pl.pallas_call(
+        kernel,
+        grid=(x.shape[0] // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def encode(x):
+    """Compand a [-1, 1] signal to mu-law domain."""
+    return _call(_encode_kernel, x)
+
+
+def decode(y):
+    """Expand a mu-law signal back to linear."""
+    return _call(_decode_kernel, y)

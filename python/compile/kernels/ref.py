@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+The pytest suite asserts `assert_allclose(kernel(x), ref(x))` — this file
+is the correctness ground truth (no Pallas, no grids, just math).
+"""
+
+import jax.numpy as jnp
+
+from . import delta as _delta
+
+
+def delta_encode(x):
+    """Frame-local delta: within each FRAME chunk, y[0]=x[0], y[i]=x[i]-x[i-1]."""
+    f = _delta.FRAME
+    xs = x.reshape(-1, f)
+    shifted = jnp.concatenate([jnp.zeros((xs.shape[0], 1), x.dtype), xs[:, :-1]], axis=1)
+    return (xs - shifted).reshape(-1)
+
+
+def delta_decode(y):
+    """Frame-local inverse: per-frame prefix sum."""
+    f = _delta.FRAME
+    return jnp.cumsum(y.reshape(-1, f), axis=1).reshape(-1)
+
+
+def fletcher(x):
+    """[sum(x), sum((i+1) * x[i])] as f32[2]."""
+    idx = jnp.arange(1, x.shape[0] + 1, dtype=jnp.float32)
+    return jnp.stack([jnp.sum(x), jnp.sum(idx * x)])
+
+
+def matmul(a, b):
+    return a @ b
+
+
+def mulaw_encode(x, mu=255.0):
+    return jnp.sign(x) * jnp.log1p(mu * jnp.abs(x)) / jnp.log1p(mu)
+
+
+def mulaw_decode(y, mu=255.0):
+    return jnp.sign(y) * (jnp.exp(jnp.abs(y) * jnp.log1p(mu)) - 1.0) / mu
+
+
+def combine(x, y, a=0.85, b=0.15):
+    # Same weak-typed python-float semantics as the kernel (which bakes
+    # a/b in as static python floats).
+    return float(a) * x + float(b) * y

@@ -1,0 +1,100 @@
+"""L2 — the JAX compute graphs shipped inside ifunc messages.
+
+Every function here takes ONE flat f32 vector and returns a 1-tuple of one
+flat f32 vector: the calling convention the rust runtime's `xla_exec` host
+symbol implements (`runtime/mod.rs`). Internal reshapes (e.g. packing two
+matrices into one flat payload) happen here, so the rust side never needs
+shape metadata beyond the manifest's element counts.
+
+These graphs call the L1 Pallas kernels; `aot.py` lowers each to HLO text
+once at build time. Python never runs at request time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import axpb, checksum, delta, gemm, mulaw
+
+# Canonical record length for the codec/db workloads (4 codec frames).
+SIGNAL_N = 4096
+# GEMM offload matrix edge (two 256x256 operands in one payload).
+GEMM_N = 256
+# Graph-combine vector length.
+GRAPH_N = 8192
+
+
+def delta_enc(x):
+    """Encode a SIGNAL_N-sample record (source side of Listing 1.3)."""
+    return (delta.encode_frames(x),)
+
+
+def delta_dec(x):
+    """Decode a SIGNAL_N-sample record (target side of Listing 1.3)."""
+    return (delta.decode_frames(x),)
+
+
+def fletcher(x):
+    """Checksum a SIGNAL_N-sample record → f32[2]."""
+    return (checksum.fletcher(x),)
+
+
+def decode_insert(x):
+    """The full target-side pipeline of the paper's db example: decode the
+    delta-coded record, then append its Fletcher checksum.
+
+    Output layout: f32[SIGNAL_N + 2] = [decoded..., s1, s2]. One fused HLO
+    module — XLA fuses the codec and checksum so the record is read once.
+    """
+    decoded = delta.decode_frames(x)
+    chk = checksum.fletcher(decoded)
+    return (jnp.concatenate([decoded, chk]),)
+
+
+def voice_enc(x):
+    """Full voice-codec source pipeline: mu-law compand, then frame-local
+    delta — the lossy + decorrelation stages of the paper's paq8px analog,
+    fused into one HLO module."""
+    return (delta.encode_frames(mulaw.encode(x)),)
+
+
+def voice_dec(x):
+    """Inverse pipeline: delta decode, then mu-law expand."""
+    return (mulaw.decode(delta.decode_frames(x)),)
+
+
+def gemm256(x):
+    """Offloaded GEMM: payload packs A then B (each GEMM_N x GEMM_N)."""
+    n = GEMM_N
+    a = x[: n * n].reshape(n, n)
+    b = x[n * n :].reshape(n, n)
+    return (gemm.matmul(a, b).reshape(-1),)
+
+
+def graph_combine(x):
+    """Damped rank update: payload packs rank then contrib (GRAPH_N each);
+    output = 0.85*contrib + 0.15*rank (PageRank-style combine)."""
+    rank = x[:GRAPH_N]
+    contrib = x[GRAPH_N:]
+    return (axpb.combine(contrib, rank, a=0.85, b=0.15),)
+
+
+# Artifact registry: name -> (fn, input_elems, output_elems, description).
+ARTIFACTS = {
+    "delta_enc": (delta_enc, SIGNAL_N, SIGNAL_N, "frame-local delta encode"),
+    "delta_dec": (delta_dec, SIGNAL_N, SIGNAL_N, "frame-local delta decode"),
+    "fletcher": (fletcher, SIGNAL_N, 2, "Fletcher-style checksum"),
+    "dbdec": (
+        decode_insert,
+        SIGNAL_N,
+        SIGNAL_N + 2,
+        "decode + checksum pipeline (paper db example)",
+    ),
+    "gemm256": (gemm256, 2 * GEMM_N * GEMM_N, GEMM_N * GEMM_N, "tiled 256^2 GEMM offload"),
+    "voice_enc": (voice_enc, SIGNAL_N, SIGNAL_N, "mu-law + delta voice encoder"),
+    "voice_dec": (voice_dec, SIGNAL_N, SIGNAL_N, "delta + mu-law voice decoder"),
+    "graphcmb": (
+        graph_combine,
+        2 * GRAPH_N,
+        GRAPH_N,
+        "damped rank combine for graph analytics",
+    ),
+}

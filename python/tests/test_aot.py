@@ -1,0 +1,51 @@
+"""AOT path: lowering emits loadable HLO text + consistent manifests."""
+
+import json
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    infos = {name: aot.lower_artifact(name, out) for name in model.ARTIFACTS}
+    return out, infos
+
+
+def test_all_artifacts_lower(artifacts):
+    out, infos = artifacts
+    for name in model.ARTIFACTS:
+        hlo = (out / f"{name}.hlo.txt").read_text()
+        assert hlo.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in hlo
+        manifest = json.loads((out / f"{name}.json").read_text())
+        assert manifest["name"] == name
+        assert manifest["dtype"] == "f32"
+
+
+def test_manifest_matches_registry(artifacts):
+    _, infos = artifacts
+    for name, (_, n_in, n_out, _) in model.ARTIFACTS.items():
+        assert infos[name]["input_shape"] == [n_in]
+        assert infos[name]["output_shape"] == [n_out]
+
+
+def test_hlo_entry_signature_is_flat_f32(artifacts):
+    out, _ = artifacts
+    for name, (_, n_in, n_out, _) in model.ARTIFACTS.items():
+        hlo = (out / f"{name}.hlo.txt").read_text()
+        # Entry takes f32[n_in] and returns a tuple containing f32[n_out].
+        assert f"f32[{n_in}]" in hlo, name
+        assert f"f32[{n_out}]" in hlo, name
+
+
+def test_pallas_lowering_is_interpreted(artifacts):
+    # interpret=True must leave no Mosaic/TPU custom-calls in the HLO —
+    # the rust CPU PJRT client could not execute those.
+    out, _ = artifacts
+    for name in model.ARTIFACTS:
+        hlo = (out / f"{name}.hlo.txt").read_text()
+        assert "tpu_custom_call" not in hlo, name
+        assert "mosaic" not in hlo.lower(), name

@@ -1,0 +1,169 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (multiples of the block sizes) and value
+distributions; fixed examples pin the edge cases.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import axpb, checksum, delta, gemm, mulaw, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _signal(n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(n, dtype=np.float32))
+
+
+# ---------------------------------------------------------------- delta
+
+@settings(**SETTINGS)
+@given(frames=st.integers(1, 8), seed=st.integers(0, 2**32 - 1))
+def test_delta_encode_matches_ref(frames, seed):
+    x = _signal(frames * delta.FRAME, seed)
+    np.testing.assert_allclose(delta.encode_frames(x), ref.delta_encode(x), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(frames=st.integers(1, 8), seed=st.integers(0, 2**32 - 1))
+def test_delta_decode_matches_ref(frames, seed):
+    y = _signal(frames * delta.FRAME, seed)
+    np.testing.assert_allclose(delta.decode_frames(y), ref.delta_decode(y), rtol=1e-5, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(frames=st.integers(1, 4), seed=st.integers(0, 2**32 - 1))
+def test_delta_roundtrip_is_identity(frames, seed):
+    x = _signal(frames * delta.FRAME, seed)
+    back = delta.decode_frames(delta.encode_frames(x))
+    np.testing.assert_allclose(back, x, rtol=1e-4, atol=1e-4)
+
+
+def test_delta_frames_are_independent():
+    # Changing frame 1 must not affect frame 0's encoding.
+    x = _signal(2 * delta.FRAME, 1)
+    y = x.at[delta.FRAME + 7].add(100.0)
+    ex, ey = delta.encode_frames(x), delta.encode_frames(y)
+    np.testing.assert_array_equal(ex[: delta.FRAME], ey[: delta.FRAME])
+
+
+def test_delta_rejects_ragged_length():
+    with pytest.raises(ValueError):
+        delta.encode_frames(jnp.zeros(delta.FRAME + 1, jnp.float32))
+
+
+def test_delta_constant_signal():
+    x = jnp.full((delta.FRAME,), 3.0, jnp.float32)
+    e = delta.encode_frames(x)
+    assert float(e[0]) == 3.0
+    np.testing.assert_allclose(e[1:], 0.0)
+
+
+# ------------------------------------------------------------- checksum
+
+@settings(**SETTINGS)
+@given(blocks=st.integers(1, 8), seed=st.integers(0, 2**32 - 1))
+def test_fletcher_matches_ref(blocks, seed):
+    x = _signal(blocks * checksum.BLOCK, seed)
+    np.testing.assert_allclose(checksum.fletcher(x), ref.fletcher(x), rtol=2e-4)
+
+
+def test_fletcher_detects_reorder():
+    x = _signal(checksum.BLOCK, 3)
+    y = jnp.concatenate([x[1:], x[:1]])
+    assert not np.allclose(checksum.fletcher(x)[1], checksum.fletcher(y)[1])
+
+
+def test_fletcher_zero_signal():
+    np.testing.assert_array_equal(
+        checksum.fletcher(jnp.zeros(checksum.BLOCK, jnp.float32)), jnp.zeros(2)
+    )
+
+
+# ----------------------------------------------------------------- gemm
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([128, 256]),
+    n=st.sampled_from([128, 256]),
+    k=st.sampled_from([128, 256, 384]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_gemm_matches_ref(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, k), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal((k, n), dtype=np.float32))
+    np.testing.assert_allclose(gemm.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-3)
+
+
+def test_gemm_identity():
+    eye = jnp.eye(128, dtype=jnp.float32)
+    a = _signal(128 * 128, 9).reshape(128, 128)
+    np.testing.assert_allclose(gemm.matmul(a, eye), a, rtol=1e-6)
+
+
+def test_gemm_rejects_untiled_shapes():
+    with pytest.raises(ValueError):
+        gemm.matmul(jnp.zeros((100, 128), jnp.float32), jnp.zeros((128, 128), jnp.float32))
+
+
+# ----------------------------------------------------------------- axpb
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.integers(1, 4),
+    a=st.floats(0.0, 1.0, width=32),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_combine_matches_ref(blocks, a, seed):
+    x = _signal(blocks * axpb.BLOCK, seed)
+    y = _signal(blocks * axpb.BLOCK, seed ^ 0xFFFF)
+    np.testing.assert_allclose(
+        axpb.combine(x, y, a=a, b=1.0 - a),
+        ref.combine(x, y, a=a, b=1.0 - a),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------- mulaw
+
+@settings(**SETTINGS)
+@given(blocks=st.integers(1, 4), seed=st.integers(0, 2**32 - 1))
+def test_mulaw_encode_matches_ref(blocks, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, blocks * mulaw.BLOCK).astype(np.float32))
+    np.testing.assert_allclose(mulaw.encode(x), ref.mulaw_encode(x), rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(blocks=st.integers(1, 4), seed=st.integers(0, 2**32 - 1))
+def test_mulaw_roundtrip(blocks, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, blocks * mulaw.BLOCK).astype(np.float32))
+    np.testing.assert_allclose(mulaw.decode(mulaw.encode(x)), x, rtol=1e-3, atol=1e-4)
+
+
+def test_mulaw_compands_dynamic_range():
+    # Small amplitudes are expanded relative to large ones: |enc(0.01)| /
+    # 0.01 must exceed |enc(0.9)| / 0.9.
+    x = jnp.zeros(mulaw.BLOCK, jnp.float32).at[0].set(0.01).at[1].set(0.9)
+    y = mulaw.encode(x)
+    assert float(y[0]) / 0.01 > float(y[1]) / 0.9
+
+
+def test_mulaw_odd_symmetry():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.uniform(0, 1, mulaw.BLOCK).astype(np.float32))
+    np.testing.assert_allclose(mulaw.encode(-x), -mulaw.encode(x), rtol=1e-6)
+
+
+def test_combine_rejects_mismatched_shapes():
+    with pytest.raises(ValueError):
+        axpb.combine(
+            jnp.zeros(axpb.BLOCK, jnp.float32), jnp.zeros(2 * axpb.BLOCK, jnp.float32)
+        )

@@ -1,0 +1,61 @@
+"""L2 correctness: the flat-f32 model graphs behave and compose."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _vec(n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(n, dtype=np.float32))
+
+
+def test_artifact_registry_shapes():
+    for name, (fn, n_in, n_out, _) in model.ARTIFACTS.items():
+        out = fn(_vec(n_in, 42))
+        assert isinstance(out, tuple) and len(out) == 1, name
+        assert out[0].shape == (n_out,), f"{name}: {out[0].shape} != ({n_out},)"
+        assert out[0].dtype == jnp.float32, name
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_enc_then_dbdec_recovers_record(seed):
+    x = _vec(model.SIGNAL_N, seed)
+    (encoded,) = model.delta_enc(x)
+    (out,) = model.decode_insert(encoded)
+    decoded, chk = out[: model.SIGNAL_N], out[model.SIGNAL_N :]
+    np.testing.assert_allclose(decoded, x, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(chk, ref.fletcher(decoded), rtol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_voice_codec_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-0.95, 0.95, model.SIGNAL_N).astype(np.float32))
+    (enc,) = model.voice_enc(x)
+    (dec,) = model.voice_dec(enc)
+    np.testing.assert_allclose(dec, x, rtol=5e-3, atol=5e-4)
+
+
+def test_gemm256_packing():
+    n = model.GEMM_N
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n), dtype=np.float32)
+    b = rng.standard_normal((n, n), dtype=np.float32)
+    flat = jnp.asarray(np.concatenate([a.reshape(-1), b.reshape(-1)]))
+    (out,) = model.gemm256(flat)
+    np.testing.assert_allclose(out.reshape(n, n), a @ b, rtol=1e-4, atol=1e-3)
+
+
+def test_graph_combine_damping():
+    n = model.GRAPH_N
+    rank = jnp.ones(n, jnp.float32)
+    contrib = jnp.full((n,), 2.0, jnp.float32)
+    flat = jnp.concatenate([rank, contrib])
+    (out,) = model.graph_combine(flat)
+    np.testing.assert_allclose(out, 0.85 * 2.0 + 0.15 * 1.0, rtol=1e-6)

@@ -1,0 +1,114 @@
+//! Shared benchmark scaffolding: the simulated two-server testbed.
+//!
+//! `BenchPair` stands in for the paper's §4.2 platform: two machines
+//! (fabric nodes) connected back-to-back, each with a context + worker,
+//! endpoints in both directions, and — for the ifunc transport — an
+//! RWX ring on each side with the counter ifunc installed.
+
+use std::sync::Arc;
+
+use crate::fabric::{Fabric, MemPerm, MemoryRegion, WireConfig};
+use crate::ifunc::builtin::CounterIfunc;
+use crate::ifunc::icache::IcacheConfig;
+use crate::ucp::{AmParams, Context, ContextConfig, Endpoint, Worker};
+use crate::Result;
+
+/// Which transport a run exercises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchMode {
+    /// Injected functions over one-sided puts (the paper's contribution).
+    Ifunc,
+    /// UCX-style active messages (the baseline).
+    Am,
+    /// ifuncs over the AM transport (§5.1 future work, ablation).
+    IfuncAm,
+}
+
+/// Bench-wide configuration (the knobs the ablations sweep).
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub wire: WireConfig,
+    pub am: AmParams,
+    pub icache: IcacheConfig,
+    /// Auto-registration cache on (paper) or off (Abl B).
+    pub cache_enabled: bool,
+    /// Extra padding instructions in the counter ifunc's code section.
+    pub code_pad: usize,
+    /// ifunc ring bytes per direction.
+    pub ring_bytes: usize,
+    /// Payload sizes to sweep (bytes).
+    pub sizes: Vec<usize>,
+    /// Ping-pong iterations per size (plus warmup).
+    pub pingpong_iters: usize,
+    /// Messages per throughput measurement at each size.
+    pub msgs_per_size: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            wire: WireConfig::connectx6(),
+            am: AmParams::default(),
+            icache: IcacheConfig::non_coherent(),
+            cache_enabled: true,
+            code_pad: 0,
+            ring_bytes: 8 << 20,
+            // The paper sweeps 1 B .. 1 MB in powers of two.
+            sizes: (0..=20).map(|p| 1usize << p).collect(),
+            pingpong_iters: 200,
+            msgs_per_size: 1000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A fast configuration for CI / tests (no wire model, short sweeps).
+    pub fn quick() -> Self {
+        BenchConfig {
+            wire: WireConfig::off(),
+            sizes: vec![1, 1024, 65536],
+            pingpong_iters: 20,
+            msgs_per_size: 50,
+            ..Default::default()
+        }
+    }
+
+    fn context_config(&self) -> ContextConfig {
+        ContextConfig { am: self.am, icache: self.icache, ..Default::default() }
+    }
+}
+
+/// The two-server testbed.
+pub struct BenchPair {
+    pub fabric: Arc<Fabric>,
+    pub src: Arc<Context>,
+    pub dst: Arc<Context>,
+    pub w_src: Arc<Worker>,
+    pub w_dst: Arc<Worker>,
+    /// src → dst endpoint.
+    pub ep: Arc<Endpoint>,
+    /// dst → src endpoint (pong direction, notifications).
+    pub ep_back: Arc<Endpoint>,
+    /// Source-side notification word the target writes round completions to.
+    pub notify: Arc<MemoryRegion>,
+    pub config: BenchConfig,
+}
+
+impl BenchPair {
+    pub fn new(config: BenchConfig) -> Result<Self> {
+        let fabric = Fabric::new(2, config.wire);
+        let src = Context::new(fabric.node(0), config.context_config())?;
+        let dst = Context::new(fabric.node(1), config.context_config())?;
+        src.ifunc_cache().set_enabled(config.cache_enabled);
+        dst.ifunc_cache().set_enabled(config.cache_enabled);
+        // Both sides can send the counter ifunc (ping-pong needs both).
+        src.library_dir().install(Box::new(CounterIfunc::with_code_padding(config.code_pad)));
+        dst.library_dir().install(Box::new(CounterIfunc::with_code_padding(config.code_pad)));
+        let w_src = Worker::new(&src);
+        let w_dst = Worker::new(&dst);
+        let ep = w_src.connect(&w_dst)?;
+        let ep_back = w_dst.connect(&w_src)?;
+        let notify = src.mem_map(64, MemPerm::RWX);
+        Ok(BenchPair { fabric, src, dst, w_src, w_dst, ep, ep_back, notify, config })
+    }
+}

@@ -1,0 +1,125 @@
+//! Fig. 3 — ping-pong one-way latency, ifunc vs UCX AM.
+//!
+//! "The ping-pong benchmark is implemented using the classical approach:
+//! each process sends a message, flushes the endpoint and waits for the
+//! other process to reply before continuing this process." (§4.1)
+//!
+//! In a ping-pong only one side is ever active, so both "processes" run
+//! on one thread here — on the single-core bench box this removes
+//! scheduler noise entirely; the measured time is the software path plus
+//! the modeled wire/I-cache costs. One-way latency = round-trip / 2.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::ifunc::{IfuncRing, SenderCursor, SourceArgs, TargetArgs};
+use crate::Result;
+
+use super::harness::BenchPair;
+
+/// Median of the round-trip samples — robust against single-core
+/// scheduler outliers that a mean would smear across the series.
+fn median(samples: &mut [f64]) -> f64 {
+    samples.sort_by(f64::total_cmp);
+    samples[samples.len() / 2]
+}
+
+/// One-way ifunc latency for `payload` bytes, in nanoseconds.
+pub fn ifunc_pingpong(pair: &BenchPair, payload: usize, iters: usize) -> Result<f64> {
+    let warmup = (iters / 10).max(2);
+    let mut ring_a = IfuncRing::new(&pair.src, pair.config.ring_bytes)?;
+    let mut ring_b = IfuncRing::new(&pair.dst, pair.config.ring_bytes)?;
+
+    let h_a = pair.src.register_ifunc("counter")?;
+    let h_b = pair.dst.register_ifunc("counter")?;
+    let msg_a = h_a.msg_create(&SourceArgs::bytes(vec![0x5A; payload]))?;
+    let msg_b = h_b.msg_create(&SourceArgs::bytes(vec![0xA5; payload]))?;
+
+    let mut cursor_b = SenderCursor::new(ring_b.size()); // A writes into B
+    let mut cursor_a = SenderCursor::new(ring_a.size()); // B writes into A
+    let mut args_a = TargetArgs::none();
+    let mut args_b = TargetArgs::none();
+
+    let mut samples = Vec::with_capacity(iters);
+    for i in 0..(warmup + iters) {
+        let t0 = Instant::now();
+        // A: ping.
+        pair.ep.ifunc_msg_send_cursor(&msg_a, &mut cursor_b, ring_b.rkey())?;
+        pair.ep.flush()?;
+        // B: receive + execute, then pong.
+        pair.dst.poll_ifunc_blocking(&mut ring_b, &mut args_b)?;
+        pair.ep_back.ifunc_msg_send_cursor(&msg_b, &mut cursor_a, ring_a.rkey())?;
+        pair.ep_back.flush()?;
+        // A: receive + execute.
+        pair.src.poll_ifunc_blocking(&mut ring_a, &mut args_a)?;
+        if i >= warmup {
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+    }
+    Ok(median(&mut samples) / 2.0)
+}
+
+/// One-way AM latency for `payload` bytes, in nanoseconds.
+pub fn am_pingpong(pair: &BenchPair, payload: usize, iters: usize) -> Result<f64> {
+    let warmup = (iters / 10).max(2);
+    const PING: u16 = 11;
+    const PONG: u16 = 12;
+
+    // B echoes every ping (handler registered at the target — the AM
+    // coupling the paper contrasts with).
+    let ep_back = pair.ep_back.clone();
+    pair.w_dst.set_am_handler(PING, move |_, data| {
+        ep_back.am_send(PONG, data).expect("pong send");
+    });
+    let pongs = Arc::new(AtomicU64::new(0));
+    let p = pongs.clone();
+    pair.w_src.set_am_handler(PONG, move |_, _| {
+        p.fetch_add(1, Ordering::Relaxed);
+    });
+
+    let ball = vec![0x42u8; payload];
+    let mut samples = Vec::with_capacity(iters);
+    for i in 0..(warmup + iters) {
+        let t0 = Instant::now();
+        let before = pongs.load(Ordering::Relaxed);
+        pair.ep.am_send(PING, &ball)?;
+        // B progresses (executes the echo handler), then A collects the
+        // pong; loop covers the engine-mode case where delivery lags.
+        while pongs.load(Ordering::Relaxed) == before {
+            pair.w_dst.progress();
+            pair.w_src.progress();
+        }
+        if i >= warmup {
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+    }
+    pair.ep.flush()?;
+    pair.ep_back.flush()?;
+    Ok(median(&mut samples) / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::harness::BenchConfig;
+
+    #[test]
+    fn ifunc_pingpong_runs() {
+        let pair = BenchPair::new(BenchConfig::quick()).unwrap();
+        let ns = ifunc_pingpong(&pair, 64, 10).unwrap();
+        assert!(ns > 0.0);
+        // Both sides executed ifuncs.
+        assert!(pair.src.symbols().counter_value() > 0);
+        assert!(pair.dst.symbols().counter_value() > 0);
+    }
+
+    #[test]
+    fn am_pingpong_runs_all_protocols() {
+        let pair = BenchPair::new(BenchConfig::quick()).unwrap();
+        for size in [1usize, 1024, 65536] {
+            let ns = am_pingpong(&pair, size, 8).unwrap();
+            assert!(ns > 0.0, "size {size}");
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Benchmark harness regenerating the paper's evaluation (§4).
+
+pub mod harness;
+pub mod latency;
+pub mod report;
+pub mod throughput;
+
+pub use harness::{BenchConfig, BenchMode, BenchPair};
+pub use report::{print_series, Crossover, SeriesPoint};

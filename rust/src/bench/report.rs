@@ -1,0 +1,146 @@
+//! Paper-style series reporting: the rows behind Fig. 3 / Fig. 4.
+
+/// One swept payload size: the two transports' measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct SeriesPoint {
+    pub size: usize,
+    /// ifunc measurement (ns for latency, msg/s for throughput).
+    pub ifunc: f64,
+    /// UCX AM measurement.
+    pub am: f64,
+}
+
+impl SeriesPoint {
+    /// ifunc improvement relative to AM, in percent. For latency
+    /// (lower=better) pass `lower_is_better = true`: +35 means "35%
+    /// latency reduction" as the paper phrases it.
+    pub fn ifunc_gain_pct(&self, lower_is_better: bool) -> f64 {
+        if lower_is_better {
+            (self.am - self.ifunc) / self.am * 100.0
+        } else {
+            (self.ifunc - self.am) / self.am * 100.0
+        }
+    }
+}
+
+/// Where the ifunc series overtakes the AM series.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Crossover {
+    /// Last size where AM still wins.
+    pub below: usize,
+    /// First size where ifunc wins.
+    pub at: usize,
+}
+
+/// Find the first crossover (ifunc starts winning) in a sweep.
+pub fn find_crossover(series: &[SeriesPoint], lower_is_better: bool) -> Option<Crossover> {
+    let wins =
+        |p: &SeriesPoint| if lower_is_better { p.ifunc < p.am } else { p.ifunc > p.am };
+    for w in series.windows(2) {
+        if !wins(&w[0]) && wins(&w[1]) {
+            return Some(Crossover { below: w[0].size, at: w[1].size });
+        }
+    }
+    None
+}
+
+fn human_size(bytes: usize) -> String {
+    if bytes >= 1 << 20 {
+        format!("{}MB", bytes >> 20)
+    } else if bytes >= 1 << 10 {
+        format!("{}KB", bytes >> 10)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+/// Print a Fig.3/Fig.4-style table: payload, ifunc, AM, ifunc-vs-AM %.
+pub fn print_series(
+    title: &str,
+    unit: &str,
+    series: &[SeriesPoint],
+    lower_is_better: bool,
+) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:>8}  {:>14}  {:>14}  {:>12}",
+        "payload",
+        format!("ifunc ({unit})"),
+        format!("UCX AM ({unit})"),
+        "ifunc vs AM"
+    );
+    for p in series {
+        println!(
+            "{:>8}  {:>14.1}  {:>14.1}  {:>+11.1}%",
+            human_size(p.size),
+            p.ifunc,
+            p.am,
+            p.ifunc_gain_pct(lower_is_better)
+        );
+    }
+    match find_crossover(series, lower_is_better) {
+        Some(c) => println!(
+            "--> crossover: ifunc overtakes AM between {} and {}",
+            human_size(c.below),
+            human_size(c.at)
+        ),
+        None => println!("--> no crossover in the swept range"),
+    }
+}
+
+/// Render a series as a machine-readable JSON line (EXPERIMENTS.md data).
+pub fn series_json(name: &str, series: &[SeriesPoint]) -> String {
+    let rows: Vec<String> = series
+        .iter()
+        .map(|p| format!("{{\"size\":{},\"ifunc\":{:.2},\"am\":{:.2}}}", p.size, p.ifunc, p.am))
+        .collect();
+    format!("{{\"series\":\"{name}\",\"points\":[{}]}}", rows.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(points: &[(usize, f64, f64)]) -> Vec<SeriesPoint> {
+        points.iter().map(|&(size, ifunc, am)| SeriesPoint { size, ifunc, am }).collect()
+    }
+
+    #[test]
+    fn crossover_latency_lower_wins() {
+        // AM faster (lower) until 8KB, ifunc faster at 16KB: the paper.
+        let s = mk(&[(4096, 3.0, 2.0), (8192, 2.5, 2.2), (16384, 2.4, 3.0)]);
+        let c = find_crossover(&s, true).unwrap();
+        assert_eq!(c, Crossover { below: 8192, at: 16384 });
+    }
+
+    #[test]
+    fn crossover_throughput_higher_wins() {
+        let s = mk(&[(1024, 1.0e6, 2.0e6), (2048, 9.0e5, 4.0e5)]);
+        let c = find_crossover(&s, false).unwrap();
+        assert_eq!(c.at, 2048);
+    }
+
+    #[test]
+    fn no_crossover_is_none() {
+        let s = mk(&[(1, 3.0, 2.0), (2, 3.0, 2.0)]);
+        assert!(find_crossover(&s, true).is_none());
+    }
+
+    #[test]
+    fn gain_pct_signs() {
+        let p = SeriesPoint { size: 1 << 20, ifunc: 65.0, am: 100.0 };
+        // 35% latency reduction — the paper's 1MB point.
+        assert!((p.ifunc_gain_pct(true) - 35.0).abs() < 1e-9);
+        let q = SeriesPoint { size: 1, ifunc: 0.19e6, am: 1.0e6 };
+        // 81% lower message rate — the paper's 1B point.
+        assert!((q.ifunc_gain_pct(false) + 81.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_shape() {
+        let s = mk(&[(1, 1.0, 2.0)]);
+        let j = series_json("fig3", &s);
+        assert!(j.contains("\"series\":\"fig3\""));
+        assert!(j.contains("\"size\":1"));
+    }
+}

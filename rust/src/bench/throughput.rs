@@ -1,0 +1,125 @@
+//! Fig. 4 — message throughput, ifunc vs UCX AM.
+//!
+//! ifunc protocol (§4.1): "a ring buffer is allocated using the
+//! `ucp_mem_map` routine ... The source process fills the buffer with
+//! ifunc messages of a certain size, flushes the UCP endpoint used to send
+//! the messages, then waits on the target process's notification
+//! indicating that it has finished consuming all the messages before
+//! continuing to send the next round of messages."
+//!
+//! AM protocol: "the source process simply sends all the messages in a
+//! loop and flushes the endpoint at the end."
+//!
+//! Reported metric: messages per second.
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use crate::ifunc::{IfuncRing, SenderCursor, SourceArgs, TargetArgs};
+use crate::Result;
+
+use super::harness::BenchPair;
+
+/// ifunc message rate (msgs/sec) for `payload`-byte messages.
+pub fn ifunc_throughput(pair: &BenchPair, payload: usize, total_msgs: usize) -> Result<f64> {
+    let ring = IfuncRing::new(&pair.dst, pair.config.ring_bytes)?;
+    let rkey = ring.rkey();
+    let ring_size = ring.size();
+
+    let h = pair.src.register_ifunc("counter")?;
+    let msg = h.msg_create(&SourceArgs::bytes(vec![0x77; payload]))?;
+    let frame_len = msg.len();
+    // Messages per round: fill the ring, leaving one frame of slack so a
+    // wrap marker plus the wasted tail can never overlap an unconsumed
+    // frame from the same round.
+    let per_round =
+        (((ring_size - 8) / frame_len).saturating_sub(1)).max(1).min(total_msgs);
+    let rounds = total_msgs.div_ceil(per_round);
+    let total = rounds * per_round;
+
+    // Target consumes `per_round` messages then writes the round number
+    // into the source's notification word.
+    let dst = pair.dst.clone();
+    let ep_back = pair.ep_back.clone();
+    let notify_rkey = pair.notify.rkey();
+    let mut ring = ring;
+    let b = std::thread::spawn(move || -> Result<()> {
+        let mut args = TargetArgs::none();
+        for round in 0..rounds {
+            for _ in 0..per_round {
+                dst.poll_ifunc_blocking(&mut ring, &mut args)?;
+            }
+            ep_back.qp().put_signal(notify_rkey, 0, round as u64 + 1)?;
+        }
+        ep_back.flush()?;
+        Ok(())
+    });
+
+    let t0 = Instant::now();
+    let mut cursor = SenderCursor::new(ring_size);
+    for round in 0..rounds {
+        for _ in 0..per_round {
+            pair.ep.ifunc_msg_send_cursor(&msg, &mut cursor, rkey)?;
+        }
+        pair.ep.flush()?;
+        // Wait for the target's "all consumed" notification. "This leads
+        // to some overhead but is not significant when the number of
+        // messages is large." (§4.1)
+        let mut i = 0u32;
+        while pair.notify.load_u64_acquire(0)? < round as u64 + 1 {
+            crate::fabric::wire::backoff(i);
+            i += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    b.join().expect("ifunc throughput target")?;
+    pair.notify.store_u64_release(0, 0)?;
+    Ok(total as f64 / dt.as_secs_f64())
+}
+
+/// AM message rate (msgs/sec) for `payload`-byte messages.
+pub fn am_throughput(pair: &BenchPair, payload: usize, total_msgs: usize) -> Result<f64> {
+    const ID: u16 = 21;
+    let before = pair.w_dst.am_processed.load(Ordering::Relaxed);
+    // Counter handler, like the ifunc side's injected counter.
+    pair.w_dst.set_am_handler(ID, |_, _| {});
+
+    let w_dst = pair.w_dst.clone();
+    let expect = before + total_msgs as u64;
+    let b = std::thread::spawn(move || {
+        w_dst.progress_until(|| w_dst.am_processed.load(Ordering::Relaxed) >= expect);
+    });
+
+    let data = vec![0x55u8; payload];
+    let t0 = Instant::now();
+    for _ in 0..total_msgs {
+        pair.ep.am_send(ID, &data)?;
+    }
+    pair.ep.flush()?;
+    b.join().expect("am throughput target");
+    let dt = t0.elapsed();
+    Ok(total_msgs as f64 / dt.as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::harness::BenchConfig;
+
+    #[test]
+    fn ifunc_throughput_counts_every_message() {
+        let pair = BenchPair::new(BenchConfig::quick()).unwrap();
+        let before = pair.dst.symbols().counter_value();
+        let rate = ifunc_throughput(&pair, 128, 100).unwrap();
+        assert!(rate > 0.0);
+        assert!(pair.dst.symbols().counter_value() >= before + 100);
+    }
+
+    #[test]
+    fn am_throughput_runs() {
+        let pair = BenchPair::new(BenchConfig::quick()).unwrap();
+        for size in [1usize, 4096] {
+            assert!(am_throughput(&pair, size, 64).unwrap() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Application ifunc libraries built on the AOT artifacts — the paper's
+//! §3.2 example (Listing 1.3) realized end-to-end.
+//!
+//! [`DecodeInsertIfunc`] is the `paq8px` library analog:
+//! * source side: `payload_init` **encodes** the record with the
+//!   `delta_enc` artifact (via this process's PJRT runtime) and packs
+//!   `[key u64][encoded f32[4096]][spare]`,
+//! * shipped code: `xla_exec` the `dbdec` artifact (decode + checksum,
+//!   one fused HLO), then `db_insert` the decoded record under the key —
+//!   both through the GOT,
+//! * the `dbdec` HLO text itself travels **inside the message**, so the
+//!   target needs no artifact files (the paper's §5.1 vision).
+
+use std::path::Path;
+
+use crate::ifunc::{CodeImage, IfuncLibrary, SourceArgs};
+use crate::runtime::with_runtime;
+use crate::vm::Assembler;
+use crate::{Error, Result};
+
+/// Record samples (must match `python/compile/model.py::SIGNAL_N`).
+pub const SIGNAL_N: usize = 4096;
+/// Decoded output elements: record + 2 checksum words.
+pub const DEC_OUT: usize = SIGNAL_N + 2;
+
+/// Payload layout: `[key u64][f32 x SIGNAL_N][2 spare f32]`.
+const KEY_BYTES: usize = 8;
+const PAYLOAD_BYTES: usize = KEY_BYTES + DEC_OUT * 4;
+
+pub struct DecodeInsertIfunc {
+    dbdec_hlo: Vec<u8>,
+}
+
+impl DecodeInsertIfunc {
+    /// Load the `dbdec` artifact (and ensure `delta_enc` is compiled for
+    /// the source-side encode step).
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let dbdec_hlo = std::fs::read(artifacts_dir.join("dbdec.hlo.txt")).map_err(|e| {
+            Error::Other(format!(
+                "missing dbdec artifact in {artifacts_dir:?} (run `make artifacts`): {e}"
+            ))
+        })?;
+        with_runtime(|rt| {
+            rt.ensure_compiled_file("delta_enc", &artifacts_dir.join("delta_enc.hlo.txt"))
+        })?;
+        Ok(DecodeInsertIfunc { dbdec_hlo })
+    }
+
+    /// Pack `(key, record)` into source args for `msg_create`.
+    pub fn args(key: u64, record: &[f32]) -> SourceArgs {
+        assert_eq!(record.len(), SIGNAL_N, "record must be {SIGNAL_N} samples");
+        let mut bytes = Vec::with_capacity(KEY_BYTES + record.len() * 4);
+        bytes.extend_from_slice(&key.to_le_bytes());
+        for v in record {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        SourceArgs::bytes(bytes)
+    }
+}
+
+/// A plain (no-HLO) store-insert ifunc: payload = `[key u64][f32 data...]`;
+/// main reads the key from the payload and calls `db_insert` through the
+/// GOT. Used by `repro serve` for uncompressed records.
+pub struct InsertIfunc;
+
+impl InsertIfunc {
+    /// Pack an insert request payload.
+    pub fn args(key: u64, data: &[f32]) -> SourceArgs {
+        let mut bytes = Vec::with_capacity(8 + data.len() * 4);
+        bytes.extend_from_slice(&key.to_le_bytes());
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        SourceArgs::bytes(bytes)
+    }
+}
+
+impl IfuncLibrary for InsertIfunc {
+    fn name(&self) -> &str {
+        "insert"
+    }
+
+    fn payload_get_max_size(&self, source_args: &SourceArgs) -> usize {
+        source_args.len()
+    }
+
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+        payload[..source_args.len()].copy_from_slice(source_args.as_bytes());
+        Ok(source_args.len())
+    }
+
+    fn code(&self) -> CodeImage {
+        let mut a = Assembler::new();
+        a.ldi(2, 0);
+        a.ldw(1, 2, 0, 0); // r1 = key (payload[0..8])
+        a.ldi(2, 8); // r2 = f32 data byte offset
+        a.paylen(3);
+        a.ldi(5, 8);
+        a.sub(3, 3, 5);
+        a.ldi(5, 4);
+        a.divu(3, 3, 5); // r3 = (len-8)/4 f32 elements
+        a.call("db_insert");
+        a.halt();
+        let (vm_code, imports) = a.assemble();
+        CodeImage { imports, vm_code, hlo: vec![] }
+    }
+}
+
+impl IfuncLibrary for DecodeInsertIfunc {
+    fn name(&self) -> &str {
+        // Registered under the artifact's name so the target's PJRT cache
+        // keys the executable correctly.
+        "dbdec"
+    }
+
+    fn payload_get_max_size(&self, _source_args: &SourceArgs) -> usize {
+        PAYLOAD_BYTES
+    }
+
+    /// Listing 1.3's `payload_init`: **encode** the record into the frame.
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+        let src = source_args.as_bytes();
+        if src.len() != KEY_BYTES + SIGNAL_N * 4 {
+            return Err(Error::InvalidMessage(format!(
+                "dbdec source args must be key + {SIGNAL_N} f32 samples (got {} bytes)",
+                src.len()
+            )));
+        }
+        // Key passes through verbatim.
+        payload[..KEY_BYTES].copy_from_slice(&src[..KEY_BYTES]);
+        // Source-side compress (delta_enc artifact on this process's PJRT).
+        let record: Vec<f32> = src[KEY_BYTES..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let encoded =
+            with_runtime(|rt| rt.execute_f32("delta_enc", &record, &[SIGNAL_N as i64]))?;
+        for (i, v) in encoded.iter().enumerate() {
+            payload[KEY_BYTES + i * 4..KEY_BYTES + i * 4 + 4]
+                .copy_from_slice(&v.to_le_bytes());
+        }
+        // Reserve room for the checksum words the decode step appends.
+        Ok(PAYLOAD_BYTES)
+    }
+
+    /// Listing 1.3's `main`: decode + checksum (xla_exec on the shipped
+    /// HLO) then insert under the key.
+    fn code(&self) -> CodeImage {
+        let mut a = Assembler::new();
+        // r6 = key = payload[0..8]
+        a.ldi(5, 0);
+        a.ldw(6, 5, 0, 0);
+        // xla_exec(in_off=8, n=SIGNAL_N, out_off=8, max_out=DEC_OUT)
+        a.ldi(1, KEY_BYTES as u32);
+        a.ldi(2, SIGNAL_N as u32);
+        a.ldi(3, KEY_BYTES as u32);
+        a.ldi(4, DEC_OUT as u32);
+        a.call("xla_exec");
+        // db_insert(key, data_off=8, n=SIGNAL_N) — checksum words excluded.
+        a.mov(1, 6);
+        a.ldi(2, KEY_BYTES as u32);
+        a.ldi(3, SIGNAL_N as u32);
+        a.call("db_insert");
+        // Report s1 (first checksum word, as raw f32 bits) for diagnostics.
+        a.ldi(5, (KEY_BYTES + SIGNAL_N * 4) as u32);
+        a.ldw(1, 5, 0, 0);
+        a.call("record_result");
+        a.halt();
+        let (vm_code, imports) = a.assemble();
+        CodeImage { imports, vm_code, hlo: self.dbdec_hlo.clone() }
+    }
+}

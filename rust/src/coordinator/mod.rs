@@ -1,0 +1,110 @@
+//! L3 coordinator — host-to-device compute dispatch.
+//!
+//! The paper's motivation (§1): "we envision the API being used to
+//! dispatch user functions from a host CPU to a SmartNIC (DPU),
+//! computational storage drive (CSD), or remote servers ... it may be
+//! more efficient to dynamically choose where code runs as the
+//! application progresses."
+//!
+//! A [`Cluster`] is a leader (host) plus N polling workers (the DPU/CSD
+//! processes), all on the simulated fabric. Each worker owns an ifunc
+//! ring, a [`RecordStore`], and a poll-loop thread; the leader's
+//! [`Dispatcher`] routes messages *to where the data lives* (hash
+//! placement by record key), with per-worker credit-based flow control.
+
+pub mod apps;
+pub mod dispatcher;
+pub mod store;
+pub mod telemetry;
+pub mod worker;
+
+pub use apps::{DecodeInsertIfunc, InsertIfunc};
+pub use telemetry::{ClusterSnapshot, ContextSnapshot};
+pub use dispatcher::Dispatcher;
+pub use store::{install_db_symbols, RecordStore};
+pub use worker::{WorkerHandle, WorkerStats};
+
+use std::sync::Arc;
+
+use crate::fabric::{Fabric, WireConfig};
+use crate::ucp::{Context, ContextConfig, Worker as UcpWorker};
+use crate::Result;
+
+/// Cluster-wide configuration.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of device-side workers (the paper's DPUs/CSDs).
+    pub workers: usize,
+    /// ifunc ring bytes per worker.
+    pub ring_bytes: usize,
+    pub wire: WireConfig,
+    pub ctx: ContextConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            workers: 2,
+            ring_bytes: 4 << 20,
+            wire: WireConfig::off(),
+            ctx: ContextConfig::default(),
+        }
+    }
+}
+
+/// A running leader + worker-pool deployment.
+pub struct Cluster {
+    pub fabric: Arc<Fabric>,
+    pub leader: Arc<Context>,
+    pub leader_worker: Arc<UcpWorker>,
+    pub workers: Vec<WorkerHandle>,
+}
+
+impl Cluster {
+    /// Boot the cluster. `setup` runs once per worker before its poll loop
+    /// starts: install application symbols on the worker's context and
+    /// return the application state its `target_args` will carry
+    /// (the worker's [`RecordStore`] is always installed and passed in).
+    pub fn launch(
+        config: ClusterConfig,
+        setup: impl Fn(usize, &Arc<Context>, &Arc<RecordStore>),
+    ) -> Result<Cluster> {
+        // Node 0 = leader/host; nodes 1..=N = device workers.
+        let fabric = Fabric::new(config.workers + 1, config.wire);
+        let leader = Context::new(fabric.node(0), config.ctx.clone())?;
+        let leader_worker = UcpWorker::new(&leader);
+        let mut workers = Vec::with_capacity(config.workers);
+        for i in 0..config.workers {
+            let ctx = Context::new(fabric.node(i + 1), config.ctx.clone())?;
+            let store = RecordStore::new();
+            install_db_symbols(ctx.symbols(), store.clone());
+            setup(i, &ctx, &store);
+            workers.push(WorkerHandle::spawn(
+                i,
+                ctx,
+                store,
+                &leader,
+                &leader_worker,
+                config.ring_bytes,
+            )?);
+        }
+        Ok(Cluster { fabric, leader, leader_worker, workers })
+    }
+
+    /// Create a dispatcher bound to this cluster's workers.
+    pub fn dispatcher(&self) -> Dispatcher<'_> {
+        Dispatcher::new(self)
+    }
+
+    /// Stop all poll loops and join worker threads.
+    pub fn shutdown(mut self) -> Result<()> {
+        for w in &mut self.workers {
+            w.stop()?;
+        }
+        Ok(())
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+}

@@ -1,0 +1,94 @@
+//! The target-side record store — the "database that stores voice
+//! recordings" of the paper's §3.2 usage example.
+//!
+//! Injected code reaches it through the `db_insert` GOT symbol (the
+//! `db_handler dbh = target_args` of Listing 1.3): after the ifunc's
+//! compute step decodes the payload in place, it calls
+//! `db_insert(key, payload_f32_offset, n_elems)`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::ifunc::Symbols;
+
+/// Concurrent keyed store of f32 records.
+#[derive(Default)]
+pub struct RecordStore {
+    records: RwLock<HashMap<u64, Vec<f32>>>,
+    pub inserts: AtomicU64,
+}
+
+impl RecordStore {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn insert(&self, key: u64, data: Vec<f32>) {
+        self.records.write().unwrap().insert(key, data);
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, key: u64) -> Option<Vec<f32>> {
+        self.records.read().unwrap().get(&key).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn keys(&self) -> Vec<u64> {
+        self.records.read().unwrap().keys().copied().collect()
+    }
+
+    /// Fold over a record without cloning (worker-local analytics).
+    pub fn with_record<R>(&self, key: u64, f: impl FnOnce(&[f32]) -> R) -> Option<R> {
+        self.records.read().unwrap().get(&key).map(|v| f(v))
+    }
+}
+
+/// Install the `db_insert` symbol bound to `store` on a context's symbol
+/// table. ABI: `r1` = record key, `r2` = payload byte offset of the f32
+/// data, `r3` = number of f32 elements.
+pub fn install_db_symbols(symbols: &Symbols, store: Arc<RecordStore>) {
+    symbols.install_fn("db_insert", move |ctx, [key, off, n, _]| {
+        let off = off as usize;
+        let n = n as usize;
+        let end = off + n * 4;
+        if end > ctx.payload.len() {
+            return Err(format!("db_insert: f32[{n}] at {off} outside payload"));
+        }
+        let data: Vec<f32> = ctx.payload[off..end]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        store.insert(key, data);
+        Ok(0)
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let s = RecordStore::new();
+        s.insert(7, vec![1.0, 2.0]);
+        assert_eq!(s.get(7), Some(vec![1.0, 2.0]));
+        assert_eq!(s.len(), 1);
+        assert!(s.get(8).is_none());
+    }
+
+    #[test]
+    fn with_record_avoids_clone() {
+        let s = RecordStore::new();
+        s.insert(1, vec![2.0; 10]);
+        let sum = s.with_record(1, |r| r.iter().sum::<f32>()).unwrap();
+        assert_eq!(sum, 20.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Device-side worker: a polling "DPU/CSD process".
+//!
+//! Each worker runs `ucp_poll_ifunc` in a dedicated thread against its own
+//! ring, executes whatever the host injects, and pushes a consumed-bytes
+//! credit word back to the leader so the dispatcher can flow-control
+//! without ever overwriting an unconsumed frame.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::fabric::{MemPerm, MemoryRegion, RKey};
+use crate::ifunc::{IfuncRing, SenderCursor, TargetArgs};
+use crate::ucp::{Context, Endpoint, Worker as UcpWorker};
+use crate::{Error, Result};
+
+use super::store::RecordStore;
+
+/// Worker-side execution counters.
+#[derive(Default)]
+pub struct WorkerStats {
+    pub executed: AtomicU64,
+    pub failed: AtomicU64,
+}
+
+/// Leader-side view of the link to one worker.
+pub(crate) struct WorkerLink {
+    /// Leader → worker endpoint (ifunc puts).
+    pub ep: Arc<Endpoint>,
+    /// Worker ring placement cursor.
+    pub cursor: SenderCursor,
+    pub ring_rkey: RKey,
+    pub ring_bytes: usize,
+    /// Bytes sent (frames + wrap markers).
+    pub sent_bytes: u64,
+    /// Leader-local word the worker writes its consumed-bytes count into.
+    pub credit: Arc<MemoryRegion>,
+}
+
+impl WorkerLink {
+    /// Block until the ring has room for `frame_len` more bytes.
+    pub fn wait_capacity(&self, frame_len: usize) {
+        // +8 covers a possible wrap marker; the extra frame of slack
+        // absorbs the wasted ring tail on wrap.
+        let budget = (self.ring_bytes - frame_len - 8) as u64;
+        let mut i = 0u32;
+        loop {
+            let consumed = self.credit.load_u64_acquire(0).unwrap();
+            if self.sent_bytes.saturating_sub(consumed) <= budget {
+                return;
+            }
+            crate::fabric::wire::backoff(i);
+            i += 1;
+        }
+    }
+}
+
+/// A spawned worker: context + store + poll thread + leader link.
+pub struct WorkerHandle {
+    pub index: usize,
+    pub ctx: Arc<Context>,
+    pub store: Arc<RecordStore>,
+    pub stats: Arc<WorkerStats>,
+    pub(crate) link: Mutex<WorkerLink>,
+    shutdown: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl WorkerHandle {
+    pub(crate) fn spawn(
+        index: usize,
+        ctx: Arc<Context>,
+        store: Arc<RecordStore>,
+        leader: &Arc<Context>,
+        leader_worker: &Arc<UcpWorker>,
+        ring_bytes: usize,
+    ) -> Result<WorkerHandle> {
+        let ring = IfuncRing::new(&ctx, ring_bytes)?;
+        let ring_rkey = ring.rkey();
+        // Leader-side credit word; worker puts consumed-bytes into it.
+        let credit = leader.mem_map(64, MemPerm::RWX);
+        let credit_rkey = credit.rkey();
+        // Endpoints: leader → worker for frames; worker → leader for credits.
+        let ucp_worker = UcpWorker::new(&ctx);
+        let ep = leader_worker.connect(&ucp_worker)?;
+        let ep_credit = ucp_worker.connect(leader_worker)?;
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(WorkerStats::default());
+        let (ctx2, store2, stop2, stats2) =
+            (ctx.clone(), store.clone(), shutdown.clone(), stats.clone());
+        let thread = std::thread::Builder::new()
+            .name(format!("ifunc-worker-{index}"))
+            .spawn(move || -> Result<()> {
+                let mut ring = ring;
+                let mut args = TargetArgs::new(Box::new(store2));
+                let mut idle = 0u32;
+                loop {
+                    match ctx2.poll_ifunc(&mut ring, &mut args) {
+                        Ok(crate::ifunc::PollResult::Executed) => {
+                            stats2.executed.fetch_add(1, Ordering::Relaxed);
+                            ep_credit.qp().put_signal(
+                                credit_rkey,
+                                0,
+                                ring.consumed_bytes,
+                            )?;
+                        }
+                        Ok(crate::ifunc::PollResult::NoMessage) => {
+                            if stop2.load(Ordering::Acquire) {
+                                ep_credit.flush()?;
+                                return Ok(());
+                            }
+                            crate::fabric::wire::backoff(idle);
+                            idle += 1;
+                        }
+                        Err(e) => {
+                            // A faulty ifunc is consumed and reported, but
+                            // must not take the device down.
+                            stats2.failed.fetch_add(1, Ordering::Relaxed);
+                            log::error!("worker {index}: ifunc failed: {e}");
+                            ep_credit.qp().put_signal(
+                                credit_rkey,
+                                0,
+                                ring.consumed_bytes,
+                            )?;
+                        }
+                    }
+                }
+            })
+            .expect("spawn worker thread");
+
+        Ok(WorkerHandle {
+            index,
+            ctx,
+            store,
+            stats,
+            link: Mutex::new(WorkerLink {
+                ep,
+                cursor: SenderCursor::new(ring_bytes),
+                ring_rkey,
+                ring_bytes,
+                sent_bytes: 0,
+                credit,
+            }),
+            shutdown,
+            thread: Some(thread),
+        })
+    }
+
+    /// Executed-message count (leader-visible).
+    pub fn executed(&self) -> u64 {
+        self.stats.executed.load(Ordering::Acquire)
+    }
+
+    /// Signal shutdown and join the poll thread.
+    pub fn stop(&mut self) -> Result<()> {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            t.join().map_err(|_| Error::Other("worker thread panicked".into()))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        let _ = self.stop();
+    }
+}

@@ -1,0 +1,289 @@
+//! Registered memory regions — the simulated analog of `ibv_reg_mr`.
+//!
+//! A [`MemoryRegion`] is a pinned byte buffer that remote peers may read or
+//! write through the fabric, authorized by a 32-bit remote key (RKEY) plus
+//! permission bits, exactly as the IBTA security model the paper relies on
+//! (§3.5): the RKEY is generated at registration time from the region
+//! identity and the requested permissions, and every remote operation is
+//! checked against it "at the hardware level" (here: in the NIC engine)
+//! before any byte is touched.
+//!
+//! ## Concurrency model
+//!
+//! RDMA semantics are preserved faithfully: the fabric writes into the
+//! region concurrently with local polling, and *no ordering is guaranteed
+//! except through signal words*. Bulk bytes are written with plain copies;
+//! 8-byte aligned signal words are accessed with real atomics
+//! (release-store on delivery, acquire-load / `wait_mem` on the poller), so
+//! the data-before-signal protocol of the paper's Fig. 2 is exactly the
+//! synchronization that makes this sound.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use crate::{Error, Result};
+
+/// Tiny local stand-in for the `bitflags` crate (avoids a dependency).
+macro_rules! bitflags_lite {
+    (
+        $(#[$meta:meta])*
+        pub struct $name:ident : $ty:ty {
+            $(const $flag:ident = $val:expr;)*
+        }
+    ) => {
+        $(#[$meta])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+        pub struct $name(pub $ty);
+        impl $name {
+            $(pub const $flag: $name = $name($val);)*
+            /// All permissions (read | write | atomic).
+            pub const RWX: $name = $name($($val |)* 0);
+            /// No remote permissions.
+            pub const NONE: $name = $name(0);
+            /// True if `self` grants every bit in `other`.
+            pub fn allows(self, other: $name) -> bool {
+                self.0 & other.0 == other.0
+            }
+        }
+        impl std::ops::BitOr for $name {
+            type Output = $name;
+            fn bitor(self, rhs: $name) -> $name { $name(self.0 | rhs.0) }
+        }
+    };
+}
+
+bitflags_lite! {
+    /// Remote access permissions, mirroring `IBV_ACCESS_REMOTE_*`.
+    pub struct MemPerm: u8 {
+        const REMOTE_READ = 0b001;
+        const REMOTE_WRITE = 0b010;
+        const REMOTE_ATOMIC = 0b100;
+    }
+}
+
+/// A remote key: 32 bits, as defined by the IBTA standard (paper §3.5).
+pub type RKey = u32;
+
+/// A registered, remotely-accessible memory region.
+///
+/// Local access goes through [`MemoryRegion::local_slice`] /
+/// [`MemoryRegion::local_slice_mut`]; remote access is performed by the NIC
+/// engine after rkey/permission/bounds checks.
+pub struct MemoryRegion {
+    /// Backing storage. Allocated as `u64`s so every 8-aligned offset can be
+    /// viewed as an `AtomicU64` signal word.
+    buf: Box<[u64]>,
+    len: usize,
+    rkey: RKey,
+    perm: MemPerm,
+}
+
+// SAFETY: all cross-thread access is either through atomic signal words or
+// through raw byte copies that the data-before-signal protocol orders (the
+// same contract real RDMA hardware gives to verbs applications).
+unsafe impl Send for MemoryRegion {}
+unsafe impl Sync for MemoryRegion {}
+
+/// RKEYs are derived from a process-wide counter mixed with a multiplicative
+/// hash so that stale/guessed keys are unlikely to collide with live ones —
+/// mirroring how HCAs derive keys from the MR index plus a variant bits.
+static RKEY_SALT: AtomicU32 = AtomicU32::new(0x9E37_79B9);
+
+impl MemoryRegion {
+    /// Register a fresh zeroed region of `len` bytes with permissions `perm`.
+    pub fn new(len: usize, perm: MemPerm) -> Self {
+        let words = len.div_ceil(8);
+        let salt = RKEY_SALT.fetch_add(0x61C8_8647, Ordering::Relaxed);
+        // Fold the permission bits into the key like an HCA folds access
+        // flags into the MR context the key names.
+        let rkey = salt.rotate_left(7) ^ ((perm.0 as u32) << 13) ^ 0x5851_F42D;
+        MemoryRegion { buf: vec![0u64; words].into_boxed_slice(), len, rkey, perm }
+    }
+
+    /// The 32-bit remote key for this region.
+    pub fn rkey(&self) -> RKey {
+        self.rkey
+    }
+
+    /// Registered length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Permissions granted at registration.
+    pub fn perm(&self) -> MemPerm {
+        self.perm
+    }
+
+    fn base_ptr(&self) -> *mut u8 {
+        self.buf.as_ptr() as *mut u8
+    }
+
+    /// Validate that `[offset, offset+len)` lies inside the region.
+    pub fn check_bounds(&self, offset: usize, len: usize) -> Result<()> {
+        if offset.checked_add(len).is_none_or(|end| end > self.len) {
+            return Err(Error::RemoteAccess(format!(
+                "access [{offset}, {offset}+{len}) out of bounds for MR of {} bytes",
+                self.len
+            )));
+        }
+        Ok(())
+    }
+
+    /// Local (owner-side) view of the region.
+    ///
+    /// # Safety contract (documented, not enforced)
+    /// The caller must only read bytes whose delivery has been observed
+    /// through an acquire on a signal word — identical to the contract a
+    /// verbs application has with its HCA.
+    #[allow(clippy::mut_from_ref)]
+    pub fn local_slice_mut(&self) -> &mut [u8] {
+        // SAFETY: see module docs; synchronization is via signal words.
+        unsafe { std::slice::from_raw_parts_mut(self.base_ptr(), self.len) }
+    }
+
+    /// Immutable local view.
+    pub fn local_slice(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.base_ptr(), self.len) }
+    }
+
+    /// Remote write path used by the NIC engine (bounds already rkey-checked
+    /// by the caller). Plain byte copy — *not* ordered; pair with
+    /// [`MemoryRegion::store_u64_release`] for the trailing signal.
+    pub(crate) fn write_bytes(&self, offset: usize, data: &[u8]) -> Result<()> {
+        self.check_bounds(offset, data.len())?;
+        unsafe {
+            std::ptr::copy_nonoverlapping(data.as_ptr(), self.base_ptr().add(offset), data.len());
+        }
+        Ok(())
+    }
+
+    /// Remote read path used by the NIC engine for GET.
+    pub(crate) fn read_bytes(&self, offset: usize, out: &mut [u8]) -> Result<()> {
+        self.check_bounds(offset, out.len())?;
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.base_ptr().add(offset), out.as_mut_ptr(), out.len());
+        }
+        Ok(())
+    }
+
+    fn atomic_u64(&self, offset: usize) -> Result<&AtomicU64> {
+        if offset % 8 != 0 {
+            return Err(Error::RemoteAccess(format!("unaligned signal offset {offset}")));
+        }
+        self.check_bounds(offset, 8)?;
+        // SAFETY: offset is 8-aligned and in-bounds; backing store is u64s.
+        Ok(unsafe { AtomicU64::from_ptr(self.base_ptr().add(offset) as *mut u64) })
+    }
+
+    /// Release-store a signal word. The NIC engine uses this for the final
+    /// 8 bytes of a frame (the paper's trailer signal) and for standalone
+    /// 8-byte puts, making every preceding `write_bytes` visible to a poller
+    /// that acquires this word.
+    pub fn store_u64_release(&self, offset: usize, v: u64) -> Result<()> {
+        self.atomic_u64(offset)?.store(v, Ordering::Release);
+        Ok(())
+    }
+
+    /// Acquire-load a signal word (poller side).
+    pub fn load_u64_acquire(&self, offset: usize) -> Result<u64> {
+        Ok(self.atomic_u64(offset)?.load(Ordering::Acquire))
+    }
+
+    /// Fetch-add used by remote atomic operations.
+    pub(crate) fn fetch_add_u64(&self, offset: usize, v: u64) -> Result<u64> {
+        Ok(self.atomic_u64(offset)?.fetch_add(v, Ordering::AcqRel))
+    }
+
+    /// `ucs_arch_wait_mem` analog (paper §3.2 / §3.4 `WFE`): block until the
+    /// signal word at `offset` differs from `current`, using a spin with
+    /// `hint::spin_loop` — the portable stand-in for Arm's `WFE`, which
+    /// "reduce[s] resource usage ... without incurring a heavy performance
+    /// penalty".
+    pub fn wait_mem(&self, offset: usize, current: u64) -> Result<u64> {
+        let cell = self.atomic_u64(offset)?;
+        let mut i = 0u32;
+        loop {
+            let v = cell.load(Ordering::Acquire);
+            if v != current {
+                return Ok(v);
+            }
+            super::wire::backoff(i);
+            i += 1;
+        }
+    }
+}
+
+/// An unpacked remote key as shared out-of-band: enough for a peer to name
+/// a region (`rkey`) and an address inside it. The paper exchanges these
+/// via an out-of-band channel before any ifunc traffic flows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RemoteKey {
+    /// Target node id (stands in for the LID/GID routing information).
+    pub node: usize,
+    /// The 32-bit rkey.
+    pub rkey: RKey,
+    /// Length of the registered region (used only for client-side sanity).
+    pub len: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rkeys_are_unique_per_registration() {
+        let a = MemoryRegion::new(64, MemPerm::RWX);
+        let b = MemoryRegion::new(64, MemPerm::RWX);
+        assert_ne!(a.rkey(), b.rkey());
+    }
+
+    #[test]
+    fn bounds_checking_rejects_overflow() {
+        let mr = MemoryRegion::new(100, MemPerm::RWX);
+        assert!(mr.check_bounds(0, 100).is_ok());
+        assert!(mr.check_bounds(1, 100).is_err());
+        assert!(mr.check_bounds(usize::MAX, 2).is_err());
+    }
+
+    #[test]
+    fn signal_word_roundtrip() {
+        let mr = MemoryRegion::new(64, MemPerm::RWX);
+        mr.store_u64_release(8, 0xDEAD_BEEF).unwrap();
+        assert_eq!(mr.load_u64_acquire(8).unwrap(), 0xDEAD_BEEF);
+        assert!(mr.store_u64_release(4, 1).is_err(), "unaligned signal must fail");
+    }
+
+    #[test]
+    fn write_then_signal_is_visible() {
+        let mr = MemoryRegion::new(4096, MemPerm::RWX);
+        mr.write_bytes(16, b"hello ifunc").unwrap();
+        mr.store_u64_release(0, 1).unwrap();
+        assert_eq!(&mr.local_slice()[16..27], b"hello ifunc");
+    }
+
+    #[test]
+    fn wait_mem_returns_changed_value() {
+        use std::sync::Arc;
+        let mr = Arc::new(MemoryRegion::new(64, MemPerm::RWX));
+        let mr2 = mr.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            mr2.store_u64_release(0, 42).unwrap();
+        });
+        assert_eq!(mr.wait_mem(0, 0).unwrap(), 42);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn perm_allows() {
+        assert!(MemPerm::RWX.allows(MemPerm::REMOTE_WRITE));
+        assert!(!MemPerm::REMOTE_READ.allows(MemPerm::REMOTE_WRITE));
+        let rw = MemPerm::REMOTE_READ | MemPerm::REMOTE_WRITE;
+        assert!(rw.allows(MemPerm::REMOTE_READ));
+        assert!(!rw.allows(MemPerm::REMOTE_ATOMIC));
+    }
+}

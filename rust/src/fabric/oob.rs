@@ -1,0 +1,68 @@
+//! Out-of-band exchange channel.
+//!
+//! RDMA rkeys must reach the peer "through an out-of-band channel" (paper
+//! §3.5) before any one-sided traffic can flow — in real deployments this
+//! is TCP or a job launcher. In the simulated fabric it is a simple
+//! blocking key/value rendezvous shared by all nodes.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+
+#[derive(Default)]
+pub struct OobExchange {
+    map: Mutex<HashMap<String, Vec<u8>>>,
+    cv: Condvar,
+}
+
+impl OobExchange {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish a blob under `key` (e.g. a packed rkey).
+    pub fn publish(&self, key: &str, value: Vec<u8>) {
+        self.map.lock().unwrap().insert(key.to_string(), value);
+        self.cv.notify_all();
+    }
+
+    /// Non-blocking fetch.
+    pub fn try_fetch(&self, key: &str) -> Option<Vec<u8>> {
+        self.map.lock().unwrap().get(key).cloned()
+    }
+
+    /// Blocking fetch: waits until some peer publishes `key`.
+    pub fn fetch(&self, key: &str) -> Vec<u8> {
+        let mut guard = self.map.lock().unwrap();
+        loop {
+            if let Some(v) = guard.get(key) {
+                return v.clone();
+            }
+            guard = self.cv.wait(guard).unwrap();
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fetch_blocks_until_published() {
+        let oob = Arc::new(OobExchange::new());
+        let oob2 = oob.clone();
+        let t = std::thread::spawn(move || oob2.fetch("rkey/1"));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        oob.publish("rkey/1", vec![1, 2, 3]);
+        assert_eq!(t.join().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn try_fetch_nonblocking() {
+        let oob = OobExchange::new();
+        assert!(oob.try_fetch("k").is_none());
+        oob.publish("k", vec![9]);
+        assert_eq!(oob.try_fetch("k"), Some(vec![9]));
+    }
+}

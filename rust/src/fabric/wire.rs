@@ -1,0 +1,161 @@
+//! Wire-cost model for the simulated fabric.
+//!
+//! The paper's testbed (§4.2) is two servers connected back-to-back with
+//! ConnectX-6 200 Gb/s InfiniBand HCAs. We model the link LogGP-style:
+//!
+//! * `overhead_ns` — fixed per-message cost (NIC processing + propagation;
+//!   ~0.8 µs one way for small RDMA writes on CX-6 class hardware),
+//! * `ns_per_kib` — serialization cost (200 Gb/s ≈ 25 GB/s ≈ 40 ns/KiB).
+//!
+//! The delay is *charged in the NIC engine thread*, not on the posting CPU,
+//! so posted operations pipeline exactly like hardware doorbells do: the
+//! sender can keep filling a ring while earlier messages are "on the wire".
+//!
+//! Unit tests and most integration tests run with [`WireConfig::off`] —
+//! zero modeled delay — because they assert *behaviour*, not timing. The
+//! Fig. 3 / Fig. 4 benchmark harness runs with [`WireConfig::connectx6`].
+
+use std::time::{Duration, Instant};
+
+/// How inbound one-sided operations are executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NicMode {
+    /// Pick [`NicMode::Engine`] on multi-core hosts, [`NicMode::Inline`]
+    /// on single-core ones (where an engine thread only adds context
+    /// switches — there is no parallelism to model).
+    #[default]
+    Auto,
+    /// A dedicated NIC engine thread per node: posted operations overlap
+    /// with the posting CPU, like doorbelled hardware.
+    Engine,
+    /// Operations execute synchronously at post time on the caller
+    /// thread (wire cost charged inline). Deterministic; preferred for
+    /// latency benches and single-core machines.
+    Inline,
+}
+
+impl NicMode {
+    pub fn resolve(self) -> NicMode {
+        match self {
+            NicMode::Auto => {
+                if std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1 {
+                    NicMode::Engine
+                } else {
+                    NicMode::Inline
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+/// Link cost parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireConfig {
+    /// Fixed one-way per-message overhead, in nanoseconds.
+    pub overhead_ns: u64,
+    /// Serialization cost per KiB, in nanoseconds.
+    pub ns_per_kib: u64,
+    /// Master switch; `false` makes `delay()` free regardless of the rest.
+    pub enabled: bool,
+    /// NIC execution mode (see [`NicMode`]).
+    pub nic: NicMode,
+}
+
+impl WireConfig {
+    /// No modeled wire cost (unit tests, functional runs).
+    pub fn off() -> Self {
+        WireConfig { overhead_ns: 0, ns_per_kib: 0, enabled: false, nic: NicMode::Auto }
+    }
+
+    /// Calibrated to the paper's testbed: ConnectX-6 200 Gb/s IB,
+    /// back-to-back (§4.2). 0-byte RDMA-write latency on this class of HCA
+    /// is ~0.8 µs one-way; 200 Gb/s line rate is ~40 ns/KiB.
+    pub fn connectx6() -> Self {
+        WireConfig { overhead_ns: 800, ns_per_kib: 40, enabled: true, nic: NicMode::Auto }
+    }
+
+    /// A deliberately slow link (useful in tests that must observe
+    /// in-flight states).
+    pub fn slow() -> Self {
+        WireConfig { overhead_ns: 200_000, ns_per_kib: 1_000, enabled: true, nic: NicMode::Engine }
+    }
+
+    /// Modeled one-way cost of a message of `bytes` bytes.
+    pub fn cost(&self, bytes: usize) -> Duration {
+        if !self.enabled {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.overhead_ns + (bytes as u64 * self.ns_per_kib) / 1024)
+    }
+
+    /// Busy-wait for the modeled cost of `bytes`. Spinning (rather than
+    /// sleeping) is required at sub-microsecond scales: OS sleep granularity
+    /// would destroy the model.
+    pub fn charge(&self, bytes: usize) {
+        if !self.enabled {
+            return;
+        }
+        spin_for(self.cost(bytes));
+    }
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig::off()
+    }
+}
+
+/// Precise busy-wait.
+pub fn spin_for(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    let end = Instant::now() + d;
+    while Instant::now() < end {
+        std::hint::spin_loop();
+    }
+}
+
+/// Backoff step for wait loops: brief pipeline spin first, then yield the
+/// core. Critical on small machines (the CI box has one core): a raw
+/// `spin_loop` wait starves the very thread it is waiting on, turning µs
+/// handoffs into scheduler-quantum stalls.
+#[inline]
+pub fn backoff(iteration: u32) {
+    if iteration < 64 {
+        std::hint::spin_loop();
+    } else {
+        std::thread::yield_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_is_free() {
+        let w = WireConfig::off();
+        assert_eq!(w.cost(1 << 20), Duration::ZERO);
+    }
+
+    #[test]
+    fn cost_scales_with_bytes() {
+        let w = WireConfig::connectx6();
+        let small = w.cost(8);
+        let big = w.cost(1 << 20);
+        assert!(big > small);
+        // 1 MiB at 40 ns/KiB = 40 µs of serialization + overhead.
+        assert_eq!(big, Duration::from_nanos(800 + 1024 * 40));
+    }
+
+    #[test]
+    fn charge_spins_roughly_right() {
+        let w =
+            WireConfig { overhead_ns: 2_000_000, ns_per_kib: 0, enabled: true, nic: NicMode::Auto };
+        let t0 = Instant::now();
+        w.charge(0);
+        assert!(t0.elapsed() >= Duration::from_millis(2));
+    }
+}

@@ -1,0 +1,153 @@
+//! ifuncs over send/receive semantics — the paper's §5.1 future work,
+//! implemented.
+//!
+//! "We are also working on switching the underlying implementation of
+//! *Two-Chains* to use UCX's send-receive semantics instead of RDMA Puts.
+//! This change will enable a simpler API because the user would not have
+//! to worry about setting up a RWX-enabled buffer on the target process
+//! ... ifuncs will be progressed with other UCX operations by calling
+//! `ucp_worker_progress`."
+//!
+//! Here an ifunc frame travels as the payload of a reserved active
+//! message; the target's normal [`crate::ucp::Worker::progress`] invokes
+//! it — no ring, no rkey consensus, no special polling call. The trade-off
+//! the paper predicts is visible in the ablation benches: AM delivery
+//! buffers are not executable-in-place, so the frame pays an extra copy
+//! before the payload can be mutated.
+
+use std::sync::{Arc, Mutex};
+
+use crate::ucp::{Context, Endpoint, Worker};
+use crate::vm;
+use crate::{Error, Result};
+
+use super::icache;
+use super::message::{CodeImage, Header, IfuncMsg};
+use super::TargetArgs;
+
+/// Reserved AM id for the ifunc-over-AM transport.
+pub const IFUNC_AM_ID: u16 = 0x1FC0;
+
+/// Install the ifunc-over-AM receive path on `worker`. All ifuncs arriving
+/// on [`IFUNC_AM_ID`] execute against `target_args`.
+pub fn install_am_ifunc(
+    worker: &Arc<Worker>,
+    target_args: Arc<Mutex<TargetArgs>>,
+) {
+    let ctx = worker.context().clone();
+    worker.set_am_handler(IFUNC_AM_ID, move |_, frame| {
+        if let Err(e) = execute_frame(&ctx, frame, &target_args) {
+            log::error!("am-transport ifunc failed: {e}");
+        }
+    });
+}
+
+/// Send an ifunc message over the AM transport (the simpler API: no
+/// remote_addr, no rkey).
+pub fn ifunc_msg_send_am(ep: &Endpoint, msg: &IfuncMsg) -> Result<()> {
+    ep.am_send(IFUNC_AM_ID, msg.frame())
+}
+
+/// Execute a frame delivered in an AM buffer: same link/flush/invoke
+/// pipeline as `ucp_poll_ifunc`, minus ring bookkeeping, plus the
+/// payload-copy the non-in-place buffer forces.
+fn execute_frame(
+    ctx: &Context,
+    frame: &[u8],
+    target_args: &Arc<Mutex<TargetArgs>>,
+) -> Result<()> {
+    let header = Header::decode(frame)?
+        .ok_or_else(|| Error::InvalidMessage("empty ifunc frame over AM".into()))?;
+    if header.frame_len as usize != frame.len() {
+        return Err(Error::InvalidMessage("frame length mismatch over AM".into()));
+    }
+    let code_start = header.code_offset as usize;
+    let code_end = code_start + header.code_len as usize;
+    let (_slot, image) = CodeImage::decode_ref(&frame[code_start..code_end])?;
+    let linked = match ctx.cache.lookup(&header.name) {
+        Some(e)
+            if e.imports.iter().map(String::as_str).eq(image.imports.iter().copied()) =>
+        {
+            e
+        }
+        _ => {
+            let got = ctx.symbols().table().resolve_iter(image.imports.iter().copied())?;
+            let has_hlo = !image.hlo.is_empty();
+            if has_hlo {
+                crate::runtime::with_runtime(|rt| rt.ensure_compiled(&header.name, image.hlo))?;
+            }
+            let owned: Vec<String> = image.imports.iter().map(|s| s.to_string()).collect();
+            ctx.cache.insert(&header.name, owned, got, has_hlo)
+        }
+    };
+    let prog = vm::verify(image.vm_code, image.imports.len())?;
+    icache::clear_cache(&ctx.config().icache, header.code_len as usize, ctx.icache_stats());
+
+    // The AM buffer is UCX-owned and immutable: copy the payload out so
+    // the injected code can mutate it (the cost the PUT transport avoids).
+    let pay_start = header.payload_offset as usize;
+    let mut payload =
+        frame[pay_start..pay_start + header.payload_len as usize].to_vec();
+
+    let mut ta = target_args.lock().unwrap();
+    ta.hlo_name = if linked.has_hlo { Some(header.name.clone()) } else { None };
+    let outcome = vm::run(&prog, &linked.got, &mut payload, &mut *ta, &ctx.config().vm);
+    ta.hlo_name = None;
+    ta.last_return = outcome.as_ref().map(|o| o.ret).ok();
+    outcome?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Fabric, WireConfig};
+    use crate::ifunc::builtin::{ChecksumIfunc, CounterIfunc};
+    use crate::ifunc::library::SourceArgs;
+    use crate::ucp::ContextConfig;
+
+    #[test]
+    fn ifunc_over_am_executes() {
+        let f = Fabric::new(2, WireConfig::off());
+        let src = crate::ucp::Context::new(f.node(0), ContextConfig::default()).unwrap();
+        let dst = crate::ucp::Context::new(f.node(1), ContextConfig::default()).unwrap();
+        src.library_dir().install(Box::new(CounterIfunc::default()));
+        let wa = Worker::new(&src);
+        let wb = Worker::new(&dst);
+        let ep = wa.connect(&wb).unwrap();
+        install_am_ifunc(&wb, Arc::new(Mutex::new(TargetArgs::none())));
+
+        let h = src.register_ifunc("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 32])).unwrap();
+        for _ in 0..5 {
+            ifunc_msg_send_am(&ep, &msg).unwrap();
+        }
+        ep.flush().unwrap();
+        wb.progress_until(|| dst.symbols().counter_value() == 5);
+    }
+
+    #[test]
+    fn am_transport_large_payload_checksum() {
+        let f = Fabric::new(2, WireConfig::off());
+        let src = crate::ucp::Context::new(f.node(0), ContextConfig::default()).unwrap();
+        let dst = crate::ucp::Context::new(f.node(1), ContextConfig::default()).unwrap();
+        src.library_dir().install(Box::new(ChecksumIfunc));
+        let wa = Worker::new(&src);
+        let wb = Worker::new(&dst);
+        let ep = wa.connect(&wb).unwrap();
+        install_am_ifunc(&wb, Arc::new(Mutex::new(TargetArgs::none())));
+
+        // Rendezvous-sized frame (payload > rndv threshold).
+        let payload = vec![1u8; 100_000];
+        let h = src.register_ifunc("checksum").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(payload)).unwrap();
+        ifunc_msg_send_am(&ep, &msg).unwrap();
+        let wb2 = wb.clone();
+        let t = std::thread::spawn(move || {
+            wb2.progress_until(|| wb2.am_processed.load(std::sync::atomic::Ordering::SeqCst) >= 1)
+        });
+        ep.flush().unwrap();
+        t.join().unwrap();
+        assert_eq!(dst.symbols().last_result(), 100_000);
+    }
+}

@@ -1,0 +1,202 @@
+//! Built-in ifunc libraries.
+//!
+//! * [`CounterIfunc`] — the paper's microbenchmark function: "the ifunc
+//!   main function simply increases a counter on the target process used
+//!   to count the number of executed messages" (§4.1). Used by the Fig. 3
+//!   and Fig. 4 harnesses.
+//! * [`XorIfunc`] — a pure-bytecode payload transform (no imports): proves
+//!   injected code runs with an *empty* GOT.
+//! * [`ChecksumIfunc`] — sums payload bytes in bytecode and reports the
+//!   result through a GOT call (`record_result`).
+
+use crate::vm::Assembler;
+use crate::Result;
+
+use super::library::{IfuncLibrary, SourceArgs};
+use super::message::CodeImage;
+
+/// Copy-through payload helpers shared by the builtins: max size = args
+/// size, init = memcpy (the benchmark payload content is arbitrary).
+fn copy_payload(payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+    payload[..source_args.len()].copy_from_slice(source_args.as_bytes());
+    Ok(source_args.len())
+}
+
+/// The benchmark counter ifunc. `main` calls `counter_add(1)` through the
+/// GOT; the target's [`crate::ifunc::Symbols`] binds it to a per-context
+/// atomic counter.
+#[derive(Default)]
+pub struct CounterIfunc {
+    /// Extra padding instructions, to study code-section-size effects
+    /// (the paper: "the code sent in the ifunc messages dominate the
+    /// message size" for small payloads). 0 = the minimal ~5-instruction
+    /// body, matching a tiny C function's .text.
+    pub pad_instrs: usize,
+}
+
+impl CounterIfunc {
+    pub fn with_code_padding(pad_instrs: usize) -> Self {
+        CounterIfunc { pad_instrs }
+    }
+}
+
+impl IfuncLibrary for CounterIfunc {
+    fn name(&self) -> &str {
+        "counter"
+    }
+
+    fn payload_get_max_size(&self, source_args: &SourceArgs) -> usize {
+        source_args.len()
+    }
+
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+        copy_payload(payload, source_args)
+    }
+
+    fn code(&self) -> CodeImage {
+        let mut a = Assembler::new();
+        for _ in 0..self.pad_instrs {
+            a.nop();
+        }
+        a.ldi(1, 1); // r1 = increment
+        a.call("counter_add");
+        a.halt();
+        let (vm_code, imports) = a.assemble();
+        CodeImage { imports, vm_code, hlo: vec![] }
+    }
+}
+
+/// XOR every payload byte with a key — a self-contained injected transform
+/// with no external symbols (empty GOT).
+pub struct XorIfunc {
+    pub key: u8,
+}
+
+impl IfuncLibrary for XorIfunc {
+    fn name(&self) -> &str {
+        "xor"
+    }
+
+    fn payload_get_max_size(&self, source_args: &SourceArgs) -> usize {
+        source_args.len()
+    }
+
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+        copy_payload(payload, source_args)
+    }
+
+    fn code(&self) -> CodeImage {
+        let mut a = Assembler::new();
+        let top = a.label();
+        let done = a.label();
+        a.paylen(3); // r3 = len
+        a.ldi(2, 0); // r2 = i
+        a.ldi(4, self.key as u32); // r4 = key
+        a.bind(top);
+        a.sltu(5, 2, 3);
+        a.jz(5, done);
+        a.ldb(6, 2, 0, 0);
+        a.xor(6, 6, 4);
+        a.stb(6, 2, 0, 0);
+        a.addi(2, 2, 1);
+        a.jmp(top);
+        a.bind(done);
+        a.halt();
+        let (vm_code, imports) = a.assemble();
+        CodeImage { imports, vm_code, hlo: vec![] }
+    }
+}
+
+/// Sum payload bytes, then `record_result(sum)` through the GOT.
+#[derive(Default)]
+pub struct ChecksumIfunc;
+
+impl IfuncLibrary for ChecksumIfunc {
+    fn name(&self) -> &str {
+        "checksum"
+    }
+
+    fn payload_get_max_size(&self, source_args: &SourceArgs) -> usize {
+        source_args.len()
+    }
+
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+        copy_payload(payload, source_args)
+    }
+
+    fn code(&self) -> CodeImage {
+        let mut a = Assembler::new();
+        let top = a.label();
+        let done = a.label();
+        a.paylen(3);
+        a.ldi(2, 0);
+        a.ldi(7, 0); // r7 = acc
+        a.bind(top);
+        a.sltu(5, 2, 3);
+        a.jz(5, done);
+        a.ldb(6, 2, 0, 0);
+        a.add(7, 7, 6);
+        a.addi(2, 2, 1);
+        a.jmp(top);
+        a.bind(done);
+        a.mov(1, 7);
+        a.call("record_result");
+        a.halt();
+        let (vm_code, imports) = a.assemble();
+        CodeImage { imports, vm_code, hlo: vec![] }
+    }
+}
+
+/// A deliberately hostile "library": its code tries to read past the
+/// payload. Used by security tests to prove the verifier/interpreter
+/// contains it (§3.5).
+pub struct OutOfBoundsIfunc;
+
+impl IfuncLibrary for OutOfBoundsIfunc {
+    fn name(&self) -> &str {
+        "oob"
+    }
+
+    fn payload_get_max_size(&self, source_args: &SourceArgs) -> usize {
+        source_args.len()
+    }
+
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+        copy_payload(payload, source_args)
+    }
+
+    fn code(&self) -> CodeImage {
+        let mut a = Assembler::new();
+        a.paylen(2);
+        a.ldb(0, 2, 0, 1024); // read payload[len + 1024] — always OOB
+        a.halt();
+        let (vm_code, imports) = a.assemble();
+        CodeImage { imports, vm_code, hlo: vec![] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_code_is_small() {
+        // The paper's point: the benchmark ifunc's code is a few hundred
+        // bytes that dominate small messages.
+        let code = CounterIfunc::default().code();
+        assert!(code.vm_code.len() <= 64, "counter code should be tiny");
+        assert_eq!(code.imports, vec!["counter_add".to_string()]);
+    }
+
+    #[test]
+    fn padding_grows_code_section() {
+        let small = CounterIfunc::default().code();
+        let big = CounterIfunc::with_code_padding(100).code();
+        assert_eq!(big.vm_code.len(), small.vm_code.len() + 100 * 8);
+    }
+
+    #[test]
+    fn xor_has_empty_imports() {
+        assert!(XorIfunc { key: 0x5A }.code().imports.is_empty());
+    }
+}

@@ -1,0 +1,145 @@
+//! Auto-registration cache — the hash table of §3.4.
+//!
+//! "the `ucp_poll_ifunc` routine uses the ifunc's name provided by the
+//! message header to attempt the auto-registration of any first-seen ifunc
+//! type. If the corresponding library is found and loaded successfully,
+//! the UCX runtime will patch the alternative GOT pointer ... and store
+//! the related information in a hash table for subsequent messages of the
+//! same type."
+//!
+//! A cache entry holds the reconstructed GOT (name-resolved bindings in
+//! slot order), the import list it was resolved for, and whether the
+//! ifunc's HLO artifact has been handed to the PJRT runtime. The entry id
+//! is what gets *patched into the message's GOT slot* before invocation.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::vm::GotTable;
+
+/// A linked (auto-registered) ifunc type.
+pub struct LinkedIfunc {
+    /// Entry id — the value patched into the frame's GOT slot.
+    pub id: u32,
+    pub name: String,
+    /// Import names the GOT was resolved against, in slot order. If a
+    /// later message under the same name ships a different import list
+    /// ("the code can be modified anytime under the same ifunc name"), the
+    /// poll path relinks and replaces this entry.
+    pub imports: Vec<String>,
+    pub got: GotTable,
+    /// Whether this type shipped an HLO artifact (compiled per-thread by
+    /// the PJRT runtime on first execution).
+    pub has_hlo: bool,
+}
+
+#[derive(Default)]
+pub struct IfuncCache {
+    map: RwLock<HashMap<String, Arc<LinkedIfunc>>>,
+    next_id: AtomicU64,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    /// If false, every message is relinked from scratch (ablation Abl B —
+    /// quantifies what the paper's hash table saves).
+    pub enabled: std::sync::atomic::AtomicBool,
+}
+
+impl IfuncCache {
+    pub fn new() -> Self {
+        let c = IfuncCache::default();
+        c.enabled.store(true, Ordering::Relaxed);
+        c
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<Arc<LinkedIfunc>> {
+        if !self.enabled.load(Ordering::Relaxed) {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let hit = self.map.read().unwrap().get(name).cloned();
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Insert (or replace) the entry for `name`; returns it with a fresh id.
+    pub fn insert(
+        &self,
+        name: &str,
+        imports: Vec<String>,
+        got: GotTable,
+        has_hlo: bool,
+    ) -> Arc<LinkedIfunc> {
+        let entry = Arc::new(LinkedIfunc {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed) as u32,
+            name: name.to_string(),
+            imports,
+            got,
+            has_hlo,
+        });
+        if self.enabled.load(Ordering::Relaxed) {
+            self.map.write().unwrap().insert(name.to_string(), entry.clone());
+        }
+        entry
+    }
+
+    /// Drop a type (deregistration / invalidation).
+    pub fn invalidate(&self, name: &str) {
+        self.map.write().unwrap().remove(name);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit() {
+        let c = IfuncCache::new();
+        assert!(c.lookup("x").is_none());
+        c.insert("x", vec![], GotTable::empty(), false);
+        assert!(c.lookup("x").is_some());
+        assert_eq!(c.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(c.misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn disabled_cache_never_hits() {
+        let c = IfuncCache::new();
+        c.set_enabled(false);
+        c.insert("x", vec![], GotTable::empty(), false);
+        assert!(c.lookup("x").is_none());
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let c = IfuncCache::new();
+        let a = c.insert("a", vec![], GotTable::empty(), false);
+        let b = c.insert("b", vec![], GotTable::empty(), false);
+        assert_ne!(a.id, b.id);
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let c = IfuncCache::new();
+        c.insert("x", vec![], GotTable::empty(), false);
+        c.invalidate("x");
+        assert!(c.lookup("x").is_none());
+    }
+}

@@ -1,0 +1,250 @@
+//! ifunc libraries — Listing 1.2 of the paper.
+//!
+//! A valid ifunc library defines three routines:
+//! `[name]_payload_get_max_size` and `[name]_payload_init` (run on the
+//! *source* to size and fill the payload without extra copies) and
+//! `[name]_main` (the code shipped in the message and run on the target).
+//! Here the first two are trait methods executed natively on the source,
+//! and `main` is the [`CodeImage`] the library emits — TCVM bytecode plus
+//! an optional HLO artifact.
+//!
+//! [`LibraryDir`] is the `UCX_IFUNC_LIB_DIR` analog: `register_ifunc`
+//! "dlopens" libraries from it by name. Libraries are either installed
+//! programmatically (built-ins, tests) or loaded from disk as **HLO
+//! artifact libraries** (`<name>.json` manifest + `<name>.hlo.txt`
+//! AOT-compiled by `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, RwLock};
+
+use crate::runtime::ArtifactManifest;
+use crate::vm::Assembler;
+use crate::{Error, Result};
+
+use super::message::CodeImage;
+
+/// Opaque source-process arguments (`void *source_args, size_t size`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SourceArgs {
+    bytes: Vec<u8>,
+}
+
+impl SourceArgs {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn bytes(bytes: Vec<u8>) -> Self {
+        SourceArgs { bytes }
+    }
+
+    /// Pack a `f32` slice (the numeric-workload convention used by the
+    /// HLO-backed libraries).
+    pub fn f32s(v: &[f32]) -> Self {
+        let mut bytes = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        SourceArgs { bytes }
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn as_f32s(&self) -> Vec<f32> {
+        self.bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+}
+
+/// An ifunc library (Listing 1.2). Implementations provide the two
+/// source-side payload routines and the code image to inject.
+pub trait IfuncLibrary: Send + Sync {
+    /// The library name (`[ifunc_name]`, ≤ 16 bytes).
+    fn name(&self) -> &str;
+
+    /// `[name]_payload_get_max_size`: upper bound on the payload for the
+    /// given source args, so the runtime can allocate the message frame
+    /// once ("we eliminate unnecessary memory copies", §3.1).
+    fn payload_get_max_size(&self, source_args: &SourceArgs) -> usize;
+
+    /// `[name]_payload_init`: populate `payload` (sized to the max) from
+    /// the source args; returns the number of bytes actually used.
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize>;
+
+    /// The injected `[name]_main`: TCVM code + imports (+ optional HLO).
+    fn code(&self) -> CodeImage;
+}
+
+/// The `UCX_IFUNC_LIB_DIR` analog: where `ucp_register_ifunc` resolves
+/// names to libraries.
+pub struct LibraryDir {
+    dir: PathBuf,
+    installed: RwLock<HashMap<String, Arc<dyn IfuncLibrary>>>,
+}
+
+impl LibraryDir {
+    pub fn new(dir: PathBuf) -> Self {
+        LibraryDir { dir, installed: RwLock::new(HashMap::new()) }
+    }
+
+    pub fn dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    /// Install a library programmatically (the "compile it into
+    /// `<name>.so` and drop it in the directory" step of the paper's
+    /// toolchain, §2.1).
+    pub fn install(&self, lib: Box<dyn IfuncLibrary>) {
+        self.installed.write().unwrap().insert(lib.name().to_string(), lib.into());
+    }
+
+    /// Resolve a library by name: programmatically installed first, then
+    /// HLO artifact libraries from the directory (`<name>.json` +
+    /// `<name>.hlo.txt`). The dlopen/dlsym analog of §3.1.
+    pub fn open(&self, name: &str) -> Result<Arc<dyn IfuncLibrary>> {
+        if let Some(lib) = self.installed.read().unwrap().get(name) {
+            return Ok(lib.clone());
+        }
+        let manifest_path = self.dir.join(format!("{name}.json"));
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        if manifest_path.exists() && hlo_path.exists() {
+            let lib = HloIfuncLibrary::load(name, &manifest_path, &hlo_path)?;
+            let lib: Arc<dyn IfuncLibrary> = Arc::new(lib);
+            self.installed.write().unwrap().insert(name.to_string(), lib.clone());
+            return Ok(lib);
+        }
+        Err(Error::NoSuchLibrary(format!("{name} (searched {:?})", self.dir)))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.installed.read().unwrap().keys().cloned().collect()
+    }
+}
+
+/// An ifunc library whose `main` runs an AOT-compiled JAX/Pallas
+/// computation: the payload is the `f32` input tensor, the code section
+/// carries a tiny TCVM trampoline plus the **HLO artifact itself**, and the
+/// target compiles it via PJRT on first sight (then hits the
+/// auto-registration cache). This realizes the paper's §5.1 vision: no
+/// copy of the library on the target's filesystem is required.
+pub struct HloIfuncLibrary {
+    name: String,
+    pub manifest: ArtifactManifest,
+    hlo_text: Vec<u8>,
+}
+
+impl HloIfuncLibrary {
+    pub fn load(
+        name: &str,
+        manifest_path: &std::path::Path,
+        hlo_path: &std::path::Path,
+    ) -> Result<Self> {
+        let manifest = ArtifactManifest::from_json(&std::fs::read_to_string(manifest_path)?)
+            .map_err(|e| Error::Other(format!("bad manifest {manifest_path:?}: {e}")))?;
+        let hlo_text = std::fs::read(hlo_path)?;
+        Ok(HloIfuncLibrary { name: name.to_string(), manifest, hlo_text })
+    }
+
+    pub fn from_parts(name: &str, manifest: ArtifactManifest, hlo_text: Vec<u8>) -> Self {
+        HloIfuncLibrary { name: name.to_string(), manifest, hlo_text }
+    }
+
+    fn input_bytes(&self) -> usize {
+        self.manifest.input_elems() * 4
+    }
+}
+
+impl IfuncLibrary for HloIfuncLibrary {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn payload_get_max_size(&self, _source_args: &SourceArgs) -> usize {
+        // Payload holds the input tensor; the output overwrites it in
+        // place, so reserve the max of the two.
+        self.input_bytes().max(self.manifest.output_elems() * 4)
+    }
+
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+        let need = self.input_bytes();
+        if source_args.len() != need {
+            return Err(Error::InvalidMessage(format!(
+                "{}: source args must be {} bytes of f32 input (got {})",
+                self.name,
+                need,
+                source_args.len()
+            )));
+        }
+        payload[..need].copy_from_slice(source_args.as_bytes());
+        Ok(payload.len())
+    }
+
+    fn code(&self) -> CodeImage {
+        // Trampoline: xla_exec(in_off=0, n_in_elems, out_off=0, n_out_max).
+        let mut a = Assembler::new();
+        a.ldi(1, 0);
+        a.ldi(2, self.manifest.input_elems() as u32);
+        a.ldi(3, 0);
+        a.ldi(4, self.manifest.output_elems() as u32);
+        a.call("xla_exec");
+        a.halt();
+        let (vm_code, imports) = a.assemble();
+        CodeImage { imports, vm_code, hlo: self.hlo_text.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Dummy;
+    impl IfuncLibrary for Dummy {
+        fn name(&self) -> &str {
+            "dummy"
+        }
+        fn payload_get_max_size(&self, a: &SourceArgs) -> usize {
+            a.len()
+        }
+        fn payload_init(&self, p: &mut [u8], a: &SourceArgs) -> Result<usize> {
+            p[..a.len()].copy_from_slice(a.as_bytes());
+            Ok(a.len())
+        }
+        fn code(&self) -> CodeImage {
+            let mut asm = Assembler::new();
+            asm.halt();
+            let (vm_code, imports) = asm.assemble();
+            CodeImage { imports, vm_code, hlo: vec![] }
+        }
+    }
+
+    #[test]
+    fn installed_library_resolves() {
+        let d = LibraryDir::new(PathBuf::from("/nonexistent"));
+        d.install(Box::new(Dummy));
+        assert_eq!(d.open("dummy").unwrap().name(), "dummy");
+    }
+
+    #[test]
+    fn missing_library_errors() {
+        let d = LibraryDir::new(PathBuf::from("/nonexistent"));
+        let err = d.open("nope").err().expect("must fail");
+        assert!(matches!(err, Error::NoSuchLibrary(_)));
+    }
+
+    #[test]
+    fn source_args_f32_roundtrip() {
+        let a = SourceArgs::f32s(&[1.0, -2.5, 3.25]);
+        assert_eq!(a.len(), 12);
+        assert_eq!(a.as_f32s(), vec![1.0, -2.5, 3.25]);
+    }
+}

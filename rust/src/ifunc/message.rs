@@ -1,0 +1,548 @@
+//! ifunc message frames — Fig. 1 of the paper, realized.
+//!
+//! ```text
+//!  | HEADER (incl. header check + trailer sig)  | 56 B
+//!  | CODE  (GOT slot, import table, TCVM code,  | code_len
+//!  |        optional HLO artifact blob)         |
+//!  | PAYLOAD (aligned per IfuncMsgParams)       | payload_len
+//!  | ...pad to 8...                             |
+//!  | TRAILER SIGNAL                             | 8 B
+//! ```
+//!
+//! The frame is delivered with a single one-sided put. The fabric (like
+//! InfiniBand) writes the final 8 bytes last, so the poller's protocol is
+//! exactly the paper's Fig. 2: validate the header via its check word,
+//! then `wait_mem` on the trailer signal, then link + flush + invoke.
+//!
+//! The *code section* opens with the GOT-pointer slot — the "hidden global
+//! variable" the paper's toolchain inserts (§3.4) — which ships as
+//! `UNPATCHED` and is overwritten by the target with the id of the
+//! reconstructed GOT before invocation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::{Error, Result};
+
+/// First word of a live frame header.
+pub const MAGIC: u32 = 0x1FC0_DE01;
+/// First word of a wrap marker: "frame stream continues at ring offset 0".
+pub const WRAP_MAGIC: u32 = 0x1FC0_DEFF;
+pub const HEADER_BYTES: usize = 56;
+pub const TRAILER_BYTES: usize = 8;
+pub const NAME_BYTES: usize = 16;
+/// Value of the GOT slot before target-side patching.
+pub const GOT_UNPATCHED: u32 = 0xFFFF_FFFF;
+/// Reject frames bigger than this even if the ring could hold them
+/// (§3.4: "messages that are ill-formed or too long will be rejected").
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Trailer signals are salted per message so a frame landing over stale
+/// ring bytes can never accidentally observe "arrived".
+static TRAILER_SALT: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+
+fn fresh_trailer_sig() -> u64 {
+    // Never zero (zero means "not arrived") and never equal to a previous
+    // salt with overwhelming probability.
+    TRAILER_SALT.fetch_add(0x6C62_272E_07BB_0142, Ordering::Relaxed) | 1
+}
+
+/// Parsed frame header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Header {
+    pub frame_len: u32,
+    pub trailer_sig: u64,
+    pub code_offset: u32,
+    pub code_len: u32,
+    pub payload_offset: u32,
+    pub payload_len: u32,
+    pub got_offset: u32,
+    pub name: String,
+}
+
+impl Header {
+    fn check_word(&self, name_bytes: &[u8; NAME_BYTES]) -> u32 {
+        let mut x = MAGIC ^ self.frame_len ^ self.code_len ^ self.payload_len
+            ^ self.payload_offset ^ self.code_offset ^ self.got_offset;
+        x ^= (self.trailer_sig as u32) ^ ((self.trailer_sig >> 32) as u32);
+        for chunk in name_bytes.chunks(4) {
+            x ^= u32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        x
+    }
+
+    pub fn encode(&self) -> [u8; HEADER_BYTES] {
+        let mut name_bytes = [0u8; NAME_BYTES];
+        let n = self.name.as_bytes();
+        name_bytes[..n.len()].copy_from_slice(n);
+        let mut out = [0u8; HEADER_BYTES];
+        out[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+        out[4..8].copy_from_slice(&self.frame_len.to_le_bytes());
+        out[8..16].copy_from_slice(&self.trailer_sig.to_le_bytes());
+        out[16..20].copy_from_slice(&self.code_offset.to_le_bytes());
+        out[20..24].copy_from_slice(&self.code_len.to_le_bytes());
+        out[24..28].copy_from_slice(&self.payload_offset.to_le_bytes());
+        out[28..32].copy_from_slice(&self.payload_len.to_le_bytes());
+        out[32..36].copy_from_slice(&self.got_offset.to_le_bytes());
+        out[36..40].copy_from_slice(&self.check_word(&name_bytes).to_le_bytes());
+        out[40..56].copy_from_slice(&name_bytes);
+        out
+    }
+
+    /// Parse + integrity-check a header (the paper's "header signal"
+    /// verification). `Ok(None)` means "no message here" (magic is zero);
+    /// `Err` means ill-formed.
+    pub fn decode(bytes: &[u8]) -> Result<Option<Header>> {
+        if bytes.len() < HEADER_BYTES {
+            return Err(Error::InvalidMessage("short header".into()));
+        }
+        let word = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+        let magic = word(0);
+        if magic == 0 {
+            return Ok(None);
+        }
+        if magic != MAGIC {
+            return Err(Error::InvalidMessage(format!("bad magic {magic:#010x}")));
+        }
+        let mut name_bytes = [0u8; NAME_BYTES];
+        name_bytes.copy_from_slice(&bytes[40..56]);
+        let h = Header {
+            frame_len: word(4),
+            trailer_sig: u64::from_le_bytes(bytes[8..16].try_into().unwrap()),
+            code_offset: word(16),
+            code_len: word(20),
+            payload_offset: word(24),
+            payload_len: word(28),
+            got_offset: word(32),
+            name: String::from_utf8_lossy(
+                &name_bytes[..name_bytes.iter().position(|&b| b == 0).unwrap_or(NAME_BYTES)],
+            )
+            .into_owned(),
+        };
+        if h.check_word(&name_bytes) != word(36) {
+            return Err(Error::InvalidMessage("header check mismatch".into()));
+        }
+        h.validate()?;
+        Ok(Some(h))
+    }
+
+    /// Structural sanity: every section inside the frame, ordered, aligned.
+    pub fn validate(&self) -> Result<()> {
+        let fl = self.frame_len as usize;
+        let bad = |m: &str| Err(Error::InvalidMessage(m.into()));
+        if fl < HEADER_BYTES + TRAILER_BYTES || fl % 8 != 0 || fl > MAX_FRAME_BYTES {
+            return bad("bad frame length");
+        }
+        if self.code_offset as usize != HEADER_BYTES {
+            return bad("code section must follow header");
+        }
+        let code_end = self.code_offset as usize + self.code_len as usize;
+        let pay_end = self.payload_offset as usize + self.payload_len as usize;
+        if code_end > fl - TRAILER_BYTES || (self.payload_offset as usize) < code_end {
+            return bad("code section out of range");
+        }
+        if pay_end > fl - TRAILER_BYTES {
+            return bad("payload out of range");
+        }
+        if (self.got_offset as usize) < HEADER_BYTES
+            || self.got_offset as usize + 4 > code_end
+        {
+            return bad("GOT slot outside code section");
+        }
+        Ok(())
+    }
+}
+
+/// The logical content of a code section.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CodeImage {
+    /// Imported symbol names, in GOT slot order.
+    pub imports: Vec<String>,
+    /// TCVM bytecode (entry `[name]_main`).
+    pub vm_code: Vec<u8>,
+    /// Optional AOT-compiled HLO artifact (text), carried with the message
+    /// so the target needs no filesystem copy of the library — the paper's
+    /// §5.1 "vision" transport where code is fully self-contained.
+    pub hlo: Vec<u8>,
+}
+
+impl CodeImage {
+    /// Serialize:
+    /// `[got_slot u32][n_imports u16][pad u16]([len u8][name])*`
+    /// `[vm_len u32][vm][hlo_len u32][hlo]`
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            16 + self.vm_code.len()
+                + self.hlo.len()
+                + self.imports.iter().map(|s| s.len() + 1).sum::<usize>(),
+        );
+        out.extend_from_slice(&GOT_UNPATCHED.to_le_bytes());
+        out.extend_from_slice(&(self.imports.len() as u16).to_le_bytes());
+        out.extend_from_slice(&[0u8; 2]);
+        for name in &self.imports {
+            assert!(name.len() <= u8::MAX as usize, "import name too long");
+            out.push(name.len() as u8);
+            out.extend_from_slice(name.as_bytes());
+        }
+        out.extend_from_slice(&(self.vm_code.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.vm_code);
+        out.extend_from_slice(&(self.hlo.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.hlo);
+        out
+    }
+
+    /// Borrowed decode — the poll hot path uses this to avoid copying the
+    /// vm code and (potentially large) HLO blob out of the ring on every
+    /// arrival (§Perf: the owned decode allocated 3 vectors per message).
+    pub fn decode_ref(bytes: &[u8]) -> Result<(u32, CodeImageRef<'_>)> {
+        let short = || Error::InvalidMessage("truncated code section".into());
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            let s = bytes.get(*off..*off + n).ok_or_else(short)?;
+            *off += n;
+            Ok(s)
+        };
+        let got_slot = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
+        let n_imports = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+        take(&mut off, 2)?;
+        let mut imports = Vec::with_capacity(n_imports);
+        for _ in 0..n_imports {
+            let len = take(&mut off, 1)?[0] as usize;
+            let name = std::str::from_utf8(take(&mut off, len)?)
+                .map_err(|_| Error::InvalidMessage("non-utf8 import name".into()))?;
+            imports.push(name);
+        }
+        let vm_len = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let vm_code = take(&mut off, vm_len)?;
+        let hlo_len = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let hlo = take(&mut off, hlo_len)?;
+        Ok((got_slot, CodeImageRef { imports, vm_code, hlo }))
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<(u32, CodeImage)> {
+        let short = || Error::InvalidMessage("truncated code section".into());
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            let s = bytes.get(*off..*off + n).ok_or_else(short)?;
+            *off += n;
+            Ok(s)
+        };
+        let got_slot = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
+        let n_imports = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+        take(&mut off, 2)?;
+        let mut imports = Vec::with_capacity(n_imports);
+        for _ in 0..n_imports {
+            let len = take(&mut off, 1)?[0] as usize;
+            let name = std::str::from_utf8(take(&mut off, len)?)
+                .map_err(|_| Error::InvalidMessage("non-utf8 import name".into()))?;
+            imports.push(name.to_string());
+        }
+        let vm_len = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let vm_code = take(&mut off, vm_len)?.to_vec();
+        let hlo_len = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let hlo = take(&mut off, hlo_len)?.to_vec();
+        Ok((got_slot, CodeImage { imports, vm_code, hlo }))
+    }
+}
+
+/// Borrowed view of a code section (see [`CodeImage::decode_ref`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodeImageRef<'a> {
+    pub imports: Vec<&'a str>,
+    pub vm_code: &'a [u8],
+    pub hlo: &'a [u8],
+}
+
+impl CodeImageRef<'_> {
+    pub fn to_owned_image(&self) -> CodeImage {
+        CodeImage {
+            imports: self.imports.iter().map(|s| s.to_string()).collect(),
+            vm_code: self.vm_code.to_vec(),
+            hlo: self.hlo.to_vec(),
+        }
+    }
+}
+
+/// Frame-construction knobs (the §5.1 payload-alignment extension).
+#[derive(Debug, Clone, Copy)]
+pub struct IfuncMsgParams {
+    /// Payload start alignment within the frame (power of two, >= 1).
+    /// "We plan to allow the user to specify an alignment requirement on
+    /// the payload buffer to better support vectorization" — implemented.
+    pub payload_align: usize,
+}
+
+impl Default for IfuncMsgParams {
+    fn default() -> Self {
+        IfuncMsgParams { payload_align: 8 }
+    }
+}
+
+/// A fully-built, sendable ifunc message (`ucp_ifunc_msg_t`). Reusable:
+/// sending does not consume it.
+#[derive(Debug, Clone)]
+pub struct IfuncMsg {
+    frame: Vec<u8>,
+    name: String,
+    payload_offset: usize,
+    payload_len: usize,
+}
+
+impl IfuncMsg {
+    /// Assemble a frame, filling the payload **in place** via `init`
+    /// (`payload_init`): the frame is allocated once for the library's
+    /// declared max payload, `init` writes directly into it, and the frame
+    /// is shrunk if fewer bytes were produced — no separate payload
+    /// buffer, per §3.1.
+    pub fn assemble_with(
+        name: &str,
+        code: &CodeImage,
+        max_payload: usize,
+        params: IfuncMsgParams,
+        init: impl FnOnce(&mut [u8]) -> Result<usize>,
+    ) -> Result<IfuncMsg> {
+        let mut msg = Self::assemble_uninit(name, code, max_payload, params)?;
+        let used = init(msg.payload_mut())?;
+        if used > max_payload {
+            return Err(Error::InvalidMessage(format!(
+                "payload_init produced {used} bytes > declared max {max_payload}"
+            )));
+        }
+        if used < max_payload {
+            msg.shrink_payload(used);
+        }
+        Ok(msg)
+    }
+
+    /// Assemble a frame from a code image and an already-initialized
+    /// payload (copies the payload; `assemble_with` avoids the copy).
+    pub fn assemble(
+        name: &str,
+        code: &CodeImage,
+        payload: &[u8],
+        params: IfuncMsgParams,
+    ) -> Result<IfuncMsg> {
+        Self::assemble_with(name, code, payload.len(), params, |dst| {
+            dst.copy_from_slice(payload);
+            Ok(payload.len())
+        })
+    }
+
+    /// Build a frame with a zeroed payload of exactly `payload_len` bytes.
+    fn assemble_uninit(
+        name: &str,
+        code: &CodeImage,
+        payload_len: usize,
+        params: IfuncMsgParams,
+    ) -> Result<IfuncMsg> {
+        if name.is_empty() || name.len() > NAME_BYTES {
+            return Err(Error::InvalidMessage(format!(
+                "ifunc name must be 1..={NAME_BYTES} bytes"
+            )));
+        }
+        if !params.payload_align.is_power_of_two() {
+            return Err(Error::InvalidMessage("payload_align must be a power of two".into()));
+        }
+        let code_bytes = code.encode();
+        let code_offset = HEADER_BYTES;
+        let payload_offset =
+            (code_offset + code_bytes.len()).next_multiple_of(params.payload_align.max(1));
+        let trailer_offset = (payload_offset + payload_len).next_multiple_of(8);
+        let frame_len = trailer_offset + TRAILER_BYTES;
+        if frame_len > MAX_FRAME_BYTES {
+            return Err(Error::InvalidMessage("frame too long".into()));
+        }
+        let header = Header {
+            frame_len: frame_len as u32,
+            trailer_sig: fresh_trailer_sig(),
+            code_offset: code_offset as u32,
+            code_len: code_bytes.len() as u32,
+            payload_offset: payload_offset as u32,
+            payload_len: payload_len as u32,
+            // The GOT slot is the first word of the code section.
+            got_offset: code_offset as u32,
+            name: name.to_string(),
+        };
+        let mut frame = vec![0u8; frame_len];
+        frame[..HEADER_BYTES].copy_from_slice(&header.encode());
+        frame[code_offset..code_offset + code_bytes.len()].copy_from_slice(&code_bytes);
+        frame[trailer_offset..].copy_from_slice(&header.trailer_sig.to_le_bytes());
+        Ok(IfuncMsg { frame, name: name.to_string(), payload_offset, payload_len })
+    }
+
+    /// Shrink the payload to `used` bytes, moving the trailer up and
+    /// re-encoding the header.
+    fn shrink_payload(&mut self, used: usize) {
+        debug_assert!(used <= self.payload_len);
+        let h = Header::decode(&self.frame).expect("own header").expect("nonempty");
+        let trailer_offset = (self.payload_offset + used).next_multiple_of(8);
+        let frame_len = trailer_offset + TRAILER_BYTES;
+        let new_header = Header {
+            frame_len: frame_len as u32,
+            payload_len: used as u32,
+            ..h
+        };
+        self.frame.truncate(frame_len);
+        // Zero the alignment pad between payload end and trailer.
+        for b in &mut self.frame[self.payload_offset + used..trailer_offset] {
+            *b = 0;
+        }
+        self.frame[..HEADER_BYTES].copy_from_slice(&new_header.encode());
+        self.frame[trailer_offset..].copy_from_slice(&new_header.trailer_sig.to_le_bytes());
+        self.payload_len = used;
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The wire frame (header + code + payload + trailer).
+    pub fn frame(&self) -> &[u8] {
+        &self.frame
+    }
+
+    pub fn len(&self) -> usize {
+        self.frame.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Mutable view of the payload (e.g. to refresh data between resends).
+    pub fn payload_mut(&mut self) -> &mut [u8] {
+        &mut self.frame[self.payload_offset..self.payload_offset + self.payload_len]
+    }
+
+    pub fn payload(&self) -> &[u8] {
+        &self.frame[self.payload_offset..self.payload_offset + self.payload_len]
+    }
+
+    /// `ucp_ifunc_msg_free` — explicit for API parity; dropping works too.
+    pub fn free(self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_code() -> CodeImage {
+        CodeImage {
+            imports: vec!["counter_add".into(), "log".into()],
+            vm_code: vec![0u8; 64],
+            hlo: b"HloModule m".to_vec(),
+        }
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let msg = IfuncMsg::assemble("bench", &sample_code(), b"payload!", Default::default())
+            .unwrap();
+        let h = Header::decode(msg.frame()).unwrap().unwrap();
+        assert_eq!(h.name, "bench");
+        assert_eq!(h.payload_len, 8);
+        assert_eq!(h.frame_len as usize, msg.len());
+    }
+
+    #[test]
+    fn empty_slot_decodes_as_none() {
+        assert!(Header::decode(&[0u8; HEADER_BYTES]).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        let msg =
+            IfuncMsg::assemble("x", &sample_code(), b"p", Default::default()).unwrap();
+        let mut bytes = msg.frame().to_vec();
+        bytes[20] ^= 0xFF; // flip code_len
+        assert!(Header::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = [0u8; HEADER_BYTES];
+        bytes[0..4].copy_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        assert!(Header::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn code_image_roundtrip() {
+        let code = sample_code();
+        let bytes = code.encode();
+        let (got, decoded) = CodeImage::decode(&bytes).unwrap();
+        assert_eq!(got, GOT_UNPATCHED);
+        assert_eq!(decoded, code);
+    }
+
+    #[test]
+    fn truncated_code_image_rejected() {
+        let bytes = sample_code().encode();
+        assert!(CodeImage::decode(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn payload_alignment_honored() {
+        for align in [1usize, 8, 64, 4096] {
+            let msg = IfuncMsg::assemble(
+                "a",
+                &sample_code(),
+                &[7u8; 100],
+                IfuncMsgParams { payload_align: align },
+            )
+            .unwrap();
+            let h = Header::decode(msg.frame()).unwrap().unwrap();
+            assert_eq!(h.payload_offset as usize % align, 0, "align {align}");
+            assert_eq!(msg.payload(), &[7u8; 100]);
+        }
+    }
+
+    #[test]
+    fn trailer_matches_header_sig() {
+        let msg = IfuncMsg::assemble("t", &sample_code(), b"xyz", Default::default()).unwrap();
+        let h = Header::decode(msg.frame()).unwrap().unwrap();
+        let t = u64::from_le_bytes(
+            msg.frame()[msg.len() - 8..].try_into().unwrap(),
+        );
+        assert_eq!(t, h.trailer_sig);
+        assert_ne!(t, 0);
+    }
+
+    #[test]
+    fn trailer_sigs_differ_between_messages() {
+        let a = IfuncMsg::assemble("a", &sample_code(), b"", Default::default()).unwrap();
+        let b = IfuncMsg::assemble("a", &sample_code(), b"", Default::default()).unwrap();
+        let sig = |m: &IfuncMsg| u64::from_le_bytes(m.frame()[m.len() - 8..].try_into().unwrap());
+        assert_ne!(sig(&a), sig(&b));
+    }
+
+    #[test]
+    fn assemble_with_shrinks_to_used_bytes() {
+        let msg = IfuncMsg::assemble_with("s", &sample_code(), 1024, Default::default(), |p| {
+            p[..10].copy_from_slice(b"0123456789");
+            Ok(10)
+        })
+        .unwrap();
+        let h = Header::decode(msg.frame()).unwrap().unwrap();
+        assert_eq!(h.payload_len, 10);
+        assert_eq!(msg.payload(), b"0123456789");
+        // Trailer still matches after the shrink re-encode.
+        let t = u64::from_le_bytes(msg.frame()[msg.len() - 8..].try_into().unwrap());
+        assert_eq!(t, h.trailer_sig);
+    }
+
+    #[test]
+    fn assemble_with_overrun_rejected() {
+        let r = IfuncMsg::assemble_with("s", &sample_code(), 4, Default::default(), |_| Ok(9));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn oversized_name_rejected() {
+        let e = IfuncMsg::assemble(
+            "name-way-too-long-for-frame",
+            &sample_code(),
+            b"",
+            Default::default(),
+        );
+        assert!(e.is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! The ifunc API — the paper's contribution (§3).
+//!
+//! Mirrors Listing 1.1 on rust types:
+//!
+//! | paper                      | here                                   |
+//! |----------------------------|----------------------------------------|
+//! | `ucp_register_ifunc`       | [`crate::ucp::Context::register_ifunc`]|
+//! | `ucp_deregister_ifunc`     | [`crate::ucp::Context::deregister_ifunc`]|
+//! | `ucp_ifunc_msg_create`     | [`IfuncHandle::msg_create`]            |
+//! | `ucp_ifunc_msg_free`       | [`IfuncMsg::free`] (or drop)           |
+//! | `ucp_ifunc_msg_send_nbix`  | [`crate::ucp::Endpoint::ifunc_msg_send_nbix`]|
+//! | `ucp_poll_ifunc`           | [`crate::ucp::Context::poll_ifunc`]    |
+//!
+//! and Listing 1.2 as the [`IfuncLibrary`] trait
+//! (`payload_get_max_size` / `payload_init` / `main`-as-code-image).
+
+pub mod am_transport;
+pub mod builtin;
+pub mod cache;
+pub mod icache;
+pub mod library;
+pub mod message;
+pub mod poll;
+pub mod registry;
+pub mod ring;
+pub mod send;
+
+pub use library::{HloIfuncLibrary, IfuncLibrary, LibraryDir, SourceArgs};
+pub use message::{CodeImage, IfuncMsg, IfuncMsgParams};
+pub use poll::PollResult;
+pub use registry::IfuncHandle;
+pub use ring::{IfuncRing, SenderCursor};
+
+use std::any::Any;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::vm::SymbolTable;
+
+/// Target-process arguments handed to every invoked ifunc
+/// (`void *target_args` in Listing 1.1), plus the per-invocation bindings
+/// `ucp_poll_ifunc` stamps in (the HLO artifact name for `xla_exec`).
+pub struct TargetArgs {
+    /// Application state (e.g. the `db_handler` of Listing 1.3).
+    pub user: Box<dyn Any + Send>,
+    /// Name of the HLO artifact bound to the current invocation.
+    pub(crate) hlo_name: Option<String>,
+    /// `r0` of the last executed ifunc (diagnostics / tests).
+    pub last_return: Option<u64>,
+}
+
+impl TargetArgs {
+    /// No application state.
+    pub fn none() -> Self {
+        TargetArgs { user: Box::new(()), hlo_name: None, last_return: None }
+    }
+
+    pub fn new(user: Box<dyn Any + Send>) -> Self {
+        TargetArgs { user, hlo_name: None, last_return: None }
+    }
+
+    /// Downcast the application state.
+    pub fn user_as<T: 'static>(&mut self) -> Option<&mut T> {
+        self.user.downcast_mut::<T>()
+    }
+}
+
+/// The target process's linkable surface: a [`SymbolTable`] plus the
+/// standard bindings every context starts with. Injected code can only
+/// reach the world through these (and any the application installs).
+#[derive(Clone)]
+pub struct Symbols {
+    table: SymbolTable,
+    counter: Arc<AtomicU64>,
+    results: Arc<AtomicU64>,
+}
+
+impl Symbols {
+    /// Standard bindings:
+    /// * `counter_add(n)` — the §4.1 benchmark counter,
+    /// * `record_result(v)` — stores `v` (checksums etc.),
+    /// * `log(v)` — debug logging,
+    /// * `xla_exec(...)` — run the current ifunc's HLO artifact via PJRT.
+    pub fn with_builtins() -> Self {
+        let table = SymbolTable::new();
+        let counter = Arc::new(AtomicU64::new(0));
+        let results = Arc::new(AtomicU64::new(0));
+        let c = counter.clone();
+        table.install_fn("counter_add", move |_, args| {
+            Ok(c.fetch_add(args[0], Ordering::Relaxed) + args[0])
+        });
+        let r = results.clone();
+        table.install_fn("record_result", move |_, args| {
+            r.store(args[0], Ordering::Relaxed);
+            Ok(0)
+        });
+        table.install_fn("log", |_, args| {
+            log::debug!("ifunc log: {:#x} {:#x} {:#x} {:#x}", args[0], args[1], args[2], args[3]);
+            Ok(0)
+        });
+        table.install("xla_exec", crate::runtime::xla_exec_hostfn());
+        Symbols { table, counter, results }
+    }
+
+    /// The raw symbol table (install application symbols here).
+    pub fn table(&self) -> &SymbolTable {
+        &self.table
+    }
+
+    /// Install a custom symbol.
+    pub fn install_fn<F>(&self, name: &str, f: F)
+    where
+        F: Fn(&mut crate::vm::HostCtx, [u64; 4]) -> std::result::Result<u64, String>
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.table.install_fn(name, f);
+    }
+
+    /// Value of the benchmark counter (`counter_add` target).
+    pub fn counter_value(&self) -> u64 {
+        self.counter.load(Ordering::Acquire)
+    }
+
+    /// Handle to the benchmark counter (cross-thread waiting in benches).
+    pub fn counter(&self) -> Arc<AtomicU64> {
+        self.counter.clone()
+    }
+
+    /// Last `record_result` value.
+    pub fn last_result(&self) -> u64 {
+        self.results.load(Ordering::Acquire)
+    }
+
+    /// Back-compat sugar used in the crate quickstart: the counter is
+    /// installed by default; this is a no-op kept for API clarity.
+    pub fn install_counter(&self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symbols_builtin_counter() {
+        let s = Symbols::with_builtins();
+        assert!(s.table().contains("counter_add"));
+        assert!(s.table().contains("xla_exec"));
+        assert_eq!(s.counter_value(), 0);
+    }
+
+    #[test]
+    fn target_args_downcast() {
+        let mut ta = TargetArgs::new(Box::new(42u32));
+        assert_eq!(*ta.user_as::<u32>().unwrap(), 42);
+        assert!(ta.user_as::<String>().is_none());
+    }
+}

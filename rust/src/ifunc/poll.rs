@@ -1,0 +1,204 @@
+//! `ucp_poll_ifunc` — the target-side receive/link/invoke loop (Fig. 2).
+//!
+//! Per delivered frame, in order:
+//!
+//! 1. read the header word; zero → `NoMessage`, wrap marker → rewind,
+//! 2. validate the header via its check word ("the integrity of the
+//!    header is verified using the header signal, and messages that are
+//!    ill-formed or too long will be rejected", §3.4),
+//! 3. `wait_mem` on the trailer signal (the `WFE` busy-wait of §3.2),
+//! 4. **auto-register** the ifunc type on first sight: resolve the shipped
+//!    import table against the local symbol table into a GOT, verify the
+//!    bytecode, and — if the frame carries an HLO artifact — compile it on
+//!    this thread's PJRT runtime; cache everything by name (§3.4),
+//! 5. patch the frame's GOT slot with the cache entry id (the "alternative
+//!    GOT pointer" patch of §3.4),
+//! 6. `clear_cache` over the code section (§4.3's non-coherent I-cache),
+//! 7. invoke `main(payload, payload_size, target_args)` — the TCVM runs
+//!    the code *in place in the ring*,
+//! 8. zero header + trailer words, advance the cursor.
+
+use std::time::{Duration, Instant};
+
+use crate::ucp::Context;
+use crate::vm;
+use crate::{Error, Result};
+
+use super::icache;
+use super::message::{CodeImage, Header, HEADER_BYTES, MAGIC, WRAP_MAGIC};
+use super::ring::IfuncRing;
+use super::TargetArgs;
+
+/// Result of one poll call (`ucs_status_t`: `UCS_OK` vs `UCS_ERR_NO_MESSAGE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PollResult {
+    /// A message was received, linked, and executed.
+    Executed,
+    /// No complete message at the cursor.
+    NoMessage,
+}
+
+/// How long poll waits for a trailer after a valid header before declaring
+/// the frame corrupt. Generous: covers the wire model's worst case.
+const TRAILER_TIMEOUT: Duration = Duration::from_secs(10);
+
+impl Context {
+    /// Poll `ring` for one ifunc message; if present, execute it with
+    /// `target_args` and return [`PollResult::Executed`].
+    pub fn poll_ifunc(
+        &self,
+        ring: &mut IfuncRing,
+        target_args: &mut TargetArgs,
+    ) -> Result<PollResult> {
+        loop {
+            let cursor = ring.cursor();
+            let word = ring.mr().load_u64_acquire(cursor)?;
+            if word == 0 {
+                return Ok(PollResult::NoMessage);
+            }
+            if word as u32 == WRAP_MAGIC {
+                // Stream continues at offset 0.
+                ring.mr().store_u64_release(cursor, 0)?;
+                ring.rewind();
+                continue;
+            }
+            if word as u32 != MAGIC {
+                return Err(Error::InvalidMessage(format!(
+                    "bad header word {word:#018x} at ring offset {cursor}"
+                )));
+            }
+            return self.receive_one(ring, target_args);
+        }
+    }
+
+    fn receive_one(
+        &self,
+        ring: &mut IfuncRing,
+        target_args: &mut TargetArgs,
+    ) -> Result<PollResult> {
+        let cursor = ring.cursor();
+        // The header may still be streaming in (the fabric orders only the
+        // final word of the put); re-read until its check word passes.
+        let deadline = Instant::now() + TRAILER_TIMEOUT;
+        let header = loop {
+            match Header::decode(&ring.mr().local_slice()[cursor..cursor + HEADER_BYTES]) {
+                Ok(Some(h)) => break h,
+                Ok(None) => unreachable!("caller saw nonzero magic"),
+                Err(e) => {
+                    if Instant::now() > deadline {
+                        return Err(e);
+                    }
+                    crate::fabric::wire::backoff(0);
+                }
+            }
+        };
+        let frame_len = header.frame_len as usize;
+        if cursor + frame_len > ring.size() {
+            return Err(Error::InvalidMessage(format!(
+                "frame of {frame_len} bytes overruns ring (cursor {cursor}, ring {})",
+                ring.size()
+            )));
+        }
+
+        // Fig. 2: wait for the trailer signal (WFE-style spin).
+        let trailer_off = cursor + frame_len - 8;
+        let mut trailer_spins = 0u32;
+        loop {
+            let t = ring.mr().load_u64_acquire(trailer_off)?;
+            if t == header.trailer_sig {
+                break;
+            }
+            if Instant::now() > deadline {
+                return Err(Error::InvalidMessage(
+                    "trailer signal never arrived (truncated frame?)".into(),
+                ));
+            }
+            crate::fabric::wire::backoff(trailer_spins);
+            trailer_spins += 1;
+        }
+
+        // Decode the code section (borrowed — no copies of the vm code or
+        // HLO blob) and link (auto-registration on miss).
+        let code_start = cursor + header.code_offset as usize;
+        let code_end = code_start + header.code_len as usize;
+        let (_got_slot, image) =
+            CodeImage::decode_ref(&ring.mr().local_slice()[code_start..code_end])?;
+        let cached = self.cache.lookup(&header.name);
+        let linked = match cached {
+            Some(entry)
+                if entry.imports.iter().map(String::as_str).eq(image.imports.iter().copied()) =>
+            {
+                entry
+            }
+            _ => {
+                // First-seen type (or changed import table): reconstruct
+                // the GOT from the local symbol table, and compile the
+                // shipped HLO artifact if any — no filesystem involved.
+                let got = self.symbols().table().resolve_iter(image.imports.iter().copied())?;
+                let has_hlo = !image.hlo.is_empty();
+                if has_hlo {
+                    crate::runtime::with_runtime(|rt| {
+                        rt.ensure_compiled(&header.name, image.hlo)
+                    })?;
+                }
+                let owned: Vec<String> = image.imports.iter().map(|s| s.to_string()).collect();
+                self.cache.insert(&header.name, owned, got, has_hlo)
+            }
+        };
+
+        // Patch the frame's GOT slot (the hidden-global indirection of
+        // §3.4) with the cache entry id.
+        let got_off = cursor + header.got_offset as usize;
+        ring.mr().local_slice_mut()[got_off..got_off + 4]
+            .copy_from_slice(&linked.id.to_le_bytes());
+
+        // Verify the shipped bytecode (per arrival: the code in *this*
+        // message is what runs), then clear the I-cache over it.
+        let prog = vm::verify(image.vm_code, image.imports.len())?;
+        icache::clear_cache(
+            &self.config().icache,
+            header.code_len as usize,
+            self.icache_stats(),
+        );
+
+        // Invoke main(payload, payload_size, target_args), in place.
+        let pay_start = cursor + header.payload_offset as usize;
+        let pay_end = pay_start + header.payload_len as usize;
+        target_args.hlo_name = if linked.has_hlo { Some(header.name.clone()) } else { None };
+        let outcome = {
+            // SAFETY-equivalent contract: the payload slice is inside the
+            // consumed frame; the sender will not rewrite it until the
+            // consumption protocol says so.
+            let payload: &mut [u8] = &mut ring.mr().local_slice_mut()[pay_start..pay_end];
+            vm::run(&prog, &linked.got, payload, target_args, &self.config().vm)
+        };
+        target_args.hlo_name = None;
+        target_args.last_return = outcome.as_ref().map(|o| o.ret).ok();
+
+        // Consume: zero header + trailer words, advance.
+        ring.mr().store_u64_release(cursor, 0)?;
+        ring.mr().store_u64_release(trailer_off, 0)?;
+        ring.advance(frame_len);
+        outcome?;
+        Ok(PollResult::Executed)
+    }
+
+    /// Blocking receive helper: poll until one message executes
+    /// (`ucs_arch_wait_mem`-assisted loop of §3.2).
+    pub fn poll_ifunc_blocking(
+        &self,
+        ring: &mut IfuncRing,
+        target_args: &mut TargetArgs,
+    ) -> Result<()> {
+        let mut idle = 0u32;
+        loop {
+            match self.poll_ifunc(ring, target_args)? {
+                PollResult::Executed => return Ok(()),
+                PollResult::NoMessage => {
+                    crate::fabric::wire::backoff(idle);
+                    idle += 1;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! ifunc delivery rings.
+//!
+//! The paper's transport requires "the user to allocate special buffers
+//! and a consensus about where the target processes expect the messages to
+//! arrive" (§3.3): the target maps an RWX ring with `ucp_mem_map`, ships
+//! the rkey out-of-band, and the source PUTs frames at offsets it manages
+//! itself. [`IfuncRing`] is the target side (mapped region + read cursor);
+//! [`SenderCursor`] is the source-side offset manager, emitting wrap
+//! markers when a frame would run past the ring end.
+
+use std::sync::Arc;
+
+use crate::fabric::{MemPerm, MemoryRegion, RKey, RemoteKey};
+use crate::ucp::Context;
+use crate::{Error, Result};
+
+use super::message::{HEADER_BYTES, TRAILER_BYTES, WRAP_MAGIC};
+
+/// Minimum sensible ring: one max-header frame plus a wrap marker.
+pub const MIN_RING_BYTES: usize = 4096;
+
+/// Target-side ifunc ring buffer.
+pub struct IfuncRing {
+    mr: Arc<MemoryRegion>,
+    node: Arc<crate::fabric::Node>,
+    cursor: usize,
+    size: usize,
+    /// Frames consumed (telemetry + bench notifications).
+    pub consumed: u64,
+    /// Bytes consumed.
+    pub consumed_bytes: u64,
+}
+
+impl IfuncRing {
+    /// Allocate and map a ring of `size` bytes (power of 8 alignment;
+    /// `MemPerm::RWX` because remote peers write frames and — in the
+    /// paper's model — the region holds executable code).
+    pub fn new(ctx: &Context, size: usize) -> Result<Self> {
+        if size < MIN_RING_BYTES || size % 8 != 0 {
+            return Err(Error::NoResource(format!(
+                "ifunc ring must be >= {MIN_RING_BYTES} bytes and 8-aligned"
+            )));
+        }
+        let mr = ctx.mem_map(size, MemPerm::RWX);
+        Ok(IfuncRing {
+            mr,
+            node: ctx.node().clone(),
+            cursor: 0,
+            size,
+            consumed: 0,
+            consumed_bytes: 0,
+        })
+    }
+
+    pub fn rkey(&self) -> RKey {
+        self.mr.rkey()
+    }
+
+    /// Packed remote key to ship out-of-band.
+    pub fn remote_key(&self) -> RemoteKey {
+        RemoteKey { node: self.node.id(), rkey: self.mr.rkey(), len: self.size }
+    }
+
+    /// Base offset senders start writing at.
+    pub fn remote_addr(&self) -> usize {
+        0
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub(crate) fn mr(&self) -> &Arc<MemoryRegion> {
+        &self.mr
+    }
+
+    pub(crate) fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    pub(crate) fn advance(&mut self, frame_len: usize) {
+        self.cursor += frame_len;
+        if self.cursor >= self.size {
+            self.cursor = 0;
+        }
+        self.consumed += 1;
+        self.consumed_bytes += frame_len as u64;
+    }
+
+    /// Handle a wrap marker at the cursor: the skipped ring tail counts as
+    /// consumed bytes (keeps sender-side credit accounting in sync), and
+    /// the cursor rewinds to 0.
+    pub(crate) fn rewind(&mut self) {
+        self.consumed_bytes += (self.size - self.cursor) as u64;
+        self.cursor = 0;
+    }
+
+    /// Unmap the ring.
+    pub fn destroy(self, ctx: &Context) {
+        ctx.mem_unmap(&self.mr);
+    }
+}
+
+/// Source-side write-offset manager, mirroring the target's read cursor.
+///
+/// Flow control is the caller's job (the paper's throughput benchmark
+/// fills the ring, flushes, and waits for the target's consumed
+/// notification before the next round) — this type only does placement.
+#[derive(Debug, Clone)]
+pub struct SenderCursor {
+    size: usize,
+    offset: usize,
+}
+
+/// Placement decision for one frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// Byte offset to PUT the frame at.
+    pub offset: usize,
+    /// If set, an 8-byte wrap marker must be PUT at this offset *before*
+    /// the frame (tells the poller the stream continues at offset 0).
+    pub wrap_marker_at: Option<usize>,
+}
+
+impl SenderCursor {
+    pub fn new(ring_size: usize) -> Self {
+        SenderCursor { size: ring_size, offset: 0 }
+    }
+
+    /// Capacity check: the largest single frame this ring can take.
+    pub fn max_frame(&self) -> usize {
+        self.size - 8
+    }
+
+    /// Place a frame of `frame_len` bytes; errors if it can never fit.
+    pub fn place(&mut self, frame_len: usize) -> Result<Placement> {
+        if frame_len > self.max_frame() || frame_len < HEADER_BYTES + TRAILER_BYTES {
+            return Err(Error::NoResource(format!(
+                "frame of {frame_len} bytes cannot fit ring of {} bytes",
+                self.size
+            )));
+        }
+        let mut wrap = None;
+        if self.offset + frame_len > self.size {
+            // Not enough room before the end: drop a wrap marker and start
+            // over at 0. (The cursor can never be closer than 8 bytes to
+            // the end because frames and markers are 8-aligned.)
+            wrap = Some(self.offset);
+            self.offset = 0;
+        }
+        let at = self.offset;
+        self.offset += frame_len;
+        if self.offset >= self.size {
+            self.offset = 0;
+        }
+        Ok(Placement { offset: at, wrap_marker_at: wrap })
+    }
+
+    /// Bytes from the current offset to the ring end (diagnostics).
+    pub fn remaining_before_wrap(&self) -> usize {
+        self.size - self.offset
+    }
+
+    pub fn reset(&mut self) {
+        self.offset = 0;
+    }
+}
+
+/// The 8-byte wrap-marker word (low 32 bits = `WRAP_MAGIC`).
+pub fn wrap_marker_word() -> u64 {
+    WRAP_MAGIC as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_sequential() {
+        let mut c = SenderCursor::new(4096);
+        let a = c.place(512).unwrap();
+        let b = c.place(512).unwrap();
+        assert_eq!(a, Placement { offset: 0, wrap_marker_at: None });
+        assert_eq!(b, Placement { offset: 512, wrap_marker_at: None });
+    }
+
+    #[test]
+    fn wrap_marker_on_overflow() {
+        let mut c = SenderCursor::new(4096);
+        c.place(3072).unwrap();
+        let p = c.place(2048).unwrap();
+        assert_eq!(p.wrap_marker_at, Some(3072));
+        assert_eq!(p.offset, 0);
+    }
+
+    #[test]
+    fn exact_fit_wraps_cursor_to_zero() {
+        let mut c = SenderCursor::new(4096);
+        c.place(4088).unwrap();
+        let p = c.place(128).unwrap();
+        // 4088 leaves 8 bytes — next frame needs a wrap marker there.
+        assert_eq!(p.wrap_marker_at, Some(4088));
+        assert_eq!(p.offset, 0);
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut c = SenderCursor::new(4096);
+        assert!(c.place(4090).is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! # two_chains — UCX-style remote function injection and invocation
+//!
+//! Reproduction of *"UCX Programming Interface for Remote Function Injection
+//! and Invocation"* (Peña, Lu, Shamis, Poole — 2021). The paper introduces
+//! the **ifunc API**: messages that carry *executable code together with
+//! data*, delivered with one-sided RDMA PUTs into a ring buffer on the
+//! target, where a polling loop validates the frame, performs GOT-style
+//! runtime relocation, flushes the instruction cache, and invokes the
+//! shipped function — in contrast to classical active messages, which ship
+//! only a pre-registered handler ID.
+//!
+//! Because the paper's testbed (two Arm servers, ConnectX-6 InfiniBand,
+//! non-coherent I-cache, native `.text` injection) is hardware we do not
+//! have, every hardware gate is **simulated** — see `DESIGN.md §2` for the
+//! substitution table. The layering mirrors UCX:
+//!
+//! ```text
+//!   ifunc/        the paper's contribution: ucp_register_ifunc,
+//!                 ucp_ifunc_msg_create, ucp_ifunc_msg_send_nbix,
+//!                 ucp_poll_ifunc, auto-registration cache, I-cache model
+//!   ucp/          UCP-like mid layer: Context/Worker/Endpoint, mem_map,
+//!                 rkey pack/unpack, put_nbi, flush, Active Messages
+//!                 (the baseline), eager + rendezvous protocols
+//!   vm/           TCVM — portable register bytecode standing in for native
+//!                 `.text`: assembler, verifier, interpreter, GOT tables
+//!   fabric/       simulated RDMA fabric: registered memory regions with
+//!                 32-bit rkeys, queue pairs, one-sided PUT/GET/atomics,
+//!                 completion counting, calibrated wire-cost model
+//!   runtime/      PJRT executor: loads AOT-compiled HLO artifacts (from
+//!                 JAX + Pallas, see python/compile) and runs them — the
+//!                 compute engine behind HLO-carrying ifuncs
+//!   coordinator/  host → DPU/CSD-style worker pool: dispatcher, locality
+//!                 routing, poll loops, the in-memory record store used by
+//!                 the paper's database-insert example
+//!   bench/        harness regenerating the paper's Fig. 3 and Fig. 4
+//! ```
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use two_chains::prelude::*;
+//!
+//! // Two "machines" connected back-to-back (paper §4.2).
+//! let fabric = Fabric::new(2, WireConfig::off());
+//! let src = Context::new(fabric.node(0), ContextConfig::default()).unwrap();
+//! let dst = Context::new(fabric.node(1), ContextConfig::default()).unwrap();
+//! src.library_dir().install(Box::new(CounterIfunc::default()));
+//! dst.symbols().install_counter();
+//!
+//! let mut ring = IfuncRing::new(&dst, 1 << 20).unwrap();
+//! let worker_s = Worker::new(&src);
+//! let worker_d = Worker::new(&dst);
+//! let ep = worker_s.connect(&worker_d).unwrap();
+//!
+//! let h = src.register_ifunc("counter").unwrap();
+//! let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 64])).unwrap();
+//! ep.ifunc_msg_send_nbix(&msg, ring.remote_addr(), ring.rkey()).unwrap();
+//! ep.flush().unwrap();
+//! while dst.poll_ifunc(&mut ring, &mut TargetArgs::none()).unwrap()
+//!     != PollResult::Executed {}
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod fabric;
+pub mod ifunc;
+pub mod runtime;
+pub mod ucp;
+pub mod util;
+pub mod vm;
+
+/// Crate-wide error type. Mirrors `ucs_status_t`: every fallible public API
+/// returns `Result<T, Error>` where the error enumerates the UCX-style
+/// status codes the paper's API surfaces.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Remote key not known to the target HCA, or permissions insufficient.
+    /// The paper (§3.5): "If the process accesses the memory with an invalid
+    /// RKEY, the request gets rejected at the hardware level."
+    #[error("remote access error: {0}")]
+    RemoteAccess(String),
+    /// Frame failed header-signal or bounds validation (§3.4: "messages that
+    /// are ill-formed or too long will be rejected").
+    #[error("invalid ifunc message: {0}")]
+    InvalidMessage(String),
+    /// Named ifunc library was not found in `UCX_IFUNC_LIB_DIR`.
+    #[error("no such ifunc library: {0}")]
+    NoSuchLibrary(String),
+    /// TCVM bytecode failed the security verifier (§3.5).
+    #[error("code verification failed: {0}")]
+    Verify(String),
+    /// TCVM runtime fault (out-of-bounds access, fuel exhausted, bad GOT slot).
+    #[error("injected function fault: {0}")]
+    VmFault(String),
+    /// Destination ring buffer cannot accept the frame.
+    #[error("no resource: {0}")]
+    NoResource(String),
+    /// PJRT / XLA error while compiling or executing an HLO-carrying ifunc.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+    /// Endpoint / transport failure.
+    #[error("transport error: {0}")]
+    Transport(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Convenience re-exports covering the whole public API surface.
+pub mod prelude {
+    pub use crate::bench::{BenchConfig, BenchMode};
+    pub use crate::coordinator::{Cluster, ClusterConfig, Dispatcher, RecordStore};
+    pub use crate::fabric::{Fabric, MemPerm, WireConfig};
+    pub use crate::ifunc::{
+        builtin::CounterIfunc, CodeImage, IfuncHandle, IfuncMsg, IfuncRing, PollResult,
+        SourceArgs, TargetArgs,
+    };
+    pub use crate::ucp::{AmParams, Context, ContextConfig, Endpoint, Worker};
+    pub use crate::vm::{Assembler, Op};
+    pub use crate::{Error, Result};
+}

@@ -1,0 +1,318 @@
+//! `repro` — CLI for the Two-Chains / ifunc reproduction.
+//!
+//! ```text
+//! repro bench fig3|fig4|ablations [--quick] [--icache coherent] [--no-cache]
+//!                                 [--rndv-thresh N] [--code-pad N]
+//!                                 [--msgs N] [--iters N] [--sizes a,b,c]
+//! repro demo                      # Listing 1.3/1.4 flow on the fabric
+//! repro serve [--workers N] [--listen ADDR]
+//! repro info
+//! ```
+//!
+//! (Argument parsing is hand-rolled: the offline build environment has no
+//! clap.)
+
+use two_chains::bench::{
+    harness::{BenchConfig, BenchPair},
+    latency, report, throughput,
+};
+use two_chains::fabric::WireConfig;
+use two_chains::ifunc::icache::IcacheConfig;
+use two_chains::ucp::AmParams;
+
+mod serve;
+
+const USAGE: &str = "\
+repro — Two-Chains / UCX ifunc reproduction
+
+USAGE:
+  repro bench fig3        regenerate Fig. 3 (ping-pong latency sweep)
+  repro bench fig4        regenerate Fig. 4 (message-throughput sweep)
+  repro bench ablations   Abl A (icache) / B (cache) / C (rndv) / D (code size)
+  repro demo              quickstart: inject the counter ifunc
+  repro serve             record-ingestion cluster over TCP (text protocol)
+  repro info              print configuration + artifact inventory
+
+BENCH OPTIONS:
+  --quick                 small sweep, no wire model (CI smoke)
+  --icache <non-coherent|coherent>
+  --no-cache              disable target auto-registration cache (Abl B)
+  --rndv-thresh <bytes>   AM rendezvous threshold (UCX_RNDV_THRESH, Abl C)
+  --code-pad <instrs>     pad the counter ifunc's code section
+  --msgs <n>              messages per size (fig4)
+  --iters <n>             ping-pong iterations per size (fig3)
+  --sizes <a,b,c>         explicit payload sizes in bytes
+
+SERVE OPTIONS:
+  --workers <n>           device workers (default 2)
+  --listen <addr>         TCP listen address (default 127.0.0.1:7100)
+";
+
+#[derive(Default, Clone)]
+struct Opts {
+    quick: bool,
+    icache_coherent: bool,
+    no_cache: bool,
+    rndv_thresh: Option<usize>,
+    code_pad: usize,
+    msgs: Option<usize>,
+    iters: Option<usize>,
+    sizes: Option<Vec<usize>>,
+    workers: usize,
+    listen: String,
+}
+
+fn parse_opts(args: &[String]) -> Result<Opts, String> {
+    let mut o = Opts { workers: 2, listen: "127.0.0.1:7100".into(), ..Default::default() };
+    let mut i = 0;
+    let take = |i: &mut usize| -> Result<&String, String> {
+        *i += 1;
+        args.get(*i).ok_or_else(|| format!("{} needs a value", args[*i - 1]))
+    };
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => o.quick = true,
+            "--no-cache" => o.no_cache = true,
+            "--icache" => {
+                o.icache_coherent = match take(&mut i)?.as_str() {
+                    "coherent" => true,
+                    "non-coherent" => false,
+                    v => return Err(format!("bad --icache value: {v}")),
+                }
+            }
+            "--rndv-thresh" => o.rndv_thresh = Some(parse_num(take(&mut i)?)?),
+            "--code-pad" => o.code_pad = parse_num(take(&mut i)?)?,
+            "--msgs" => o.msgs = Some(parse_num(take(&mut i)?)?),
+            "--iters" => o.iters = Some(parse_num(take(&mut i)?)?),
+            "--workers" => o.workers = parse_num(take(&mut i)?)?,
+            "--listen" => o.listen = take(&mut i)?.clone(),
+            "--sizes" => {
+                o.sizes = Some(
+                    take(&mut i)?
+                        .split(',')
+                        .map(parse_num)
+                        .collect::<Result<Vec<_>, _>>()?,
+                )
+            }
+            other => return Err(format!("unknown option {other}")),
+        }
+        i += 1;
+    }
+    Ok(o)
+}
+
+fn parse_num<S: AsRef<str>>(s: S) -> Result<usize, String> {
+    s.as_ref().parse::<usize>().map_err(|e| format!("bad number {}: {e}", s.as_ref()))
+}
+
+impl Opts {
+    fn config(&self) -> BenchConfig {
+        let mut c = if self.quick { BenchConfig::quick() } else { BenchConfig::default() };
+        c.icache = if self.icache_coherent {
+            IcacheConfig::coherent()
+        } else {
+            IcacheConfig::non_coherent()
+        };
+        c.cache_enabled = !self.no_cache;
+        c.code_pad = self.code_pad;
+        if let Some(t) = self.rndv_thresh {
+            c.am = AmParams { rndv_threshold: t, ..c.am };
+        }
+        if let Some(m) = self.msgs {
+            c.msgs_per_size = m;
+        }
+        if let Some(i) = self.iters {
+            c.pingpong_iters = i;
+        }
+        if let Some(s) = &self.sizes {
+            c.sizes = s.clone();
+        }
+        c
+    }
+}
+
+pub fn run_fig3(cfg: &BenchConfig) -> anyhow::Result<Vec<report::SeriesPoint>> {
+    let mut series = Vec::new();
+    for &size in &cfg.sizes {
+        let pair = BenchPair::new(cfg.clone())?;
+        let ifunc = latency::ifunc_pingpong(&pair, size, cfg.pingpong_iters)?;
+        let am = latency::am_pingpong(&pair, size, cfg.pingpong_iters)?;
+        series.push(report::SeriesPoint { size, ifunc, am });
+        eprint!(".");
+    }
+    eprintln!();
+    Ok(series)
+}
+
+pub fn run_fig4(cfg: &BenchConfig) -> anyhow::Result<Vec<report::SeriesPoint>> {
+    let mut series = Vec::new();
+    for &size in &cfg.sizes {
+        // Bound total bytes so 1MB payloads don't take minutes.
+        let msgs = cfg.msgs_per_size.min((256 << 20) / size.max(1)).max(50);
+        let pair = BenchPair::new(cfg.clone())?;
+        let ifunc = throughput::ifunc_throughput(&pair, size, msgs)?;
+        let am = throughput::am_throughput(&pair, size, msgs)?;
+        series.push(report::SeriesPoint { size, ifunc, am });
+        eprint!(".");
+    }
+    eprintln!();
+    Ok(series)
+}
+
+fn run_ablations(base: BenchConfig) -> anyhow::Result<()> {
+    let sizes = if base.sizes.len() > 6 {
+        vec![64, 1024, 8192, 65536, 1 << 20]
+    } else {
+        base.sizes.clone()
+    };
+
+    // Abl A: coherent vs non-coherent I-cache (latency).
+    for (label, icache) in [
+        ("non-coherent I-cache (paper testbed)", IcacheConfig::non_coherent()),
+        ("coherent I-cache (paper §5.1 future work)", IcacheConfig::coherent()),
+    ] {
+        let cfg = BenchConfig { icache, sizes: sizes.clone(), ..base.clone() };
+        let series = run_fig3(&cfg)?;
+        report::print_series(&format!("Abl A — one-way latency, {label}"), "ns", &series, true);
+    }
+
+    // Abl B: auto-registration cache on/off.
+    for (label, cache) in [("cache on (paper)", true), ("cache off", false)] {
+        let cfg = BenchConfig { cache_enabled: cache, sizes: sizes.clone(), ..base.clone() };
+        let series = run_fig3(&cfg)?;
+        report::print_series(&format!("Abl B — latency, {label}"), "ns", &series, true);
+    }
+
+    // Abl C: AM rendezvous threshold sweep (throughput steps).
+    for thresh in [1024usize, 2000, 8192, 16384] {
+        let cfg = BenchConfig {
+            am: AmParams { rndv_threshold: thresh, ..base.am },
+            sizes: sizes.clone(),
+            ..base.clone()
+        };
+        let series = run_fig4(&cfg)?;
+        report::print_series(
+            &format!("Abl C — throughput, UCX_RNDV_THRESH={thresh}"),
+            "msg/s",
+            &series,
+            false,
+        );
+    }
+
+    // Abl D: code-section size (GOT patch + verify + flush scale with it).
+    for pad in [0usize, 64, 512] {
+        let cfg = BenchConfig { code_pad: pad, sizes: sizes.clone(), ..base.clone() };
+        let series = run_fig3(&cfg)?;
+        report::print_series(
+            &format!("Abl D — latency, +{pad} padding instrs in code section"),
+            "ns",
+            &series,
+            true,
+        );
+    }
+    Ok(())
+}
+
+fn demo() -> anyhow::Result<()> {
+    use two_chains::prelude::*;
+    println!("Two-Chains quickstart: injecting the counter ifunc across the fabric");
+    let fabric = Fabric::new(2, WireConfig::off());
+    let src = Context::new(fabric.node(0), Default::default())?;
+    let dst = Context::new(fabric.node(1), Default::default())?;
+    src.library_dir().install(Box::new(CounterIfunc::default()));
+    let mut ring = IfuncRing::new(&dst, 1 << 20)?;
+    let ws = Worker::new(&src);
+    let wd = Worker::new(&dst);
+    let ep = ws.connect(&wd)?;
+
+    let h = src.register_ifunc("counter")?;
+    let msg = h.msg_create(&SourceArgs::bytes(b"hello two-chains".to_vec()))?;
+    let mut args = TargetArgs::none();
+    let mut cursor = two_chains::ifunc::SenderCursor::new(ring.size());
+    for i in 0..5 {
+        ep.ifunc_msg_send_cursor(&msg, &mut cursor, ring.rkey())?;
+        ep.flush()?;
+        dst.poll_ifunc_blocking(&mut ring, &mut args)?;
+        println!("  sent+executed #{i}: target counter = {}", dst.symbols().counter_value());
+    }
+    println!(
+        "done: {} executions, auto-registration cache hits {}",
+        dst.symbols().counter_value(),
+        dst.ifunc_cache().hits.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    Ok(())
+}
+
+fn info() {
+    println!("two-chains reproduction — configuration");
+    println!("  wire model (paper testbed): {:?}", WireConfig::connectx6());
+    println!("  AM params: {:?}", AmParams::default());
+    println!("  icache: {:?}", IcacheConfig::non_coherent());
+    let dir = std::path::Path::new("artifacts");
+    println!("  artifacts in {dir:?}:");
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            println!("    {}", e.file_name().to_string_lossy());
+        }
+    } else {
+        println!("    (none — run `make artifacts`)");
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    two_chains::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    match cmd {
+        "bench" => {
+            let (which, rest) = rest
+                .split_first()
+                .ok_or_else(|| anyhow::anyhow!("bench needs fig3|fig4|ablations"))?;
+            let opts = parse_opts(rest).map_err(|e| anyhow::anyhow!(e))?;
+            let cfg = opts.config();
+            match which.as_str() {
+                "fig3" => {
+                    let series = run_fig3(&cfg)?;
+                    report::print_series(
+                        "Fig. 3 — one-way latency, ifunc vs UCX AM",
+                        "ns",
+                        &series,
+                        true,
+                    );
+                    println!("{}", report::series_json("fig3", &series));
+                }
+                "fig4" => {
+                    let series = run_fig4(&cfg)?;
+                    report::print_series(
+                        "Fig. 4 — message throughput, ifunc vs UCX AM",
+                        "msg/s",
+                        &series,
+                        false,
+                    );
+                    println!("{}", report::series_json("fig4", &series));
+                }
+                "ablations" => run_ablations(cfg)?,
+                other => anyhow::bail!("unknown bench {other}"),
+            }
+        }
+        "demo" => demo()?,
+        "serve" => {
+            let opts = parse_opts(rest).map_err(|e| anyhow::anyhow!(e))?;
+            serve::serve(opts.workers, &opts.listen)?;
+        }
+        "info" => info(),
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command: {other}\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,264 @@
+//! PJRT runtime — executes AOT-compiled JAX/Pallas artifacts.
+//!
+//! This is the rust end of the three-layer AOT bridge: `python/compile`
+//! lowers JAX functions (which call Pallas kernels) to **HLO text**
+//! (`artifacts/<name>.hlo.txt`, see `aot.py`); this module loads that text
+//! with `HloModuleProto`, compiles it on the PJRT CPU client, caches the
+//! executable, and runs it from the coordinator / poll hot path. Python is
+//! never on the request path.
+//!
+//! PJRT wrapper types are not `Send`, so each polling/executing thread
+//! owns its own [`XlaRuntime`] via [`with_runtime`]. Compilation happens
+//! once per (thread, ifunc name) — this is the PJRT analog of the paper's
+//! auto-registration: the first-seen ifunc type pays the "dynamic linking"
+//! cost, subsequent messages hit the cache (§3.4).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::vm::HostFn;
+use crate::{Error, Result};
+
+/// Manifest describing one AOT artifact, written by `python/compile/aot.py`
+/// next to the HLO text. All artifacts use the flat-`f32` calling
+/// convention: input `f32[input_elems]`, output a 1-tuple of
+/// `f32[output_elems]` (the JAX side reshapes internally).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactManifest {
+    pub name: String,
+    pub input_shape: Vec<i64>,
+    pub output_shape: Vec<i64>,
+    pub dtype: String,
+    pub description: String,
+}
+
+impl ArtifactManifest {
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product::<i64>() as usize
+    }
+
+    pub fn output_elems(&self) -> usize {
+        self.output_shape.iter().product::<i64>() as usize
+    }
+
+    /// Parse the JSON written by `aot.py`.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = crate::util::Json::parse(text)
+            .map_err(|e| Error::Other(format!("bad manifest json: {e}")))?;
+        let field = |k: &str| {
+            j.get(k).ok_or_else(|| Error::Other(format!("manifest missing field {k}")))
+        };
+        Ok(ArtifactManifest {
+            name: field("name")?
+                .as_str()
+                .ok_or_else(|| Error::Other("manifest name not a string".into()))?
+                .to_string(),
+            input_shape: field("input_shape")?
+                .as_i64_vec()
+                .ok_or_else(|| Error::Other("bad input_shape".into()))?,
+            output_shape: field("output_shape")?
+                .as_i64_vec()
+                .ok_or_else(|| Error::Other("bad output_shape".into()))?,
+            dtype: j.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32").to_string(),
+            description: j
+                .get("description")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+        })
+    }
+
+    pub fn to_json(&self) -> String {
+        use crate::util::Json;
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("input_shape", Json::Arr(self.input_shape.iter().map(|&i| Json::Num(i as f64)).collect())),
+            ("output_shape", Json::Arr(self.output_shape.iter().map(|&i| Json::Num(i as f64)).collect())),
+            ("dtype", Json::from(self.dtype.as_str())),
+            ("description", Json::from(self.description.as_str())),
+        ])
+        .to_string()
+    }
+}
+
+/// A per-thread PJRT client + executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    execs: RefCell<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    pub compilations: std::cell::Cell<u64>,
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl XlaRuntime {
+    pub fn new() -> Result<Self> {
+        Ok(XlaRuntime {
+            client: xla::PjRtClient::cpu()?,
+            execs: RefCell::new(HashMap::new()),
+            compilations: std::cell::Cell::new(0),
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn is_compiled(&self, name: &str) -> bool {
+        self.execs.borrow().contains_key(name)
+    }
+
+    /// Compile `hlo_text` under `name` if not already cached. This is the
+    /// expensive "first-seen ifunc type" path.
+    pub fn ensure_compiled(&self, name: &str, hlo_text: &[u8]) -> Result<()> {
+        if self.is_compiled(name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::parse_and_return_unverified_module(hlo_text)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.execs.borrow_mut().insert(name.to_string(), Arc::new(exe));
+        self.compilations.set(self.compilations.get() + 1);
+        Ok(())
+    }
+
+    /// Compile from an artifact file on disk (examples, coordinator boot).
+    pub fn ensure_compiled_file(&self, name: &str, path: &std::path::Path) -> Result<()> {
+        if self.is_compiled(name) {
+            return Ok(());
+        }
+        let text = std::fs::read(path)?;
+        self.ensure_compiled(name, &text)
+    }
+
+    /// Execute artifact `name` on a flat `f32` input of shape `dims`;
+    /// returns the flat `f32` output (first tuple element).
+    pub fn execute_f32(&self, name: &str, input: &[f32], dims: &[i64]) -> Result<Vec<f32>> {
+        let exe = self
+            .execs
+            .borrow()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Xla(format!("artifact {name} not compiled")))?;
+        let lit = xla::Literal::vec1(input).reshape(dims)?;
+        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        self.executions.set(self.executions.get() + 1);
+        // aot.py lowers with return_tuple=True → 1-tuple output.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Number of cached executables.
+    pub fn num_cached(&self) -> usize {
+        self.execs.borrow().len()
+    }
+}
+
+thread_local! {
+    static RUNTIME: RefCell<Option<XlaRuntime>> = const { RefCell::new(None) };
+}
+
+/// Run `f` against this thread's runtime, creating it on first use.
+pub fn with_runtime<R>(f: impl FnOnce(&XlaRuntime) -> Result<R>) -> Result<R> {
+    RUNTIME.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(XlaRuntime::new()?);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+/// The `xla_exec` host symbol injected code calls through its GOT
+/// (Listing 1.3's compute step, with PJRT as the engine).
+///
+/// Register ABI: `r1` = input byte offset in payload, `r2` = input length
+/// in f32 elements, `r3` = output byte offset in payload, `r4` = max output
+/// elements. Returns the number of f32 elements written.
+///
+/// The artifact is looked up by the *current ifunc's name*, which
+/// `ucp_poll_ifunc` stamps into [`crate::ifunc::TargetArgs`] before
+/// invocation; `poll` has already ensured the artifact shipped in the
+/// message is compiled on this thread.
+pub fn xla_exec_hostfn() -> HostFn {
+    Arc::new(|ctx, [in_off, n_elems, out_off, max_out]| {
+        let ta = ctx
+            .user
+            .downcast_mut::<crate::ifunc::TargetArgs>()
+            .ok_or("xla_exec: target args are not ifunc TargetArgs")?;
+        let name = ta
+            .hlo_name
+            .clone()
+            .ok_or("xla_exec: no HLO artifact bound to this invocation")?;
+        let in_off = in_off as usize;
+        let n = n_elems as usize;
+        let out_off = out_off as usize;
+        let in_end = in_off + n * 4;
+        if in_end > ctx.payload.len() {
+            return Err(format!("xla_exec: input [{in_off}, {in_end}) outside payload"));
+        }
+        let input: Vec<f32> = ctx.payload[in_off..in_end]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let out = with_runtime(|rt| rt.execute_f32(&name, &input, &[n as i64]))
+            .map_err(|e| e.to_string())?;
+        if out.len() > max_out as usize {
+            return Err(format!(
+                "xla_exec: output of {} elems exceeds caller max {max_out}",
+                out.len()
+            ));
+        }
+        let out_end = out_off + out.len() * 4;
+        if out_end > ctx.payload.len() {
+            return Err(format!("xla_exec: output [{out_off}, {out_end}) outside payload"));
+        }
+        for (i, v) in out.iter().enumerate() {
+            ctx.payload[out_off + i * 4..out_off + i * 4 + 4]
+                .copy_from_slice(&v.to_le_bytes());
+        }
+        Ok(out.len() as u64)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_elem_counts() {
+        let m = ArtifactManifest {
+            name: "t".into(),
+            input_shape: vec![4, 8],
+            output_shape: vec![32],
+            dtype: "f32".into(),
+            description: String::new(),
+        };
+        assert_eq!(m.input_elems(), 32);
+        assert_eq!(m.output_elems(), 32);
+    }
+
+    #[test]
+    fn manifest_json_roundtrip() {
+        let m = ArtifactManifest {
+            name: "delta".into(),
+            input_shape: vec![4096],
+            output_shape: vec![4096],
+            dtype: "f32".into(),
+            description: "delta codec".into(),
+        };
+        assert_eq!(ArtifactManifest::from_json(&m.to_json()).unwrap(), m);
+    }
+
+    #[test]
+    fn manifest_defaults_dtype() {
+        let m = ArtifactManifest::from_json(
+            r#"{"name":"x","input_shape":[2,3],"output_shape":[6]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.dtype, "f32");
+        assert_eq!(m.input_elems(), 6);
+    }
+
+    #[test]
+    fn execute_uncompiled_artifact_errors() {
+        let r = with_runtime(|rt| rt.execute_f32("missing", &[1.0], &[1]));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! `repro serve` — the record-ingestion service.
+//!
+//! A host (leader) process accepts line-delimited JSON over TCP and turns
+//! each request into an ifunc injection to the worker pool — the paper's
+//! §3.2 database scenario as a running service. One OS thread per client
+//! (the offline environment has no tokio; the request path itself is the
+//! fabric's, not the socket's).
+//!
+//! Protocol (one JSON object per line):
+//! ```json
+//! {"cmd":"insert","key":7,"data":[0.1,0.2]}  -> {"ok":true,"worker":1}
+//! {"cmd":"get","key":7}                      -> {"ok":true,"data":[...]}
+//! {"cmd":"stats"}                            -> {"ok":true,"executed":N}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use two_chains::coordinator::{Cluster, ClusterConfig, InsertIfunc};
+use two_chains::ifunc::IfuncHandle;
+use two_chains::util::Json;
+
+pub fn serve(workers: usize, listen: &str) -> anyhow::Result<()> {
+    let cluster = Arc::new(Cluster::launch(
+        ClusterConfig { workers, ..Default::default() },
+        |_, _, _| {},
+    )?);
+    cluster.leader.library_dir().install(Box::new(InsertIfunc));
+    let handle: Arc<IfuncHandle> = Arc::new(cluster.leader.register_ifunc("insert")?);
+
+    let listener = TcpListener::bind(listen)?;
+    println!("listening on {listen} ({workers} workers); JSON lines: insert/get/stats");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let cluster = cluster.clone();
+        let handle = handle.clone();
+        std::thread::spawn(move || {
+            let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+            if let Err(e) = client_loop(stream, &cluster, &handle) {
+                log::warn!("client {peer}: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn client_loop(
+    stream: TcpStream,
+    cluster: &Cluster,
+    handle: &IfuncHandle,
+) -> anyhow::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(cluster, handle, &line);
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::from(msg))])
+}
+
+pub fn handle_line(cluster: &Cluster, handle: &IfuncHandle, line: &str) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err_json(&format!("bad request: {e}")),
+    };
+    let d = cluster.dispatcher();
+    match req.get("cmd").and_then(|c| c.as_str()) {
+        Some("insert") => {
+            let Some(key) = req.get("key").and_then(|k| k.as_u64()) else {
+                return err_json("insert needs numeric key");
+            };
+            let Some(data) = req.get("data").and_then(|v| v.as_f32_vec()) else {
+                return err_json("insert needs data array");
+            };
+            match d
+                .inject_by_key(handle, key, &InsertIfunc::args(key, &data))
+                .and_then(|w| d.barrier().map(|_| w))
+            {
+                Ok(worker) => {
+                    Json::obj(vec![("ok", Json::Bool(true)), ("worker", Json::from(worker))])
+                }
+                Err(e) => err_json(&e.to_string()),
+            }
+        }
+        Some("get") => {
+            let Some(key) = req.get("key").and_then(|k| k.as_u64()) else {
+                return err_json("get needs numeric key");
+            };
+            let worker = d.route_key(key);
+            match cluster.workers[worker].store.get(key) {
+                Some(data) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("worker", Json::from(worker)),
+                    ("data", Json::arr_f32(&data)),
+                ]),
+                None => err_json("not found"),
+            }
+        }
+        Some("stats") => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("executed", Json::from(d.total_executed())),
+            (
+                "per_worker",
+                Json::Arr(cluster.workers.iter().map(|w| Json::from(w.executed())).collect()),
+            ),
+            (
+                "records",
+                Json::from(cluster.workers.iter().map(|w| w.store.len()).sum::<usize>()),
+            ),
+        ]),
+        _ => err_json("unknown cmd (insert/get/stats)"),
+    }
+}

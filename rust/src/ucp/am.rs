@@ -1,0 +1,230 @@
+//! UCX Active Messages — the baseline the paper compares ifuncs against
+//! (§3.3, §4).
+//!
+//! Semantics modeled after `ucp_am_send_nbx` / `ucp_worker_set_am_recv_handler`:
+//! handlers are registered **by numeric ID at the target, at startup** —
+//! precisely the compile-time coupling the ifunc API removes — and the
+//! transport picks one of three protocols by payload size:
+//!
+//! * **eager-short** — payload rides inline in a single one-sided write,
+//! * **eager-bcopy** — payload is staged through an internal bounce buffer
+//!   (one extra copy) before the write,
+//! * **rendezvous** — an RTS descriptor is written; the receiver pulls the
+//!   payload with (possibly fragmented) one-sided GETs from the sender's
+//!   registered buffer and acks so the sender can release it.
+//!
+//! The protocol switch points produce the characteristic *stepping* of the
+//! AM curves in the paper's Fig. 4 ("These steps are likely due to the
+//! change is underlying protocol for moving the active messages") and are
+//! configurable via [`AmParams`] — ablation Abl C sweeps them.
+//!
+//! ## Ring wire format
+//!
+//! Receive rings are slot-arrays. A message is a single put that
+//! *right-aligns* inside its slot so the last 8 bytes — delivered with
+//! release ordering by the fabric — are the **signal word**:
+//!
+//! ```text
+//!  | ... empty ... | payload (len bytes) | signal u64 |   <- one slot
+//!                                        ^ slot end
+//!  signal = seq(16) | len(24) | am_id(16) | proto(8)     (nonzero: seq >= 1)
+//! ```
+//!
+//! The receiver spins on the signal word of the next expected slot
+//! (`wait_mem`), consumes, zeroes the signal, and periodically writes its
+//! consumed count back into the sender's credit region (flow control).
+
+use crate::{Error, Result};
+
+/// AM protocol selector carried in the signal word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum AmProto {
+    EagerShort = 1,
+    EagerBcopy = 2,
+    Rndv = 3,
+}
+
+impl AmProto {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => AmProto::EagerShort,
+            2 => AmProto::EagerBcopy,
+            3 => AmProto::Rndv,
+            _ => return None,
+        })
+    }
+}
+
+/// Transport tuning — the knobs behind the AM curve's steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AmParams {
+    /// Bytes per receive-ring slot (incl. the 8-byte signal word).
+    pub slot_size: usize,
+    /// Slots per receive ring.
+    pub num_slots: usize,
+    /// Largest payload sent eager-short (inline, no staging copy).
+    /// Default 1 KiB: the paper's AM message-rate curve steps sharply as
+    /// payload goes 1 KB → 2 KB (§4.3) — the short→bcopy switch.
+    pub short_max: usize,
+    /// Largest payload sent eager at all; above this, rendezvous.
+    /// UCX's `UCX_RNDV_THRESH`; default 8 KiB (IB-class UCX default),
+    /// which puts the latency crossover in the paper's 8–16 KB band.
+    pub rndv_threshold: usize,
+    /// Fragment size for rendezvous GETs (UCX rndv pipelining). Each
+    /// fragment pays per-message wire overhead.
+    pub rndv_frag: usize,
+    /// Receiver writes its consumed count back every N messages.
+    pub credit_interval: u64,
+}
+
+impl Default for AmParams {
+    fn default() -> Self {
+        AmParams {
+            slot_size: 16384,
+            num_slots: 64,
+            short_max: 1024,
+            rndv_threshold: 8192,
+            rndv_frag: 64 * 1024,
+            credit_interval: 16,
+        }
+    }
+}
+
+impl AmParams {
+    /// Eager capacity of a slot: everything but the signal word.
+    pub fn eager_capacity(&self) -> usize {
+        self.slot_size - SIGNAL_BYTES
+    }
+
+    /// Protocol selection for a payload of `len` bytes.
+    pub fn select(&self, len: usize) -> AmProto {
+        if len <= self.short_max {
+            AmProto::EagerShort
+        } else if len <= self.rndv_threshold && len <= self.eager_capacity() {
+            AmProto::EagerBcopy
+        } else {
+            AmProto::Rndv
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.slot_size < 64 || !self.slot_size.is_power_of_two() {
+            return Err(Error::Other("slot_size must be a power of two >= 64".into()));
+        }
+        if self.num_slots < 2 {
+            return Err(Error::Other("num_slots must be >= 2".into()));
+        }
+        if self.credit_interval == 0 || self.credit_interval >= self.num_slots as u64 {
+            return Err(Error::Other(
+                "credit_interval must be in [1, num_slots) to avoid flow-control deadlock".into(),
+            ));
+        }
+        if self.rndv_frag == 0 {
+            return Err(Error::Other("rndv_frag must be nonzero".into()));
+        }
+        // RTS descriptor must fit eager path.
+        if RNDV_DESC_BYTES > self.eager_capacity() {
+            return Err(Error::Other("slot too small for rendezvous descriptor".into()));
+        }
+        Ok(())
+    }
+}
+
+pub const SIGNAL_BYTES: usize = 8;
+
+/// Max payload length encodable in the signal word (24 bits).
+pub const MAX_SIGNAL_LEN: usize = (1 << 24) - 1;
+
+/// Pack the signal word. `seq` is truncated to 16 bits; with `num_slots`
+/// ≪ 2^16 a stale slot can never alias the expected sequence number.
+pub fn pack_signal(seq: u64, len: usize, am_id: u16, proto: AmProto) -> u64 {
+    debug_assert!(len <= MAX_SIGNAL_LEN);
+    ((seq & 0xFFFF) << 48) | ((len as u64 & 0xFF_FFFF) << 24) | ((am_id as u64) << 8) | proto as u64
+}
+
+/// Unpack `(seq16, len, am_id, proto)`.
+pub fn unpack_signal(sig: u64) -> Option<(u16, usize, u16, AmProto)> {
+    let proto = AmProto::from_u8((sig & 0xFF) as u8)?;
+    let am_id = ((sig >> 8) & 0xFFFF) as u16;
+    let len = ((sig >> 24) & 0xFF_FFFF) as usize;
+    let seq = ((sig >> 48) & 0xFFFF) as u16;
+    Some((seq, len, am_id, proto))
+}
+
+/// Rendezvous RTS descriptor, shipped as the eager "payload" of an
+/// `AmProto::Rndv` message: the sender-side registered buffer to GET from.
+pub const RNDV_DESC_BYTES: usize = 4 + 8;
+
+pub fn pack_rndv_desc(rkey: u32, len: u64) -> [u8; RNDV_DESC_BYTES] {
+    let mut out = [0u8; RNDV_DESC_BYTES];
+    out[..4].copy_from_slice(&rkey.to_le_bytes());
+    out[4..12].copy_from_slice(&len.to_le_bytes());
+    out
+}
+
+pub fn unpack_rndv_desc(data: &[u8]) -> Result<(u32, u64)> {
+    if data.len() < RNDV_DESC_BYTES {
+        return Err(Error::Transport("short rendezvous descriptor".into()));
+    }
+    let rkey = u32::from_le_bytes(data[..4].try_into().unwrap());
+    let len = u64::from_le_bytes(data[4..12].try_into().unwrap());
+    Ok((rkey, len))
+}
+
+/// Offsets of the two flow-control words in an endpoint's credit region.
+pub const CREDIT_CONSUMED_OFF: usize = 0;
+pub const CREDIT_RNDV_ACK_OFF: usize = 8;
+pub const CREDIT_REGION_BYTES: usize = 16;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signal_roundtrip() {
+        let sig = pack_signal(7, 1234, 42, AmProto::EagerBcopy);
+        assert_eq!(unpack_signal(sig), Some((7, 1234, 42, AmProto::EagerBcopy)));
+    }
+
+    #[test]
+    fn signal_is_nonzero_for_seq_ge_1() {
+        // A zero signal means "slot empty"; any valid message must differ.
+        let sig = pack_signal(1, 0, 0, AmProto::EagerShort);
+        assert_ne!(sig, 0);
+    }
+
+    #[test]
+    fn protocol_selection_thresholds() {
+        let p = AmParams::default();
+        assert_eq!(p.select(1), AmProto::EagerShort);
+        assert_eq!(p.select(1024), AmProto::EagerShort);
+        assert_eq!(p.select(1025), AmProto::EagerBcopy);
+        assert_eq!(p.select(8192), AmProto::EagerBcopy);
+        assert_eq!(p.select(8193), AmProto::Rndv);
+        assert_eq!(p.select(1 << 20), AmProto::Rndv);
+    }
+
+    #[test]
+    fn rndv_desc_roundtrip() {
+        let d = pack_rndv_desc(0xABCD_1234, 1 << 20);
+        assert_eq!(unpack_rndv_desc(&d).unwrap(), (0xABCD_1234, 1 << 20));
+    }
+
+    #[test]
+    fn params_validation() {
+        assert!(AmParams::default().validate().is_ok());
+        assert!(AmParams { slot_size: 100, ..Default::default() }.validate().is_err());
+        assert!(AmParams { credit_interval: 64, ..Default::default() }.validate().is_err());
+        assert!(AmParams { num_slots: 1, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn seq_wraps_at_16_bits_without_alias() {
+        let p = AmParams::default();
+        // Two messages num_slots apart must have different 16-bit seqs.
+        let a = pack_signal(1, 0, 0, AmProto::EagerShort);
+        let b = pack_signal(1 + p.num_slots as u64, 0, 0, AmProto::EagerShort);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,165 @@
+//! `ucp_context` analog: per-process communication state.
+//!
+//! A [`Context`] binds a fabric node ("this machine + HCA") to the ifunc
+//! machinery: the source-side **library directory** (`UCX_IFUNC_LIB_DIR`),
+//! the target-side **symbol table** injected code links against, the
+//! **auto-registration cache** (§3.4's hash table), and the I-cache model.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::fabric::{MemPerm, MemoryRegion, Node};
+use crate::ifunc::cache::IfuncCache;
+use crate::ifunc::icache::{IcacheConfig, IcacheStats};
+use crate::ifunc::library::LibraryDir;
+use crate::ifunc::Symbols;
+use crate::vm::interp::VmConfig;
+use crate::Result;
+
+use super::am::AmParams;
+
+/// Context-wide configuration (the analog of `ucp_params_t` + env vars).
+#[derive(Clone, Debug)]
+pub struct ContextConfig {
+    /// Active-message transport tuning.
+    pub am: AmParams,
+    /// Instruction-cache model (paper §4.3: the testbed's I-cache is not
+    /// coherent, so every ifunc arrival pays a `clear_cache`).
+    pub icache: IcacheConfig,
+    /// TCVM execution limits.
+    pub vm: VmConfig,
+    /// Where `register_ifunc` looks for ifunc libraries — the analog of
+    /// `UCX_IFUNC_LIB_DIR`. HLO-backed libraries (`<name>.hlo.txt` +
+    /// `<name>.json`) are loaded from here; if unset, the env var of the
+    /// same name is honored, then `./artifacts`.
+    pub lib_dir: Option<PathBuf>,
+}
+
+impl Default for ContextConfig {
+    fn default() -> Self {
+        ContextConfig {
+            am: AmParams::default(),
+            icache: IcacheConfig::non_coherent(),
+            vm: VmConfig::default(),
+            lib_dir: None,
+        }
+    }
+}
+
+impl ContextConfig {
+    /// Resolve the ifunc library directory (explicit → env → ./artifacts).
+    pub fn resolve_lib_dir(&self) -> PathBuf {
+        if let Some(d) = &self.lib_dir {
+            return d.clone();
+        }
+        if let Ok(d) = std::env::var("UCX_IFUNC_LIB_DIR") {
+            return PathBuf::from(d);
+        }
+        PathBuf::from("artifacts")
+    }
+}
+
+/// Per-process UCP state. Cheap to share (`Arc`); one per simulated
+/// machine in tests and benchmarks.
+pub struct Context {
+    node: Arc<Node>,
+    config: ContextConfig,
+    libs: LibraryDir,
+    symbols: Symbols,
+    pub(crate) cache: IfuncCache,
+    icache_stats: IcacheStats,
+}
+
+impl Context {
+    pub fn new(node: Arc<Node>, config: ContextConfig) -> Result<Arc<Self>> {
+        config.am.validate()?;
+        let libs = LibraryDir::new(config.resolve_lib_dir());
+        Ok(Arc::new(Context {
+            node,
+            config,
+            libs,
+            symbols: Symbols::with_builtins(),
+            cache: IfuncCache::new(),
+            icache_stats: IcacheStats::default(),
+        }))
+    }
+
+    /// The fabric node this context is bound to.
+    pub fn node(&self) -> &Arc<Node> {
+        &self.node
+    }
+
+    pub fn config(&self) -> &ContextConfig {
+        &self.config
+    }
+
+    /// Source-side ifunc library directory (install/compile libraries here
+    /// before calling [`Context::register_ifunc`]).
+    pub fn library_dir(&self) -> &LibraryDir {
+        &self.libs
+    }
+
+    /// Target-side symbol table: what injected code may link against.
+    pub fn symbols(&self) -> &Symbols {
+        &self.symbols
+    }
+
+    /// Auto-registration cache statistics (hits/misses; Abl B toggles it).
+    pub fn ifunc_cache(&self) -> &IfuncCache {
+        &self.cache
+    }
+
+    /// Simulated I-cache flush counters.
+    pub fn icache_stats(&self) -> &IcacheStats {
+        &self.icache_stats
+    }
+
+    /// `ucp_mem_map` analog: register a length of memory for remote access.
+    /// ifunc rings require `MemPerm::RWX` (the paper's future work notes
+    /// the user "would not have to worry about setting up a RWX-enabled
+    /// buffer" once AM transport lands — see `ifunc::am_transport`).
+    pub fn mem_map(&self, len: usize, perm: MemPerm) -> Arc<MemoryRegion> {
+        self.node.register(len, perm)
+    }
+
+    /// Unmap a region; in-flight remote accesses will be rejected.
+    pub fn mem_unmap(&self, mr: &MemoryRegion) {
+        self.node.deregister(mr.rkey());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Fabric, WireConfig};
+
+    #[test]
+    fn context_binds_node() {
+        let f = Fabric::new(2, WireConfig::off());
+        let ctx = Context::new(f.node(1), ContextConfig::default()).unwrap();
+        assert_eq!(ctx.node().id(), 1);
+    }
+
+    #[test]
+    fn invalid_am_params_rejected() {
+        let f = Fabric::new(1, WireConfig::off());
+        let cfg = ContextConfig {
+            am: AmParams { num_slots: 1, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(Context::new(f.node(0), cfg).is_err());
+    }
+
+    #[test]
+    fn mem_map_grants_remote_access() {
+        let f = Fabric::new(2, WireConfig::off());
+        let ctx = Context::new(f.node(1), ContextConfig::default()).unwrap();
+        let mr = ctx.mem_map(4096, MemPerm::RWX);
+        let qp = f.connect(0, 1);
+        qp.put_nbi(mr.rkey(), 0, b"hi").unwrap();
+        qp.flush().unwrap();
+        ctx.mem_unmap(&mr);
+        qp.put_nbi(mr.rkey(), 0, b"hi").unwrap();
+        assert!(qp.flush().is_err());
+    }
+}

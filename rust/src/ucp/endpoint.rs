@@ -1,0 +1,327 @@
+//! `ucp_ep` analog: the sending side of a connection.
+//!
+//! Carries both transports the paper compares:
+//! * [`Endpoint::am_send`] — active messages (eager short/bcopy or
+//!   rendezvous; see [`super::am`]),
+//! * raw one-sided access ([`Endpoint::put_nbi`]) — what
+//!   `ucp_ifunc_msg_send_nbix` is built on (see `ifunc::send`).
+
+use std::sync::{Arc, Mutex};
+
+use crate::fabric::{MemPerm, MemoryRegion, Qp, RKey};
+use crate::{Error, Result};
+
+use super::am::{
+    pack_rndv_desc, pack_signal, AmParams, AmProto, CREDIT_CONSUMED_OFF, CREDIT_RNDV_ACK_OFF,
+    MAX_SIGNAL_LEN,
+};
+use super::context::Context;
+
+struct TxState {
+    /// Sequence of the next message (1-based).
+    next_seq: u64,
+    /// Reusable frame build buffer (bcopy staging + signal).
+    frame: Vec<u8>,
+    /// Extra staging buffer charged to the eager-bcopy protocol.
+    staging: Vec<u8>,
+    /// Rendezvous messages sent (acked via the credit region).
+    rndv_sent: u64,
+    /// Source buffers registered for in-flight rendezvous transfers.
+    rndv_pending: Vec<RKey>,
+}
+
+pub struct Endpoint {
+    ctx: Arc<Context>,
+    qp: Qp,
+    params: AmParams,
+    ring_rkey: RKey,
+    credit: Arc<MemoryRegion>,
+    tx: Mutex<TxState>,
+}
+
+impl Endpoint {
+    pub(crate) fn new(
+        ctx: Arc<Context>,
+        qp: Qp,
+        params: AmParams,
+        ring_rkey: RKey,
+        credit: Arc<MemoryRegion>,
+    ) -> Arc<Self> {
+        Arc::new(Endpoint {
+            ctx,
+            qp,
+            params,
+            ring_rkey,
+            credit,
+            tx: Mutex::new(TxState {
+                next_seq: 1,
+                frame: Vec::new(),
+                staging: Vec::new(),
+                rndv_sent: 0,
+                rndv_pending: Vec::new(),
+            }),
+        })
+    }
+
+    pub fn context(&self) -> &Arc<Context> {
+        &self.ctx
+    }
+
+    /// The underlying queue pair (ifunc sends and tests use it directly).
+    pub fn qp(&self) -> &Qp {
+        &self.qp
+    }
+
+    pub fn am_params(&self) -> &AmParams {
+        &self.params
+    }
+
+    /// Non-blocking one-sided put — `ucp_put_nbi`.
+    pub fn put_nbi(&self, rkey: RKey, offset: usize, data: &[u8]) -> Result<()> {
+        self.qp.put_nbi(rkey, offset, data)
+    }
+
+    /// `ucp_am_send_nbx` analog: send `payload` to the AM handler
+    /// registered under `id` on the peer worker. Non-blocking: local
+    /// completion via [`Endpoint::flush`].
+    pub fn am_send(&self, id: u16, payload: &[u8]) -> Result<()> {
+        let mut tx = self.tx.lock().unwrap();
+        let tx = &mut *tx;
+        let seq = tx.next_seq;
+        let proto = self.params.select(payload.len());
+        match proto {
+            AmProto::EagerShort => {
+                let frame = Self::build_frame(&mut tx.frame, payload, seq, id, proto);
+                self.post_slot(seq, frame)?;
+            }
+            AmProto::EagerBcopy => {
+                // The extra internal-buffer copy that defines bcopy.
+                tx.staging.clear();
+                tx.staging.extend_from_slice(payload);
+                let frame = Self::build_frame(&mut tx.frame, &tx.staging, seq, id, proto);
+                self.post_slot(seq, frame)?;
+            }
+            AmProto::Rndv => {
+                // Register (and fill) a source buffer the receiver will GET
+                // from, then ship only the RTS descriptor eagerly.
+                let mr = self.ctx.node().register(payload.len(), MemPerm::REMOTE_READ);
+                mr.local_slice_mut()[..payload.len()].copy_from_slice(payload);
+                let desc = pack_rndv_desc(mr.rkey(), payload.len() as u64);
+                let frame = Self::build_frame(&mut tx.frame, &desc, seq, id, proto);
+                self.post_slot(seq, frame)?;
+                tx.rndv_sent += 1;
+                tx.rndv_pending.push(mr.rkey());
+            }
+        }
+        tx.next_seq += 1;
+        Ok(())
+    }
+
+    /// Build the right-aligned slot frame: `[payload][signal]`.
+    fn build_frame<'a>(
+        frame: &'a mut Vec<u8>,
+        payload: &[u8],
+        seq: u64,
+        id: u16,
+        proto: AmProto,
+    ) -> &'a [u8] {
+        assert!(payload.len() <= MAX_SIGNAL_LEN, "AM payload too large for signal encoding");
+        frame.clear();
+        frame.extend_from_slice(payload);
+        frame.extend_from_slice(&pack_signal(seq, payload.len(), id, proto).to_le_bytes());
+        frame
+    }
+
+    /// Flow-control, then put the frame so it ends exactly at the slot
+    /// boundary (the trailing 8 bytes become the release-stored signal).
+    fn post_slot(&self, seq: u64, frame: &[u8]) -> Result<()> {
+        if frame.len() > self.params.slot_size {
+            return Err(Error::NoResource(format!(
+                "AM frame of {} bytes exceeds slot size {}",
+                frame.len(),
+                self.params.slot_size
+            )));
+        }
+        // Wait for ring credit: the receiver's consumed count is pushed
+        // into our credit region.
+        let mut i = 0u32;
+        while seq - self.consumed() > self.params.num_slots as u64 {
+            crate::fabric::wire::backoff(i);
+            i += 1;
+        }
+        let slot = ((seq - 1) % self.params.num_slots as u64) as usize;
+        let offset = (slot + 1) * self.params.slot_size - frame.len();
+        self.qp.put_nbi(self.ring_rkey, offset, frame)
+    }
+
+    fn consumed(&self) -> u64 {
+        self.credit.load_u64_acquire(CREDIT_CONSUMED_OFF).unwrap()
+    }
+
+    fn rndv_acked(&self) -> u64 {
+        self.credit.load_u64_acquire(CREDIT_RNDV_ACK_OFF).unwrap()
+    }
+
+    /// `ucp_ep_flush`: wait until every posted operation is remotely
+    /// complete *and* every rendezvous source buffer has been pulled and
+    /// acked (then release those buffers).
+    pub fn flush(&self) -> Result<()> {
+        self.qp.flush()?;
+        let mut tx = self.tx.lock().unwrap();
+        let mut i = 0u32;
+        while self.rndv_acked() < tx.rndv_sent {
+            crate::fabric::wire::backoff(i);
+            i += 1;
+        }
+        for rkey in tx.rndv_pending.drain(..) {
+            self.ctx.node().deregister(rkey);
+        }
+        Ok(())
+    }
+
+    /// Messages sent so far (telemetry).
+    pub fn sent(&self) -> u64 {
+        self.tx.lock().unwrap().next_seq - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Fabric, WireConfig};
+    use crate::ucp::{Context, ContextConfig, Worker};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn pair() -> (Arc<Worker>, Arc<Worker>, Arc<Endpoint>) {
+        let f = Fabric::new(2, WireConfig::off());
+        let a = Context::new(f.node(0), ContextConfig::default()).unwrap();
+        let b = Context::new(f.node(1), ContextConfig::default()).unwrap();
+        let wa = Worker::new(&a);
+        let wb = Worker::new(&b);
+        let ep = wa.connect(&wb).unwrap();
+        (wa, wb, ep)
+    }
+
+    #[test]
+    fn eager_short_delivery() {
+        let (_wa, wb, ep) = pair();
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        wb.set_am_handler(7, move |id, data| {
+            assert_eq!(id, 7);
+            assert_eq!(data, b"ping");
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        ep.am_send(7, b"ping").unwrap();
+        ep.flush().unwrap();
+        wb.progress_until(|| hits.load(Ordering::SeqCst) == 1);
+    }
+
+    #[test]
+    fn bcopy_and_rndv_delivery() {
+        let (_wa, wb, ep) = pair();
+        let total = Arc::new(AtomicU64::new(0));
+        let t = total.clone();
+        wb.set_am_handler(1, move |_, data| {
+            t.fetch_add(data.len() as u64, Ordering::SeqCst);
+        });
+        let bcopy = vec![0xAB; 1024]; // > short_max, <= rndv_threshold
+        let rndv = vec![0xCD; 128 * 1024]; // > rndv_threshold
+        ep.am_send(1, &bcopy).unwrap();
+        ep.am_send(1, &rndv).unwrap();
+        // Rendezvous completes only when the receiver progresses.
+        let wb2 = wb.clone();
+        let t2 = std::thread::spawn(move || {
+            wb2.progress_until(|| wb2.am_processed.load(Ordering::SeqCst) >= 2);
+        });
+        ep.flush().unwrap();
+        t2.join().unwrap();
+        assert_eq!(total.load(Ordering::SeqCst), 1024 + 128 * 1024);
+    }
+
+    #[test]
+    fn rndv_content_integrity() {
+        let (_wa, wb, ep) = pair();
+        let ok = Arc::new(AtomicU64::new(0));
+        let k = ok.clone();
+        let payload: Vec<u8> = (0..100_000u32).map(|i| (i * 7) as u8).collect();
+        let expect = payload.clone();
+        wb.set_am_handler(2, move |_, data| {
+            assert_eq!(data, &expect[..]);
+            k.store(1, Ordering::SeqCst);
+        });
+        ep.am_send(2, &payload).unwrap();
+        let wb2 = wb.clone();
+        let t = std::thread::spawn(move || {
+            wb2.progress_until(|| wb2.am_processed.load(Ordering::SeqCst) >= 1)
+        });
+        ep.flush().unwrap();
+        t.join().unwrap();
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn ring_wraps_with_flow_control() {
+        let (_wa, wb, ep) = pair();
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        wb.set_am_handler(3, move |_, _| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        let n = 500u64; // ~8x the default ring
+        let wb2 = wb.clone();
+        let h2 = hits.clone();
+        let t = std::thread::spawn(move || {
+            wb2.progress_until(|| h2.load(Ordering::SeqCst) == n);
+        });
+        for i in 0..n {
+            ep.am_send(3, &i.to_le_bytes()).unwrap();
+        }
+        ep.flush().unwrap();
+        t.join().unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), n);
+    }
+
+    #[test]
+    fn unregistered_handler_drops_message() {
+        let (_wa, wb, ep) = pair();
+        ep.am_send(99, b"nobody home").unwrap();
+        ep.flush().unwrap();
+        // Progress consumes the message without a handler; no panic.
+        wb.progress_until(|| wb.am_processed.load(Ordering::SeqCst) >= 1);
+    }
+
+    #[test]
+    fn pingpong_two_directions() {
+        let f = Fabric::new(2, WireConfig::off());
+        let a = Context::new(f.node(0), ContextConfig::default()).unwrap();
+        let b = Context::new(f.node(1), ContextConfig::default()).unwrap();
+        let wa = Worker::new(&a);
+        let wb = Worker::new(&b);
+        let ab = wa.connect(&wb).unwrap();
+        let ba = wb.connect(&wa).unwrap();
+        let pongs = Arc::new(AtomicU64::new(0));
+
+        let ba2 = ba.clone();
+        wb.set_am_handler(1, move |_, data| {
+            ba2.am_send(2, data).unwrap();
+        });
+        let p = pongs.clone();
+        wa.set_am_handler(2, move |_, _| {
+            p.fetch_add(1, Ordering::SeqCst);
+        });
+
+        for _ in 0..32 {
+            ab.am_send(1, b"ball").unwrap();
+            loop {
+                wb.progress();
+                if wa.progress() > 0 {
+                    break;
+                }
+            }
+        }
+        assert_eq!(pongs.load(Ordering::SeqCst), 32);
+        ab.flush().unwrap();
+        ba.flush().unwrap();
+    }
+}

@@ -1,0 +1,15 @@
+//! UCP-like communication layer over the simulated fabric.
+//!
+//! The subset of UCX the paper's API is expressed in: contexts, workers,
+//! endpoints, mapped memory with packable rkeys, non-blocking one-sided
+//! puts with flush, and Active Messages (the evaluation baseline, §3.3).
+
+pub mod am;
+pub mod context;
+pub mod endpoint;
+pub mod worker;
+
+pub use am::{AmParams, AmProto};
+pub use context::{Context, ContextConfig};
+pub use endpoint::Endpoint;
+pub use worker::{progress_n, AmHandler, Worker};

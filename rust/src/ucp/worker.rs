@@ -1,0 +1,241 @@
+//! `ucp_worker` analog: the progress engine.
+//!
+//! A [`Worker`] owns the receive side of every endpoint targeting it: AM
+//! receive rings, the AM handler table (ID → handler, registered at the
+//! *target* like UCX AMs — the coupling ifuncs remove), and rendezvous
+//! progression. `Worker::progress()` drains arrived messages, exactly like
+//! `ucp_worker_progress`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::collections::HashMap;
+
+use crate::fabric::{MemPerm, MemoryRegion, Qp, RKey};
+use crate::{Error, Result};
+
+use super::am::{
+    unpack_rndv_desc, unpack_signal, AmParams, AmProto, CREDIT_CONSUMED_OFF, CREDIT_REGION_BYTES,
+    CREDIT_RNDV_ACK_OFF, SIGNAL_BYTES,
+};
+use super::context::Context;
+use super::endpoint::Endpoint;
+
+/// An active-message handler. Receives `(am_id, payload)`.
+pub type AmHandler = Arc<dyn Fn(u16, &[u8]) + Send + Sync>;
+
+static WORKER_IDS: AtomicU64 = AtomicU64::new(0);
+
+/// Receive-side state for one inbound endpoint.
+struct AmRx {
+    ring: Arc<MemoryRegion>,
+    params: AmParams,
+    /// Next expected sequence number (1-based; 0 is "slot empty").
+    next_seq: u64,
+    /// Messages consumed; mirrored to the sender every `credit_interval`.
+    consumed: u64,
+    /// QP back to the sender: credit updates, rendezvous GETs, acks.
+    back_qp: Qp,
+    /// The sender's credit region.
+    credit_rkey: RKey,
+}
+
+pub struct Worker {
+    ctx: Arc<Context>,
+    id: u64,
+    handlers: RwLock<HashMap<u16, AmHandler>>,
+    rx: Mutex<Vec<AmRx>>,
+    /// Messages processed over the worker lifetime (telemetry).
+    pub am_processed: AtomicU64,
+}
+
+impl Worker {
+    pub fn new(ctx: &Arc<Context>) -> Arc<Self> {
+        Arc::new(Worker {
+            ctx: ctx.clone(),
+            id: WORKER_IDS.fetch_add(1, Ordering::Relaxed),
+            handlers: RwLock::new(HashMap::new()),
+            rx: Mutex::new(Vec::new()),
+            am_processed: AtomicU64::new(0),
+        })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn context(&self) -> &Arc<Context> {
+        &self.ctx
+    }
+
+    /// Register an AM handler for `id` — `ucp_worker_set_am_recv_handler`.
+    /// Note the contrast with ifuncs (§3.3): this must happen *at the
+    /// target, before* any sender may use `id`.
+    pub fn set_am_handler<F>(&self, id: u16, f: F)
+    where
+        F: Fn(u16, &[u8]) + Send + Sync + 'static,
+    {
+        self.handlers.write().unwrap().insert(id, Arc::new(f));
+    }
+
+    /// Connect this worker to `peer`, returning the endpoint. Wireup
+    /// mirrors UCX: the receiver allocates the ring, the sender allocates
+    /// its credit region, and rkeys are exchanged out-of-band (here: the
+    /// in-process rendezvous the simulated fabric provides).
+    pub fn connect(self: &Arc<Self>, peer: &Arc<Worker>) -> Result<Arc<Endpoint>> {
+        // Receiver owns ring geometry.
+        let params = peer.ctx.config().am;
+        params.validate()?;
+        let ring = peer
+            .ctx
+            .node()
+            .register(params.slot_size * params.num_slots, MemPerm::RWX);
+        // Sender-side credit region: consumed count + rndv acks.
+        let credit = self.ctx.node().register(
+            CREDIT_REGION_BYTES,
+            MemPerm::REMOTE_WRITE | MemPerm::REMOTE_ATOMIC,
+        );
+        let qp = Qp::new(self.ctx.node().clone(), peer.ctx.node().clone());
+        let back_qp = Qp::new(peer.ctx.node().clone(), self.ctx.node().clone());
+        peer.rx.lock().unwrap().push(AmRx {
+            ring: ring.clone(),
+            params,
+            next_seq: 1,
+            consumed: 0,
+            back_qp,
+            credit_rkey: credit.rkey(),
+        });
+        Ok(Endpoint::new(self.ctx.clone(), qp, params, ring.rkey(), credit))
+    }
+
+    /// Progress all inbound endpoints; returns the number of AM messages
+    /// processed. Rendezvous payloads are pulled (fragmented GETs) and
+    /// acked inside this call, so senders blocked in `flush` advance.
+    pub fn progress(&self) -> usize {
+        let mut n = 0;
+        let mut rings = self.rx.lock().unwrap();
+        for rx in rings.iter_mut() {
+            n += self.progress_one(rx);
+        }
+        n
+    }
+
+    fn progress_one(&self, rx: &mut AmRx) -> usize {
+        let mut n = 0;
+        loop {
+            let slot = ((rx.next_seq - 1) % rx.params.num_slots as u64) as usize;
+            let slot_end = (slot + 1) * rx.params.slot_size;
+            let sig_off = slot_end - SIGNAL_BYTES;
+            let sig = rx.ring.load_u64_acquire(sig_off).expect("ring signal aligned");
+            if sig == 0 {
+                break;
+            }
+            let Some((seq16, len, am_id, proto)) = unpack_signal(sig) else {
+                log::error!("am: undecodable signal {sig:#x}; dropping ring");
+                break;
+            };
+            if seq16 != (rx.next_seq & 0xFFFF) as u16 {
+                // Flow control makes this unreachable; a mismatch means a
+                // protocol bug, not a slow sender.
+                log::error!("am: signal seq {seq16} != expected {}", rx.next_seq & 0xFFFF);
+                break;
+            }
+            let data_off = sig_off - len;
+            let handler = self.handlers.read().unwrap().get(&am_id).cloned();
+            {
+                let slot_bytes = rx.ring.local_slice();
+                let data = &slot_bytes[data_off..sig_off];
+                match proto {
+                    AmProto::EagerShort | AmProto::EagerBcopy => {
+                        if let Some(h) = &handler {
+                            h(am_id, data);
+                        }
+                    }
+                    AmProto::Rndv => {
+                        // Pull the payload from the sender's registered
+                        // buffer in `rndv_frag` pieces (UCX rndv pipeline),
+                        // then ack so the sender can release it.
+                        match self.rndv_fetch(rx, data) {
+                            Ok(buf) => {
+                                if let Some(h) = &handler {
+                                    h(am_id, &buf);
+                                }
+                                let _ = rx.back_qp.atomic_add_nbi(
+                                    rx.credit_rkey,
+                                    CREDIT_RNDV_ACK_OFF,
+                                    1,
+                                );
+                            }
+                            Err(e) => log::error!("am rndv fetch failed: {e}"),
+                        }
+                    }
+                }
+            }
+            // Release the slot and advance.
+            rx.ring.store_u64_release(sig_off, 0).unwrap();
+            rx.next_seq += 1;
+            rx.consumed += 1;
+            n += 1;
+            if rx.consumed % rx.params.credit_interval == 0 {
+                let _ = rx.back_qp.put_signal(rx.credit_rkey, CREDIT_CONSUMED_OFF, rx.consumed);
+            }
+        }
+        self.am_processed.fetch_add(n as u64, Ordering::Relaxed);
+        n
+    }
+
+    fn rndv_fetch(&self, rx: &AmRx, desc: &[u8]) -> Result<Vec<u8>> {
+        let (rkey, total) = unpack_rndv_desc(desc)?;
+        let total = total as usize;
+        if total <= rx.params.rndv_frag {
+            // Single-fragment fast path: hand the GET buffer through
+            // without re-copying (UCX rndv lands directly in the
+            // receive buffer).
+            return Ok(rx.back_qp.get_blocking(rkey, 0, total)?.into_vec());
+        }
+        let mut buf = Vec::with_capacity(total);
+        let mut off = 0;
+        while off < total {
+            let chunk = rx.params.rndv_frag.min(total - off);
+            let part = rx.back_qp.get_blocking(rkey, off, chunk)?;
+            buf.extend_from_slice(&part);
+            off += chunk;
+        }
+        Ok(buf)
+    }
+
+    /// Spin-progress until `pred()` holds (test/bench helper).
+    pub fn progress_until(&self, mut pred: impl FnMut() -> bool) {
+        let mut i = 0u32;
+        while !pred() {
+            if self.progress() == 0 {
+                crate::fabric::wire::backoff(i);
+                i += 1;
+            } else {
+                i = 0;
+            }
+        }
+    }
+
+    /// Number of inbound endpoints (rings) attached.
+    pub fn num_rx(&self) -> usize {
+        self.rx.lock().unwrap().len()
+    }
+}
+
+/// Convenience: drain `worker` until it has processed `n` more messages.
+pub fn progress_n(worker: &Worker, n: usize) -> Result<()> {
+    let mut got = 0;
+    let mut idle_spins = 0u64;
+    while got < n {
+        let k = worker.progress();
+        got += k;
+        if k == 0 {
+            idle_spins += 1;
+            if idle_spins > 10_000_000_000 {
+                return Err(Error::Transport("progress_n stalled".into()));
+            }
+            crate::fabric::wire::backoff(idle_spins.min(u32::MAX as u64) as u32);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Small in-tree utilities replacing unavailable crates (offline build):
+//! [`json`] for serde_json, [`logger`] for env_logger, [`rng`] for the
+//! randomized/property tests.
+
+pub mod json;
+pub mod logger;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::XorShift;

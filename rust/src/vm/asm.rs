@@ -1,0 +1,254 @@
+//! TCVM assembler — the source-side toolchain.
+//!
+//! The paper's toolchain compiles user C into a dynamic library and then
+//! rewrites its assembly so all GOT references indirect through a shipped
+//! table (§3.4). Our analog is much simpler: ifunc authors assemble TCVM
+//! code with this builder, declaring **imports by name**; each import
+//! becomes a GOT slot index, and the target resolves names → local
+//! bindings at link time ([`crate::vm::got`]).
+
+use std::collections::HashMap;
+
+use super::isa::{Instr, Op, INSTR_BYTES};
+
+/// A forward-referencable code label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Label(usize);
+
+/// Assembles a TCVM code section plus its import table.
+#[derive(Default)]
+pub struct Assembler {
+    instrs: Vec<Instr>,
+    imports: Vec<String>,
+    labels: Vec<Option<usize>>,
+    /// (instr index, label) pairs whose imm must be patched at finish.
+    fixups: Vec<(usize, Label)>,
+}
+
+impl Assembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare (or reuse) an import; returns its GOT slot index.
+    pub fn import(&mut self, name: &str) -> u32 {
+        if let Some(i) = self.imports.iter().position(|n| n == name) {
+            return i as u32;
+        }
+        self.imports.push(name.to_string());
+        (self.imports.len() - 1) as u32
+    }
+
+    /// Create an unbound label.
+    pub fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    /// Bind `l` to the current position.
+    pub fn bind(&mut self, l: Label) {
+        assert!(self.labels[l.0].is_none(), "label bound twice");
+        self.labels[l.0] = Some(self.instrs.len());
+    }
+
+    fn push(&mut self, op: Op, a: u8, b: u8, c: u8, imm: u32) -> &mut Self {
+        self.instrs.push(Instr { op, a, b, c, imm });
+        self
+    }
+
+    fn push_jump(&mut self, op: Op, a: u8, l: Label) -> &mut Self {
+        self.fixups.push((self.instrs.len(), l));
+        self.push(op, a, 0, 0, 0)
+    }
+
+    pub fn halt(&mut self) -> &mut Self {
+        self.push(Op::Halt, 0, 0, 0, 0)
+    }
+
+    /// Load a full 64-bit constant (1 or 2 instructions).
+    pub fn ldi64(&mut self, ra: u8, v: u64) -> &mut Self {
+        self.push(Op::Ldi, ra, 0, 0, v as u32);
+        if v > u32::MAX as u64 {
+            self.push(Op::Ldih, ra, 0, 0, (v >> 32) as u32);
+        }
+        self
+    }
+
+    pub fn ldi(&mut self, ra: u8, v: u32) -> &mut Self {
+        self.push(Op::Ldi, ra, 0, 0, v)
+    }
+
+    pub fn mov(&mut self, ra: u8, rb: u8) -> &mut Self {
+        self.push(Op::Mov, ra, rb, 0, 0)
+    }
+
+    pub fn add(&mut self, ra: u8, rb: u8, rc: u8) -> &mut Self {
+        self.push(Op::Add, ra, rb, rc, 0)
+    }
+
+    pub fn sub(&mut self, ra: u8, rb: u8, rc: u8) -> &mut Self {
+        self.push(Op::Sub, ra, rb, rc, 0)
+    }
+
+    pub fn mul(&mut self, ra: u8, rb: u8, rc: u8) -> &mut Self {
+        self.push(Op::Mul, ra, rb, rc, 0)
+    }
+
+    pub fn divu(&mut self, ra: u8, rb: u8, rc: u8) -> &mut Self {
+        self.push(Op::Divu, ra, rb, rc, 0)
+    }
+
+    pub fn and(&mut self, ra: u8, rb: u8, rc: u8) -> &mut Self {
+        self.push(Op::And, ra, rb, rc, 0)
+    }
+
+    pub fn or(&mut self, ra: u8, rb: u8, rc: u8) -> &mut Self {
+        self.push(Op::Or, ra, rb, rc, 0)
+    }
+
+    pub fn xor(&mut self, ra: u8, rb: u8, rc: u8) -> &mut Self {
+        self.push(Op::Xor, ra, rb, rc, 0)
+    }
+
+    pub fn shl(&mut self, ra: u8, rb: u8, rc: u8) -> &mut Self {
+        self.push(Op::Shl, ra, rb, rc, 0)
+    }
+
+    pub fn shr(&mut self, ra: u8, rb: u8, rc: u8) -> &mut Self {
+        self.push(Op::Shr, ra, rb, rc, 0)
+    }
+
+    pub fn addi(&mut self, ra: u8, rb: u8, imm: u32) -> &mut Self {
+        self.push(Op::Addi, ra, rb, 0, imm)
+    }
+
+    pub fn sltu(&mut self, ra: u8, rb: u8, rc: u8) -> &mut Self {
+        self.push(Op::Sltu, ra, rb, rc, 0)
+    }
+
+    pub fn eq(&mut self, ra: u8, rb: u8, rc: u8) -> &mut Self {
+        self.push(Op::Eq, ra, rb, rc, 0)
+    }
+
+    pub fn jmp(&mut self, l: Label) -> &mut Self {
+        self.push_jump(Op::Jmp, 0, l)
+    }
+
+    pub fn jz(&mut self, ra: u8, l: Label) -> &mut Self {
+        self.push_jump(Op::Jz, ra, l)
+    }
+
+    pub fn jnz(&mut self, ra: u8, l: Label) -> &mut Self {
+        self.push_jump(Op::Jnz, ra, l)
+    }
+
+    /// Call an imported symbol (args `r1..r4`, result `r0`).
+    pub fn call(&mut self, import: &str) -> &mut Self {
+        let slot = self.import(import);
+        self.push(Op::Call, 0, 0, 0, slot)
+    }
+
+    pub fn ldb(&mut self, ra: u8, rb: u8, space: u8, imm: u32) -> &mut Self {
+        self.push(Op::Ldb, ra, rb, space, imm)
+    }
+
+    pub fn ldw(&mut self, ra: u8, rb: u8, space: u8, imm: u32) -> &mut Self {
+        self.push(Op::Ldw, ra, rb, space, imm)
+    }
+
+    pub fn stb(&mut self, ra: u8, rb: u8, space: u8, imm: u32) -> &mut Self {
+        self.push(Op::Stb, ra, rb, space, imm)
+    }
+
+    pub fn stw(&mut self, ra: u8, rb: u8, space: u8, imm: u32) -> &mut Self {
+        self.push(Op::Stw, ra, rb, space, imm)
+    }
+
+    pub fn paylen(&mut self, ra: u8) -> &mut Self {
+        self.push(Op::Paylen, ra, 0, 0, 0)
+    }
+
+    pub fn nop(&mut self) -> &mut Self {
+        self.push(Op::Nop, 0, 0, 0, 0)
+    }
+
+    /// Current instruction count (useful for size assertions in tests).
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Resolve fixups and emit `(code bytes, import names)`.
+    ///
+    /// # Panics
+    /// If any referenced label was never bound — an authoring bug, caught
+    /// at build time exactly like an undefined assembler label.
+    pub fn assemble(mut self) -> (Vec<u8>, Vec<String>) {
+        for (at, l) in std::mem::take(&mut self.fixups) {
+            let target = self.labels[l.0].expect("unbound label referenced");
+            self.instrs[at].imm = target as u32;
+        }
+        let mut bytes = Vec::with_capacity(self.instrs.len() * INSTR_BYTES);
+        for i in &self.instrs {
+            bytes.extend_from_slice(&i.encode());
+        }
+        (bytes, self.imports)
+    }
+
+    /// Assemble and wrap into a map for inspection in tests.
+    pub fn import_slots(&self) -> HashMap<String, u32> {
+        self.imports.iter().enumerate().map(|(i, n)| (n.clone(), i as u32)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::isa::decode_all;
+
+    #[test]
+    fn forward_labels_are_patched() {
+        let mut a = Assembler::new();
+        let done = a.label();
+        a.ldi(1, 5);
+        a.jz(1, done);
+        a.ldi(2, 7);
+        a.bind(done);
+        a.halt();
+        let (code, _) = a.assemble();
+        let instrs = decode_all(&code).unwrap();
+        assert_eq!(instrs[1].imm, 3, "jz jumps past the ldi to the halt");
+    }
+
+    #[test]
+    fn imports_are_deduplicated() {
+        let mut a = Assembler::new();
+        a.call("counter_add");
+        a.call("counter_add");
+        a.call("log");
+        let (_, imports) = a.assemble();
+        assert_eq!(imports, vec!["counter_add".to_string(), "log".to_string()]);
+    }
+
+    #[test]
+    fn ldi64_emits_high_half_when_needed() {
+        let mut a = Assembler::new();
+        a.ldi64(3, 0x1_0000_0000);
+        assert_eq!(a.len(), 2);
+        let mut b = Assembler::new();
+        b.ldi64(3, 42);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "unbound label")]
+    fn unbound_label_panics() {
+        let mut a = Assembler::new();
+        let l = a.label();
+        a.jmp(l);
+        a.assemble();
+    }
+}

@@ -1,0 +1,113 @@
+//! TCVM disassembler — human-readable listings of shipped code sections.
+//!
+//! Used by `repro info --disasm`, error diagnostics, and tests; the
+//! round-trip property (assemble → disassemble → same semantics) is
+//! asserted by the test suite.
+
+use super::isa::{decode_all, Instr, Op, SPACE_PAYLOAD, SPACE_SCRATCH};
+
+fn space_name(c: u8) -> &'static str {
+    match c {
+        SPACE_PAYLOAD => "pay",
+        SPACE_SCRATCH => "scr",
+        _ => "bad",
+    }
+}
+
+/// Disassemble one instruction; `imports` (if provided) names CALL slots.
+pub fn disasm_instr(i: &Instr, imports: Option<&[String]>) -> String {
+    let Instr { op, a, b, c, imm } = *i;
+    match op {
+        Op::Halt => "halt".to_string(),
+        Op::Nop => "nop".to_string(),
+        Op::Ldi => format!("ldi   r{a}, {imm:#x}"),
+        Op::Ldih => format!("ldih  r{a}, {imm:#x}"),
+        Op::Mov => format!("mov   r{a}, r{b}"),
+        Op::Add => format!("add   r{a}, r{b}, r{c}"),
+        Op::Sub => format!("sub   r{a}, r{b}, r{c}"),
+        Op::Mul => format!("mul   r{a}, r{b}, r{c}"),
+        Op::Divu => format!("divu  r{a}, r{b}, r{c}"),
+        Op::And => format!("and   r{a}, r{b}, r{c}"),
+        Op::Or => format!("or    r{a}, r{b}, r{c}"),
+        Op::Xor => format!("xor   r{a}, r{b}, r{c}"),
+        Op::Shl => format!("shl   r{a}, r{b}, r{c}"),
+        Op::Shr => format!("shr   r{a}, r{b}, r{c}"),
+        Op::Addi => format!("addi  r{a}, r{b}, {imm:#x}"),
+        Op::Sltu => format!("sltu  r{a}, r{b}, r{c}"),
+        Op::Eq => format!("eq    r{a}, r{b}, r{c}"),
+        Op::Jmp => format!("jmp   @{imm}"),
+        Op::Jz => format!("jz    r{a}, @{imm}"),
+        Op::Jnz => format!("jnz   r{a}, @{imm}"),
+        Op::Call => {
+            let name = imports
+                .and_then(|im| im.get(imm as usize))
+                .map(|s| format!(" <{s}>"))
+                .unwrap_or_default();
+            format!("call  got[{imm}]{name}")
+        }
+        Op::Ldb => format!("ldb   r{a}, {}[r{b}+{imm:#x}]", space_name(c)),
+        Op::Ldw => format!("ldw   r{a}, {}[r{b}+{imm:#x}]", space_name(c)),
+        Op::Stb => format!("stb   {}[r{b}+{imm:#x}], r{a}", space_name(c)),
+        Op::Stw => format!("stw   {}[r{b}+{imm:#x}], r{a}", space_name(c)),
+        Op::Paylen => format!("paylen r{a}"),
+    }
+}
+
+/// Disassemble a full code section. Undecodable input yields an error
+/// string rather than panicking (it may be hostile bytes).
+pub fn disasm(code: &[u8], imports: Option<&[String]>) -> String {
+    let Some(instrs) = decode_all(code) else {
+        return format!("<undecodable code section: {} bytes>", code.len());
+    };
+    instrs
+        .iter()
+        .enumerate()
+        .map(|(pc, i)| format!("{pc:4}: {}", disasm_instr(i, imports)))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::Assembler;
+
+    #[test]
+    fn counter_listing_names_imports() {
+        let mut a = Assembler::new();
+        a.ldi(1, 1);
+        a.call("counter_add");
+        a.halt();
+        let (code, imports) = a.assemble();
+        let text = disasm(&code, Some(&imports));
+        assert!(text.contains("ldi   r1, 0x1"), "{text}");
+        assert!(text.contains("call  got[0] <counter_add>"), "{text}");
+        assert!(text.contains("halt"), "{text}");
+    }
+
+    #[test]
+    fn every_opcode_disassembles() {
+        for v in 0u8..=0x19 {
+            let op = crate::vm::isa::Op::from_u8(v).unwrap();
+            let i = Instr { op, a: 1, b: 2, c: 0, imm: 3 };
+            let s = disasm_instr(&i, None);
+            assert!(!s.is_empty());
+        }
+    }
+
+    #[test]
+    fn garbage_reports_instead_of_panicking() {
+        let s = disasm(&[0xFF; 9], None);
+        assert!(s.contains("undecodable"));
+    }
+
+    #[test]
+    fn jump_targets_are_indices() {
+        let mut a = Assembler::new();
+        let top = a.label();
+        a.bind(top);
+        a.jmp(top);
+        let (code, _) = a.assemble();
+        assert!(disasm(&code, None).contains("jmp   @0"));
+    }
+}

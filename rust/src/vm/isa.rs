@@ -1,0 +1,199 @@
+//! TCVM instruction set.
+//!
+//! The paper injects native Arm64 `.text` whose GOT accesses were rewritten
+//! by a toolchain script to go through an indirection table shipped in the
+//! message (§3.4). Shipping raw machine code is neither safe nor portable
+//! here, and the paper itself lists "make this step
+//! target-process-architecture agnostic" as future work — so the code
+//! section of our ifunc messages is **TCVM bytecode**: a fixed-width
+//! register ISA whose only way to touch the outside world is a `CALL`
+//! through a GOT slot that the *target* patches at link time. The
+//! mechanism under test (code travels with the message; target performs
+//! relocation before invocation) is preserved one-for-one.
+//!
+//! Encoding: every instruction is 8 bytes, little-endian:
+//!
+//! ```text
+//!   byte 0   opcode
+//!   byte 1   a   (register, 0..16)
+//!   byte 2   b   (register)
+//!   byte 3   c   (register or memory-space selector)
+//!   byte 4-7 imm (u32)
+//! ```
+
+/// Number of general-purpose registers.
+pub const NUM_REGS: usize = 16;
+
+/// Instruction width in bytes.
+pub const INSTR_BYTES: usize = 8;
+
+/// Hard cap on code size (instructions) accepted by the verifier. Keeps a
+/// hostile sender from shipping pathological frames (§3.5).
+pub const MAX_INSTRS: usize = 1 << 14;
+
+/// Memory-space selector values for LD/ST (the `c` field).
+pub const SPACE_PAYLOAD: u8 = 0;
+pub const SPACE_SCRATCH: u8 = 1;
+
+/// Scratch memory available to each invocation, zeroed per call.
+pub const SCRATCH_BYTES: usize = 1 << 16;
+
+/// Opcodes. Arithmetic is wrapping (no traps); faults come only from
+/// memory bounds, bad GOT slots, division by zero, and fuel exhaustion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    /// Stop successfully; result value is `r0`.
+    Halt = 0x00,
+    /// `ra = imm` (zero-extended).
+    Ldi = 0x01,
+    /// `ra = (imm << 32) | (ra & 0xffff_ffff)` — load the high half.
+    Ldih = 0x02,
+    /// `ra = rb`.
+    Mov = 0x03,
+    /// `ra = rb + rc`.
+    Add = 0x04,
+    Sub = 0x05,
+    Mul = 0x06,
+    /// Unsigned divide; divide-by-zero faults.
+    Divu = 0x07,
+    And = 0x08,
+    Or = 0x09,
+    Xor = 0x0A,
+    /// `ra = rb << (rc & 63)`.
+    Shl = 0x0B,
+    Shr = 0x0C,
+    /// `ra = rb + imm` (imm zero-extended).
+    Addi = 0x0D,
+    /// `ra = (rb < rc) as u64` (unsigned).
+    Sltu = 0x0E,
+    /// `ra = (rb == rc) as u64`.
+    Eq = 0x0F,
+    /// Unconditional jump to instruction index `imm`.
+    Jmp = 0x10,
+    /// Jump to `imm` if `ra == 0`.
+    Jz = 0x11,
+    /// Jump to `imm` if `ra != 0`.
+    Jnz = 0x12,
+    /// Call GOT slot `imm` with args `r1..r4`; result in `r0`. This is the
+    /// *only* escape hatch from the sandbox — the exact analog of the
+    /// paper's GOT-indirected external calls.
+    Call = 0x13,
+    /// `ra = zx(space_c[rb + imm] : u8)`.
+    Ldb = 0x14,
+    /// `ra = space_c[rb + imm] : u64` (little-endian, unaligned ok).
+    Ldw = 0x15,
+    /// `space_c[rb + imm] = ra as u8`.
+    Stb = 0x16,
+    /// `space_c[rb + imm] = ra : u64`.
+    Stw = 0x17,
+    /// `ra = payload length in bytes`.
+    Paylen = 0x18,
+    Nop = 0x19,
+}
+
+impl Op {
+    pub fn from_u8(v: u8) -> Option<Op> {
+        Some(match v {
+            0x00 => Op::Halt,
+            0x01 => Op::Ldi,
+            0x02 => Op::Ldih,
+            0x03 => Op::Mov,
+            0x04 => Op::Add,
+            0x05 => Op::Sub,
+            0x06 => Op::Mul,
+            0x07 => Op::Divu,
+            0x08 => Op::And,
+            0x09 => Op::Or,
+            0x0A => Op::Xor,
+            0x0B => Op::Shl,
+            0x0C => Op::Shr,
+            0x0D => Op::Addi,
+            0x0E => Op::Sltu,
+            0x0F => Op::Eq,
+            0x10 => Op::Jmp,
+            0x11 => Op::Jz,
+            0x12 => Op::Jnz,
+            0x13 => Op::Call,
+            0x14 => Op::Ldb,
+            0x15 => Op::Ldw,
+            0x16 => Op::Stb,
+            0x17 => Op::Stw,
+            0x18 => Op::Paylen,
+            0x19 => Op::Nop,
+            _ => return None,
+        })
+    }
+}
+
+/// A decoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instr {
+    pub op: Op,
+    pub a: u8,
+    pub b: u8,
+    pub c: u8,
+    pub imm: u32,
+}
+
+impl Instr {
+    pub fn encode(&self) -> [u8; INSTR_BYTES] {
+        let mut out = [0u8; INSTR_BYTES];
+        out[0] = self.op as u8;
+        out[1] = self.a;
+        out[2] = self.b;
+        out[3] = self.c;
+        out[4..8].copy_from_slice(&self.imm.to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Option<Instr> {
+        if bytes.len() < INSTR_BYTES {
+            return None;
+        }
+        Some(Instr {
+            op: Op::from_u8(bytes[0])?,
+            a: bytes[1],
+            b: bytes[2],
+            c: bytes[3],
+            imm: u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+        })
+    }
+}
+
+/// Decode a full code section. Returns `None` on any undecodable
+/// instruction or a length that is not a multiple of the instruction width.
+pub fn decode_all(code: &[u8]) -> Option<Vec<Instr>> {
+    if code.len() % INSTR_BYTES != 0 {
+        return None;
+    }
+    code.chunks_exact(INSTR_BYTES).map(Instr::decode).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_every_opcode() {
+        for v in 0u8..=0x19 {
+            let op = Op::from_u8(v).unwrap();
+            let i = Instr { op, a: 1, b: 2, c: 3, imm: 0xDEAD_BEEF };
+            assert_eq!(Instr::decode(&i.encode()), Some(i));
+        }
+    }
+
+    #[test]
+    fn unknown_opcode_rejected() {
+        assert_eq!(Op::from_u8(0xFF), None);
+        let mut bytes = [0u8; 8];
+        bytes[0] = 0x7F;
+        assert_eq!(Instr::decode(&bytes), None);
+    }
+
+    #[test]
+    fn decode_all_requires_multiple_of_width() {
+        assert!(decode_all(&[0u8; 7]).is_none());
+        assert_eq!(decode_all(&[0u8; 16]).unwrap().len(), 2);
+    }
+}

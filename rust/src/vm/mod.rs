@@ -1,0 +1,24 @@
+//! TCVM — the portable injected-code substrate.
+//!
+//! Stands in for the paper's native `.text` + GOT-rewriting toolchain
+//! (DESIGN.md §2, row 2). Four pieces:
+//!
+//! * [`isa`] — fixed-width register ISA the code sections are encoded in,
+//! * [`asm`] — source-side assembler (the "toolchain"),
+//! * [`verify`] — target-side static verifier (§3.5 security),
+//! * [`got`] + [`interp`] — target-side linking (symbol resolution into a
+//!   GOT table) and execution.
+
+pub mod asm;
+pub mod disasm;
+pub mod got;
+pub mod interp;
+pub mod isa;
+pub mod verify;
+
+pub use asm::{Assembler, Label};
+pub use disasm::{disasm, disasm_instr};
+pub use got::{GotTable, HostCtx, HostFn, SymbolTable};
+pub use interp::{run, VmConfig, VmOutcome, DEFAULT_FUEL};
+pub use isa::{decode_all, Instr, Op, INSTR_BYTES, MAX_INSTRS, NUM_REGS};
+pub use verify::verify;

@@ -1,0 +1,156 @@
+//! Static bytecode verifier — the §3.5 security mitigation for code that
+//! crosses trust boundaries.
+//!
+//! The paper leans on RKEY-based transport authorization and leaves a full
+//! security model to future work; because our injected code is bytecode
+//! rather than native text, we can go further and *statically verify*
+//! every frame before invocation:
+//!
+//! * every opcode decodes,
+//! * every register field used by the opcode is `< NUM_REGS`,
+//! * every memory-space selector is payload or scratch,
+//! * every jump / branch target is inside the code section,
+//! * every `CALL` slot is inside the import table,
+//! * the code section is non-empty and below [`MAX_INSTRS`].
+//!
+//! Dynamic properties (payload bounds, fuel) are enforced by the
+//! interpreter at run time.
+
+use super::isa::{decode_all, Instr, Op, MAX_INSTRS, NUM_REGS, SPACE_PAYLOAD, SPACE_SCRATCH};
+use crate::{Error, Result};
+
+/// Verify a raw code section against an import table of `n_imports` names.
+/// Returns the decoded program on success so callers decode exactly once.
+pub fn verify(code: &[u8], n_imports: usize) -> Result<Vec<Instr>> {
+    if code.is_empty() {
+        return Err(Error::Verify("empty code section".into()));
+    }
+    let instrs = decode_all(code)
+        .ok_or_else(|| Error::Verify("undecodable instruction or truncated code".into()))?;
+    if instrs.len() > MAX_INSTRS {
+        return Err(Error::Verify(format!(
+            "code too long: {} instructions (max {MAX_INSTRS})",
+            instrs.len()
+        )));
+    }
+    for (pc, i) in instrs.iter().enumerate() {
+        check_instr(pc, i, instrs.len(), n_imports)?;
+    }
+    Ok(instrs)
+}
+
+fn reg(pc: usize, r: u8) -> Result<()> {
+    if (r as usize) < NUM_REGS {
+        Ok(())
+    } else {
+        Err(Error::Verify(format!("pc {pc}: register r{r} out of range")))
+    }
+}
+
+fn space(pc: usize, s: u8) -> Result<()> {
+    if s == SPACE_PAYLOAD || s == SPACE_SCRATCH {
+        Ok(())
+    } else {
+        Err(Error::Verify(format!("pc {pc}: invalid memory space {s}")))
+    }
+}
+
+fn target(pc: usize, imm: u32, n: usize) -> Result<()> {
+    if (imm as usize) < n {
+        Ok(())
+    } else {
+        Err(Error::Verify(format!("pc {pc}: jump target {imm} outside code of {n} instrs")))
+    }
+}
+
+fn check_instr(pc: usize, i: &Instr, n: usize, n_imports: usize) -> Result<()> {
+    match i.op {
+        Op::Halt | Op::Nop => Ok(()),
+        Op::Ldi | Op::Ldih | Op::Paylen => reg(pc, i.a),
+        Op::Mov => reg(pc, i.a).and_then(|_| reg(pc, i.b)),
+        Op::Add
+        | Op::Sub
+        | Op::Mul
+        | Op::Divu
+        | Op::And
+        | Op::Or
+        | Op::Xor
+        | Op::Shl
+        | Op::Shr
+        | Op::Sltu
+        | Op::Eq => reg(pc, i.a).and_then(|_| reg(pc, i.b)).and_then(|_| reg(pc, i.c)),
+        Op::Addi => reg(pc, i.a).and_then(|_| reg(pc, i.b)),
+        Op::Jmp => target(pc, i.imm, n),
+        Op::Jz | Op::Jnz => reg(pc, i.a).and_then(|_| target(pc, i.imm, n)),
+        Op::Call => {
+            if (i.imm as usize) < n_imports {
+                Ok(())
+            } else {
+                Err(Error::Verify(format!(
+                    "pc {pc}: CALL slot {} outside GOT of {n_imports} entries",
+                    i.imm
+                )))
+            }
+        }
+        Op::Ldb | Op::Ldw | Op::Stb | Op::Stw => {
+            reg(pc, i.a).and_then(|_| reg(pc, i.b)).and_then(|_| space(pc, i.c))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::Assembler;
+
+    #[test]
+    fn valid_program_verifies() {
+        let mut a = Assembler::new();
+        a.ldi(1, 10).call("f").halt();
+        let (code, imports) = a.assemble();
+        assert_eq!(verify(&code, imports.len()).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn empty_code_rejected() {
+        assert!(verify(&[], 0).is_err());
+    }
+
+    #[test]
+    fn call_outside_got_rejected() {
+        let mut a = Assembler::new();
+        a.call("f").halt();
+        let (code, _) = a.assemble();
+        let err = verify(&code, 0).unwrap_err();
+        assert!(err.to_string().contains("CALL slot"));
+    }
+
+    #[test]
+    fn jump_outside_code_rejected() {
+        // Hand-craft a JMP to instruction 99 in a 1-instruction program.
+        let i = crate::vm::isa::Instr { op: Op::Jmp, a: 0, b: 0, c: 0, imm: 99 };
+        let err = verify(&i.encode(), 0).unwrap_err();
+        assert!(err.to_string().contains("jump target"));
+    }
+
+    #[test]
+    fn bad_register_rejected() {
+        let i = crate::vm::isa::Instr { op: Op::Mov, a: 16, b: 0, c: 0, imm: 0 };
+        assert!(verify(&i.encode(), 0).is_err());
+    }
+
+    #[test]
+    fn bad_space_rejected() {
+        let i = crate::vm::isa::Instr { op: Op::Ldb, a: 0, b: 0, c: 7, imm: 0 };
+        assert!(verify(&i.encode(), 0).is_err());
+    }
+
+    #[test]
+    fn truncated_code_rejected() {
+        let mut a = Assembler::new();
+        a.halt();
+        let (mut code, _) = a.assemble();
+        code.pop();
+        assert!(verify(&code, 0).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Coordinator integration: failure injection, mixed workloads, placement
+//! invariants, telemetry accounting.
+
+use two_chains::coordinator::{Cluster, ClusterConfig, ClusterSnapshot};
+use two_chains::ifunc::builtin::{ChecksumIfunc, CounterIfunc, OutOfBoundsIfunc};
+use two_chains::ifunc::SourceArgs;
+use two_chains::util::XorShift;
+
+fn counter_cluster(workers: usize) -> Cluster {
+    let cluster = Cluster::launch(
+        ClusterConfig { workers, ..Default::default() },
+        |_, ctx, _| {
+            ctx.library_dir().install(Box::new(CounterIfunc::default()));
+        },
+    )
+    .unwrap();
+    for lib in [
+        Box::new(CounterIfunc::default()) as Box<dyn two_chains::ifunc::IfuncLibrary>,
+        Box::new(ChecksumIfunc),
+        Box::new(OutOfBoundsIfunc),
+    ] {
+        cluster.leader.library_dir().install(lib);
+    }
+    cluster
+}
+
+/// Faulty ifuncs interleaved with good ones: failures are contained,
+/// counted, and never corrupt the stream.
+#[test]
+fn failure_injection_does_not_stall_the_stream() {
+    let cluster = counter_cluster(2);
+    let d = cluster.dispatcher();
+    let h_good = d.register("counter").unwrap();
+    let h_bad = d.register("oob").unwrap();
+    let args = SourceArgs::bytes(vec![0u8; 64]);
+
+    let mut good = 0u64;
+    let mut bad = 0u64;
+    let mut rng = XorShift::new(99);
+    for key in 0..200u64 {
+        if rng.below(4) == 0 {
+            d.inject_by_key(&h_bad, key, &args).unwrap();
+            bad += 1;
+        } else {
+            d.inject_by_key(&h_good, key, &args).unwrap();
+            good += 1;
+        }
+    }
+    d.barrier().unwrap();
+
+    let executed: u64 = cluster.workers.iter().map(|w| w.executed()).sum();
+    let failed: u64 = cluster
+        .workers
+        .iter()
+        .map(|w| w.stats.failed.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    assert_eq!(executed, good);
+    assert_eq!(failed, bad);
+    // Every good message actually ran (counter proves execution).
+    let counted: u64 =
+        cluster.workers.iter().map(|w| w.ctx.symbols().counter_value()).sum();
+    assert_eq!(counted, good);
+    cluster.shutdown().unwrap();
+}
+
+/// Mixed ifunc types through one ring: per-name auto-registration, both
+/// execute correctly interleaved.
+#[test]
+fn mixed_types_share_a_ring() {
+    let cluster = counter_cluster(1);
+    let d = cluster.dispatcher();
+    let h_counter = d.register("counter").unwrap();
+    let h_checksum = d.register("checksum").unwrap();
+
+    for i in 0..50u64 {
+        let payload = vec![1u8; 100 + (i as usize % 32) * 8];
+        if i % 2 == 0 {
+            d.send_to(0, &h_counter.msg_create(&SourceArgs::bytes(payload)).unwrap()).unwrap();
+        } else {
+            d.send_to(0, &h_checksum.msg_create(&SourceArgs::bytes(payload)).unwrap()).unwrap();
+        }
+    }
+    d.barrier().unwrap();
+    assert_eq!(cluster.workers[0].executed(), 50);
+    // Two types -> exactly two auto-registration misses on the worker.
+    let snap = ClusterSnapshot::capture(&cluster);
+    assert_eq!(snap.workers[0].0.cache_misses, 2);
+    assert_eq!(snap.workers[0].0.cache_hits, 48);
+    cluster.shutdown().unwrap();
+}
+
+/// Placement is stable and total across cluster sizes.
+#[test]
+fn placement_is_total_and_balanced() {
+    for workers in [1usize, 2, 5, 8] {
+        let cluster = counter_cluster(workers);
+        let d = cluster.dispatcher();
+        let mut counts = vec![0usize; workers];
+        for key in 0..4000u64 {
+            counts[d.route_key(key)] += 1;
+        }
+        let min = *counts.iter().min().unwrap();
+        let max = *counts.iter().max().unwrap();
+        assert!(min > 0, "{workers} workers: empty shard");
+        assert!(
+            (max - min) as f64 / (4000.0 / workers as f64) < 0.5,
+            "{workers} workers: imbalance {counts:?}"
+        );
+        cluster.shutdown().unwrap();
+    }
+}
+
+/// Telemetry accounting matches ground truth after a burst.
+#[test]
+fn telemetry_matches_ground_truth() {
+    let cluster = counter_cluster(3);
+    let d = cluster.dispatcher();
+    let h = d.register("counter").unwrap();
+    for key in 0..120u64 {
+        d.inject_by_key(&h, key, &SourceArgs::bytes(vec![7u8; 48])).unwrap();
+    }
+    d.barrier().unwrap();
+    let snap = ClusterSnapshot::capture(&cluster);
+    let executed: u64 = snap.workers.iter().map(|(_, e, _, _)| *e).sum();
+    assert_eq!(executed, 120);
+    let flushes: u64 = snap.workers.iter().map(|(c, ..)| c.icache_flushes).sum();
+    assert_eq!(flushes, 120);
+    // JSON renders and parses back.
+    let parsed = two_chains::util::Json::parse(&snap.to_json().to_string()).unwrap();
+    assert!(parsed.get("workers").is_some());
+    cluster.shutdown().unwrap();
+}
+
+/// The serve-mode ingestion flow (no TCP): InsertIfunc routes each record
+/// to the key's owner, decodes the key + f32 data from the payload in
+/// bytecode, and inserts via the `db_insert` GOT symbol.
+#[test]
+fn insert_ifunc_ingestion_and_lookup() {
+    use two_chains::coordinator::InsertIfunc;
+    let cluster = Cluster::launch(
+        ClusterConfig { workers: 3, ..Default::default() },
+        |_, _, _| {},
+    )
+    .unwrap();
+    cluster.leader.library_dir().install(Box::new(InsertIfunc));
+    let d = cluster.dispatcher();
+    let h = d.register("insert").unwrap();
+
+    let mut rng = XorShift::new(7);
+    let mut expect = Vec::new();
+    for key in 0..40u64 {
+        let len = rng.range(1, 64) as usize;
+        let data = rng.f32s(len);
+        d.inject_by_key(&h, key, &InsertIfunc::args(key, &data)).unwrap();
+        expect.push((key, data));
+    }
+    d.barrier().unwrap();
+
+    for (key, data) in expect {
+        let w = d.route_key(key);
+        let got = cluster.workers[w].store.get(key).expect("record present");
+        assert_eq!(got, data, "key {key}");
+    }
+    assert_eq!(d.total_executed(), 40);
+    cluster.shutdown().unwrap();
+}

@@ -1,0 +1,189 @@
+//! Integration tests: the full three-layer stack.
+//!
+//! These require `artifacts/` (run `make artifacts` first — `make test`
+//! does). They exercise: JAX/Pallas AOT artifacts → PJRT runtime →
+//! HLO-carrying ifuncs over the fabric → target-side compile + GOT link +
+//! invoke → record store.
+
+use std::path::PathBuf;
+
+use two_chains::coordinator::{
+    apps::{DecodeInsertIfunc, DEC_OUT, SIGNAL_N},
+    Cluster, ClusterConfig,
+};
+use two_chains::fabric::{Fabric, WireConfig};
+use two_chains::ifunc::{HloIfuncLibrary, IfuncRing, SourceArgs, TargetArgs};
+use two_chains::runtime::{with_runtime, ArtifactManifest};
+use two_chains::ucp::{Context, ContextConfig, Worker};
+use two_chains::util::XorShift;
+
+fn artifacts_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        d.join("delta_enc.hlo.txt").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    d
+}
+
+fn ctx_pair() -> (std::sync::Arc<Context>, std::sync::Arc<Context>) {
+    let fabric = Fabric::new(2, WireConfig::off());
+    let cfg = ContextConfig { lib_dir: Some(artifacts_dir()), ..Default::default() };
+    let src = Context::new(fabric.node(0), cfg.clone()).unwrap();
+    let dst = Context::new(fabric.node(1), cfg).unwrap();
+    (src, dst)
+}
+
+/// The artifacts load and execute correctly straight through PJRT.
+#[test]
+fn runtime_executes_delta_roundtrip() {
+    let dir = artifacts_dir();
+    let mut rng = XorShift::new(7);
+    let record = rng.f32s(SIGNAL_N);
+    let (enc, dec) = with_runtime(|rt| {
+        rt.ensure_compiled_file("delta_enc", &dir.join("delta_enc.hlo.txt"))?;
+        rt.ensure_compiled_file("delta_dec", &dir.join("delta_dec.hlo.txt"))?;
+        let enc = rt.execute_f32("delta_enc", &record, &[SIGNAL_N as i64])?;
+        let dec = rt.execute_f32("delta_dec", &enc, &[SIGNAL_N as i64])?;
+        Ok((enc, dec))
+    })
+    .unwrap();
+    assert_eq!(enc.len(), SIGNAL_N);
+    for (a, b) in dec.iter().zip(&record) {
+        assert!((a - b).abs() < 1e-3, "decode mismatch: {a} vs {b}");
+    }
+    // The encoding is not the identity.
+    assert!(enc.iter().zip(&record).any(|(a, b)| (a - b).abs() > 1e-6));
+}
+
+/// An HLO-backed ifunc registered from the library dir executes on the
+/// target, compiling the artifact *from the message bytes*.
+#[test]
+fn hlo_ifunc_over_fabric() {
+    let (src, dst) = ctx_pair();
+    let mut ring = IfuncRing::new(&dst, 1 << 20).unwrap();
+    let ws = Worker::new(&src);
+    let wd = Worker::new(&dst);
+    let ep = ws.connect(&wd).unwrap();
+
+    // `delta_dec` resolved from artifacts/ via UCX_IFUNC_LIB_DIR analog.
+    let h = src.register_ifunc("delta_dec").unwrap();
+    let mut rng = XorShift::new(3);
+    let encoded = rng.f32s(SIGNAL_N);
+    let msg = h.msg_create(&SourceArgs::f32s(&encoded)).unwrap();
+    ep.ifunc_msg_send_nbix(&msg, ring.remote_addr(), ring.rkey()).unwrap();
+    ep.flush().unwrap();
+
+    let mut args = TargetArgs::none();
+    dst.poll_ifunc_blocking(&mut ring, &mut args).unwrap();
+    // The ifunc decoded the payload in place in the ring: executions
+    // happened on the target's thread-local PJRT runtime.
+    assert_eq!(args.last_return, Some(SIGNAL_N as u64));
+    assert_eq!(dst.ifunc_cache().len(), 1);
+}
+
+/// Repeated sends of the same type hit the auto-registration cache and
+/// compile PJRT exactly once.
+#[test]
+fn hlo_compile_happens_once() {
+    let (src, dst) = ctx_pair();
+    let mut ring = IfuncRing::new(&dst, 1 << 20).unwrap();
+    let ws = Worker::new(&src);
+    let wd = Worker::new(&dst);
+    let ep = ws.connect(&wd).unwrap();
+    let mut cursor = two_chains::ifunc::SenderCursor::new(ring.size());
+
+    let h = src.register_ifunc("fletcher").unwrap();
+    let msg = h.msg_create(&SourceArgs::f32s(&vec![1.0; SIGNAL_N])).unwrap();
+    let mut args = TargetArgs::none();
+    for _ in 0..5 {
+        ep.ifunc_msg_send_cursor(&msg, &mut cursor, ring.rkey()).unwrap();
+        ep.flush().unwrap();
+        dst.poll_ifunc_blocking(&mut ring, &mut args).unwrap();
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(dst.ifunc_cache().misses.load(Ordering::Relaxed), 1);
+    assert_eq!(dst.ifunc_cache().hits.load(Ordering::Relaxed), 4);
+    // s1 = sum of 4096 ones = 4096; record_result-free check via return:
+    // fletcher output is 2 elems.
+    assert_eq!(args.last_return, Some(2));
+}
+
+/// The paper's §3.2 example end-to-end on a cluster: encode at the host,
+/// inject, decode + checksum + insert on the data-owning worker.
+#[test]
+fn decode_insert_cluster_end_to_end() {
+    let dir = artifacts_dir();
+    let cluster = Cluster::launch(ClusterConfig { workers: 2, ..Default::default() }, |_, _, _| {})
+        .unwrap();
+    cluster
+        .leader
+        .library_dir()
+        .install(Box::new(DecodeInsertIfunc::load(&dir).unwrap()));
+
+    let d = cluster.dispatcher();
+    let h = d.register("dbdec").unwrap();
+    let mut rng = XorShift::new(11);
+    let mut records = Vec::new();
+    for key in 0..10u64 {
+        let record = rng.f32s(SIGNAL_N);
+        d.inject_by_key(&h, key, &DecodeInsertIfunc::args(key, &record)).unwrap();
+        records.push((key, record));
+    }
+    d.barrier().unwrap();
+    assert_eq!(d.total_executed(), 10);
+
+    for (key, record) in records {
+        let w = d.route_key(key);
+        let stored = cluster.workers[w]
+            .store
+            .get(key)
+            .unwrap_or_else(|| panic!("record {key} missing on worker {w}"));
+        assert_eq!(stored.len(), SIGNAL_N);
+        for (a, b) in stored.iter().zip(&record) {
+            assert!((a - b).abs() < 1e-3, "key {key}: {a} vs {b}");
+        }
+    }
+    cluster.shutdown().unwrap();
+}
+
+/// The decode output layout includes the checksum words (DEC_OUT).
+#[test]
+fn dbdec_manifest_matches_layout() {
+    let dir = artifacts_dir();
+    let manifest =
+        ArtifactManifest::from_json(&std::fs::read_to_string(dir.join("dbdec.json")).unwrap())
+            .unwrap();
+    assert_eq!(manifest.input_elems(), SIGNAL_N);
+    assert_eq!(manifest.output_elems(), DEC_OUT);
+}
+
+/// HloIfuncLibrary built from parts works without any files.
+#[test]
+fn hlo_library_from_parts() {
+    let dir = artifacts_dir();
+    let manifest = ArtifactManifest::from_json(
+        &std::fs::read_to_string(dir.join("graphcmb.json")).unwrap(),
+    )
+    .unwrap();
+    let hlo = std::fs::read(dir.join("graphcmb.hlo.txt")).unwrap();
+    let lib = HloIfuncLibrary::from_parts("graphcmb", manifest, hlo);
+
+    let (src, dst) = ctx_pair();
+    src.library_dir().install(Box::new(lib));
+    let mut ring = IfuncRing::new(&dst, 1 << 20).unwrap();
+    let ws = Worker::new(&src);
+    let wd = Worker::new(&dst);
+    let ep = ws.connect(&wd).unwrap();
+
+    let n = 8192;
+    let mut input = vec![1.0f32; n]; // rank
+    input.extend(vec![2.0f32; n]); // contrib
+    let h = src.register_ifunc("graphcmb").unwrap();
+    let msg = h.msg_create(&SourceArgs::f32s(&input)).unwrap();
+    ep.ifunc_msg_send_nbix(&msg, ring.remote_addr(), ring.rkey()).unwrap();
+    ep.flush().unwrap();
+    let mut args = TargetArgs::none();
+    dst.poll_ifunc_blocking(&mut ring, &mut args).unwrap();
+    assert_eq!(args.last_return, Some(n as u64));
+}

@@ -1,0 +1,184 @@
+//! Transport-level integration: fabric + UCP + ifunc interplay, with and
+//! without the wire-cost model; multi-node topologies; the AM-transport
+//! ifunc extension next to the PUT transport.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use two_chains::fabric::{Fabric, WireConfig};
+use two_chains::ifunc::am_transport::{ifunc_msg_send_am, install_am_ifunc};
+use two_chains::ifunc::builtin::{ChecksumIfunc, CounterIfunc};
+use two_chains::ifunc::{IfuncRing, SenderCursor, SourceArgs, TargetArgs};
+use two_chains::ucp::{Context, ContextConfig, Worker};
+
+/// Both transports deliver the same ifunc; target state agrees.
+#[test]
+fn put_and_am_transports_agree() {
+    let fabric = Fabric::new(2, WireConfig::off());
+    let src = Context::new(fabric.node(0), ContextConfig::default()).unwrap();
+    let dst = Context::new(fabric.node(1), ContextConfig::default()).unwrap();
+    src.library_dir().install(Box::new(CounterIfunc::default()));
+    let ws = Worker::new(&src);
+    let wd = Worker::new(&dst);
+    let ep = ws.connect(&wd).unwrap();
+    install_am_ifunc(&wd, Arc::new(Mutex::new(TargetArgs::none())));
+
+    let mut ring = IfuncRing::new(&dst, 1 << 18).unwrap();
+    let mut cursor = SenderCursor::new(ring.size());
+    let h = src.register_ifunc("counter").unwrap();
+    let msg = h.msg_create(&SourceArgs::bytes(vec![1; 100])).unwrap();
+
+    // 5 over PUT + poll, 5 over AM + progress.
+    let mut args = TargetArgs::none();
+    for _ in 0..5 {
+        ep.ifunc_msg_send_cursor(&msg, &mut cursor, ring.rkey()).unwrap();
+        ep.flush().unwrap();
+        dst.poll_ifunc_blocking(&mut ring, &mut args).unwrap();
+    }
+    for _ in 0..5 {
+        ifunc_msg_send_am(&ep, &msg).unwrap();
+    }
+    ep.flush().unwrap();
+    wd.progress_until(|| dst.symbols().counter_value() == 10);
+}
+
+/// The wire model changes timing, never outcomes.
+#[test]
+fn wire_model_preserves_semantics() {
+    for wire in [WireConfig::off(), WireConfig::connectx6()] {
+        let fabric = Fabric::new(2, wire);
+        let src = Context::new(fabric.node(0), ContextConfig::default()).unwrap();
+        let dst = Context::new(fabric.node(1), ContextConfig::default()).unwrap();
+        src.library_dir().install(Box::new(ChecksumIfunc));
+        let ws = Worker::new(&src);
+        let wd = Worker::new(&dst);
+        let ep = ws.connect(&wd).unwrap();
+        let mut ring = IfuncRing::new(&dst, 1 << 18).unwrap();
+        let mut cursor = SenderCursor::new(ring.size());
+        let h = src.register_ifunc("checksum").unwrap();
+        let payload: Vec<u8> = (0..=255u8).collect();
+        let msg = h.msg_create(&SourceArgs::bytes(payload)).unwrap();
+        let mut args = TargetArgs::none();
+        ep.ifunc_msg_send_cursor(&msg, &mut cursor, ring.rkey()).unwrap();
+        ep.flush().unwrap();
+        dst.poll_ifunc_blocking(&mut ring, &mut args).unwrap();
+        assert_eq!(dst.symbols().last_result(), (0..=255u64).sum::<u64>());
+    }
+}
+
+/// One source fans ifuncs out to several targets (the DPU/CSD picture);
+/// each target executes its own stream.
+#[test]
+fn one_to_many_fanout() {
+    const TARGETS: usize = 4;
+    let fabric = Fabric::new(TARGETS + 1, WireConfig::off());
+    let src = Context::new(fabric.node(0), ContextConfig::default()).unwrap();
+    src.library_dir().install(Box::new(CounterIfunc::default()));
+    let ws = Worker::new(&src);
+    let h = src.register_ifunc("counter").unwrap();
+    let msg = h.msg_create(&SourceArgs::bytes(vec![0; 64])).unwrap();
+
+    let mut targets = Vec::new();
+    for t in 0..TARGETS {
+        let ctx = Context::new(fabric.node(t + 1), ContextConfig::default()).unwrap();
+        let wd = Worker::new(&ctx);
+        let ep = ws.connect(&wd).unwrap();
+        let ring = IfuncRing::new(&ctx, 1 << 18).unwrap();
+        targets.push((ctx, ep, ring));
+    }
+    // Interleave sends.
+    let mut cursors: Vec<SenderCursor> =
+        targets.iter().map(|(_, _, r)| SenderCursor::new(r.size())).collect();
+    for round in 0..8 {
+        for (t, (_, ep, ring)) in targets.iter().enumerate() {
+            if (round + t) % 2 == 0 {
+                ep.ifunc_msg_send_cursor(&msg, &mut cursors[t], ring.rkey()).unwrap();
+            }
+        }
+    }
+    for (_, ep, _) in &targets {
+        ep.flush().unwrap();
+    }
+    // Each target drains its ring.
+    for (t, (ctx, _, ring)) in targets.iter_mut().enumerate() {
+        let expect = (0..8).filter(|r| (r + t) % 2 == 0).count() as u64;
+        let mut args = TargetArgs::none();
+        for _ in 0..expect {
+            ctx.poll_ifunc_blocking(ring, &mut args).unwrap();
+        }
+        assert_eq!(ctx.symbols().counter_value(), expect, "target {t}");
+    }
+}
+
+/// Two contexts injecting at each other simultaneously (full duplex).
+#[test]
+fn full_duplex_injection() {
+    let fabric = Fabric::new(2, WireConfig::off());
+    let a = Context::new(fabric.node(0), ContextConfig::default()).unwrap();
+    let b = Context::new(fabric.node(1), ContextConfig::default()).unwrap();
+    for c in [&a, &b] {
+        c.library_dir().install(Box::new(CounterIfunc::default()));
+    }
+    let wa = Worker::new(&a);
+    let wb = Worker::new(&b);
+    let ab = wa.connect(&wb).unwrap();
+    let ba = wb.connect(&wa).unwrap();
+    let ring_a = IfuncRing::new(&a, 1 << 18).unwrap();
+    let ring_b = IfuncRing::new(&b, 1 << 18).unwrap();
+    let (rkey_a, rkey_b) = (ring_a.rkey(), ring_b.rkey());
+    let (size_a, size_b) = (ring_a.size(), ring_b.size());
+
+    const N: u64 = 200;
+    let counter_b = b.symbols().counter();
+    let t = std::thread::spawn(move || {
+        let mut ring_b = ring_b;
+        let h = b.register_ifunc("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0; 32])).unwrap();
+        let mut cursor = SenderCursor::new(size_a);
+        let mut args = TargetArgs::none();
+        for _ in 0..N {
+            ba.ifunc_msg_send_cursor(&msg, &mut cursor, rkey_a).unwrap();
+            ba.flush().unwrap();
+            b.poll_ifunc_blocking(&mut ring_b, &mut args).unwrap();
+        }
+    });
+    let mut ring_a = ring_a;
+    let h = a.register_ifunc("counter").unwrap();
+    let msg = h.msg_create(&SourceArgs::bytes(vec![0; 32])).unwrap();
+    let mut cursor = SenderCursor::new(size_b);
+    let mut args = TargetArgs::none();
+    for _ in 0..N {
+        ab.ifunc_msg_send_cursor(&msg, &mut cursor, rkey_b).unwrap();
+        ab.flush().unwrap();
+        a.poll_ifunc_blocking(&mut ring_a, &mut args).unwrap();
+    }
+    t.join().unwrap();
+    assert_eq!(a.symbols().counter_value(), N);
+    assert_eq!(counter_b.load(Ordering::Acquire), N);
+}
+
+/// Atomic counters over the fabric (remote fetch-add used by rndv acks
+/// and available to applications).
+#[test]
+fn remote_atomics_accumulate_across_threads() {
+    let fabric = Fabric::new(3, WireConfig::off());
+    let target = fabric.node(2);
+    let mr = target.register(64, two_chains::fabric::MemPerm::RWX);
+    let total = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for src in 0..2 {
+        let qp = fabric.connect(src, 2);
+        let rkey = mr.rkey();
+        let total = total.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 1..=100u64 {
+                qp.atomic_add(rkey, 0, i).unwrap();
+                total.fetch_add(i, Ordering::Relaxed);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(mr.load_u64_acquire(0).unwrap(), total.load(Ordering::Relaxed));
+}
