@@ -45,7 +45,7 @@ fn tput_series(cfg: &BenchConfig) -> Vec<report::SeriesPoint> {
 }
 
 fn main() {
-    let quick = std::env::var("QUICK").is_ok();
+    let quick = std::env::var("QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
     let base = BenchConfig {
         sizes: if quick {
             vec![64, 8192]

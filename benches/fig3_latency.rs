@@ -15,7 +15,7 @@ use two_chains::bench::harness::{BenchConfig, BenchPair};
 use two_chains::bench::{latency, report};
 
 fn main() {
-    let quick = std::env::var("QUICK").is_ok();
+    let quick = std::env::var("QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
     let cfg = if quick {
         BenchConfig { sizes: vec![1, 4096, 65536], pingpong_iters: 30, ..BenchConfig::quick() }
     } else {

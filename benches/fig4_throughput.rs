@@ -15,7 +15,7 @@ use two_chains::bench::harness::{BenchConfig, BenchPair};
 use two_chains::bench::{report, throughput};
 
 fn main() {
-    let quick = std::env::var("QUICK").is_ok();
+    let quick = std::env::var("QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
     let cfg = if quick {
         BenchConfig { sizes: vec![64, 4096, 65536], msgs_per_size: 200, ..BenchConfig::quick() }
     } else {

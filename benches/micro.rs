@@ -5,10 +5,13 @@
 //! frame assembly, header decode, code-image decode, bytecode verify,
 //! VM dispatch, GOT resolve, fabric put+flush, poll round trip.
 //!
-//! Run: `cargo bench --bench micro`
+//! Run: `cargo bench --bench micro`. `QUICK=1` shrinks the batches for a
+//! CI smoke run; `--json PATH` (or `MICRO_JSON=PATH`) additionally writes
+//! the `bench::report::micro_json` report CI uploads as an artifact.
 
 use std::time::Instant;
 
+use two_chains::bench::report::{micro_json, MicroRow};
 use two_chains::fabric::{Fabric, MemPerm, WireConfig};
 use two_chains::ifunc::builtin::CounterIfunc;
 use two_chains::ifunc::message::{CodeImage, Header, IfuncMsg};
@@ -16,31 +19,56 @@ use two_chains::ifunc::{IfuncLibrary, IfuncRing, SenderCursor, SourceArgs, Targe
 use two_chains::ucp::{Context, ContextConfig, Worker};
 use two_chains::vm;
 
-/// Median ns/op over `batches` batches of `per_batch` iterations.
-fn bench(name: &str, batches: usize, per_batch: usize, mut f: impl FnMut()) {
-    let mut times: Vec<f64> = (0..batches)
-        .map(|_| {
-            let t0 = Instant::now();
-            for _ in 0..per_batch {
-                f();
-            }
-            t0.elapsed().as_nanos() as f64 / per_batch as f64
-        })
-        .collect();
-    times.sort_by(f64::total_cmp);
-    let med = times[times.len() / 2];
-    let best = times[0];
-    println!("{name:<44} {med:>12.0} ns/op   (best {best:>10.0})");
+/// Collects the median/best ns/op of every stage, for the JSON report.
+struct Timer {
+    quick: bool,
+    rows: Vec<MicroRow>,
+}
+
+impl Timer {
+    /// Median ns/op over `batches` batches of `per_batch` iterations.
+    fn bench(&mut self, name: &str, batches: usize, per_batch: usize, mut f: impl FnMut()) {
+        let (batches, per_batch) =
+            if self.quick { (batches.min(5), per_batch.min(200)) } else { (batches, per_batch) };
+        let mut times: Vec<f64> = (0..batches)
+            .map(|_| {
+                let t0 = Instant::now();
+                for _ in 0..per_batch {
+                    f();
+                }
+                t0.elapsed().as_nanos() as f64 / per_batch as f64
+            })
+            .collect();
+        times.sort_by(f64::total_cmp);
+        let med = times[times.len() / 2];
+        let best = times[0];
+        println!("{name:<44} {med:>12.0} ns/op   (best {best:>10.0})");
+        self.rows.push(MicroRow { name: name.to_string(), median_ns: med, best_ns: best });
+    }
+}
+
+/// Report path from `--json PATH` (after the `--` cargo passes through) or
+/// the `MICRO_JSON` environment variable.
+fn json_path() -> Option<std::path::PathBuf> {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--json") {
+        if let Some(p) = args.get(i + 1) {
+            return Some(p.into());
+        }
+    }
+    std::env::var_os("MICRO_JSON").map(Into::into)
 }
 
 fn main() {
+    let quick = std::env::var("QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let mut t = Timer { quick, rows: Vec::new() };
     println!("== component microbenchmarks (hot-path stages) ==\n");
     let lib = CounterIfunc::default();
     let code = lib.code();
     let args = SourceArgs::bytes(vec![7u8; 256]);
 
     // Source-side stages.
-    bench("msg_create (assemble 256B payload frame)", 30, 2000, || {
+    t.bench("msg_create (assemble 256B payload frame)", 30, 2000, || {
         let msg = IfuncMsg::assemble_with("counter", &code, 256, Default::default(), |p| {
             p.copy_from_slice(args.as_bytes());
             Ok(256)
@@ -50,31 +78,31 @@ fn main() {
     });
 
     let msg = IfuncMsg::assemble("counter", &code, args.as_bytes(), Default::default()).unwrap();
-    bench("header decode + validate", 30, 20000, || {
+    t.bench("header decode + validate", 30, 20000, || {
         std::hint::black_box(Header::decode(msg.frame()).unwrap());
     });
 
     let h = Header::decode(msg.frame()).unwrap().unwrap();
     let code_bytes = &msg.frame()[h.code_offset as usize..(h.code_offset + h.code_len) as usize];
-    bench("code-image decode", 30, 20000, || {
+    t.bench("code-image decode", 30, 20000, || {
         std::hint::black_box(CodeImage::decode(code_bytes).unwrap());
     });
 
     let (_, image) = CodeImage::decode(code_bytes).unwrap();
-    bench("bytecode verify (counter, 3 instrs)", 30, 20000, || {
+    t.bench("bytecode verify (counter, 3 instrs)", 30, 20000, || {
         std::hint::black_box(vm::verify(&image.vm_code, image.imports.len()).unwrap());
     });
 
     let prog = vm::verify(&image.vm_code, image.imports.len()).unwrap();
     let syms = two_chains::ifunc::Symbols::with_builtins();
     let got = syms.table().resolve(&image.imports).unwrap();
-    bench("GOT resolve (1 import)", 30, 20000, || {
+    t.bench("GOT resolve (1 import)", 30, 20000, || {
         std::hint::black_box(syms.table().resolve(&image.imports).unwrap());
     });
 
     let cfg = vm::VmConfig::default();
     let mut payload = vec![0u8; 256];
-    bench("VM run (counter body)", 30, 20000, || {
+    t.bench("VM run (counter body)", 30, 20000, || {
         std::hint::black_box(
             vm::run(&prog, &got, &mut payload, &mut (), &cfg).unwrap(),
         );
@@ -86,7 +114,7 @@ fn main() {
     let qp = fabric.connect(0, 1);
     for (label, size) in [("64B", 64usize), ("4KB", 4096), ("64KB", 65536)] {
         let data = vec![0xABu8; size];
-        bench(&format!("fabric put_nbi+flush ({label})"), 20, 2000, || {
+        t.bench(&format!("fabric put_nbi+flush ({label})"), 20, 2000, || {
             qp.put_nbi(mr.rkey(), 0, &data).unwrap();
             qp.flush().unwrap();
         });
@@ -104,7 +132,7 @@ fn main() {
     let handle = src.register_ifunc("counter").unwrap();
     let m = handle.msg_create(&SourceArgs::bytes(vec![0u8; 64])).unwrap();
     let mut targs = TargetArgs::none();
-    bench("ifunc send+flush+poll+execute (64B)", 20, 2000, || {
+    t.bench("ifunc send+flush+poll+execute (64B)", 20, 2000, || {
         ep.ifunc_msg_send_cursor(&m, &mut cursor, ring.rkey()).unwrap();
         ep.flush().unwrap();
         dst.poll_ifunc_blocking(&mut ring, &mut targs).unwrap();
@@ -119,7 +147,7 @@ fn main() {
         h2.fetch_add(1, Ordering::Relaxed);
     });
     let data = vec![0u8; 64];
-    bench("AM send+flush+progress (64B eager)", 20, 2000, || {
+    t.bench("AM send+flush+progress (64B eager)", 20, 2000, || {
         let before = hits.load(Ordering::Relaxed);
         ep.am_send(9, &data).unwrap();
         ep.flush().unwrap();
@@ -128,5 +156,10 @@ fn main() {
         }
     });
 
+    if let Some(path) = json_path() {
+        let report = micro_json(&t.rows);
+        std::fs::write(&path, &report).expect("write micro JSON report");
+        eprintln!("wrote {} rows to {}", t.rows.len(), path.display());
+    }
     println!("\n(see EXPERIMENTS.md §Perf for the before/after log)");
 }

@@ -12,7 +12,8 @@
 //! With one operand resident on the device, moving the code beats moving
 //! the data — the crossover logic the paper's introduction argues for.
 //!
-//! Run: `make artifacts && cargo run --release --example compute_offload`
+//! Run: `(cd python && python -m compile.aot)` then
+//! `cargo run --release --example compute_offload`
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -74,10 +75,14 @@ fn mat(seed: u64) -> Vec<f32> {
     XorShift::new(seed).f32s(ELEMS)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> two_chains::Result<()> {
+    if !two_chains::runtime::pjrt_available() {
+        eprintln!("compute_offload needs a real PJRT backend (stubbed; see rust/src/xla.rs)");
+        return Ok(());
+    }
     let artifacts = std::path::PathBuf::from("artifacts");
     let hlo = std::fs::read(artifacts.join("gemm256.hlo.txt"))
-        .map_err(|e| anyhow::anyhow!("run `make artifacts` first: {e}"))?;
+        .map_err(|e| two_chains::Error::Other(format!("run `python -m compile.aot` first: {e}")))?;
 
     // Host (node 0) and DPU (node 1), CX-6-like wire.
     let fabric = Fabric::new(2, WireConfig::connectx6());

@@ -14,7 +14,8 @@
 //! The run reports ingest throughput, per-worker placement, PJRT compile
 //! counts, and full-corpus verification against the originals.
 //!
-//! Run: `make artifacts && cargo run --release --example db_insert [n_records] [workers]`
+//! Run: `(cd python && python -m compile.aot)` then
+//! `cargo run --release --example db_insert [n_records] [workers]`
 
 use std::time::Instant;
 
@@ -23,6 +24,7 @@ use two_chains::coordinator::{
     Cluster, ClusterConfig,
 };
 use two_chains::fabric::WireConfig;
+use two_chains::{Error, Result};
 
 /// Synthetic "voice": a sum of a few low-frequency harmonics plus noise —
 /// band-limited like speech, so delta coding actually shrinks dynamic
@@ -44,11 +46,16 @@ fn synth_recording(seed: u64) -> Vec<f32> {
         .collect()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let n_records: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(256);
-    let n_workers: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let parse = |s: &String| s.parse::<usize>().map_err(|e| Error::Other(format!("{s}: {e}")));
+    let n_records: usize = args.get(1).map(parse).transpose()?.unwrap_or(256);
+    let n_workers: usize = args.get(2).map(parse).transpose()?.unwrap_or(3);
     let artifacts = std::path::PathBuf::from("artifacts");
+    if !two_chains::runtime::pjrt_available() {
+        eprintln!("db_insert needs a real PJRT backend (stubbed; see rust/src/xla.rs)");
+        return Ok(());
+    }
 
     println!("== Two-Chains record-ingestion E2E ==");
     println!("corpus: {n_records} recordings x {SIGNAL_N} samples, {n_workers} workers\n");
@@ -101,14 +108,21 @@ fn main() -> anyhow::Result<()> {
         let stored = cluster.workers[w]
             .store
             .get(*key)
-            .ok_or_else(|| anyhow::anyhow!("record {key} missing on worker {w}"))?;
+            .ok_or_else(|| Error::Other(format!("record {key} missing on worker {w}")))?;
         for (a, b) in stored.iter().zip(record) {
             max_err = max_err.max((a - b).abs());
         }
     }
-    println!("\nverified {} records in {:.2?}; max |err| = {:.2e}", corpus.len(), t1.elapsed(), max_err);
-    anyhow::ensure!(max_err < 1e-2, "decode error too large");
-    println!("E2E OK: encode (Pallas delta) -> inject (RDMA put) -> decode+insert (PJRT on worker)");
+    println!(
+        "\nverified {} records in {:.2?}; max |err| = {:.2e}",
+        corpus.len(),
+        t1.elapsed(),
+        max_err
+    );
+    if max_err >= 1e-2 {
+        return Err(Error::Other(format!("decode error too large: {max_err}")));
+    }
+    println!("E2E OK: encode (Pallas delta) -> inject (RDMA put) -> decode+insert (PJRT)");
     cluster.shutdown()?;
     Ok(())
 }

@@ -13,7 +13,7 @@ use two_chains::ifunc::builtin::{ChecksumIfunc, CounterIfunc};
 use two_chains::ifunc::SenderCursor;
 use two_chains::prelude::*;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> two_chains::Result<()> {
     // §4.2 testbed: two machines, back-to-back (wire model off for demo).
     let fabric = Fabric::new(2, WireConfig::off());
     let src = Context::new(fabric.node(0), ContextConfig::default())?;

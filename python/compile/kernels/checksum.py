@@ -15,7 +15,7 @@ from jax.experimental import pallas as pl
 BLOCK = 1024
 
 
-def _fletcher_kernel(x_ref, o_ref):
+def _fletcher_kernel(x_ref, ramp_ref, o_ref):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -24,7 +24,10 @@ def _fletcher_kernel(x_ref, o_ref):
 
     x = x_ref[...]
     base = (step * BLOCK).astype(jnp.float32)
-    idx = base + jnp.arange(1, BLOCK + 1, dtype=jnp.float32)
+    # The 1..BLOCK ramp rides in as an input (every grid step maps to the
+    # same block): a kernel may not capture constant arrays from the
+    # enclosing trace, and an in-kernel arange would be one.
+    idx = base + ramp_ref[...]
     o_ref[...] += jnp.array(
         [jnp.sum(x), jnp.sum(idx * x)], dtype=o_ref.dtype
     )
@@ -35,11 +38,15 @@ def fletcher(x):
     if x.ndim != 1 or x.shape[0] % BLOCK != 0:
         raise ValueError(f"length must be a multiple of {BLOCK}, got {x.shape}")
     n = x.shape[0] // BLOCK
+    ramp = jnp.arange(1, BLOCK + 1, dtype=jnp.float32)
     return pl.pallas_call(
         _fletcher_kernel,
         grid=(n,),
-        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (0,)),
+        ],
         out_specs=pl.BlockSpec((2,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((2,), x.dtype),
         interpret=True,
-    )(x)
+    )(x, ramp)

@@ -1,0 +1,7 @@
+"""Make the `compile` package importable no matter where pytest is invoked
+from (`pytest python/tests` at the repo root, or `pytest tests` in here)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -4,6 +4,8 @@ import json
 
 import pytest
 
+pytest.importorskip("jax", reason="JAX toolchain not installed")
+
 from compile import aot, model
 
 

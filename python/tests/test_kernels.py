@@ -4,9 +4,14 @@ Hypothesis sweeps shapes (multiples of the block sizes) and value
 distributions; fixed examples pin the edge cases.
 """
 
+import pytest
+
+pytest.importorskip("numpy", reason="numpy not installed")
+pytest.importorskip("jax", reason="JAX toolchain not installed")
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import axpb, checksum, delta, gemm, mulaw, ref

@@ -1,5 +1,11 @@
 """L2 correctness: the flat-f32 model graphs behave and compose."""
 
+import pytest
+
+pytest.importorskip("numpy", reason="numpy not installed")
+pytest.importorskip("jax", reason="JAX toolchain not installed")
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
 import numpy as np
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st

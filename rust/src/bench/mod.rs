@@ -6,4 +6,4 @@ pub mod report;
 pub mod throughput;
 
 pub use harness::{BenchConfig, BenchMode, BenchPair};
-pub use report::{print_series, Crossover, SeriesPoint};
+pub use report::{micro_json, print_series, Crossover, MicroRow, SeriesPoint};

@@ -34,8 +34,7 @@ pub struct Crossover {
 
 /// Find the first crossover (ifunc starts winning) in a sweep.
 pub fn find_crossover(series: &[SeriesPoint], lower_is_better: bool) -> Option<Crossover> {
-    let wins =
-        |p: &SeriesPoint| if lower_is_better { p.ifunc < p.am } else { p.ifunc > p.am };
+    let wins = |p: &SeriesPoint| if lower_is_better { p.ifunc < p.am } else { p.ifunc > p.am };
     for w in series.windows(2) {
         if !wins(&w[0]) && wins(&w[1]) {
             return Some(Crossover { below: w[0].size, at: w[1].size });
@@ -55,12 +54,7 @@ fn human_size(bytes: usize) -> String {
 }
 
 /// Print a Fig.3/Fig.4-style table: payload, ifunc, AM, ifunc-vs-AM %.
-pub fn print_series(
-    title: &str,
-    unit: &str,
-    series: &[SeriesPoint],
-    lower_is_better: bool,
-) {
+pub fn print_series(title: &str, unit: &str, series: &[SeriesPoint], lower_is_better: bool) {
     println!("\n=== {title} ===");
     println!(
         "{:>8}  {:>14}  {:>14}  {:>12}",
@@ -88,13 +82,44 @@ pub fn print_series(
     }
 }
 
+/// One microbenchmark measurement (`benches/micro.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MicroRow {
+    pub name: String,
+    pub median_ns: f64,
+    pub best_ns: f64,
+}
+
+/// Render the micro rows as the JSON report CI uploads as an artifact, so
+/// successive runs give a perf trajectory for the hot-path stages.
+pub fn micro_json(rows: &[MicroRow]) -> String {
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"name\":{},\"median_ns\":{:.1},\"best_ns\":{:.1}}}",
+                json_str(&r.name),
+                r.median_ns,
+                r.best_ns
+            )
+        })
+        .collect();
+    format!("{{\"series\":\"micro\",\"rows\":[{}]}}", body.join(","))
+}
+
+/// Escape an arbitrary label as a JSON string (the report rows are caller
+/// supplied, so quotes/backslashes in a name must not corrupt the report).
+fn json_str(s: &str) -> String {
+    crate::util::Json::Str(s.to_string()).to_string()
+}
+
 /// Render a series as a machine-readable JSON line (EXPERIMENTS.md data).
 pub fn series_json(name: &str, series: &[SeriesPoint]) -> String {
     let rows: Vec<String> = series
         .iter()
         .map(|p| format!("{{\"size\":{},\"ifunc\":{:.2},\"am\":{:.2}}}", p.size, p.ifunc, p.am))
         .collect();
-    format!("{{\"series\":\"{name}\",\"points\":[{}]}}", rows.join(","))
+    format!("{{\"series\":{},\"points\":[{}]}}", json_str(name), rows.join(","))
 }
 
 #[cfg(test)]
@@ -142,5 +167,19 @@ mod tests {
         let j = series_json("fig3", &s);
         assert!(j.contains("\"series\":\"fig3\""));
         assert!(j.contains("\"size\":1"));
+    }
+
+    #[test]
+    fn micro_json_parses_back() {
+        let rows = vec![
+            MicroRow { name: "header decode".into(), median_ns: 12.5, best_ns: 11.0 },
+            // Quotes/backslashes in a label must be escaped, not corrupt
+            // the report.
+            MicroRow { name: "vm \"run\" \\ fast".into(), median_ns: 80.0, best_ns: 75.25 },
+        ];
+        let j = micro_json(&rows);
+        let parsed = crate::util::Json::parse(&j).expect("report must be valid JSON");
+        assert_eq!(parsed.get("series").and_then(|s| s.as_str()), Some("micro"));
+        assert_eq!(parsed.get("rows").and_then(|r| r.as_arr()).map(|r| r.len()), Some(2));
     }
 }

@@ -32,8 +32,7 @@ pub fn ifunc_throughput(pair: &BenchPair, payload: usize, total_msgs: usize) -> 
     // Messages per round: fill the ring, leaving one frame of slack so a
     // wrap marker plus the wasted tail can never overlap an unconsumed
     // frame from the same round.
-    let per_round =
-        (((ring_size - 8) / frame_len).saturating_sub(1)).max(1).min(total_msgs);
+    let per_round = (((ring_size - 8) / frame_len).saturating_sub(1)).max(1).min(total_msgs);
     let rounds = total_msgs.div_ceil(per_round);
     let total = rounds * per_round;
 

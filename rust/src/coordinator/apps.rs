@@ -37,7 +37,7 @@ impl DecodeInsertIfunc {
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         let dbdec_hlo = std::fs::read(artifacts_dir.join("dbdec.hlo.txt")).map_err(|e| {
             Error::Other(format!(
-                "missing dbdec artifact in {artifacts_dir:?} (run `make artifacts`): {e}"
+                "missing dbdec artifact in {artifacts_dir:?} (run `python -m compile.aot`): {e}"
             ))
         })?;
         with_runtime(|rt| {
@@ -133,8 +133,7 @@ impl IfuncLibrary for DecodeInsertIfunc {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        let encoded =
-            with_runtime(|rt| rt.execute_f32("delta_enc", &record, &[SIGNAL_N as i64]))?;
+        let encoded = with_runtime(|rt| rt.execute_f32("delta_enc", &record, &[SIGNAL_N as i64]))?;
         for (i, v) in encoded.iter().enumerate() {
             payload[KEY_BYTES + i * 4..KEY_BYTES + i * 4 + 4]
                 .copy_from_slice(&v.to_le_bytes());

@@ -19,9 +19,9 @@ pub mod telemetry;
 pub mod worker;
 
 pub use apps::{DecodeInsertIfunc, InsertIfunc};
-pub use telemetry::{ClusterSnapshot, ContextSnapshot};
-pub use dispatcher::Dispatcher;
+pub use dispatcher::{route_key, Dispatcher};
 pub use store::{install_db_symbols, RecordStore};
+pub use telemetry::{ClusterSnapshot, ContextSnapshot};
 pub use worker::{WorkerHandle, WorkerStats};
 
 use std::sync::Arc;

@@ -10,6 +10,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::fabric::{MemPerm, MemoryRegion, RKey};
 use crate::ifunc::{IfuncRing, SenderCursor, TargetArgs};
+use crate::log;
 use crate::ucp::{Context, Endpoint, Worker as UcpWorker};
 use crate::{Error, Result};
 
@@ -37,11 +38,16 @@ pub(crate) struct WorkerLink {
 }
 
 impl WorkerLink {
-    /// Block until the ring has room for `frame_len` more bytes.
-    pub fn wait_capacity(&self, frame_len: usize) {
-        // +8 covers a possible wrap marker; the extra frame of slack
-        // absorbs the wasted ring tail on wrap.
-        let budget = (self.ring_bytes - frame_len - 8) as u64;
+    /// Block until the ring can absorb `needed` more bytes. `needed` must
+    /// count the *whole* cost of the upcoming send — on a wrap that is the
+    /// skipped ring tail plus the frame, not just the frame (the tail is
+    /// credited back by the worker's `rewind`). `needed` may not exceed
+    /// the ring: when tail + frame would (a frame longer than the current
+    /// ring offset), the frame at offset 0 overlaps the wrap marker, so
+    /// the dispatcher drains the ring and publishes the marker *before*
+    /// the frame (see `Dispatcher::send_to`).
+    pub fn wait_capacity(&self, needed: usize) {
+        let budget = self.ring_bytes.saturating_sub(needed) as u64;
         let mut i = 0u32;
         loop {
             let consumed = self.credit.load_u64_acquire(0).unwrap();
@@ -94,35 +100,39 @@ impl WorkerHandle {
                 let mut ring = ring;
                 let mut args = TargetArgs::new(Box::new(store2));
                 let mut idle = 0u32;
+                let mut last_credit = 0u64;
                 loop {
-                    match ctx2.poll_ifunc(&mut ring, &mut args) {
+                    let polled = ctx2.poll_ifunc(&mut ring, &mut args);
+                    match &polled {
                         Ok(crate::ifunc::PollResult::Executed) => {
                             stats2.executed.fetch_add(1, Ordering::Relaxed);
-                            ep_credit.qp().put_signal(
-                                credit_rkey,
-                                0,
-                                ring.consumed_bytes,
-                            )?;
+                            idle = 0;
                         }
-                        Ok(crate::ifunc::PollResult::NoMessage) => {
-                            if stop2.load(Ordering::Acquire) {
-                                ep_credit.flush()?;
-                                return Ok(());
-                            }
-                            crate::fabric::wire::backoff(idle);
-                            idle += 1;
-                        }
+                        Ok(crate::ifunc::PollResult::NoMessage) => {}
                         Err(e) => {
                             // A faulty ifunc is consumed and reported, but
                             // must not take the device down.
                             stats2.failed.fetch_add(1, Ordering::Relaxed);
                             log::error!("worker {index}: ifunc failed: {e}");
-                            ep_credit.qp().put_signal(
-                                credit_rkey,
-                                0,
-                                ring.consumed_bytes,
-                            )?;
+                            idle = 0;
                         }
+                    }
+                    // Push the credit word whenever consumption advanced —
+                    // including marker-only polls (a wrap rewind reports
+                    // NoMessage but consumes the ring tail, and the
+                    // dispatcher's oversized-wrap path waits on exactly
+                    // that credit).
+                    if ring.consumed_bytes != last_credit {
+                        ep_credit.qp().put_signal(credit_rkey, 0, ring.consumed_bytes)?;
+                        last_credit = ring.consumed_bytes;
+                    }
+                    if matches!(polled, Ok(crate::ifunc::PollResult::NoMessage)) {
+                        if stop2.load(Ordering::Acquire) {
+                            ep_credit.flush()?;
+                            return Ok(());
+                        }
+                        crate::fabric::wire::backoff(idle);
+                        idle += 1;
                     }
                 }
             })

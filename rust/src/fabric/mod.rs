@@ -107,6 +107,9 @@ mod tests {
         qp.flush().unwrap();
         let flushed = t0.elapsed();
         assert!(posted < std::time::Duration::from_millis(2), "post is non-blocking: {posted:?}");
-        assert!(flushed >= std::time::Duration::from_millis(3), "flush waits for wire: {flushed:?}");
+        assert!(
+            flushed >= std::time::Duration::from_millis(3),
+            "flush waits for wire: {flushed:?}"
+        );
     }
 }

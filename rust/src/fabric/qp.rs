@@ -77,7 +77,8 @@ impl Qp {
     /// Fire-and-forget fetch-add (completion via flush only).
     pub fn atomic_add_nbi(&self, rkey: RKey, offset: usize, value: u64) -> Result<()> {
         self.posted.fetch_add(1, Ordering::Relaxed);
-        self.peer.post(NetOp::AtomicAdd { rkey, offset, value, reply: None, comp: self.comp.clone() })
+        let comp = self.comp.clone();
+        self.peer.post(NetOp::AtomicAdd { rkey, offset, value, reply: None, comp })
     }
 
     /// Number of operations posted but not yet completed (or errored).

@@ -17,6 +17,7 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::log;
 use crate::ucp::{Context, Endpoint, Worker};
 use crate::vm;
 use crate::{Error, Result};
@@ -30,10 +31,7 @@ pub const IFUNC_AM_ID: u16 = 0x1FC0;
 
 /// Install the ifunc-over-AM receive path on `worker`. All ifuncs arriving
 /// on [`IFUNC_AM_ID`] execute against `target_args`.
-pub fn install_am_ifunc(
-    worker: &Arc<Worker>,
-    target_args: Arc<Mutex<TargetArgs>>,
-) {
+pub fn install_am_ifunc(worker: &Arc<Worker>, target_args: Arc<Mutex<TargetArgs>>) {
     let ctx = worker.context().clone();
     worker.set_am_handler(IFUNC_AM_ID, move |_, frame| {
         if let Err(e) = execute_frame(&ctx, frame, &target_args) {
@@ -51,11 +49,7 @@ pub fn ifunc_msg_send_am(ep: &Endpoint, msg: &IfuncMsg) -> Result<()> {
 /// Execute a frame delivered in an AM buffer: same link/flush/invoke
 /// pipeline as `ucp_poll_ifunc`, minus ring bookkeeping, plus the
 /// payload-copy the non-in-place buffer forces.
-fn execute_frame(
-    ctx: &Context,
-    frame: &[u8],
-    target_args: &Arc<Mutex<TargetArgs>>,
-) -> Result<()> {
+fn execute_frame(ctx: &Context, frame: &[u8], target_args: &Arc<Mutex<TargetArgs>>) -> Result<()> {
     let header = Header::decode(frame)?
         .ok_or_else(|| Error::InvalidMessage("empty ifunc frame over AM".into()))?;
     if header.frame_len as usize != frame.len() {
@@ -65,11 +59,7 @@ fn execute_frame(
     let code_end = code_start + header.code_len as usize;
     let (_slot, image) = CodeImage::decode_ref(&frame[code_start..code_end])?;
     let linked = match ctx.cache.lookup(&header.name) {
-        Some(e)
-            if e.imports.iter().map(String::as_str).eq(image.imports.iter().copied()) =>
-        {
-            e
-        }
+        Some(e) if e.imports.iter().map(String::as_str).eq(image.imports.iter().copied()) => e,
         _ => {
             let got = ctx.symbols().table().resolve_iter(image.imports.iter().copied())?;
             let has_hlo = !image.hlo.is_empty();
@@ -86,8 +76,7 @@ fn execute_frame(
     // The AM buffer is UCX-owned and immutable: copy the payload out so
     // the injected code can mutate it (the cost the PUT transport avoids).
     let pay_start = header.payload_offset as usize;
-    let mut payload =
-        frame[pay_start..pay_start + header.payload_len as usize].to_vec();
+    let mut payload = frame[pay_start..pay_start + header.payload_len as usize].to_vec();
 
     let mut ta = target_args.lock().unwrap();
     ta.hlo_name = if linked.has_hlo { Some(header.name.clone()) } else { None };

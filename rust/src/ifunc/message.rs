@@ -450,8 +450,7 @@ mod tests {
 
     #[test]
     fn corrupt_header_rejected() {
-        let msg =
-            IfuncMsg::assemble("x", &sample_code(), b"p", Default::default()).unwrap();
+        let msg = IfuncMsg::assemble("x", &sample_code(), b"p", Default::default()).unwrap();
         let mut bytes = msg.frame().to_vec();
         bytes[20] ^= 0xFF; // flip code_len
         assert!(Header::decode(&bytes).is_err());

@@ -35,6 +35,7 @@ use std::any::Any;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::log;
 use crate::vm::SymbolTable;
 
 /// Target-process arguments handed to every invoked ifunc

@@ -64,47 +64,74 @@ pub mod bench;
 pub mod coordinator;
 pub mod fabric;
 pub mod ifunc;
+pub mod log;
 pub mod runtime;
 pub mod ucp;
 pub mod util;
 pub mod vm;
+pub mod xla;
 
 /// Crate-wide error type. Mirrors `ucs_status_t`: every fallible public API
 /// returns `Result<T, Error>` where the error enumerates the UCX-style
 /// status codes the paper's API surfaces.
-#[derive(Debug, thiserror::Error)]
+///
+/// (`Display`/`Error` are hand-implemented: the offline build has no
+/// `thiserror`.)
+#[derive(Debug)]
 pub enum Error {
     /// Remote key not known to the target HCA, or permissions insufficient.
     /// The paper (§3.5): "If the process accesses the memory with an invalid
     /// RKEY, the request gets rejected at the hardware level."
-    #[error("remote access error: {0}")]
     RemoteAccess(String),
     /// Frame failed header-signal or bounds validation (§3.4: "messages that
     /// are ill-formed or too long will be rejected").
-    #[error("invalid ifunc message: {0}")]
     InvalidMessage(String),
     /// Named ifunc library was not found in `UCX_IFUNC_LIB_DIR`.
-    #[error("no such ifunc library: {0}")]
     NoSuchLibrary(String),
     /// TCVM bytecode failed the security verifier (§3.5).
-    #[error("code verification failed: {0}")]
     Verify(String),
     /// TCVM runtime fault (out-of-bounds access, fuel exhausted, bad GOT slot).
-    #[error("injected function fault: {0}")]
     VmFault(String),
     /// Destination ring buffer cannot accept the frame.
-    #[error("no resource: {0}")]
     NoResource(String),
     /// PJRT / XLA error while compiling or executing an HLO-carrying ifunc.
-    #[error("xla runtime error: {0}")]
     Xla(String),
     /// Endpoint / transport failure.
-    #[error("transport error: {0}")]
     Transport(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("{0}")]
+    Io(std::io::Error),
     Other(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::RemoteAccess(m) => write!(f, "remote access error: {m}"),
+            Error::InvalidMessage(m) => write!(f, "invalid ifunc message: {m}"),
+            Error::NoSuchLibrary(m) => write!(f, "no such ifunc library: {m}"),
+            Error::Verify(m) => write!(f, "code verification failed: {m}"),
+            Error::VmFault(m) => write!(f, "injected function fault: {m}"),
+            Error::NoResource(m) => write!(f, "no resource: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

@@ -19,6 +19,7 @@ use two_chains::bench::{
 use two_chains::fabric::WireConfig;
 use two_chains::ifunc::icache::IcacheConfig;
 use two_chains::ucp::AmParams;
+use two_chains::{Error, Result};
 
 mod serve;
 
@@ -131,7 +132,7 @@ impl Opts {
     }
 }
 
-pub fn run_fig3(cfg: &BenchConfig) -> anyhow::Result<Vec<report::SeriesPoint>> {
+pub fn run_fig3(cfg: &BenchConfig) -> Result<Vec<report::SeriesPoint>> {
     let mut series = Vec::new();
     for &size in &cfg.sizes {
         let pair = BenchPair::new(cfg.clone())?;
@@ -144,7 +145,7 @@ pub fn run_fig3(cfg: &BenchConfig) -> anyhow::Result<Vec<report::SeriesPoint>> {
     Ok(series)
 }
 
-pub fn run_fig4(cfg: &BenchConfig) -> anyhow::Result<Vec<report::SeriesPoint>> {
+pub fn run_fig4(cfg: &BenchConfig) -> Result<Vec<report::SeriesPoint>> {
     let mut series = Vec::new();
     for &size in &cfg.sizes {
         // Bound total bytes so 1MB payloads don't take minutes.
@@ -159,7 +160,7 @@ pub fn run_fig4(cfg: &BenchConfig) -> anyhow::Result<Vec<report::SeriesPoint>> {
     Ok(series)
 }
 
-fn run_ablations(base: BenchConfig) -> anyhow::Result<()> {
+fn run_ablations(base: BenchConfig) -> Result<()> {
     let sizes = if base.sizes.len() > 6 {
         vec![64, 1024, 8192, 65536, 1 << 20]
     } else {
@@ -213,7 +214,7 @@ fn run_ablations(base: BenchConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn demo() -> anyhow::Result<()> {
+fn demo() -> Result<()> {
     use two_chains::prelude::*;
     println!("Two-Chains quickstart: injecting the counter ifunc across the fabric");
     let fabric = Fabric::new(2, WireConfig::off());
@@ -255,11 +256,11 @@ fn info() {
             println!("    {}", e.file_name().to_string_lossy());
         }
     } else {
-        println!("    (none — run `make artifacts`)");
+        println!("    (none — run `python -m compile.aot` in python/)");
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     two_chains::util::logger::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
@@ -273,8 +274,8 @@ fn main() -> anyhow::Result<()> {
         "bench" => {
             let (which, rest) = rest
                 .split_first()
-                .ok_or_else(|| anyhow::anyhow!("bench needs fig3|fig4|ablations"))?;
-            let opts = parse_opts(rest).map_err(|e| anyhow::anyhow!(e))?;
+                .ok_or_else(|| Error::Other("bench needs fig3|fig4|ablations".into()))?;
+            let opts = parse_opts(rest).map_err(Error::Other)?;
             let cfg = opts.config();
             match which.as_str() {
                 "fig3" => {
@@ -298,12 +299,12 @@ fn main() -> anyhow::Result<()> {
                     println!("{}", report::series_json("fig4", &series));
                 }
                 "ablations" => run_ablations(cfg)?,
-                other => anyhow::bail!("unknown bench {other}"),
+                other => return Err(Error::Other(format!("unknown bench {other}"))),
             }
         }
         "demo" => demo()?,
         "serve" => {
-            let opts = parse_opts(rest).map_err(|e| anyhow::anyhow!(e))?;
+            let opts = parse_opts(rest).map_err(Error::Other)?;
             serve::serve(opts.workers, &opts.listen)?;
         }
         "info" => info(),

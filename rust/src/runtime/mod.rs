@@ -18,7 +18,16 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::vm::HostFn;
+use crate::xla;
 use crate::{Error, Result};
+
+/// Whether a real PJRT backend is linked into this build. `false` with the
+/// in-tree xla stub: HLO-carrying ifuncs then fail to compile (and the
+/// AOT-artifact tests/examples skip), while everything else runs. See
+/// `rust/src/xla.rs` for how to link the real backend.
+pub const fn pjrt_available() -> bool {
+    xla::available()
+}
 
 /// Manifest describing one AOT artifact, written by `python/compile/aot.py`
 /// next to the HLO text. All artifacts use the flat-`f32` calling
@@ -71,10 +80,11 @@ impl ArtifactManifest {
 
     pub fn to_json(&self) -> String {
         use crate::util::Json;
+        let dims = |v: &[i64]| Json::Arr(v.iter().map(|&i| Json::Num(i as f64)).collect());
         Json::obj(vec![
             ("name", Json::from(self.name.as_str())),
-            ("input_shape", Json::Arr(self.input_shape.iter().map(|&i| Json::Num(i as f64)).collect())),
-            ("output_shape", Json::Arr(self.output_shape.iter().map(|&i| Json::Num(i as f64)).collect())),
+            ("input_shape", dims(&self.input_shape)),
+            ("output_shape", dims(&self.output_shape)),
             ("dtype", Json::from(self.dtype.as_str())),
             ("description", Json::from(self.description.as_str())),
         ])

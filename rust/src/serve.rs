@@ -19,9 +19,11 @@ use std::sync::Arc;
 
 use two_chains::coordinator::{Cluster, ClusterConfig, InsertIfunc};
 use two_chains::ifunc::IfuncHandle;
+use two_chains::log;
 use two_chains::util::Json;
+use two_chains::Result;
 
-pub fn serve(workers: usize, listen: &str) -> anyhow::Result<()> {
+pub fn serve(workers: usize, listen: &str) -> Result<()> {
     let cluster = Arc::new(Cluster::launch(
         ClusterConfig { workers, ..Default::default() },
         |_, _, _| {},
@@ -45,11 +47,7 @@ pub fn serve(workers: usize, listen: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn client_loop(
-    stream: TcpStream,
-    cluster: &Cluster,
-    handle: &IfuncHandle,
-) -> anyhow::Result<()> {
+fn client_loop(stream: TcpStream, cluster: &Cluster, handle: &IfuncHandle) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {

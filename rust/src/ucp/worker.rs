@@ -6,11 +6,12 @@
 //! progression. `Worker::progress()` drains arrived messages, exactly like
 //! `ucp_worker_progress`.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::collections::HashMap;
 
 use crate::fabric::{MemPerm, MemoryRegion, Qp, RKey};
+use crate::log;
 use crate::{Error, Result};
 
 use super::am::{

@@ -1,7 +1,7 @@
 //! Minimal stderr logger (env_logger stand-in). Level from `RUST_LOG`
 //! (error/warn/info/debug/trace; default warn).
 
-use log::{Level, LevelFilter, Metadata, Record};
+use crate::log::{self, Level, LevelFilter, Metadata, Record};
 
 struct StderrLogger;
 

@@ -25,7 +25,8 @@ pub struct HostCtx<'a> {
 
 /// A resolved GOT entry: a host function callable from injected code.
 /// Args are `r1..r4`; the return value lands in `r0`.
-pub type HostFn = Arc<dyn Fn(&mut HostCtx, [u64; 4]) -> std::result::Result<u64, String> + Send + Sync>;
+pub type HostFn =
+    Arc<dyn Fn(&mut HostCtx, [u64; 4]) -> std::result::Result<u64, String> + Send + Sync>;
 
 /// The target process's symbol table — the union of "libraries resident in
 /// the target system" that injected code may link against (§2.1).
@@ -133,8 +134,7 @@ mod tests {
         let mut scratch = [0u8; 0];
         let mut payload = [0u8; 0];
         let mut user = ();
-        let mut ctx =
-            HostCtx { payload: &mut payload, scratch: &mut scratch, user: &mut user };
+        let mut ctx = HostCtx { payload: &mut payload, scratch: &mut scratch, user: &mut user };
         assert_eq!(got.slot(0).unwrap()(&mut ctx, [0; 4]).unwrap(), 2);
         assert_eq!(got.slot(1).unwrap()(&mut ctx, [0; 4]).unwrap(), 1);
     }
@@ -154,11 +154,7 @@ mod tests {
         t.install_fn("f", |_, _| Ok(1));
         t.install_fn("f", |_, _| Ok(9));
         let got = t.resolve(&["f".into()]).unwrap();
-        let mut ctx = HostCtx {
-            payload: &mut [],
-            scratch: &mut [],
-            user: &mut (),
-        };
+        let mut ctx = HostCtx { payload: &mut [], scratch: &mut [], user: &mut () };
         assert_eq!(got.slot(0).unwrap()(&mut ctx, [0; 4]).unwrap(), 9);
     }
 }

@@ -76,8 +76,7 @@ pub fn run(
             Op::Nop => {}
             Op::Ldi => regs[i.a as usize] = i.imm as u64,
             Op::Ldih => {
-                regs[i.a as usize] =
-                    ((i.imm as u64) << 32) | (regs[i.a as usize] & 0xFFFF_FFFF);
+                regs[i.a as usize] = ((i.imm as u64) << 32) | (regs[i.a as usize] & 0xFFFF_FFFF);
             }
             Op::Mov => regs[i.a as usize] = regs[i.b as usize],
             Op::Add => {
@@ -132,15 +131,17 @@ pub fn run(
                     Error::VmFault(format!("GOT slot {} not linked", i.imm))
                 })?;
                 let args = [regs[1], regs[2], regs[3], regs[4]];
+                // Explicit reborrows: a struct literal would *move* the
+                // `&mut` params out of the loop on the first CALL.
                 let mut ctx =
-                    HostCtx { payload, scratch: &mut scratch, user };
+                    HostCtx { payload: &mut *payload, scratch: &mut scratch, user: &mut *user };
                 regs[0] = f(&mut ctx, args).map_err(Error::VmFault)?;
             }
             Op::Ldb | Op::Ldw | Op::Stb | Op::Stw => {
                 let width = if matches!(i.op, Op::Ldw | Op::Stw) { 8 } else { 1 };
                 let addr = regs[i.b as usize].wrapping_add(i.imm as u64) as usize;
                 let mem: &mut [u8] =
-                    if i.c == SPACE_PAYLOAD { payload } else { &mut scratch };
+                    if i.c == SPACE_PAYLOAD { &mut *payload } else { &mut scratch };
                 if addr.checked_add(width).is_none_or(|end| end > mem.len()) {
                     return Err(Error::VmFault(format!(
                         "oob {} access at {addr}+{width} (space {} of {} bytes, pc {})",

@@ -57,8 +57,7 @@ fn failure_injection_does_not_stall_the_stream() {
     assert_eq!(executed, good);
     assert_eq!(failed, bad);
     // Every good message actually ran (counter proves execution).
-    let counted: u64 =
-        cluster.workers.iter().map(|w| w.ctx.symbols().counter_value()).sum();
+    let counted: u64 = cluster.workers.iter().map(|w| w.ctx.symbols().counter_value()).sum();
     assert_eq!(counted, good);
     cluster.shutdown().unwrap();
 }

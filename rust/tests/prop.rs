@@ -49,9 +49,8 @@ fn prop_frame_roundtrip() {
         assert_eq!(h.payload_len as usize, payload.len());
         assert_eq!(h.payload_offset as usize % align, 0);
         assert_eq!(msg.payload(), &payload[..]);
-        let (_, decoded) =
-            CodeImage::decode(&msg.frame()[h.code_offset as usize..(h.code_offset + h.code_len) as usize])
-                .unwrap();
+        let code_range = h.code_offset as usize..(h.code_offset + h.code_len) as usize;
+        let (_, decoded) = CodeImage::decode(&msg.frame()[code_range]).unwrap();
         assert_eq!(decoded, code, "case {case}");
     }
 }

@@ -16,8 +16,10 @@ use two_chains::ifunc::{IfuncRing, PollResult, SenderCursor, SourceArgs, TargetA
 use two_chains::ucp::{Context, ContextConfig, Worker};
 use two_chains::vm::Assembler;
 
-fn pair() -> (std::sync::Arc<Context>, std::sync::Arc<Context>, std::sync::Arc<two_chains::ucp::Endpoint>)
-{
+type Pair =
+    (std::sync::Arc<Context>, std::sync::Arc<Context>, std::sync::Arc<two_chains::ucp::Endpoint>);
+
+fn pair() -> Pair {
     let fabric = Fabric::new(2, WireConfig::off());
     let src = Context::new(fabric.node(0), ContextConfig::default()).unwrap();
     let dst = Context::new(fabric.node(1), ContextConfig::default()).unwrap();
