@@ -1,4 +1,4 @@
-//! Ablations (DESIGN.md experiment index, Abl A–D):
+//! Ablations (DESIGN.md experiment index, Abl A–E):
 //!
 //! * **A** — coherent vs non-coherent I-cache: the paper blames
 //!   `clear_cache` for the small-payload loss and lists a coherent-I-cache
@@ -9,12 +9,21 @@
 //!   position of the AM throughput *step*.
 //! * **D** — code-section size: flush + verify scale with shipped code
 //!   ("the code sent in the ifunc messages dominate the message size").
+//! * **E** — delivery transport: RDMA-PUT rings (§3) vs AM send-receive
+//!   (§5.1), driven through the *identical* cluster harness
+//!   (leader + worker + dispatcher + reply credits) so only the
+//!   `IfuncTransport` impl differs.
 //!
 //! Run: `cargo bench --bench ablations` (QUICK=1 for a smoke run).
 
+use std::time::Instant;
+
 use two_chains::bench::harness::{BenchConfig, BenchPair};
 use two_chains::bench::{latency, report, throughput};
+use two_chains::coordinator::{Cluster, ClusterConfig, TransportKind};
+use two_chains::ifunc::builtin::CounterIfunc;
 use two_chains::ifunc::icache::IcacheConfig;
+use two_chains::ifunc::SourceArgs;
 use two_chains::ucp::AmParams;
 
 fn lat_series(cfg: &BenchConfig) -> Vec<report::SeriesPoint> {
@@ -42,6 +51,44 @@ fn tput_series(cfg: &BenchConfig) -> Vec<report::SeriesPoint> {
             report::SeriesPoint { size, ifunc, am }
         })
         .collect()
+}
+
+/// Messages/second pushing `msgs` counter frames of `size` payload bytes
+/// through a one-worker cluster on the given transport, ending with a
+/// reply-credit barrier. Everything except the `IfuncTransport` impl is
+/// shared, so the delta is the transport itself (in-place ring execution
+/// vs AM delivery's copy-on-execute + progress-loop dispatch).
+fn cluster_throughput(
+    base: &BenchConfig,
+    transport: TransportKind,
+    size: usize,
+    msgs: usize,
+) -> f64 {
+    let cluster = Cluster::launch(
+        ClusterConfig {
+            workers: 1,
+            transport,
+            wire: base.wire,
+            ..Default::default()
+        },
+        |_, ctx, _| {
+            ctx.library_dir().install(Box::new(CounterIfunc::default()));
+        },
+    )
+    .expect("cluster");
+    cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+    let d = cluster.dispatcher();
+    let h = d.register("counter").expect("register");
+    let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; size])).expect("msg");
+    let t0 = Instant::now();
+    for _ in 0..msgs {
+        d.send_to(0, &msg).expect("send");
+    }
+    d.barrier().expect("barrier");
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(d.total_executed(), msgs as u64);
+    cluster.shutdown().expect("shutdown");
+    msgs as f64 / dt
 }
 
 fn main() {
@@ -100,4 +147,25 @@ fn main() {
             true,
         );
     }
+
+    // Abl E — delivery transport through the identical cluster harness.
+    // SeriesPoint's `ifunc` column = ring transport, `am` column = ifuncs
+    // over AM (both run the same injected counter through the dispatcher).
+    let s: Vec<report::SeriesPoint> = base
+        .sizes
+        .iter()
+        .map(|&size| {
+            let msgs = base.msgs_per_size.min((64 << 20) / size.max(1)).max(50);
+            let ring = cluster_throughput(&base, TransportKind::Ring, size, msgs);
+            let am = cluster_throughput(&base, TransportKind::Am, size, msgs);
+            eprint!(".");
+            report::SeriesPoint { size, ifunc: ring, am }
+        })
+        .collect();
+    report::print_series(
+        "Abl E — cluster throughput, ring transport vs AM transport",
+        "msg/s",
+        &s,
+        false,
+    );
 }

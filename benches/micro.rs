@@ -138,6 +138,18 @@ fn main() {
         dst.poll_ifunc_blocking(&mut ring, &mut targs).unwrap();
     });
 
+    // Verified-program cache ablation: the row above hits the code cache
+    // (link + vm::verify both skipped after the first frame); with the
+    // cache disabled every arrival pays the full relink + reverify — the
+    // delta is what caching the *verified program* saves per injection.
+    dst.ifunc_cache().set_enabled(false);
+    t.bench("ifunc send+flush+poll+execute (64B, cache off)", 20, 2000, || {
+        ep.ifunc_msg_send_cursor(&m, &mut cursor, ring.rkey()).unwrap();
+        ep.flush().unwrap();
+        dst.poll_ifunc_blocking(&mut ring, &mut targs).unwrap();
+    });
+    dst.ifunc_cache().set_enabled(true);
+
     // AM counterpart.
     use std::sync::atomic::{AtomicU64, Ordering};
     use std::sync::Arc;

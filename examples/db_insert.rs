@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use two_chains::coordinator::{
     apps::{DecodeInsertIfunc, SIGNAL_N},
-    Cluster, ClusterConfig,
+    Cluster, ClusterConfig, GetIfunc, GET_MISSING,
 };
 use two_chains::fabric::WireConfig;
 use two_chains::{Error, Result};
@@ -121,6 +121,20 @@ fn main() -> Result<()> {
     );
     if max_err >= 1e-2 {
         return Err(Error::Other(format!("decode error too large: {max_err}")));
+    }
+
+    // Spot-check through the reply path too: a GetIfunc invocation makes
+    // the *worker* push the record back over the fabric and return its
+    // length in r0 — no leader-side store access involved.
+    cluster.leader.library_dir().install(Box::new(GetIfunc));
+    let h_get = d.register("get")?;
+    for key in [0u64, n_records as u64 / 2, n_records as u64 - 1] {
+        let w = d.route_key(key);
+        let (reply, fetched) = d.invoke_get(w, &h_get.msg_create(&GetIfunc::args(key))?)?;
+        if !reply.ok || reply.r0 == GET_MISSING {
+            return Err(Error::Other(format!("get({key}) failed on worker {w}")));
+        }
+        println!("  get({key}) via invoke -> {} samples from worker {w}", fetched.len());
     }
     println!("E2E OK: encode (Pallas delta) -> inject (RDMA put) -> decode+insert (PJRT)");
     cluster.shutdown()?;

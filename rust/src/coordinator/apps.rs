@@ -75,6 +75,48 @@ impl InsertIfunc {
     }
 }
 
+/// Key-lookup ifunc for the serve path's `get`: payload = `[key u64]`;
+/// main reads the key and calls the worker-side `db_get` GOT symbol, which
+/// ships the record's f32s into the leader's per-worker result region over
+/// the fabric and returns the element count in `r0`
+/// ([`crate::coordinator::GET_MISSING`] when absent). Paired with
+/// `Dispatcher::invoke`, the response data is computed and pushed *by the
+/// injected function on the worker* — not read out of the store by the
+/// leader.
+pub struct GetIfunc;
+
+impl GetIfunc {
+    /// Pack a lookup request payload.
+    pub fn args(key: u64) -> SourceArgs {
+        SourceArgs::bytes(key.to_le_bytes().to_vec())
+    }
+}
+
+impl IfuncLibrary for GetIfunc {
+    fn name(&self) -> &str {
+        "get"
+    }
+
+    fn payload_get_max_size(&self, source_args: &SourceArgs) -> usize {
+        source_args.len()
+    }
+
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+        payload[..source_args.len()].copy_from_slice(source_args.as_bytes());
+        Ok(source_args.len())
+    }
+
+    fn code(&self) -> CodeImage {
+        let mut a = Assembler::new();
+        a.ldi(2, 0);
+        a.ldw(1, 2, 0, 0); // r1 = key (payload[0..8])
+        a.call("db_get"); // r0 = n_elems shipped to the leader (or MISSING)
+        a.halt();
+        let (vm_code, imports) = a.assemble();
+        CodeImage { imports, vm_code, hlo: vec![] }
+    }
+}
+
 impl IfuncLibrary for InsertIfunc {
     fn name(&self) -> &str {
         "insert"

@@ -5,10 +5,18 @@
 //! stored on many physical devices": records are placed on workers by key
 //! hash, and every injected function targeting a key is routed to the
 //! worker that owns it — the code moves, the data does not.
+//!
+//! Delivery is transport-generic: each worker link is an
+//! [`crate::ifunc::IfuncTransport`] chosen by `ClusterConfig::transport`
+//! (RDMA-PUT ring or AM send-receive), and every link carries a reply
+//! ring, so alongside fire-and-forget [`Dispatcher::send_to`] there is
+//! [`Dispatcher::invoke`], which blocks for the injected function's
+//! `(status, r0)` reply.
 
-use crate::ifunc::{IfuncHandle, IfuncMsg, SourceArgs};
+use crate::ifunc::{IfuncHandle, IfuncMsg, Reply, SourceArgs};
 use crate::{Error, Result};
 
+use super::worker::GET_MISSING;
 use super::Cluster;
 
 /// Deterministic key → worker placement (the locality map), as a free
@@ -46,46 +54,52 @@ impl<'c> Dispatcher<'c> {
             .workers
             .get(worker)
             .ok_or_else(|| Error::Other(format!("no worker {worker}")))?;
+        w.link.lock().unwrap().send_frame(msg)
+    }
+
+    /// Inject a message and block for the injected function's reply: the
+    /// `(seq, status, r0)` slot the worker writes after executing (or
+    /// rejecting) the frame. Holding the link across the wait serializes
+    /// invocations per worker. For invocations whose injected code writes
+    /// the worker's result region (`db_get`), use
+    /// [`Dispatcher::invoke_get`] — the region must be read under the
+    /// same lock.
+    pub fn invoke(&self, worker: usize, msg: &IfuncMsg) -> Result<Reply> {
+        let w = self
+            .cluster
+            .workers
+            .get(worker)
+            .ok_or_else(|| Error::Other(format!("no worker {worker}")))?;
         let mut link = w.link.lock().unwrap();
-        let tail = link.cursor.remaining_before_wrap();
-        if msg.len() > tail && tail + msg.len() > link.ring_bytes {
-            // Wrap where skipped tail + frame exceed the ring: the frame at
-            // offset 0 would overwrite the wrap marker before the parked
-            // poller reads it. Drain the ring, publish the marker alone,
-            // and wait for the poller's rewind credit before the frame.
-            link.wait_capacity(link.ring_bytes);
-            let at = link.ring_bytes - tail;
-            link.ep.put_nbi(
-                link.ring_rkey,
-                at,
-                &crate::ifunc::ring::wrap_marker_word().to_le_bytes(),
-            )?;
-            link.sent_bytes += tail as u64;
-            link.ep.flush()?;
-            link.wait_capacity(link.ring_bytes);
-            link.cursor.reset();
-        }
-        // Seed bug: this waited for `frame + 8` bytes of room, but a frame
-        // that does not fit before the ring end also consumes the wasted
-        // tail through the wrap marker — under load the sender could lap
-        // the poller and overwrite an unconsumed frame at offset 0. Reserve
-        // the exact placement cost (tail + frame on a wrap) instead.
-        let tail = link.cursor.remaining_before_wrap();
-        let needed = if msg.len() > tail { tail + msg.len() } else { msg.len() };
-        link.wait_capacity(needed);
-        let placement = link.cursor.place(msg.len())?;
-        if let Some(at) = placement.wrap_marker_at {
-            // The wrap consumes the ring tail through the marker.
-            link.ep.put_nbi(
-                link.ring_rkey,
-                at,
-                &crate::ifunc::ring::wrap_marker_word().to_le_bytes(),
-            )?;
-            link.sent_bytes += (link.ring_bytes - at) as u64;
-        }
-        link.ep.put_nbi(link.ring_rkey, placement.offset, msg.frame())?;
-        link.sent_bytes += msg.len() as u64;
-        Ok(())
+        link.send_frame(msg)?;
+        link.flush()?;
+        let seq = link.frames_sent();
+        link.replies().wait(seq)
+    }
+
+    /// [`Dispatcher::invoke`] for record-returning ifuncs (`GetIfunc`):
+    /// waits for the reply and copies the worker's result region *before
+    /// releasing the link lock*, so a concurrent invocation to the same
+    /// worker cannot overwrite the region between the reply and the read.
+    /// The data vec is empty unless the reply is ok and `r0` is a length
+    /// (not [`GET_MISSING`]).
+    pub fn invoke_get(&self, worker: usize, msg: &IfuncMsg) -> Result<(Reply, Vec<f32>)> {
+        let w = self
+            .cluster
+            .workers
+            .get(worker)
+            .ok_or_else(|| Error::Other(format!("no worker {worker}")))?;
+        let mut link = w.link.lock().unwrap();
+        link.send_frame(msg)?;
+        link.flush()?;
+        let seq = link.frames_sent();
+        let reply = link.replies().wait(seq)?;
+        let data = if reply.ok && reply.r0 != GET_MISSING {
+            w.result_f32s(reply.r0 as usize)
+        } else {
+            Vec::new()
+        };
+        Ok((reply, data))
     }
 
     /// Create + route + send in one call: the payload goes to the worker
@@ -105,7 +119,7 @@ impl<'c> Dispatcher<'c> {
     /// Flush delivery to every worker.
     pub fn flush(&self) -> Result<()> {
         for w in &self.cluster.workers {
-            w.link.lock().unwrap().ep.flush()?;
+            w.link.lock().unwrap().flush()?;
         }
         Ok(())
     }
@@ -114,13 +128,7 @@ impl<'c> Dispatcher<'c> {
     pub fn barrier(&self) -> Result<()> {
         self.flush()?;
         for w in &self.cluster.workers {
-            let link = w.link.lock().unwrap();
-            let sent = link.sent_bytes;
-            let mut i = 0u32;
-            while link.credit.load_u64_acquire(0)? < sent {
-                crate::fabric::wire::backoff(i);
-                i += 1;
-            }
+            w.link.lock().unwrap().wait_consumed()?;
         }
         Ok(())
     }
@@ -222,7 +230,7 @@ mod tests {
         // A frame longer than the current ring offset forces the
         // drain-then-marker path: tail + frame exceed the ring, so the
         // frame at offset 0 would overwrite the wrap marker unless the
-        // dispatcher waits for the poller's rewind credit first.
+        // sender waits for the poller's rewind credit first.
         let cluster = Cluster::launch(
             ClusterConfig { workers: 1, ring_bytes: 4096, ..Default::default() },
             |_, ctx, _| {
@@ -236,8 +244,7 @@ mod tests {
         // Small frame, then a frame > ring/2 (wraps with tail + frame >
         // ring), repeated so the stream must survive several such wraps.
         // Zeroed payloads: stale frame interiors from earlier laps must
-        // read as "empty" at future cursor positions (see ROADMAP note on
-        // consume-on-reject).
+        // read as "empty" at future cursor positions.
         let small = h.msg_create(&SourceArgs::bytes(vec![0u8; 900])).unwrap();
         let big = h.msg_create(&SourceArgs::bytes(vec![0u8; 3300])).unwrap();
         for _ in 0..20 {

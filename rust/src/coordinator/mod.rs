@@ -6,11 +6,14 @@
 //! more efficient to dynamically choose where code runs as the
 //! application progresses."
 //!
-//! A [`Cluster`] is a leader (host) plus N polling workers (the DPU/CSD
-//! processes), all on the simulated fabric. Each worker owns an ifunc
-//! ring, a [`RecordStore`], and a poll-loop thread; the leader's
-//! [`Dispatcher`] routes messages *to where the data lives* (hash
-//! placement by record key), with per-worker credit-based flow control.
+//! A [`Cluster`] is a leader (host) plus N workers (the DPU/CSD
+//! processes), all on the simulated fabric. Each worker owns a
+//! [`RecordStore`] and a receive thread; the leader's [`Dispatcher`]
+//! routes messages *to where the data lives* (hash placement by record
+//! key) over a per-worker [`crate::ifunc::IfuncTransport`] link selected
+//! by [`ClusterConfig::transport`] — RDMA-PUT rings (§3) or AM
+//! send-receive (§5.1) — each carrying a reply ring for
+//! [`Dispatcher::invoke`].
 
 pub mod apps;
 pub mod dispatcher;
@@ -18,11 +21,13 @@ pub mod store;
 pub mod telemetry;
 pub mod worker;
 
-pub use apps::{DecodeInsertIfunc, InsertIfunc};
+pub use apps::{DecodeInsertIfunc, GetIfunc, InsertIfunc};
 pub use dispatcher::{route_key, Dispatcher};
 pub use store::{install_db_symbols, RecordStore};
 pub use telemetry::{ClusterSnapshot, ContextSnapshot};
-pub use worker::{WorkerHandle, WorkerStats};
+pub use worker::{WorkerHandle, WorkerStats, GET_MISSING};
+
+pub use crate::ifunc::TransportKind;
 
 use std::sync::Arc;
 
@@ -35,8 +40,10 @@ use crate::Result;
 pub struct ClusterConfig {
     /// Number of device-side workers (the paper's DPUs/CSDs).
     pub workers: usize,
-    /// ifunc ring bytes per worker.
+    /// ifunc ring bytes per worker (ring transport only).
     pub ring_bytes: usize,
+    /// How frames travel leader → worker.
+    pub transport: TransportKind,
     pub wire: WireConfig,
     pub ctx: ContextConfig,
 }
@@ -46,6 +53,7 @@ impl Default for ClusterConfig {
         ClusterConfig {
             workers: 2,
             ring_bytes: 4 << 20,
+            transport: TransportKind::Ring,
             wire: WireConfig::off(),
             ctx: ContextConfig::default(),
         }
@@ -85,7 +93,7 @@ impl Cluster {
                 store,
                 &leader,
                 &leader_worker,
-                config.ring_bytes,
+                &config,
             )?);
         }
         Ok(Cluster { fabric, leader, leader_worker, workers })

@@ -1,20 +1,42 @@
 //! Device-side worker: a polling "DPU/CSD process".
 //!
-//! Each worker runs `ucp_poll_ifunc` in a dedicated thread against its own
-//! ring, executes whatever the host injects, and pushes a consumed-bytes
-//! credit word back to the leader so the dispatcher can flow-control
-//! without ever overwriting an unconsumed frame.
+//! Each worker executes whatever the host injects — over either transport:
+//!
+//! * **ring** ([`TransportKind::Ring`]): a dedicated thread runs
+//!   `ucp_poll_ifunc` against the worker's RWX ring and pushes a
+//!   consumed-bytes credit word back to the leader so the dispatcher can
+//!   flow-control without ever overwriting an unconsumed frame,
+//! * **am** ([`TransportKind::Am`]): frames arrive as active messages and
+//!   the thread simply progresses the UCP worker (§5.1's "ifuncs will be
+//!   progressed with other UCX operations").
+//!
+//! Both paths run the same execution engine and answer every consumed
+//! frame — executed or rejected — through the link's reply ring, which is
+//! what `Dispatcher::invoke` and `Dispatcher::barrier` wait on.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::fabric::{MemPerm, MemoryRegion, RKey};
-use crate::ifunc::{IfuncRing, SenderCursor, TargetArgs};
+use crate::fabric::{MemPerm, MemoryRegion};
+use crate::ifunc::am_transport::{execute_am_frame, IFUNC_AM_ID};
+use crate::ifunc::{
+    AmTransport, IfuncRing, IfuncTransport, ReplyRing, ReplyWriter, RingTransport, TargetArgs,
+    TransportKind,
+};
 use crate::log;
-use crate::ucp::{Context, Endpoint, Worker as UcpWorker};
+use crate::ucp::{Context, Worker as UcpWorker};
 use crate::{Error, Result};
 
 use super::store::RecordStore;
+use super::ClusterConfig;
+
+/// Bytes of the per-worker leader-side result region the `db_get` symbol
+/// writes records into (see `install_result_symbols`).
+pub const RESULT_REGION_BYTES: usize = 64 << 10;
+/// Largest record (in f32 elements) `db_get` can return.
+pub const RESULT_MAX_ELEMS: usize = RESULT_REGION_BYTES / 4;
+/// `db_get`'s r0 when the key is absent.
+pub const GET_MISSING: u64 = u64::MAX;
 
 /// Worker-side execution counters.
 #[derive(Default)]
@@ -23,52 +45,53 @@ pub struct WorkerStats {
     pub failed: AtomicU64,
 }
 
-/// Leader-side view of the link to one worker.
-pub(crate) struct WorkerLink {
-    /// Leader → worker endpoint (ifunc puts).
-    pub ep: Arc<Endpoint>,
-    /// Worker ring placement cursor.
-    pub cursor: SenderCursor,
-    pub ring_rkey: RKey,
-    pub ring_bytes: usize,
-    /// Bytes sent (frames + wrap markers).
-    pub sent_bytes: u64,
-    /// Leader-local word the worker writes its consumed-bytes count into.
-    pub credit: Arc<MemoryRegion>,
-}
-
-impl WorkerLink {
-    /// Block until the ring can absorb `needed` more bytes. `needed` must
-    /// count the *whole* cost of the upcoming send — on a wrap that is the
-    /// skipped ring tail plus the frame, not just the frame (the tail is
-    /// credited back by the worker's `rewind`). `needed` may not exceed
-    /// the ring: when tail + frame would (a frame longer than the current
-    /// ring offset), the frame at offset 0 overlaps the wrap marker, so
-    /// the dispatcher drains the ring and publishes the marker *before*
-    /// the frame (see `Dispatcher::send_to`).
-    pub fn wait_capacity(&self, needed: usize) {
-        let budget = self.ring_bytes.saturating_sub(needed) as u64;
-        let mut i = 0u32;
-        loop {
-            let consumed = self.credit.load_u64_acquire(0).unwrap();
-            if self.sent_bytes.saturating_sub(consumed) <= budget {
-                return;
-            }
-            crate::fabric::wire::backoff(i);
-            i += 1;
-        }
-    }
-}
-
-/// A spawned worker: context + store + poll thread + leader link.
+/// A spawned worker: context + store + receive thread + leader link.
 pub struct WorkerHandle {
     pub index: usize,
     pub ctx: Arc<Context>,
     pub store: Arc<RecordStore>,
     pub stats: Arc<WorkerStats>,
-    pub(crate) link: Mutex<WorkerLink>,
+    /// Leader-side delivery channel (transport-generic).
+    pub(crate) link: Mutex<Box<dyn IfuncTransport>>,
+    /// Leader-side region this worker's `db_get` writes records into.
+    result: Arc<MemoryRegion>,
     shutdown: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+/// Install the worker-side `db_get` symbol: looks `r1` up in `store` and,
+/// when present, ships the record's f32s over the fabric into the leader's
+/// result region, returning the element count (or [`GET_MISSING`]). The
+/// record the sender reads back is produced *by the injected function on
+/// the worker* — the reply path's answer to leader-side store access.
+fn install_result_symbols(
+    ctx: &Arc<Context>,
+    store: Arc<RecordStore>,
+    ep_back: Arc<crate::ucp::Endpoint>,
+    result_rkey: crate::fabric::RKey,
+) {
+    ctx.symbols().install_fn("db_get", move |_, [key, _, _, _]| {
+        match store.get(key) {
+            None => Ok(GET_MISSING),
+            Some(data) => {
+                if data.len() > RESULT_MAX_ELEMS {
+                    return Err(format!(
+                        "db_get: record of {} elems exceeds result region ({RESULT_MAX_ELEMS})",
+                        data.len()
+                    ));
+                }
+                let mut bytes = Vec::with_capacity(data.len() * 4);
+                for v in &data {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                // Same QP as the reply that will follow this frame: RC
+                // ordering guarantees the data lands before the reply's
+                // seq word, so a sender that saw the reply may read it.
+                ep_back.put_nbi(result_rkey, 0, &bytes).map_err(|e| e.to_string())?;
+                Ok(data.len() as u64)
+            }
+        }
+    });
 }
 
 impl WorkerHandle {
@@ -78,79 +101,152 @@ impl WorkerHandle {
         store: Arc<RecordStore>,
         leader: &Arc<Context>,
         leader_worker: &Arc<UcpWorker>,
-        ring_bytes: usize,
+        config: &ClusterConfig,
     ) -> Result<WorkerHandle> {
-        let ring = IfuncRing::new(&ctx, ring_bytes)?;
-        let ring_rkey = ring.rkey();
-        // Leader-side credit word; worker puts consumed-bytes into it.
-        let credit = leader.mem_map(64, MemPerm::RWX);
-        let credit_rkey = credit.rkey();
-        // Endpoints: leader → worker for frames; worker → leader for credits.
+        // Leader-side reply + result regions; worker-side back endpoint.
+        let replies = ReplyRing::new(leader);
+        let reply_rkey = replies.rkey();
+        let result = leader.mem_map(RESULT_REGION_BYTES, MemPerm::RWX);
         let ucp_worker = UcpWorker::new(&ctx);
         let ep = leader_worker.connect(&ucp_worker)?;
-        let ep_credit = ucp_worker.connect(leader_worker)?;
+        let ep_back = ucp_worker.connect(leader_worker)?;
+        install_result_symbols(&ctx, store.clone(), ep_back.clone(), result.rkey());
 
         let shutdown = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(WorkerStats::default());
-        let (ctx2, store2, stop2, stats2) =
-            (ctx.clone(), store.clone(), shutdown.clone(), stats.clone());
-        let thread = std::thread::Builder::new()
-            .name(format!("ifunc-worker-{index}"))
-            .spawn(move || -> Result<()> {
-                let mut ring = ring;
-                let mut args = TargetArgs::new(Box::new(store2));
-                let mut idle = 0u32;
-                let mut last_credit = 0u64;
-                loop {
-                    let polled = ctx2.poll_ifunc(&mut ring, &mut args);
-                    match &polled {
-                        Ok(crate::ifunc::PollResult::Executed) => {
-                            stats2.executed.fetch_add(1, Ordering::Relaxed);
-                            idle = 0;
+
+        let (transport, thread): (Box<dyn IfuncTransport>, _) = match config.transport {
+            TransportKind::Ring => {
+                let ring = IfuncRing::new(&ctx, config.ring_bytes)?;
+                let ring_rkey = ring.rkey();
+                // Leader-side credit word; worker puts consumed-bytes into it.
+                let credit = leader.mem_map(64, MemPerm::RWX);
+                let credit_rkey = credit.rkey();
+                let transport = Box::new(RingTransport::new(
+                    ep,
+                    ring_rkey,
+                    config.ring_bytes,
+                    credit,
+                    replies,
+                ));
+                let (ctx2, store2, stop2, stats2) =
+                    (ctx.clone(), store.clone(), shutdown.clone(), stats.clone());
+                let ep_back2 = ep_back.clone();
+                let thread = std::thread::Builder::new()
+                    .name(format!("ifunc-worker-{index}"))
+                    .spawn(move || -> Result<()> {
+                        let mut ring = ring;
+                        let mut args = TargetArgs::new(Box::new(store2));
+                        let mut replies = ReplyWriter::new(ep_back2.clone(), reply_rkey);
+                        let mut idle = 0u32;
+                        let mut last_credit = 0u64;
+                        loop {
+                            let frames_before = ring.consumed;
+                            let polled = ctx2.poll_ifunc(&mut ring, &mut args);
+                            match &polled {
+                                Ok(crate::ifunc::PollResult::Executed) => {
+                                    stats2.executed.fetch_add(1, Ordering::Relaxed);
+                                    idle = 0;
+                                }
+                                Ok(crate::ifunc::PollResult::NoMessage) => {}
+                                Err(e) => {
+                                    // A faulty ifunc is consumed and
+                                    // reported, but must not take the
+                                    // device down.
+                                    stats2.failed.fetch_add(1, Ordering::Relaxed);
+                                    log::error!("worker {index}: ifunc failed: {e}");
+                                    idle = 0;
+                                }
+                            }
+                            // Push the credit word whenever consumption
+                            // advanced — including marker-only polls (a
+                            // wrap rewind reports NoMessage but consumes
+                            // the ring tail, and the oversized-wrap send
+                            // path waits on exactly that credit).
+                            if ring.consumed_bytes != last_credit {
+                                ep_back2
+                                    .qp()
+                                    .put_signal(credit_rkey, 0, ring.consumed_bytes)?;
+                                last_credit = ring.consumed_bytes;
+                            }
+                            // One reply per consumed *frame* (not markers),
+                            // whether it executed or was rejected.
+                            if ring.consumed > frames_before {
+                                let ok =
+                                    matches!(polled, Ok(crate::ifunc::PollResult::Executed));
+                                let r0 = if ok { args.last_return.unwrap_or(0) } else { 0 };
+                                replies.push(ok, r0)?;
+                            }
+                            if matches!(polled, Ok(crate::ifunc::PollResult::NoMessage)) {
+                                if stop2.load(Ordering::Acquire) {
+                                    ep_back2.qp().flush()?;
+                                    return Ok(());
+                                }
+                                crate::fabric::wire::backoff(idle);
+                                idle += 1;
+                            }
                         }
-                        Ok(crate::ifunc::PollResult::NoMessage) => {}
+                    })
+                    .expect("spawn worker thread");
+                (transport, thread)
+            }
+            TransportKind::Am => {
+                let transport = Box::new(AmTransport::new(ep, replies));
+                // The AM handler owns the reply writer and target args;
+                // it runs on the progress thread below.
+                let target_args =
+                    Arc::new(Mutex::new(TargetArgs::new(Box::new(store.clone()))));
+                let reply_writer =
+                    Arc::new(Mutex::new(ReplyWriter::new(ep_back.clone(), reply_rkey)));
+                let (ctx2, stats2) = (ctx.clone(), stats.clone());
+                let rw = reply_writer.clone();
+                ucp_worker.set_am_handler(IFUNC_AM_ID, move |_, frame| {
+                    let (ok, r0) = match execute_am_frame(&ctx2, frame, &target_args) {
+                        Ok(out) => {
+                            stats2.executed.fetch_add(1, Ordering::Relaxed);
+                            (true, out.ret)
+                        }
                         Err(e) => {
-                            // A faulty ifunc is consumed and reported, but
-                            // must not take the device down.
                             stats2.failed.fetch_add(1, Ordering::Relaxed);
                             log::error!("worker {index}: ifunc failed: {e}");
-                            idle = 0;
+                            (false, 0)
                         }
+                    };
+                    if let Err(e) = rw.lock().unwrap().push(ok, r0) {
+                        log::error!("worker {index}: reply push failed: {e}");
                     }
-                    // Push the credit word whenever consumption advanced —
-                    // including marker-only polls (a wrap rewind reports
-                    // NoMessage but consumes the ring tail, and the
-                    // dispatcher's oversized-wrap path waits on exactly
-                    // that credit).
-                    if ring.consumed_bytes != last_credit {
-                        ep_credit.qp().put_signal(credit_rkey, 0, ring.consumed_bytes)?;
-                        last_credit = ring.consumed_bytes;
-                    }
-                    if matches!(polled, Ok(crate::ifunc::PollResult::NoMessage)) {
-                        if stop2.load(Ordering::Acquire) {
-                            ep_credit.flush()?;
-                            return Ok(());
+                });
+                let (stop2, ep_back2) = (shutdown.clone(), ep_back.clone());
+                let uw = ucp_worker.clone();
+                let thread = std::thread::Builder::new()
+                    .name(format!("ifunc-worker-{index}"))
+                    .spawn(move || -> Result<()> {
+                        let mut idle = 0u32;
+                        loop {
+                            if uw.progress() == 0 {
+                                if stop2.load(Ordering::Acquire) {
+                                    ep_back2.qp().flush()?;
+                                    return Ok(());
+                                }
+                                crate::fabric::wire::backoff(idle);
+                                idle += 1;
+                            } else {
+                                idle = 0;
+                            }
                         }
-                        crate::fabric::wire::backoff(idle);
-                        idle += 1;
-                    }
-                }
-            })
-            .expect("spawn worker thread");
+                    })
+                    .expect("spawn worker thread");
+                (transport, thread)
+            }
+        };
 
         Ok(WorkerHandle {
             index,
             ctx,
             store,
             stats,
-            link: Mutex::new(WorkerLink {
-                ep,
-                cursor: SenderCursor::new(ring_bytes),
-                ring_rkey,
-                ring_bytes,
-                sent_bytes: 0,
-                credit,
-            }),
+            link: Mutex::new(transport),
+            result,
             shutdown,
             thread: Some(thread),
         })
@@ -161,7 +257,17 @@ impl WorkerHandle {
         self.stats.executed.load(Ordering::Acquire)
     }
 
-    /// Signal shutdown and join the poll thread.
+    /// Read the first `n` f32s of this worker's leader-side result region
+    /// (valid after an `invoke` whose injected code called `db_get`).
+    pub fn result_f32s(&self, n: usize) -> Vec<f32> {
+        let n = n.min(RESULT_MAX_ELEMS);
+        self.result.local_slice()[..n * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    /// Signal shutdown and join the receive thread.
     pub fn stop(&mut self) -> Result<()> {
         self.shutdown.store(true, Ordering::Release);
         if let Some(t) = self.thread.take() {

@@ -1,5 +1,5 @@
 //! ifuncs over send/receive semantics — the paper's §5.1 future work,
-//! implemented.
+//! implemented as a thin adapter over the shared execution engine.
 //!
 //! "We are also working on switching the underlying implementation of
 //! *Two-Chains* to use UCX's send-receive semantics instead of RDMA Puts.
@@ -12,18 +12,19 @@
 //! message; the target's normal [`crate::ucp::Worker::progress`] invokes
 //! it — no ring, no rkey consensus, no special polling call. The trade-off
 //! the paper predicts is visible in the ablation benches: AM delivery
-//! buffers are not executable-in-place, so the frame pays an extra copy
-//! before the payload can be mutated.
+//! buffers are not executable-in-place, so the frame pays a
+//! **copy-on-execute** before [`crate::ucp::Context::execute_frame`] can
+//! patch the GOT slot and mutate the payload (the cost the PUT transport's
+//! in-place frames avoid).
 
 use std::sync::{Arc, Mutex};
 
 use crate::log;
 use crate::ucp::{Context, Endpoint, Worker};
-use crate::vm;
 use crate::{Error, Result};
 
-use super::icache;
-use super::message::{CodeImage, Header, IfuncMsg};
+use super::engine::ExecOutcome;
+use super::message::{Header, IfuncMsg};
 use super::TargetArgs;
 
 /// Reserved AM id for the ifunc-over-AM transport.
@@ -34,7 +35,7 @@ pub const IFUNC_AM_ID: u16 = 0x1FC0;
 pub fn install_am_ifunc(worker: &Arc<Worker>, target_args: Arc<Mutex<TargetArgs>>) {
     let ctx = worker.context().clone();
     worker.set_am_handler(IFUNC_AM_ID, move |_, frame| {
-        if let Err(e) = execute_frame(&ctx, frame, &target_args) {
+        if let Err(e) = execute_am_frame(&ctx, frame, &target_args) {
             log::error!("am-transport ifunc failed: {e}");
         }
     });
@@ -46,45 +47,25 @@ pub fn ifunc_msg_send_am(ep: &Endpoint, msg: &IfuncMsg) -> Result<()> {
     ep.am_send(IFUNC_AM_ID, msg.frame())
 }
 
-/// Execute a frame delivered in an AM buffer: same link/flush/invoke
-/// pipeline as `ucp_poll_ifunc`, minus ring bookkeeping, plus the
-/// payload-copy the non-in-place buffer forces.
-fn execute_frame(ctx: &Context, frame: &[u8], target_args: &Arc<Mutex<TargetArgs>>) -> Result<()> {
+/// Execute a frame delivered in an AM buffer: decode + integrity-check the
+/// header, copy the frame out of the UCX-owned immutable buffer, then run
+/// the shared engine pipeline on the copy.
+pub fn execute_am_frame(
+    ctx: &Context,
+    frame: &[u8],
+    target_args: &Arc<Mutex<TargetArgs>>,
+) -> Result<ExecOutcome> {
     let header = Header::decode(frame)?
         .ok_or_else(|| Error::InvalidMessage("empty ifunc frame over AM".into()))?;
     if header.frame_len as usize != frame.len() {
         return Err(Error::InvalidMessage("frame length mismatch over AM".into()));
     }
-    let code_start = header.code_offset as usize;
-    let code_end = code_start + header.code_len as usize;
-    let (_slot, image) = CodeImage::decode_ref(&frame[code_start..code_end])?;
-    let linked = match ctx.cache.lookup(&header.name) {
-        Some(e) if e.imports.iter().map(String::as_str).eq(image.imports.iter().copied()) => e,
-        _ => {
-            let got = ctx.symbols().table().resolve_iter(image.imports.iter().copied())?;
-            let has_hlo = !image.hlo.is_empty();
-            if has_hlo {
-                crate::runtime::with_runtime(|rt| rt.ensure_compiled(&header.name, image.hlo))?;
-            }
-            let owned: Vec<String> = image.imports.iter().map(|s| s.to_string()).collect();
-            ctx.cache.insert(&header.name, owned, got, has_hlo)
-        }
-    };
-    let prog = vm::verify(image.vm_code, image.imports.len())?;
-    icache::clear_cache(&ctx.config().icache, header.code_len as usize, ctx.icache_stats());
-
-    // The AM buffer is UCX-owned and immutable: copy the payload out so
-    // the injected code can mutate it (the cost the PUT transport avoids).
-    let pay_start = header.payload_offset as usize;
-    let mut payload = frame[pay_start..pay_start + header.payload_len as usize].to_vec();
-
+    // Copy-on-execute: the engine patches the GOT slot and the injected
+    // code mutates the payload in place, neither of which the AM delivery
+    // buffer permits.
+    let mut owned = frame.to_vec();
     let mut ta = target_args.lock().unwrap();
-    ta.hlo_name = if linked.has_hlo { Some(header.name.clone()) } else { None };
-    let outcome = vm::run(&prog, &linked.got, &mut payload, &mut *ta, &ctx.config().vm);
-    ta.hlo_name = None;
-    ta.last_return = outcome.as_ref().map(|o| o.ret).ok();
-    outcome?;
-    Ok(())
+    ctx.execute_frame(&header, &mut owned, &mut ta)
 }
 
 #[cfg(test)]
@@ -113,6 +94,10 @@ mod tests {
         }
         ep.flush().unwrap();
         wb.progress_until(|| dst.symbols().counter_value() == 5);
+        // Repeat deliveries of one type hit the shared code cache.
+        use std::sync::atomic::Ordering;
+        assert_eq!(dst.ifunc_cache().misses.load(Ordering::Relaxed), 1);
+        assert_eq!(dst.ifunc_cache().hits.load(Ordering::Relaxed), 4);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Auto-registration cache — the hash table of §3.4.
+//! Auto-registration code cache — the hash table of §3.4.
 //!
 //! "the `ucp_poll_ifunc` routine uses the ifunc's name provided by the
 //! message header to attempt the auto-registration of any first-seen ifunc
@@ -8,46 +8,66 @@
 //! same type."
 //!
 //! A cache entry holds the reconstructed GOT (name-resolved bindings in
-//! slot order), the import list it was resolved for, and whether the
-//! ifunc's HLO artifact has been handed to the PJRT runtime. The entry id
-//! is what gets *patched into the message's GOT slot* before invocation.
+//! slot order), the import list it was resolved for, the **verified
+//! program** decoded from the code section (so repeat injections skip the
+//! bytecode verifier entirely), a fingerprint of the code bytes the
+//! program was verified from, and whether the ifunc's HLO artifact has
+//! been handed to the PJRT runtime. The entry id is what gets *patched
+//! into the message's GOT slot* before invocation.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use crate::vm::GotTable;
+use crate::vm::{GotTable, Instr};
+
+use super::message::CodeImageRef;
 
 /// A linked (auto-registered) ifunc type.
 pub struct LinkedIfunc {
     /// Entry id — the value patched into the frame's GOT slot.
     pub id: u32,
     pub name: String,
-    /// Import names the GOT was resolved against, in slot order. If a
-    /// later message under the same name ships a different import list
-    /// ("the code can be modified anytime under the same ifunc name"), the
-    /// poll path relinks and replaces this entry.
+    /// Import names the GOT was resolved against, in slot order.
     pub imports: Vec<String>,
     pub got: GotTable,
+    /// The verified program decoded from the code section this entry was
+    /// linked against. Frames whose image matches execute it directly —
+    /// the verify stage runs once per (name, code) instead of per arrival.
+    pub prog: Vec<Instr>,
+    /// Fingerprint of the code bytes `prog` was verified from. "The code
+    /// can be modified anytime under the same ifunc name" (§3.4): a frame
+    /// shipping different code or imports relinks and replaces this entry.
+    pub code_fp: u64,
     /// Whether this type shipped an HLO artifact (compiled per-thread by
-    /// the PJRT runtime on first execution).
+    /// the PJRT runtime; the engine re-ensures it on every arrival).
     pub has_hlo: bool,
 }
 
+impl LinkedIfunc {
+    /// Does this entry cover `image` — same import table, same code bytes?
+    pub fn matches(&self, image: &CodeImageRef<'_>) -> bool {
+        self.code_fp == image.fingerprint()
+            && self.imports.iter().map(String::as_str).eq(image.imports.iter().copied())
+    }
+}
+
+/// The §3.4 hash table, keyed by ifunc name. (Historically `IfuncCache`;
+/// renamed when it started caching the verified program, not just links.)
 #[derive(Default)]
-pub struct IfuncCache {
+pub struct CodeCache {
     map: RwLock<HashMap<String, Arc<LinkedIfunc>>>,
     next_id: AtomicU64,
     pub hits: AtomicU64,
     pub misses: AtomicU64,
-    /// If false, every message is relinked from scratch (ablation Abl B —
-    /// quantifies what the paper's hash table saves).
+    /// If false, every message is relinked (and reverified) from scratch
+    /// (ablation Abl B — quantifies what the paper's hash table saves).
     pub enabled: std::sync::atomic::AtomicBool,
 }
 
-impl IfuncCache {
+impl CodeCache {
     pub fn new() -> Self {
-        let c = IfuncCache::default();
+        let c = CodeCache::default();
         c.enabled.store(true, Ordering::Relaxed);
         c
     }
@@ -56,18 +76,25 @@ impl IfuncCache {
         self.enabled.store(on, Ordering::Relaxed);
     }
 
-    pub fn lookup(&self, name: &str) -> Option<Arc<LinkedIfunc>> {
-        if !self.enabled.load(Ordering::Relaxed) {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-            return None;
+    /// The execution-path hit test: an entry counts as a hit only if it
+    /// was linked for the *same* import table and code bytes as `image`.
+    /// A name collision with different code counts as a miss (the caller
+    /// relinks + reverifies and [`CodeCache::insert`]s the replacement).
+    pub fn lookup_matching(
+        &self,
+        name: &str,
+        image: &CodeImageRef<'_>,
+    ) -> Option<Arc<LinkedIfunc>> {
+        if self.enabled.load(Ordering::Relaxed) {
+            if let Some(entry) = self.map.read().unwrap().get(name) {
+                if entry.matches(image) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(entry.clone());
+                }
+            }
         }
-        let hit = self.map.read().unwrap().get(name).cloned();
-        if hit.is_some() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-        }
-        hit
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
     }
 
     /// Insert (or replace) the entry for `name`; returns it with a fresh id.
@@ -76,6 +103,8 @@ impl IfuncCache {
         name: &str,
         imports: Vec<String>,
         got: GotTable,
+        prog: Vec<Instr>,
+        code_fp: u64,
         has_hlo: bool,
     ) -> Arc<LinkedIfunc> {
         let entry = Arc::new(LinkedIfunc {
@@ -83,6 +112,8 @@ impl IfuncCache {
             name: name.to_string(),
             imports,
             got,
+            prog,
+            code_fp,
             has_hlo,
         });
         if self.enabled.load(Ordering::Relaxed) {
@@ -108,38 +139,106 @@ impl IfuncCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ifunc::message::CodeImage;
+
+    /// Encoded code-section bytes; decode_ref them to drive the cache.
+    fn sample_image() -> Vec<u8> {
+        CodeImage { imports: vec![], vm_code: vec![0x5A; 8], hlo: vec![] }.encode()
+    }
+
+    fn insert_for(c: &CodeCache, name: &str, image_bytes: &[u8]) -> Arc<LinkedIfunc> {
+        let (_, r) = CodeImage::decode_ref(image_bytes).unwrap();
+        c.insert(name, vec![], GotTable::empty(), Vec::new(), r.fingerprint(), false)
+    }
 
     #[test]
     fn miss_then_hit() {
-        let c = IfuncCache::new();
-        assert!(c.lookup("x").is_none());
-        c.insert("x", vec![], GotTable::empty(), false);
-        assert!(c.lookup("x").is_some());
+        let bytes = sample_image();
+        let (_, r) = CodeImage::decode_ref(&bytes).unwrap();
+        let c = CodeCache::new();
+        assert!(c.lookup_matching("x", &r).is_none());
+        insert_for(&c, "x", &bytes);
+        assert!(c.lookup_matching("x", &r).is_some());
         assert_eq!(c.hits.load(Ordering::Relaxed), 1);
         assert_eq!(c.misses.load(Ordering::Relaxed), 1);
     }
 
     #[test]
     fn disabled_cache_never_hits() {
-        let c = IfuncCache::new();
+        let bytes = sample_image();
+        let (_, r) = CodeImage::decode_ref(&bytes).unwrap();
+        let c = CodeCache::new();
         c.set_enabled(false);
-        c.insert("x", vec![], GotTable::empty(), false);
-        assert!(c.lookup("x").is_none());
+        insert_for(&c, "x", &bytes);
+        assert!(c.lookup_matching("x", &r).is_none());
     }
 
     #[test]
     fn ids_are_unique() {
-        let c = IfuncCache::new();
-        let a = c.insert("a", vec![], GotTable::empty(), false);
-        let b = c.insert("b", vec![], GotTable::empty(), false);
+        let bytes = sample_image();
+        let c = CodeCache::new();
+        let a = insert_for(&c, "a", &bytes);
+        let b = insert_for(&c, "b", &bytes);
         assert_ne!(a.id, b.id);
     }
 
     #[test]
     fn invalidate_removes() {
-        let c = IfuncCache::new();
-        c.insert("x", vec![], GotTable::empty(), false);
+        let bytes = sample_image();
+        let (_, r) = CodeImage::decode_ref(&bytes).unwrap();
+        let c = CodeCache::new();
+        insert_for(&c, "x", &bytes);
         c.invalidate("x");
-        assert!(c.lookup("x").is_none());
+        assert!(c.lookup_matching("x", &r).is_none());
+    }
+
+    #[test]
+    fn lookup_matching_requires_same_imports_and_code() {
+        let image = CodeImage {
+            imports: vec!["counter_add".into()],
+            vm_code: vec![1, 2, 3, 4, 5, 6, 7, 8],
+            hlo: vec![],
+        };
+        let bytes = image.encode();
+        let (_, r) = CodeImage::decode_ref(&bytes).unwrap();
+
+        let c = CodeCache::new();
+        assert!(c.lookup_matching("f", &r).is_none(), "empty cache misses");
+        c.insert(
+            "f",
+            image.imports.clone(),
+            GotTable::empty(),
+            Vec::new(),
+            r.fingerprint(),
+            false,
+        );
+        assert!(c.lookup_matching("f", &r).is_some(), "same image hits");
+
+        // Same name, different code bytes: the "code modified under the
+        // same name" case must miss (forces relink + reverify).
+        let changed = CodeImage { vm_code: vec![9; 8], ..image.clone() };
+        let cb = changed.encode();
+        let (_, cr) = CodeImage::decode_ref(&cb).unwrap();
+        assert!(c.lookup_matching("f", &cr).is_none());
+
+        // Same code, different import table: also a miss.
+        let reimported = CodeImage { imports: vec!["log".into()], ..image };
+        let ib = reimported.encode();
+        let (_, ir) = CodeImage::decode_ref(&ib).unwrap();
+        assert!(c.lookup_matching("f", &ir).is_none());
+    }
+
+    #[test]
+    fn lookup_matching_counts_stale_entry_as_miss() {
+        let image =
+            CodeImage { imports: vec![], vm_code: vec![0xAA; 8], hlo: vec![] };
+        let bytes = image.encode();
+        let (_, r) = CodeImage::decode_ref(&bytes).unwrap();
+        let c = CodeCache::new();
+        // fingerprint 0 ≠ r.fingerprint(): a stale entry under the name.
+        c.insert("f", vec![], GotTable::empty(), Vec::new(), 0, false);
+        assert!(c.lookup_matching("f", &r).is_none());
+        assert_eq!(c.hits.load(Ordering::Relaxed), 0);
+        assert_eq!(c.misses.load(Ordering::Relaxed), 1);
     }
 }

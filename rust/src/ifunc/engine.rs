@@ -1,0 +1,202 @@
+//! The shared ifunc execution engine.
+//!
+//! One pipeline, two transports: both `ucp_poll_ifunc` (RDMA-PUT rings,
+//! §3) and the AM receive path (§5.1 send-receive delivery) are thin
+//! adapters over [`Context::execute_frame`], which owns the full
+//! target-side sequence of Fig. 2:
+//!
+//! 1. **decode** the code section (borrowed — no copies),
+//! 2. **code-cache lookup** ([`super::cache::CodeCache::lookup_matching`]:
+//!    name + import table + code fingerprint),
+//! 3. on a miss, **GOT link** (resolve imports against the local symbol
+//!    table) and **verify** the bytecode; the verified program is cached
+//!    alongside the GOT so repeat injections skip the verifier entirely
+//!    — this is the crate's only verifier call site,
+//! 4. **HLO ensure**: hand the shipped artifact to this thread's PJRT
+//!    runtime (memoized per thread — a cache entry created on another
+//!    thread still compiles here on first use),
+//! 5. patch the frame's GOT slot (the "alternative GOT pointer" of §3.4),
+//! 6. `clear_cache` over the code section (§4.3's non-coherent I-cache),
+//! 7. **invoke** `main(payload, payload_size, target_args)`.
+//!
+//! The frame is either *in-place-mutable* (a ring slot: the TCVM mutates
+//! the payload where it landed) or *copy-on-execute* (an AM delivery
+//! buffer copied out by the adapter before this call). Either way the
+//! engine sees one mutable frame and returns a structured [`ExecOutcome`]
+//! — and because the engine owns the error path, callers can consume a
+//! rejected frame (decode/link/verify failure) exactly like an executed
+//! one instead of spinning on it.
+
+use crate::ucp::Context;
+use crate::vm;
+use crate::{Error, Result};
+
+use super::icache;
+use super::message::{CodeImage, Header};
+use super::TargetArgs;
+
+/// Structured result of executing one ifunc frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecOutcome {
+    /// `r0` of the injected main at `HALT` — the function's return value
+    /// (what the reply path carries back to the sender).
+    pub ret: u64,
+    /// Instructions retired by the TCVM.
+    pub steps: u64,
+    /// Whether the verified-program cache satisfied this frame (link and
+    /// verify both skipped).
+    pub cache_hit: bool,
+}
+
+impl Context {
+    /// Run the decode → cache → link → verify → HLO-ensure → invoke
+    /// pipeline over one fully-arrived frame. `frame` spans header through
+    /// trailer and must match `header` (which the caller has already
+    /// integrity-checked via [`Header::decode`]).
+    pub fn execute_frame(
+        &self,
+        header: &Header,
+        frame: &mut [u8],
+        target_args: &mut TargetArgs,
+    ) -> Result<ExecOutcome> {
+        if header.frame_len as usize != frame.len() {
+            return Err(Error::InvalidMessage(format!(
+                "frame slice of {} bytes does not match header frame_len {}",
+                frame.len(),
+                header.frame_len
+            )));
+        }
+        let code_start = header.code_offset as usize;
+        let code_end = code_start + header.code_len as usize;
+
+        // Stages 1-4: decode, cache lookup, (re)link + verify on miss,
+        // per-thread HLO ensure.
+        let (linked, cache_hit) = {
+            let (_slot, image) = CodeImage::decode_ref(&frame[code_start..code_end])?;
+            let (entry, cache_hit) = match self.cache.lookup_matching(&header.name, &image) {
+                Some(entry) => (entry, true),
+                None => {
+                    // First-seen type (or changed code/imports under the
+                    // name): reconstruct the GOT from the local symbol
+                    // table and verify the shipped bytecode once.
+                    let got =
+                        self.symbols().table().resolve_iter(image.imports.iter().copied())?;
+                    let prog = vm::verify(image.vm_code, image.imports.len())?;
+                    let owned: Vec<String> =
+                        image.imports.iter().map(|s| s.to_string()).collect();
+                    let entry = self.cache.insert(
+                        &header.name,
+                        owned,
+                        got,
+                        prog,
+                        image.fingerprint(),
+                        !image.hlo.is_empty(),
+                    );
+                    (entry, false)
+                }
+            };
+            if entry.has_hlo {
+                // The PJRT runtime is thread-local: ensure *this* thread
+                // has the artifact compiled (no-op after the first time).
+                crate::runtime::with_runtime(|rt| {
+                    rt.ensure_compiled(&header.name, image.hlo)
+                })?;
+            }
+            (entry, cache_hit)
+        };
+
+        // Stage 5: patch the frame's GOT slot (the hidden-global
+        // indirection of §3.4) with the cache entry id.
+        let got_off = header.got_offset as usize;
+        frame[got_off..got_off + 4].copy_from_slice(&linked.id.to_le_bytes());
+
+        // Stage 6: I-cache flush over the code section.
+        icache::clear_cache(
+            &self.config().icache,
+            header.code_len as usize,
+            self.icache_stats(),
+        );
+
+        // Stage 7: invoke main(payload, payload_size, target_args).
+        let pay_start = header.payload_offset as usize;
+        let pay_end = pay_start + header.payload_len as usize;
+        target_args.hlo_name = linked.has_hlo.then(|| header.name.clone());
+        let outcome = vm::run(
+            &linked.prog,
+            &linked.got,
+            &mut frame[pay_start..pay_end],
+            target_args,
+            &self.config().vm,
+        );
+        target_args.hlo_name = None;
+        target_args.last_return = outcome.as_ref().map(|o| o.ret).ok();
+        let o = outcome?;
+        Ok(ExecOutcome { ret: o.ret, steps: o.steps, cache_hit })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Fabric, WireConfig};
+    use crate::ifunc::builtin::CounterIfunc;
+    use crate::ifunc::library::IfuncLibrary;
+    use crate::ifunc::message::IfuncMsg;
+    use crate::ucp::ContextConfig;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    fn ctx() -> Arc<Context> {
+        let f = Fabric::new(1, WireConfig::off());
+        Context::new(f.node(0), ContextConfig::default()).unwrap()
+    }
+
+    fn frame_for(code: &CodeImage, payload: &[u8]) -> (Header, Vec<u8>) {
+        let msg = IfuncMsg::assemble("t", code, payload, Default::default()).unwrap();
+        let h = Header::decode(msg.frame()).unwrap().unwrap();
+        (h, msg.frame().to_vec())
+    }
+
+    #[test]
+    fn verified_program_cache_hits_after_first_injection() {
+        let c = ctx();
+        let code = CounterIfunc::default().code();
+        let (h, mut frame) = frame_for(&code, &[0u8; 32]);
+        let mut args = TargetArgs::none();
+
+        let first = c.execute_frame(&h, &mut frame.clone(), &mut args).unwrap();
+        assert!(!first.cache_hit, "first injection links + verifies");
+        let second = c.execute_frame(&h, &mut frame, &mut args).unwrap();
+        assert!(second.cache_hit, "repeat injection skips verify");
+        assert_eq!(c.ifunc_cache().hits.load(Ordering::Relaxed), 1);
+        assert_eq!(c.ifunc_cache().misses.load(Ordering::Relaxed), 1);
+        assert_eq!(c.symbols().counter_value(), 2);
+    }
+
+    #[test]
+    fn changed_code_under_same_name_is_reverified() {
+        let c = ctx();
+        let (h1, mut f1) = frame_for(&CounterIfunc::default().code(), &[0u8; 8]);
+        let mut args = TargetArgs::none();
+        assert!(!c.execute_frame(&h1, &mut f1, &mut args).unwrap().cache_hit);
+
+        // Same name, different code section (padded body): must miss the
+        // program cache and run the *new* code, not the cached one.
+        let (h2, mut f2) = frame_for(&CounterIfunc::with_code_padding(4).code(), &[0u8; 8]);
+        let out = c.execute_frame(&h2, &mut f2, &mut args).unwrap();
+        assert!(!out.cache_hit, "changed code relinks");
+        assert_eq!(c.symbols().counter_value(), 2);
+    }
+
+    #[test]
+    fn exec_outcome_carries_r0() {
+        let c = ctx();
+        let code = CounterIfunc::default().code();
+        let (h, mut frame) = frame_for(&code, &[0u8; 8]);
+        let mut args = TargetArgs::none();
+        let out = c.execute_frame(&h, &mut frame, &mut args).unwrap();
+        // counter_add(1) returns the post-increment counter value in r0.
+        assert_eq!(out.ret, 1);
+        assert_eq!(args.last_return, Some(1));
+    }
+}

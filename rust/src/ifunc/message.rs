@@ -253,6 +253,24 @@ pub struct CodeImageRef<'a> {
 }
 
 impl CodeImageRef<'_> {
+    /// FNV-1a fingerprint of the executable content (vm code + HLO blob,
+    /// length-delimited). The code cache stores this next to the verified
+    /// program so a frame shipping *different* code under a cached name is
+    /// detected and relinked rather than silently served the old program.
+    pub fn fingerprint(&self) -> u64 {
+        fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+            }
+            h
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        h = eat(h, &(self.vm_code.len() as u64).to_le_bytes());
+        h = eat(h, self.vm_code);
+        h = eat(h, &(self.hlo.len() as u64).to_le_bytes());
+        eat(h, self.hlo)
+    }
+
     pub fn to_owned_image(&self) -> CodeImage {
         CodeImage {
             imports: self.imports.iter().map(|s| s.to_string()).collect(),
@@ -532,6 +550,25 @@ mod tests {
     fn assemble_with_overrun_rejected() {
         let r = IfuncMsg::assemble_with("s", &sample_code(), 4, Default::default(), |_| Ok(9));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_code_content() {
+        let a = sample_code();
+        let ab = a.encode();
+        let (_, ar) = CodeImage::decode_ref(&ab).unwrap();
+        // Stable for identical content.
+        let (_, ar2) = CodeImage::decode_ref(&ab).unwrap();
+        assert_eq!(ar.fingerprint(), ar2.fingerprint());
+        // Sensitive to vm code and to the hlo blob.
+        let b = CodeImage { vm_code: vec![1u8; 64], ..sample_code() };
+        let bb = b.encode();
+        let (_, br) = CodeImage::decode_ref(&bb).unwrap();
+        assert_ne!(ar.fingerprint(), br.fingerprint());
+        let c = CodeImage { hlo: b"HloModule other".to_vec(), ..sample_code() };
+        let cb = c.encode();
+        let (_, cr) = CodeImage::decode_ref(&cb).unwrap();
+        assert_ne!(ar.fingerprint(), cr.fingerprint());
     }
 
     #[test]

@@ -13,23 +13,44 @@
 //!
 //! and Listing 1.2 as the [`IfuncLibrary`] trait
 //! (`payload_get_max_size` / `payload_init` / `main`-as-code-image).
+//!
+//! Beyond Listing 1.1, the execution path is split the way §5.1 points:
+//!
+//! * [`engine`] — the *transport-independent* target half of
+//!   `ucp_poll_ifunc` (decode → cache → link → verify → HLO ensure →
+//!   invoke), shared by every delivery path and returning a structured
+//!   [`ExecOutcome`],
+//! * [`transport`] — the sender half behind [`IfuncTransport`]:
+//!   [`RingTransport`] is the paper's §3.3 RDMA-PUT ring,
+//!   [`AmTransport`] is the §5.1 send-receive successor,
+//! * [`reply`] — a per-worker reply ring carrying `(seq, status, r0)`
+//!   back to the sender, upgrading fire-and-forget injection to
+//!   invocation (`Dispatcher::invoke`),
+//! * [`cache`] — §3.4's hash table, extended to cache the *verified
+//!   program* so repeat injections skip the bytecode verifier entirely.
 
 pub mod am_transport;
 pub mod builtin;
 pub mod cache;
+pub mod engine;
 pub mod icache;
 pub mod library;
 pub mod message;
 pub mod poll;
 pub mod registry;
+pub mod reply;
 pub mod ring;
 pub mod send;
+pub mod transport;
 
+pub use engine::ExecOutcome;
 pub use library::{HloIfuncLibrary, IfuncLibrary, LibraryDir, SourceArgs};
 pub use message::{CodeImage, IfuncMsg, IfuncMsgParams};
 pub use poll::PollResult;
 pub use registry::IfuncHandle;
+pub use reply::{Reply, ReplyRing, ReplyWriter};
 pub use ring::{IfuncRing, SenderCursor};
+pub use transport::{AmTransport, IfuncTransport, RingTransport, TransportKind};
 
 use std::any::Any;
 use std::sync::atomic::{AtomicU64, Ordering};

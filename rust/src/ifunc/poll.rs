@@ -1,4 +1,5 @@
-//! `ucp_poll_ifunc` — the target-side receive/link/invoke loop (Fig. 2).
+//! `ucp_poll_ifunc` — the target-side receive loop for ring delivery
+//! (Fig. 2), as a thin adapter over the shared execution engine.
 //!
 //! Per delivered frame, in order:
 //!
@@ -7,25 +8,28 @@
 //!    header is verified using the header signal, and messages that are
 //!    ill-formed or too long will be rejected", §3.4),
 //! 3. `wait_mem` on the trailer signal (the `WFE` busy-wait of §3.2),
-//! 4. **auto-register** the ifunc type on first sight: resolve the shipped
-//!    import table against the local symbol table into a GOT, verify the
-//!    bytecode, and — if the frame carries an HLO artifact — compile it on
-//!    this thread's PJRT runtime; cache everything by name (§3.4),
-//! 5. patch the frame's GOT slot with the cache entry id (the "alternative
-//!    GOT pointer" patch of §3.4),
-//! 6. `clear_cache` over the code section (§4.3's non-coherent I-cache),
-//! 7. invoke `main(payload, payload_size, target_args)` — the TCVM runs
-//!    the code *in place in the ring*,
-//! 8. zero header + trailer words, advance the cursor.
+//! 4. hand the frame — **in place in the ring** — to
+//!    [`crate::ucp::Context::execute_frame`] (decode → cache → link →
+//!    verify → HLO ensure → invoke; see `ifunc::engine`),
+//! 5. consume: zero header + trailer words, advance the cursor — whether
+//!    the frame executed *or was rejected*. Any frame that passes header
+//!    validation is consumed even when it fails before invoke
+//!    (code-decode/verify/link error), so a hostile-but-well-framed
+//!    message can never wedge the poll loop.
+//!
+//! Frames that fail *header* validation (check-word mismatch, or a
+//! trailer signal that never arrives) cannot be consumed: the frame
+//! length itself is untrusted, so skipping by it could corrupt the
+//! stream. Those remain errors at an unchanged cursor — the paper's
+//! model (§3.5) leaves senders that can write garbage to an
+//! rkey-authorized ring outside the threat model.
 
 use std::time::{Duration, Instant};
 
 use crate::ucp::Context;
-use crate::vm;
 use crate::{Error, Result};
 
-use super::icache;
-use super::message::{CodeImage, Header, HEADER_BYTES, MAGIC, WRAP_MAGIC};
+use super::message::{Header, HEADER_BYTES, MAGIC, WRAP_MAGIC};
 use super::ring::IfuncRing;
 use super::TargetArgs;
 
@@ -117,65 +121,18 @@ impl Context {
             trailer_spins += 1;
         }
 
-        // Decode the code section (borrowed — no copies of the vm code or
-        // HLO blob) and link (auto-registration on miss).
-        let code_start = cursor + header.code_offset as usize;
-        let code_end = code_start + header.code_len as usize;
-        let (_got_slot, image) =
-            CodeImage::decode_ref(&ring.mr().local_slice()[code_start..code_end])?;
-        let cached = self.cache.lookup(&header.name);
-        let linked = match cached {
-            Some(entry)
-                if entry.imports.iter().map(String::as_str).eq(image.imports.iter().copied()) =>
-            {
-                entry
-            }
-            _ => {
-                // First-seen type (or changed import table): reconstruct
-                // the GOT from the local symbol table, and compile the
-                // shipped HLO artifact if any — no filesystem involved.
-                let got = self.symbols().table().resolve_iter(image.imports.iter().copied())?;
-                let has_hlo = !image.hlo.is_empty();
-                if has_hlo {
-                    crate::runtime::with_runtime(|rt| {
-                        rt.ensure_compiled(&header.name, image.hlo)
-                    })?;
-                }
-                let owned: Vec<String> = image.imports.iter().map(|s| s.to_string()).collect();
-                self.cache.insert(&header.name, owned, got, has_hlo)
-            }
-        };
-
-        // Patch the frame's GOT slot (the hidden-global indirection of
-        // §3.4) with the cache entry id.
-        let got_off = cursor + header.got_offset as usize;
-        ring.mr().local_slice_mut()[got_off..got_off + 4]
-            .copy_from_slice(&linked.id.to_le_bytes());
-
-        // Verify the shipped bytecode (per arrival: the code in *this*
-        // message is what runs), then clear the I-cache over it.
-        let prog = vm::verify(image.vm_code, image.imports.len())?;
-        icache::clear_cache(
-            &self.config().icache,
-            header.code_len as usize,
-            self.icache_stats(),
-        );
-
-        // Invoke main(payload, payload_size, target_args), in place.
-        let pay_start = cursor + header.payload_offset as usize;
-        let pay_end = pay_start + header.payload_len as usize;
-        target_args.hlo_name = if linked.has_hlo { Some(header.name.clone()) } else { None };
+        // The frame has fully arrived: execute it in place in the ring.
         let outcome = {
-            // SAFETY-equivalent contract: the payload slice is inside the
-            // consumed frame; the sender will not rewrite it until the
+            // SAFETY-equivalent contract: the frame slice is inside the
+            // consumed region; the sender will not rewrite it until the
             // consumption protocol says so.
-            let payload: &mut [u8] = &mut ring.mr().local_slice_mut()[pay_start..pay_end];
-            vm::run(&prog, &linked.got, payload, target_args, &self.config().vm)
+            let frame = &mut ring.mr().local_slice_mut()[cursor..cursor + frame_len];
+            self.execute_frame(&header, frame, target_args)
         };
-        target_args.hlo_name = None;
-        target_args.last_return = outcome.as_ref().map(|o| o.ret).ok();
 
-        // Consume: zero header + trailer words, advance.
+        // Consume-on-reject: the frame is consumed whether it executed or
+        // was rejected (decode/link/verify/runtime failure) — errors are
+        // reported to the caller but never leave the frame in the ring.
         ring.mr().store_u64_release(cursor, 0)?;
         ring.mr().store_u64_release(trailer_off, 0)?;
         ring.advance(frame_len);

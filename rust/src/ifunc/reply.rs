@@ -1,0 +1,181 @@
+//! The injection reply path: a small per-worker reply ring carrying
+//! `(seq, status, r0)` back to the sender.
+//!
+//! The paper's ifuncs are fire-and-forget; anything the injected function
+//! computes stays on the target. This module adds the missing half of an
+//! *invocation*: after the execution engine finishes frame `seq` (the
+//! `seq`-th frame delivered on the link, counting executed **and**
+//! rejected frames), the worker writes one fixed-size slot into a
+//! leader-mapped reply region with a one-sided put — the same mechanism
+//! frames travel by, just pointed back at the sender. The slot layout is
+//!
+//! ```text
+//!  | r0     | 8 B   injected main's return value (0 when rejected)
+//!  | status | 8 B   1 = executed, 2 = rejected
+//!  | seq    | 8 B   frame sequence number, written last
+//! ```
+//!
+//! `seq` is the arrival barrier: the fabric delivers the final word of a
+//! put last (the trailer-signal property of §3.4), so once the reader
+//! observes `seq` in a slot, `r0` and `status` are valid. Slots are reused
+//! modulo [`REPLY_SLOTS`]; because the full 64-bit seq is stored, a reader
+//! that waited too long detects the overwrite instead of misreading.
+//!
+//! Both transports share this channel — it doubles as the completion
+//! credit `Dispatcher::barrier` waits on (the reply for the last frame
+//! sent implies, by in-order delivery, that every frame was consumed).
+
+use std::sync::Arc;
+
+use crate::fabric::{MemPerm, MemoryRegion, RKey};
+use crate::ucp::{Context, Endpoint};
+use crate::{Error, Result};
+
+/// Slots in a reply ring. Replies are read promptly (an `invoke` waits for
+/// its own seq; `barrier` waits for the last), so a small ring suffices.
+pub const REPLY_SLOTS: usize = 256;
+/// Bytes per slot: `[r0 u64][status u64][seq u64]`.
+pub const REPLY_SLOT_BYTES: usize = 24;
+/// Total reply-region bytes.
+pub const REPLY_REGION_BYTES: usize = REPLY_SLOTS * REPLY_SLOT_BYTES;
+
+/// Frame executed to completion; `r0` is the injected main's return value.
+pub const STATUS_OK: u64 = 1;
+/// Frame consumed but rejected (decode/link/verify/runtime failure).
+pub const STATUS_FAILED: u64 = 2;
+
+/// One injection's reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Reply {
+    /// Sequence number of the frame this reply answers (1-based).
+    pub seq: u64,
+    /// Whether the injected function ran to completion.
+    pub ok: bool,
+    /// `r0` at `HALT` (0 when the frame was rejected).
+    pub r0: u64,
+}
+
+fn slot_off(seq: u64) -> usize {
+    ((seq - 1) as usize % REPLY_SLOTS) * REPLY_SLOT_BYTES
+}
+
+/// Sender-side reply ring: a mapped region the worker puts slots into.
+pub struct ReplyRing {
+    mr: Arc<MemoryRegion>,
+}
+
+impl ReplyRing {
+    /// Map a reply region on `ctx` (the sender/leader side).
+    pub fn new(ctx: &Context) -> Self {
+        ReplyRing { mr: ctx.mem_map(REPLY_REGION_BYTES, MemPerm::RWX) }
+    }
+
+    /// The rkey the worker-side [`ReplyWriter`] puts into.
+    pub fn rkey(&self) -> RKey {
+        self.mr.rkey()
+    }
+
+    /// Spin until the reply for frame `seq` (1-based) arrives. Errors if
+    /// the slot was already overwritten by a later lap of the ring.
+    pub fn wait(&self, seq: u64) -> Result<Reply> {
+        debug_assert!(seq > 0, "frame seqs are 1-based");
+        let off = slot_off(seq);
+        let mut i = 0u32;
+        loop {
+            // seq occupies the slot's final word, so it lands last.
+            let got = self.mr.load_u64_acquire(off + 16)?;
+            if got == seq {
+                let r0 = self.mr.load_u64_acquire(off)?;
+                let status = self.mr.load_u64_acquire(off + 8)?;
+                return Ok(Reply { seq, ok: status == STATUS_OK, r0 });
+            }
+            if got > seq {
+                return Err(Error::Transport(format!(
+                    "reply for frame {seq} overwritten (slot now holds seq {got})"
+                )));
+            }
+            crate::fabric::wire::backoff(i);
+            i += 1;
+        }
+    }
+}
+
+/// Worker-side reply writer bound to one sender's reply ring.
+pub struct ReplyWriter {
+    ep: Arc<Endpoint>,
+    rkey: RKey,
+    seq: u64,
+}
+
+impl ReplyWriter {
+    /// `ep` is a worker → sender endpoint; `rkey` names the sender's
+    /// reply region.
+    pub fn new(ep: Arc<Endpoint>, rkey: RKey) -> Self {
+        ReplyWriter { ep, rkey, seq: 0 }
+    }
+
+    /// Record the outcome of the next consumed frame; returns its seq.
+    pub fn push(&mut self, ok: bool, r0: u64) -> Result<u64> {
+        self.seq += 1;
+        let mut slot = [0u8; REPLY_SLOT_BYTES];
+        slot[0..8].copy_from_slice(&r0.to_le_bytes());
+        slot[8..16]
+            .copy_from_slice(&(if ok { STATUS_OK } else { STATUS_FAILED }).to_le_bytes());
+        slot[16..24].copy_from_slice(&self.seq.to_le_bytes());
+        self.ep.put_nbi(self.rkey, slot_off(self.seq), &slot)?;
+        Ok(self.seq)
+    }
+
+    /// Frames replied to so far.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Local completion of all pushed replies.
+    pub fn flush(&self) -> Result<()> {
+        self.ep.qp().flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Fabric, WireConfig};
+    use crate::ucp::{ContextConfig, Worker};
+
+    fn pair() -> (ReplyRing, ReplyWriter) {
+        let f = Fabric::new(2, WireConfig::off());
+        let leader = Context::new(f.node(0), ContextConfig::default()).unwrap();
+        let worker = Context::new(f.node(1), ContextConfig::default()).unwrap();
+        let wl = Worker::new(&leader);
+        let ww = Worker::new(&worker);
+        let ring = ReplyRing::new(&leader);
+        let ep = ww.connect(&wl).unwrap();
+        let rkey = ring.rkey();
+        (ring, ReplyWriter::new(ep, rkey))
+    }
+
+    #[test]
+    fn reply_roundtrip_preserves_r0_and_status() {
+        let (ring, mut w) = pair();
+        w.push(true, 42).unwrap();
+        w.push(false, 0).unwrap();
+        assert_eq!(ring.wait(1).unwrap(), Reply { seq: 1, ok: true, r0: 42 });
+        assert_eq!(ring.wait(2).unwrap(), Reply { seq: 2, ok: false, r0: 0 });
+    }
+
+    #[test]
+    fn slots_wrap_and_overwrite_is_detected() {
+        let (ring, mut w) = pair();
+        // Two full laps: seq N and N + REPLY_SLOTS share a slot.
+        for i in 0..(2 * REPLY_SLOTS as u64) {
+            w.push(true, i).unwrap();
+        }
+        w.flush().unwrap();
+        let last = 2 * REPLY_SLOTS as u64;
+        assert_eq!(ring.wait(last).unwrap().r0, last - 1);
+        // The first lap's replies are gone; waiting for one must error,
+        // not hand back the second lap's payload.
+        assert!(ring.wait(1).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! Pluggable ifunc delivery transports.
+//!
+//! The paper ships frames with one-sided RDMA PUTs into a target-managed
+//! ring (§3.3) and names send-receive delivery as the successor (§5.1).
+//! Both now exist behind one sender-side abstraction, so the coordinator,
+//! the serve path, and the ablation benches are transport-generic:
+//!
+//! * [`RingTransport`] — PUT frames through a [`SenderCursor`] into the
+//!   worker's RWX ring, with wrap markers and byte-credit flow control,
+//! * [`AmTransport`] — ship each frame as the payload of the reserved
+//!   ifunc active message; the worker's `ucp_worker_progress` executes it.
+//!
+//! Every transport also owns the link's [`ReplyRing`]: the worker answers
+//! frame `seq` with `(seq, status, r0)`, which gives `invoke` its return
+//! path and `barrier` its completion credit.
+
+use std::sync::Arc;
+
+use crate::fabric::{MemoryRegion, RKey};
+use crate::ucp::Endpoint;
+use crate::{Error, Result};
+
+use super::am_transport::ifunc_msg_send_am;
+use super::message::IfuncMsg;
+use super::reply::ReplyRing;
+use super::ring::{wrap_marker_word, SenderCursor};
+
+/// A sender-side ifunc delivery channel to one worker.
+pub trait IfuncTransport: Send {
+    /// Flow-controlled, non-blocking delivery of one frame. Completion is
+    /// observed via [`IfuncTransport::flush`]; execution via the replies.
+    fn send_frame(&mut self, msg: &IfuncMsg) -> Result<()>;
+
+    /// Wait for local + remote completion of every posted send.
+    fn flush(&self) -> Result<()>;
+
+    /// Frames sent over this link so far (the seq of the last frame).
+    fn frames_sent(&self) -> u64;
+
+    /// The link's reply ring (one slot per consumed frame).
+    fn replies(&self) -> &ReplyRing;
+
+    /// Block until the worker has consumed — executed or rejected — every
+    /// frame sent so far. Completion credit: the reply for the last frame
+    /// implies, by in-order delivery, that all earlier frames are done.
+    fn wait_consumed(&self) -> Result<()> {
+        let sent = self.frames_sent();
+        if sent > 0 {
+            self.replies().wait(sent)?;
+        }
+        Ok(())
+    }
+}
+
+/// RDMA-PUT ring delivery (the paper's §3 transport).
+pub struct RingTransport {
+    /// Sender → worker endpoint (ifunc puts).
+    ep: Arc<Endpoint>,
+    /// Worker ring placement cursor.
+    cursor: SenderCursor,
+    ring_rkey: RKey,
+    ring_bytes: usize,
+    /// Bytes sent (frames + wrap markers).
+    sent_bytes: u64,
+    frames: u64,
+    /// Sender-local word the worker writes its consumed-bytes count into.
+    credit: Arc<MemoryRegion>,
+    replies: ReplyRing,
+}
+
+impl RingTransport {
+    pub fn new(
+        ep: Arc<Endpoint>,
+        ring_rkey: RKey,
+        ring_bytes: usize,
+        credit: Arc<MemoryRegion>,
+        replies: ReplyRing,
+    ) -> Self {
+        RingTransport {
+            ep,
+            cursor: SenderCursor::new(ring_bytes),
+            ring_rkey,
+            ring_bytes,
+            sent_bytes: 0,
+            frames: 0,
+            credit,
+            replies,
+        }
+    }
+
+    /// Block until the ring can absorb `needed` more bytes. `needed` must
+    /// count the *whole* cost of the upcoming send — on a wrap that is the
+    /// skipped ring tail plus the frame, not just the frame (the tail is
+    /// credited back by the worker's `rewind`). `needed` may not exceed
+    /// the ring: when tail + frame would (a frame longer than the current
+    /// ring offset), the frame at offset 0 overlaps the wrap marker, so
+    /// the sender drains the ring and publishes the marker *before* the
+    /// frame (see [`RingTransport::send_frame`]).
+    fn wait_capacity(&self, needed: usize) {
+        let budget = self.ring_bytes.saturating_sub(needed) as u64;
+        let mut i = 0u32;
+        loop {
+            let consumed = self.credit.load_u64_acquire(0).unwrap();
+            if self.sent_bytes.saturating_sub(consumed) <= budget {
+                return;
+            }
+            crate::fabric::wire::backoff(i);
+            i += 1;
+        }
+    }
+}
+
+impl IfuncTransport for RingTransport {
+    fn send_frame(&mut self, msg: &IfuncMsg) -> Result<()> {
+        let tail = self.cursor.remaining_before_wrap();
+        if msg.len() > tail && tail + msg.len() > self.ring_bytes {
+            // Wrap where skipped tail + frame exceed the ring: the frame at
+            // offset 0 would overwrite the wrap marker before the parked
+            // poller reads it. Drain the ring, publish the marker alone,
+            // and wait for the poller's rewind credit before the frame.
+            self.wait_capacity(self.ring_bytes);
+            let at = self.ring_bytes - tail;
+            self.ep.put_nbi(
+                self.ring_rkey,
+                at,
+                &wrap_marker_word().to_le_bytes(),
+            )?;
+            self.sent_bytes += tail as u64;
+            self.ep.flush()?;
+            self.wait_capacity(self.ring_bytes);
+            self.cursor.reset();
+        }
+        // Seed bug: this waited for `frame + 8` bytes of room, but a frame
+        // that does not fit before the ring end also consumes the wasted
+        // tail through the wrap marker — under load the sender could lap
+        // the poller and overwrite an unconsumed frame at offset 0.
+        // Reserve the exact placement cost (tail + frame on a wrap)
+        // instead.
+        let tail = self.cursor.remaining_before_wrap();
+        let needed = if msg.len() > tail { tail + msg.len() } else { msg.len() };
+        self.wait_capacity(needed);
+        let placement = self.cursor.place(msg.len())?;
+        if let Some(at) = placement.wrap_marker_at {
+            // The wrap consumes the ring tail through the marker.
+            self.ep.put_nbi(
+                self.ring_rkey,
+                at,
+                &wrap_marker_word().to_le_bytes(),
+            )?;
+            self.sent_bytes += (self.ring_bytes - at) as u64;
+        }
+        self.ep.put_nbi(self.ring_rkey, placement.offset, msg.frame())?;
+        self.sent_bytes += msg.len() as u64;
+        self.frames += 1;
+        Ok(())
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.ep.flush()
+    }
+
+    fn frames_sent(&self) -> u64 {
+        self.frames
+    }
+
+    fn replies(&self) -> &ReplyRing {
+        &self.replies
+    }
+}
+
+/// Send-receive delivery (§5.1): frames ride the reserved ifunc AM and the
+/// worker executes them from `ucp_worker_progress`. No RWX ring, no rkey
+/// consensus — and no in-place execution (the receive path pays a
+/// copy-on-execute).
+pub struct AmTransport {
+    ep: Arc<Endpoint>,
+    frames: u64,
+    replies: ReplyRing,
+}
+
+impl AmTransport {
+    pub fn new(ep: Arc<Endpoint>, replies: ReplyRing) -> Self {
+        AmTransport { ep, frames: 0, replies }
+    }
+}
+
+impl IfuncTransport for AmTransport {
+    fn send_frame(&mut self, msg: &IfuncMsg) -> Result<()> {
+        ifunc_msg_send_am(&self.ep, msg)?;
+        self.frames += 1;
+        Ok(())
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.ep.flush()
+    }
+
+    fn frames_sent(&self) -> u64 {
+        self.frames
+    }
+
+    fn replies(&self) -> &ReplyRing {
+        &self.replies
+    }
+}
+
+/// Which delivery transport a cluster (or bench) uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// One-sided RDMA-PUT frames into per-worker rings (paper §3).
+    #[default]
+    Ring,
+    /// Frames as active-message payloads (paper §5.1).
+    Am,
+}
+
+impl TransportKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransportKind::Ring => "ring",
+            TransportKind::Am => "am",
+        }
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "ring" => Ok(TransportKind::Ring),
+            "am" => Ok(TransportKind::Am),
+            other => Err(Error::Other(format!("unknown transport {other:?} (ring|am)"))),
+        }
+    }
+}

@@ -17,7 +17,10 @@
 //! ```text
 //!   ifunc/        the paper's contribution: ucp_register_ifunc,
 //!                 ucp_ifunc_msg_create, ucp_ifunc_msg_send_nbix,
-//!                 ucp_poll_ifunc, auto-registration cache, I-cache model
+//!                 ucp_poll_ifunc — split into one execution engine
+//!                 (decode/cache/link/verify/invoke), pluggable delivery
+//!                 transports (RDMA-PUT ring, AM send-receive), a reply
+//!                 ring, the verified-program cache, the I-cache model
 //!   ucp/          UCP-like mid layer: Context/Worker/Endpoint, mem_map,
 //!                 rkey pack/unpack, put_nbi, flush, Active Messages
 //!                 (the baseline), eager + rendezvous protocols
@@ -140,7 +143,9 @@ impl From<xla::Error> for Error {
     }
 }
 
-pub type Result<T> = std::result::Result<T, Error>;
+/// Defaulted error parameter: `Result<T>` is the UCX-style status result;
+/// a handful of call sites (CLI parsing) substitute their own error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Convenience re-exports covering the whole public API surface.
 pub mod prelude {
@@ -148,8 +153,8 @@ pub mod prelude {
     pub use crate::coordinator::{Cluster, ClusterConfig, Dispatcher, RecordStore};
     pub use crate::fabric::{Fabric, MemPerm, WireConfig};
     pub use crate::ifunc::{
-        builtin::CounterIfunc, CodeImage, IfuncHandle, IfuncMsg, IfuncRing, PollResult,
-        SourceArgs, TargetArgs,
+        builtin::CounterIfunc, CodeImage, ExecOutcome, IfuncHandle, IfuncMsg, IfuncRing,
+        PollResult, Reply, SourceArgs, TargetArgs, TransportKind,
     };
     pub use crate::ucp::{AmParams, Context, ContextConfig, Endpoint, Worker};
     pub use crate::vm::{Assembler, Op};

@@ -5,7 +5,7 @@
 //!                                 [--rndv-thresh N] [--code-pad N]
 //!                                 [--msgs N] [--iters N] [--sizes a,b,c]
 //! repro demo                      # Listing 1.3/1.4 flow on the fabric
-//! repro serve [--workers N] [--listen ADDR]
+//! repro serve [--workers N] [--listen ADDR] [--transport ring|am]
 //! repro info
 //! ```
 //!
@@ -47,6 +47,7 @@ BENCH OPTIONS:
 SERVE OPTIONS:
   --workers <n>           device workers (default 2)
   --listen <addr>         TCP listen address (default 127.0.0.1:7100)
+  --transport <ring|am>   frame delivery transport (default ring)
 ";
 
 #[derive(Default, Clone)]
@@ -61,6 +62,7 @@ struct Opts {
     sizes: Option<Vec<usize>>,
     workers: usize,
     listen: String,
+    transport: two_chains::ifunc::TransportKind,
 }
 
 fn parse_opts(args: &[String]) -> Result<Opts, String> {
@@ -87,6 +89,9 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             "--iters" => o.iters = Some(parse_num(take(&mut i)?)?),
             "--workers" => o.workers = parse_num(take(&mut i)?)?,
             "--listen" => o.listen = take(&mut i)?.clone(),
+            "--transport" => {
+                o.transport = take(&mut i)?.parse().map_err(|e| format!("{e}"))?
+            }
             "--sizes" => {
                 o.sizes = Some(
                     take(&mut i)?
@@ -305,7 +310,7 @@ fn main() -> Result<()> {
         "demo" => demo()?,
         "serve" => {
             let opts = parse_opts(rest).map_err(Error::Other)?;
-            serve::serve(opts.workers, &opts.listen)?;
+            serve::serve(opts.workers, &opts.listen, opts.transport)?;
         }
         "info" => info(),
         "help" | "--help" | "-h" => print!("{USAGE}"),

@@ -12,34 +12,54 @@
 //! {"cmd":"get","key":7}                      -> {"ok":true,"data":[...]}
 //! {"cmd":"stats"}                            -> {"ok":true,"executed":N}
 //! ```
+//!
+//! `get` is served by injection too: a `GetIfunc` frame travels to the
+//! key's owner, the injected code calls `db_get` (which pushes the record
+//! into the leader's result region over the fabric), and the reply ring
+//! carries the element count back — the data in the response is computed
+//! by the injected function on the worker, not read from the store by the
+//! leader.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use two_chains::coordinator::{Cluster, ClusterConfig, InsertIfunc};
-use two_chains::ifunc::IfuncHandle;
+use two_chains::coordinator::{Cluster, ClusterConfig, GetIfunc, InsertIfunc, GET_MISSING};
+use two_chains::ifunc::{IfuncHandle, TransportKind};
 use two_chains::log;
 use two_chains::util::Json;
 use two_chains::Result;
 
-pub fn serve(workers: usize, listen: &str) -> Result<()> {
+/// The leader-side handles a serve deployment works with.
+pub struct ServeHandles {
+    pub insert: IfuncHandle,
+    pub get: IfuncHandle,
+}
+
+pub fn serve(workers: usize, listen: &str, transport: TransportKind) -> Result<()> {
     let cluster = Arc::new(Cluster::launch(
-        ClusterConfig { workers, ..Default::default() },
+        ClusterConfig { workers, transport, ..Default::default() },
         |_, _, _| {},
     )?);
     cluster.leader.library_dir().install(Box::new(InsertIfunc));
-    let handle: Arc<IfuncHandle> = Arc::new(cluster.leader.register_ifunc("insert")?);
+    cluster.leader.library_dir().install(Box::new(GetIfunc));
+    let handles = Arc::new(ServeHandles {
+        insert: cluster.leader.register_ifunc("insert")?,
+        get: cluster.leader.register_ifunc("get")?,
+    });
 
     let listener = TcpListener::bind(listen)?;
-    println!("listening on {listen} ({workers} workers); JSON lines: insert/get/stats");
+    println!(
+        "listening on {listen} ({workers} workers, {} transport); JSON lines: insert/get/stats",
+        transport.label()
+    );
     for stream in listener.incoming() {
         let stream = stream?;
         let cluster = cluster.clone();
-        let handle = handle.clone();
+        let handles = handles.clone();
         std::thread::spawn(move || {
             let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-            if let Err(e) = client_loop(stream, &cluster, &handle) {
+            if let Err(e) = client_loop(stream, &cluster, &handles) {
                 log::warn!("client {peer}: {e}");
             }
         });
@@ -47,7 +67,7 @@ pub fn serve(workers: usize, listen: &str) -> Result<()> {
     Ok(())
 }
 
-fn client_loop(stream: TcpStream, cluster: &Cluster, handle: &IfuncHandle) -> Result<()> {
+fn client_loop(stream: TcpStream, cluster: &Cluster, handles: &ServeHandles) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -55,7 +75,7 @@ fn client_loop(stream: TcpStream, cluster: &Cluster, handle: &IfuncHandle) -> Re
         if line.trim().is_empty() {
             continue;
         }
-        let resp = handle_line(cluster, handle, &line);
+        let resp = handle_line(cluster, handles, &line);
         writer.write_all(resp.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
     }
@@ -66,7 +86,7 @@ fn err_json(msg: &str) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::from(msg))])
 }
 
-pub fn handle_line(cluster: &Cluster, handle: &IfuncHandle, line: &str) -> Json {
+pub fn handle_line(cluster: &Cluster, handles: &ServeHandles, line: &str) -> Json {
     let req = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => return err_json(&format!("bad request: {e}")),
@@ -81,7 +101,7 @@ pub fn handle_line(cluster: &Cluster, handle: &IfuncHandle, line: &str) -> Json 
                 return err_json("insert needs data array");
             };
             match d
-                .inject_by_key(handle, key, &InsertIfunc::args(key, &data))
+                .inject_by_key(&handles.insert, key, &InsertIfunc::args(key, &data))
                 .and_then(|w| d.barrier().map(|_| w))
             {
                 Ok(worker) => {
@@ -95,13 +115,23 @@ pub fn handle_line(cluster: &Cluster, handle: &IfuncHandle, line: &str) -> Json 
                 return err_json("get needs numeric key");
             };
             let worker = d.route_key(key);
-            match cluster.workers[worker].store.get(key) {
-                Some(data) => Json::obj(vec![
+            let msg = match handles.get.msg_create(&GetIfunc::args(key)) {
+                Ok(m) => m,
+                Err(e) => return err_json(&e.to_string()),
+            };
+            // Inject the lookup and wait for the injected function's r0;
+            // on success the record was pushed into this worker's result
+            // region by the worker itself (invoke_get copies it out under
+            // the link lock, so concurrent gets cannot clobber it).
+            match d.invoke_get(worker, &msg) {
+                Ok((reply, data)) if reply.ok && reply.r0 != GET_MISSING => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("worker", Json::from(worker)),
                     ("data", Json::arr_f32(&data)),
                 ]),
-                None => err_json("not found"),
+                Ok((reply, _)) if reply.ok => err_json("not found"),
+                Ok(_) => err_json("get ifunc rejected on worker"),
+                Err(e) => err_json(&e.to_string()),
             }
         }
         Some("stats") => Json::obj(vec![

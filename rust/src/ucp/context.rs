@@ -9,7 +9,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::fabric::{MemPerm, MemoryRegion, Node};
-use crate::ifunc::cache::IfuncCache;
+use crate::ifunc::cache::CodeCache;
 use crate::ifunc::icache::{IcacheConfig, IcacheStats};
 use crate::ifunc::library::LibraryDir;
 use crate::ifunc::Symbols;
@@ -66,7 +66,7 @@ pub struct Context {
     config: ContextConfig,
     libs: LibraryDir,
     symbols: Symbols,
-    pub(crate) cache: IfuncCache,
+    pub(crate) cache: CodeCache,
     icache_stats: IcacheStats,
 }
 
@@ -79,7 +79,7 @@ impl Context {
             config,
             libs,
             symbols: Symbols::with_builtins(),
-            cache: IfuncCache::new(),
+            cache: CodeCache::new(),
             icache_stats: IcacheStats::default(),
         }))
     }
@@ -104,8 +104,9 @@ impl Context {
         &self.symbols
     }
 
-    /// Auto-registration cache statistics (hits/misses; Abl B toggles it).
-    pub fn ifunc_cache(&self) -> &IfuncCache {
+    /// Auto-registration code cache (hits/misses/verified programs;
+    /// Abl B toggles it).
+    pub fn ifunc_cache(&self) -> &CodeCache {
         &self.cache
     }
 

@@ -1,14 +1,26 @@
 //! Coordinator integration: failure injection, mixed workloads, placement
-//! invariants, telemetry accounting.
+//! invariants, telemetry accounting, reply-path invocation — each traffic
+//! scenario driven over *both* delivery transports (RDMA-PUT ring and AM
+//! send-receive) through the identical cluster harness.
 
-use two_chains::coordinator::{Cluster, ClusterConfig, ClusterSnapshot};
+use two_chains::coordinator::{
+    Cluster, ClusterConfig, ClusterSnapshot, GetIfunc, InsertIfunc, TransportKind, GET_MISSING,
+};
 use two_chains::ifunc::builtin::{ChecksumIfunc, CounterIfunc, OutOfBoundsIfunc};
 use two_chains::ifunc::SourceArgs;
 use two_chains::util::XorShift;
 
-fn counter_cluster(workers: usize) -> Cluster {
+/// Run `scenario` once per transport, so every assertion below holds for
+/// the ring and the AM delivery path alike.
+fn for_both_transports(scenario: impl Fn(TransportKind)) {
+    for transport in [TransportKind::Ring, TransportKind::Am] {
+        scenario(transport);
+    }
+}
+
+fn counter_cluster(workers: usize, transport: TransportKind) -> Cluster {
     let cluster = Cluster::launch(
-        ClusterConfig { workers, ..Default::default() },
+        ClusterConfig { workers, transport, ..Default::default() },
         |_, ctx, _| {
             ctx.library_dir().install(Box::new(CounterIfunc::default()));
         },
@@ -28,71 +40,80 @@ fn counter_cluster(workers: usize) -> Cluster {
 /// counted, and never corrupt the stream.
 #[test]
 fn failure_injection_does_not_stall_the_stream() {
-    let cluster = counter_cluster(2);
-    let d = cluster.dispatcher();
-    let h_good = d.register("counter").unwrap();
-    let h_bad = d.register("oob").unwrap();
-    let args = SourceArgs::bytes(vec![0u8; 64]);
+    for_both_transports(|transport| {
+        let cluster = counter_cluster(2, transport);
+        let d = cluster.dispatcher();
+        let h_good = d.register("counter").unwrap();
+        let h_bad = d.register("oob").unwrap();
+        let args = SourceArgs::bytes(vec![0u8; 64]);
 
-    let mut good = 0u64;
-    let mut bad = 0u64;
-    let mut rng = XorShift::new(99);
-    for key in 0..200u64 {
-        if rng.below(4) == 0 {
-            d.inject_by_key(&h_bad, key, &args).unwrap();
-            bad += 1;
-        } else {
-            d.inject_by_key(&h_good, key, &args).unwrap();
-            good += 1;
+        let mut good = 0u64;
+        let mut bad = 0u64;
+        let mut rng = XorShift::new(99);
+        for key in 0..200u64 {
+            if rng.below(4) == 0 {
+                d.inject_by_key(&h_bad, key, &args).unwrap();
+                bad += 1;
+            } else {
+                d.inject_by_key(&h_good, key, &args).unwrap();
+                good += 1;
+            }
         }
-    }
-    d.barrier().unwrap();
+        d.barrier().unwrap();
 
-    let executed: u64 = cluster.workers.iter().map(|w| w.executed()).sum();
-    let failed: u64 = cluster
-        .workers
-        .iter()
-        .map(|w| w.stats.failed.load(std::sync::atomic::Ordering::Relaxed))
-        .sum();
-    assert_eq!(executed, good);
-    assert_eq!(failed, bad);
-    // Every good message actually ran (counter proves execution).
-    let counted: u64 = cluster.workers.iter().map(|w| w.ctx.symbols().counter_value()).sum();
-    assert_eq!(counted, good);
-    cluster.shutdown().unwrap();
+        let executed: u64 = cluster.workers.iter().map(|w| w.executed()).sum();
+        let failed: u64 = cluster
+            .workers
+            .iter()
+            .map(|w| w.stats.failed.load(std::sync::atomic::Ordering::Relaxed))
+            .sum();
+        assert_eq!(executed, good, "{transport:?}");
+        assert_eq!(failed, bad, "{transport:?}");
+        // Every good message actually ran (counter proves execution).
+        let counted: u64 =
+            cluster.workers.iter().map(|w| w.ctx.symbols().counter_value()).sum();
+        assert_eq!(counted, good, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
 }
 
-/// Mixed ifunc types through one ring: per-name auto-registration, both
-/// execute correctly interleaved.
+/// Mixed ifunc types through one link: per-name auto-registration, both
+/// execute correctly interleaved, and repeats hit the verified-program
+/// cache.
 #[test]
-fn mixed_types_share_a_ring() {
-    let cluster = counter_cluster(1);
-    let d = cluster.dispatcher();
-    let h_counter = d.register("counter").unwrap();
-    let h_checksum = d.register("checksum").unwrap();
+fn mixed_types_share_a_link() {
+    for_both_transports(|transport| {
+        let cluster = counter_cluster(1, transport);
+        let d = cluster.dispatcher();
+        let h_counter = d.register("counter").unwrap();
+        let h_checksum = d.register("checksum").unwrap();
 
-    for i in 0..50u64 {
-        let payload = vec![1u8; 100 + (i as usize % 32) * 8];
-        if i % 2 == 0 {
-            d.send_to(0, &h_counter.msg_create(&SourceArgs::bytes(payload)).unwrap()).unwrap();
-        } else {
-            d.send_to(0, &h_checksum.msg_create(&SourceArgs::bytes(payload)).unwrap()).unwrap();
+        for i in 0..50u64 {
+            let payload = vec![1u8; 100 + (i as usize % 32) * 8];
+            if i % 2 == 0 {
+                d.send_to(0, &h_counter.msg_create(&SourceArgs::bytes(payload)).unwrap())
+                    .unwrap();
+            } else {
+                d.send_to(0, &h_checksum.msg_create(&SourceArgs::bytes(payload)).unwrap())
+                    .unwrap();
+            }
         }
-    }
-    d.barrier().unwrap();
-    assert_eq!(cluster.workers[0].executed(), 50);
-    // Two types -> exactly two auto-registration misses on the worker.
-    let snap = ClusterSnapshot::capture(&cluster);
-    assert_eq!(snap.workers[0].0.cache_misses, 2);
-    assert_eq!(snap.workers[0].0.cache_hits, 48);
-    cluster.shutdown().unwrap();
+        d.barrier().unwrap();
+        assert_eq!(cluster.workers[0].executed(), 50, "{transport:?}");
+        // Two types -> exactly two auto-registration misses on the worker;
+        // every later frame skips link + verify via the cached program.
+        let snap = ClusterSnapshot::capture(&cluster);
+        assert_eq!(snap.workers[0].0.cache_misses, 2, "{transport:?}");
+        assert_eq!(snap.workers[0].0.cache_hits, 48, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
 }
 
 /// Placement is stable and total across cluster sizes.
 #[test]
 fn placement_is_total_and_balanced() {
     for workers in [1usize, 2, 5, 8] {
-        let cluster = counter_cluster(workers);
+        let cluster = counter_cluster(workers, TransportKind::Ring);
         let d = cluster.dispatcher();
         let mut counts = vec![0usize; workers];
         for key in 0..4000u64 {
@@ -112,22 +133,55 @@ fn placement_is_total_and_balanced() {
 /// Telemetry accounting matches ground truth after a burst.
 #[test]
 fn telemetry_matches_ground_truth() {
-    let cluster = counter_cluster(3);
-    let d = cluster.dispatcher();
-    let h = d.register("counter").unwrap();
-    for key in 0..120u64 {
-        d.inject_by_key(&h, key, &SourceArgs::bytes(vec![7u8; 48])).unwrap();
-    }
-    d.barrier().unwrap();
-    let snap = ClusterSnapshot::capture(&cluster);
-    let executed: u64 = snap.workers.iter().map(|(_, e, _, _)| *e).sum();
-    assert_eq!(executed, 120);
-    let flushes: u64 = snap.workers.iter().map(|(c, ..)| c.icache_flushes).sum();
-    assert_eq!(flushes, 120);
-    // JSON renders and parses back.
-    let parsed = two_chains::util::Json::parse(&snap.to_json().to_string()).unwrap();
-    assert!(parsed.get("workers").is_some());
-    cluster.shutdown().unwrap();
+    for_both_transports(|transport| {
+        let cluster = counter_cluster(3, transport);
+        let d = cluster.dispatcher();
+        let h = d.register("counter").unwrap();
+        for key in 0..120u64 {
+            d.inject_by_key(&h, key, &SourceArgs::bytes(vec![7u8; 48])).unwrap();
+        }
+        d.barrier().unwrap();
+        let snap = ClusterSnapshot::capture(&cluster);
+        let executed: u64 = snap.workers.iter().map(|(_, e, _, _)| *e).sum();
+        assert_eq!(executed, 120, "{transport:?}");
+        let flushes: u64 = snap.workers.iter().map(|(c, ..)| c.icache_flushes).sum();
+        assert_eq!(flushes, 120, "{transport:?}");
+        // JSON renders and parses back.
+        let parsed = two_chains::util::Json::parse(&snap.to_json().to_string()).unwrap();
+        assert!(parsed.get("workers").is_some());
+        cluster.shutdown().unwrap();
+    });
+}
+
+/// `Dispatcher::invoke` returns the injected function's `r0` through the
+/// reply ring — and a rejected frame comes back as a failed reply without
+/// desynchronizing later invocations.
+#[test]
+fn invoke_returns_injected_r0() {
+    for_both_transports(|transport| {
+        let cluster = counter_cluster(2, transport);
+        let d = cluster.dispatcher();
+        let h = d.register("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 16])).unwrap();
+
+        // counter_add(1) returns the post-increment counter value in r0.
+        let r1 = d.invoke(0, &msg).unwrap();
+        assert!(r1.ok, "{transport:?}");
+        assert_eq!(r1.r0, 1, "{transport:?}");
+        let r2 = d.invoke(0, &msg).unwrap();
+        assert_eq!(r2.r0, 2, "{transport:?}");
+        assert!(r2.seq > r1.seq, "{transport:?}");
+
+        // A hostile frame is consumed and answered as failed...
+        let h_bad = d.register("oob").unwrap();
+        let bad = h_bad.msg_create(&SourceArgs::bytes(vec![0u8; 16])).unwrap();
+        let rf = d.invoke(0, &bad).unwrap();
+        assert!(!rf.ok, "{transport:?}");
+        // ...and the link keeps working afterwards.
+        let r3 = d.invoke(0, &msg).unwrap();
+        assert_eq!(r3.r0, 3, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
 }
 
 /// The serve-mode ingestion flow (no TCP): InsertIfunc routes each record
@@ -135,7 +189,6 @@ fn telemetry_matches_ground_truth() {
 /// bytecode, and inserts via the `db_insert` GOT symbol.
 #[test]
 fn insert_ifunc_ingestion_and_lookup() {
-    use two_chains::coordinator::InsertIfunc;
     let cluster = Cluster::launch(
         ClusterConfig { workers: 3, ..Default::default() },
         |_, _, _| {},
@@ -162,4 +215,53 @@ fn insert_ifunc_ingestion_and_lookup() {
     }
     assert_eq!(d.total_executed(), 40);
     cluster.shutdown().unwrap();
+}
+
+/// The full serve `get` path, minus the socket: insert by injection, then
+/// look up by injection — the injected `GetIfunc` calls `db_get`, which
+/// pushes the record over the fabric into the leader's result region, and
+/// the reply carries the element count in r0.
+#[test]
+fn get_ifunc_returns_worker_computed_data() {
+    for_both_transports(|transport| {
+        let cluster = Cluster::launch(
+            ClusterConfig { workers: 3, transport, ..Default::default() },
+            |_, _, _| {},
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(InsertIfunc));
+        cluster.leader.library_dir().install(Box::new(GetIfunc));
+        let d = cluster.dispatcher();
+        let h_ins = d.register("insert").unwrap();
+        let h_get = d.register("get").unwrap();
+
+        let mut rng = XorShift::new(21);
+        let mut expect = Vec::new();
+        for key in 0..20u64 {
+            let len = rng.range(1, 48) as usize;
+            let data = rng.f32s(len);
+            d.inject_by_key(&h_ins, key, &InsertIfunc::args(key, &data)).unwrap();
+            expect.push((key, data));
+        }
+        d.barrier().unwrap();
+
+        for (key, data) in expect {
+            let w = d.route_key(key);
+            let msg = h_get.msg_create(&GetIfunc::args(key)).unwrap();
+            let (reply, fetched) = d.invoke_get(w, &msg).unwrap();
+            assert!(reply.ok, "{transport:?} key {key}");
+            assert_eq!(reply.r0 as usize, data.len(), "{transport:?} key {key}");
+            assert_eq!(fetched, data, "{transport:?} key {key}");
+        }
+
+        // Absent key: the injected function reports MISSING in r0.
+        let absent = 999_999u64;
+        let w = d.route_key(absent);
+        let msg = h_get.msg_create(&GetIfunc::args(absent)).unwrap();
+        let (reply, fetched) = d.invoke_get(w, &msg).unwrap();
+        assert!(reply.ok, "{transport:?}");
+        assert_eq!(reply.r0, GET_MISSING, "{transport:?}");
+        assert!(fetched.is_empty(), "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
 }

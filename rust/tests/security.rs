@@ -152,6 +152,55 @@ fn unresolved_import_is_a_link_error() {
 }
 
 #[test]
+fn hostile_frame_is_consumed_not_spun_on() {
+    // Consume-on-reject (ROADMAP item): a frame with a *valid* header
+    // whose code fails before invoke — undecodable bytecode here, an
+    // unresolved import below — must be consumed by the poll loop, not
+    // left at the cursor where a worker would spin on it forever.
+    let (src, dst, ep) = pair();
+    let mut ring = IfuncRing::new(&dst, 1 << 16).unwrap();
+
+    let evil = CodeImage { imports: vec![], vm_code: vec![0xFF; 16], hlo: vec![] };
+    let msg = two_chains::ifunc::IfuncMsg::assemble("evil", &evil, &[0u8; 8], Default::default())
+        .unwrap();
+    ep.ifunc_msg_send_nbix(&msg, 0, ring.rkey()).unwrap();
+    ep.flush().unwrap();
+
+    let mut args = TargetArgs::none();
+    let err = dst.poll_ifunc(&mut ring, &mut args).unwrap_err();
+    assert!(err.to_string().contains("verification"), "{err}");
+    assert_eq!(ring.consumed, 1, "rejected frame must be consumed");
+
+    // A second hostile frame failing at *link* time (unresolved import)
+    // is consumed the same way.
+    let unlinked = CodeImage {
+        imports: vec!["no_such_sym".into()],
+        vm_code: evil.vm_code.clone(),
+        hlo: vec![],
+    };
+    let msg2 =
+        two_chains::ifunc::IfuncMsg::assemble("nolink", &unlinked, &[0u8; 8], Default::default())
+            .unwrap();
+    let mut cursor = SenderCursor::new(ring.size());
+    cursor.place(msg.len()).unwrap();
+    ep.ifunc_msg_send_cursor(&msg2, &mut cursor, ring.rkey()).unwrap();
+    ep.flush().unwrap();
+    let err = dst.poll_ifunc(&mut ring, &mut args).unwrap_err();
+    assert!(err.to_string().contains("unresolved symbol"), "{err}");
+    assert_eq!(ring.consumed, 2);
+
+    // The stream keeps flowing: a good frame behind the hostile ones
+    // executes without any resend or cursor surgery.
+    src.library_dir().install(Box::new(CounterIfunc::default()));
+    let h = src.register_ifunc("counter").unwrap();
+    let good = h.msg_create(&SourceArgs::bytes(vec![0; 8])).unwrap();
+    ep.ifunc_msg_send_cursor(&good, &mut cursor, ring.rkey()).unwrap();
+    ep.flush().unwrap();
+    assert_eq!(dst.poll_ifunc(&mut ring, &mut args).unwrap(), PollResult::Executed);
+    assert_eq!(dst.symbols().counter_value(), 1);
+}
+
+#[test]
 fn garbage_in_ring_is_rejected_not_executed() {
     let (_src, dst, ep) = pair();
     let mut ring = IfuncRing::new(&dst, 1 << 16).unwrap();

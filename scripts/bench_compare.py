@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Diff a micro-benchmark JSON report against a committed baseline.
+
+The ``micro`` bench (``cargo bench --bench micro -- --json PATH``) emits
+``{"series":"micro","rows":[{"name":..,"median_ns":..,"best_ns":..},..]}``.
+This script prints per-metric deltas between a current report and a
+baseline so perf regressions are visible in PRs.
+
+Usage:
+    python scripts/bench_compare.py CURRENT.json [--baseline PATH]
+                                    [--threshold PCT]
+
+Exit codes: 0 on success or when the baseline is absent (the comparison is
+advisory — CI runs it as a non-blocking step); 1 on malformed input; 2 when
+``--threshold`` is given and some metric regressed beyond it (for local,
+opt-in strict runs).
+
+To (re)seed the baseline, download ``micro-report.json`` from a trusted CI
+run's artifacts and commit it at the default baseline path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = Path("benches/baseline/micro-baseline.json")
+
+
+def load_rows(path: Path) -> dict[str, dict[str, float]]:
+    report = json.loads(path.read_text())
+    if report.get("series") != "micro" or "rows" not in report:
+        raise ValueError(f"{path}: not a micro bench report")
+    return {r["name"]: r for r in report["rows"]}
+
+
+def fmt_ns(ns: float) -> str:
+    return f"{ns:,.0f}"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", type=Path, help="micro-report.json from this run")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE)
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=None,
+        metavar="PCT",
+        help="exit 2 if any median regresses more than PCT percent",
+    )
+    args = ap.parse_args()
+
+    if not args.baseline.exists():
+        print(
+            f"bench_compare: no baseline at {args.baseline} — skipping comparison.\n"
+            "  Seed one by committing a micro-report.json from a trusted CI run."
+        )
+        return 0
+
+    try:
+        base = load_rows(args.baseline)
+        cur = load_rows(args.current)
+    except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+        print(f"bench_compare: {e}", file=sys.stderr)
+        return 1
+
+    width = max((len(n) for n in cur), default=20)
+    print(f"{'metric':<{width}}  {'baseline':>12}  {'current':>12}  {'delta':>8}")
+    worst = 0.0
+    for name, row in cur.items():
+        b = base.get(name)
+        if b is None:
+            print(f"{name:<{width}}  {'—':>12}  {fmt_ns(row['median_ns']):>12}  {'new':>8}")
+            continue
+        delta = (row["median_ns"] - b["median_ns"]) / b["median_ns"] * 100.0
+        worst = max(worst, delta)
+        print(
+            f"{name:<{width}}  {fmt_ns(b['median_ns']):>12}  "
+            f"{fmt_ns(row['median_ns']):>12}  {delta:>+7.1f}%"
+        )
+    for name in base:
+        if name not in cur:
+            print(f"{name:<{width}}  {fmt_ns(base[name]['median_ns']):>12}  "
+                  f"{'—':>12}  {'gone':>8}")
+
+    if args.threshold is not None and worst > args.threshold:
+        print(f"\nbench_compare: worst regression {worst:+.1f}% exceeds "
+              f"threshold {args.threshold:.1f}%", file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
