@@ -13,6 +13,9 @@
 //!   (§5.1), driven through the *identical* cluster harness
 //!   (leader + worker + dispatcher + reply credits) so only the
 //!   `IfuncTransport` impl differs.
+//! * **F** — batched delivery: `send_batch` (one coalesced credit
+//!   reservation + one flush per 32-frame chunk) vs frame-at-a-time
+//!   (send + flush per frame), on both transports over the same workload.
 //!
 //! Run: `cargo bench --bench ablations` (QUICK=1 for a smoke run).
 
@@ -83,6 +86,52 @@ fn cluster_throughput(
     let t0 = Instant::now();
     for _ in 0..msgs {
         d.send_to(0, &msg).expect("send");
+    }
+    d.barrier().expect("barrier");
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(d.total_executed(), msgs as u64);
+    cluster.shutdown().expect("shutdown");
+    msgs as f64 / dt
+}
+
+/// Abl F workload: completed delivery of `msgs` frames in chunks of
+/// `batch`. `batch == 1` is frame-at-a-time (`send_to` + flush per
+/// frame); `batch > 1` goes through `send_batch_to` — one coalesced
+/// credit reservation + one flush per chunk on the ring, back-to-back
+/// posts + one flush over AM — so the delta is exactly what batching
+/// amortizes (per-frame completion waits and capacity checks).
+fn cluster_batched_throughput(
+    base: &BenchConfig,
+    transport: TransportKind,
+    size: usize,
+    msgs: usize,
+    batch: usize,
+) -> f64 {
+    let cluster = Cluster::launch(
+        ClusterConfig {
+            workers: 1,
+            transport,
+            wire: base.wire,
+            ..Default::default()
+        },
+        |_, ctx, _| {
+            ctx.library_dir().install(Box::new(CounterIfunc::default()));
+        },
+    )
+    .expect("cluster");
+    cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+    let d = cluster.dispatcher();
+    let h = d.register("counter").expect("register");
+    let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; size])).expect("msg");
+    let frames: Vec<_> = (0..batch).map(|_| msg.clone()).collect();
+    let t0 = Instant::now();
+    let mut left = msgs;
+    while left > 0 {
+        let take = left.min(batch);
+        // A 1-frame batch degenerates to send + flush, so the two
+        // modes differ only in chunking.
+        d.send_batch_to(0, &frames[..take]).expect("send_batch");
+        left -= take;
     }
     d.barrier().expect("barrier");
     let dt = t0.elapsed().as_secs_f64();
@@ -168,4 +217,33 @@ fn main() {
         &s,
         false,
     );
+
+    // Abl F — batched vs frame-at-a-time delivery, per transport, on the
+    // identical workload. Column mapping (same trick as Abl E): `ifunc`
+    // column = send_batch_to in chunks of 32, `AM` column = chunks of 1
+    // (send + flush per frame) — so a positive "ifunc vs AM" % is the
+    // batching win.
+    for transport in [TransportKind::Ring, TransportKind::Am] {
+        let s: Vec<report::SeriesPoint> = base
+            .sizes
+            .iter()
+            .map(|&size| {
+                let msgs = base.msgs_per_size.min((64 << 20) / size.max(1)).max(50);
+                let batched = cluster_batched_throughput(&base, transport, size, msgs, 32);
+                let single = cluster_batched_throughput(&base, transport, size, msgs, 1);
+                eprint!(".");
+                report::SeriesPoint { size, ifunc: batched, am: single }
+            })
+            .collect();
+        report::print_series(
+            &format!(
+                "Abl F — {} transport: batched send_batch (ifunc col) vs \
+                 frame-at-a-time (AM col)",
+                transport.label()
+            ),
+            "msg/s",
+            &s,
+            false,
+        );
+    }
 }

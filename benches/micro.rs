@@ -168,6 +168,46 @@ fn main() {
         }
     });
 
+    // Pipelined invocation throughput: a one-worker cluster driven through
+    // invoke_begin/PendingReply with a sliding window of outstanding
+    // invocations. Window 1 is the old invoke-under-lock behavior (send,
+    // wait, repeat); wider windows overlap frame delivery with reply
+    // collection on the same link.
+    {
+        use std::collections::VecDeque;
+        use two_chains::coordinator::{Cluster, ClusterConfig};
+        for window in [1usize, 4, 16] {
+            let cluster = Cluster::launch(
+                ClusterConfig { workers: 1, max_inflight: window, ..Default::default() },
+                |_, ctx, _| {
+                    ctx.library_dir().install(Box::new(CounterIfunc::default()));
+                },
+            )
+            .expect("cluster");
+            cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+            let d = cluster.dispatcher();
+            let h = d.register("counter").expect("register");
+            let m = h.msg_create(&SourceArgs::bytes(vec![0u8; 64])).expect("msg");
+            let iters = if quick { 300 } else { 3000 };
+            let mut pending = VecDeque::new();
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                if pending.len() == window {
+                    pending.pop_front().unwrap().wait().expect("reply");
+                }
+                pending.push_back(d.invoke_begin(0, &m).expect("invoke_begin"));
+            }
+            while let Some(p) = pending.pop_front() {
+                p.wait().expect("reply");
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+            let name = format!("pipelined invoke (window {window})");
+            println!("{name:<44} {ns:>12.0} ns/op");
+            t.rows.push(MicroRow { name, median_ns: ns, best_ns: ns });
+            cluster.shutdown().expect("shutdown");
+        }
+    }
+
     if let Some(path) = json_path() {
         let report = micro_json(&t.rows);
         std::fs::write(&path, &report).expect("write micro JSON report");

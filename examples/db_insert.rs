@@ -124,14 +124,14 @@ fn main() -> Result<()> {
     }
 
     // Spot-check through the reply path too: a GetIfunc invocation makes
-    // the *worker* push the record back over the fabric and return its
-    // length in r0 — no leader-side store access involved.
+    // the *worker* push the record back inline in the reply frame and
+    // return its length in r0 — no leader-side store access involved.
     cluster.leader.library_dir().install(Box::new(GetIfunc));
     let h_get = d.register("get")?;
     for key in [0u64, n_records as u64 / 2, n_records as u64 - 1] {
         let w = d.route_key(key);
         let (reply, fetched) = d.invoke_get(w, &h_get.msg_create(&GetIfunc::args(key))?)?;
-        if !reply.ok || reply.r0 == GET_MISSING {
+        if !reply.ok() || reply.r0 == GET_MISSING {
             return Err(Error::Other(format!("get({key}) failed on worker {w}")));
         }
         println!("  get({key}) via invoke -> {} samples from worker {w}", fetched.len());

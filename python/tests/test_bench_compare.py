@@ -1,0 +1,159 @@
+"""Unit tests for scripts/bench_compare.py: delta math, missing-baseline
+tolerance, and the regression-threshold exit path."""
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+SCRIPT = REPO_ROOT / "scripts" / "bench_compare.py"
+
+
+@pytest.fixture(scope="module")
+def bench_compare():
+    spec = importlib.util.spec_from_file_location("bench_compare", SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def write_report(path, rows):
+    path.write_text(json.dumps({"series": "micro", "rows": rows}))
+    return path
+
+
+def row(name, median, best=None):
+    return {"name": name, "median_ns": median, "best_ns": best or median}
+
+
+def run_main(bench_compare, monkeypatch, argv):
+    monkeypatch.setattr(sys, "argv", ["bench_compare.py", *argv])
+    return bench_compare.main()
+
+
+class TestLoadRows:
+    def test_roundtrip_keys_by_name(self, bench_compare, tmp_path):
+        p = write_report(tmp_path / "r.json", [row("decode", 12.5), row("verify", 80.0)])
+        rows = bench_compare.load_rows(p)
+        assert rows["decode"]["median_ns"] == 12.5
+        assert set(rows) == {"decode", "verify"}
+
+    def test_rejects_non_micro_report(self, bench_compare, tmp_path):
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps({"series": "fig3", "points": []}))
+        with pytest.raises(ValueError, match="not a micro bench report"):
+            bench_compare.load_rows(p)
+
+
+class TestMissingBaseline:
+    def test_absent_baseline_is_tolerated(self, bench_compare, tmp_path, monkeypatch, capsys):
+        cur = write_report(tmp_path / "cur.json", [row("decode", 10.0)])
+        rc = run_main(
+            bench_compare,
+            monkeypatch,
+            [str(cur), "--baseline", str(tmp_path / "nope.json")],
+        )
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "no baseline" in out
+        assert "skipping comparison" in out
+
+    def test_absent_baseline_skips_even_with_threshold(
+        self, bench_compare, tmp_path, monkeypatch
+    ):
+        # The advisory CI step passes a threshold only in strict local
+        # runs, but a missing baseline must never trip it.
+        cur = write_report(tmp_path / "cur.json", [row("decode", 10.0)])
+        rc = run_main(
+            bench_compare,
+            monkeypatch,
+            [str(cur), "--baseline", str(tmp_path / "nope.json"), "--threshold", "1"],
+        )
+        assert rc == 0
+
+
+class TestDeltaMath:
+    def test_regression_percent_is_printed(self, bench_compare, tmp_path, monkeypatch, capsys):
+        base = write_report(tmp_path / "base.json", [row("decode", 100.0)])
+        cur = write_report(tmp_path / "cur.json", [row("decode", 110.0)])
+        rc = run_main(bench_compare, monkeypatch, [str(cur), "--baseline", str(base)])
+        assert rc == 0
+        assert "+10.0%" in capsys.readouterr().out
+
+    def test_improvement_percent_is_negative(
+        self, bench_compare, tmp_path, monkeypatch, capsys
+    ):
+        base = write_report(tmp_path / "base.json", [row("verify", 200.0)])
+        cur = write_report(tmp_path / "cur.json", [row("verify", 150.0)])
+        rc = run_main(bench_compare, monkeypatch, [str(cur), "--baseline", str(base)])
+        assert rc == 0
+        assert "-25.0%" in capsys.readouterr().out
+
+    def test_new_and_gone_metrics_are_marked(self, bench_compare, tmp_path, monkeypatch, capsys):
+        base = write_report(tmp_path / "base.json", [row("old-stage", 50.0)])
+        cur = write_report(tmp_path / "cur.json", [row("new-stage", 60.0)])
+        rc = run_main(bench_compare, monkeypatch, [str(cur), "--baseline", str(base)])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "new" in out
+        assert "gone" in out
+
+
+class TestThresholdExit:
+    def test_regression_beyond_threshold_exits_2(
+        self, bench_compare, tmp_path, monkeypatch, capsys
+    ):
+        base = write_report(tmp_path / "base.json", [row("decode", 100.0)])
+        cur = write_report(tmp_path / "cur.json", [row("decode", 120.0)])
+        rc = run_main(
+            bench_compare,
+            monkeypatch,
+            [str(cur), "--baseline", str(base), "--threshold", "10"],
+        )
+        assert rc == 2
+        assert "exceeds" in capsys.readouterr().err
+
+    def test_regression_within_threshold_passes(self, bench_compare, tmp_path, monkeypatch):
+        base = write_report(tmp_path / "base.json", [row("decode", 100.0)])
+        cur = write_report(tmp_path / "cur.json", [row("decode", 104.0)])
+        rc = run_main(
+            bench_compare,
+            monkeypatch,
+            [str(cur), "--baseline", str(base), "--threshold", "5"],
+        )
+        assert rc == 0
+
+    def test_worst_metric_governs(self, bench_compare, tmp_path, monkeypatch):
+        # One improving metric must not mask another one regressing.
+        base = write_report(
+            tmp_path / "base.json", [row("decode", 100.0), row("verify", 100.0)]
+        )
+        cur = write_report(
+            tmp_path / "cur.json", [row("decode", 50.0), row("verify", 130.0)]
+        )
+        rc = run_main(
+            bench_compare,
+            monkeypatch,
+            [str(cur), "--baseline", str(base), "--threshold", "20"],
+        )
+        assert rc == 2
+
+
+class TestMalformedInput:
+    def test_malformed_current_exits_1(self, bench_compare, tmp_path, monkeypatch, capsys):
+        base = write_report(tmp_path / "base.json", [row("decode", 100.0)])
+        cur = tmp_path / "cur.json"
+        cur.write_text("{not json")
+        rc = run_main(bench_compare, monkeypatch, [str(cur), "--baseline", str(base)])
+        assert rc == 1
+        assert "bench_compare:" in capsys.readouterr().err
+
+    def test_wrong_series_current_exits_1(self, bench_compare, tmp_path, monkeypatch):
+        base = write_report(tmp_path / "base.json", [row("decode", 100.0)])
+        cur = tmp_path / "cur.json"
+        cur.write_text(json.dumps({"series": "other", "rows": []}))
+        rc = run_main(bench_compare, monkeypatch, [str(cur), "--baseline", str(base)])
+        assert rc == 1

@@ -77,12 +77,12 @@ impl InsertIfunc {
 
 /// Key-lookup ifunc for the serve path's `get`: payload = `[key u64]`;
 /// main reads the key and calls the worker-side `db_get` GOT symbol, which
-/// ships the record's f32s into the leader's per-worker result region over
-/// the fabric and returns the element count in `r0`
+/// pushes the record's bytes into the invocation's **reply payload** and
+/// returns the element count in `r0`
 /// ([`crate::coordinator::GET_MISSING`] when absent). Paired with
-/// `Dispatcher::invoke`, the response data is computed and pushed *by the
-/// injected function on the worker* — not read out of the store by the
-/// leader.
+/// `Dispatcher::invoke` / `invoke_get`, the record arrives inline in the
+/// reply frame — computed and shipped *by the injected function on the
+/// worker*, with no leader-side store access and no shared result region.
 pub struct GetIfunc;
 
 impl GetIfunc {

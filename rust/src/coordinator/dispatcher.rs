@@ -9,11 +9,21 @@
 //! Delivery is transport-generic: each worker link is an
 //! [`crate::ifunc::IfuncTransport`] chosen by `ClusterConfig::transport`
 //! (RDMA-PUT ring or AM send-receive), and every link carries a reply
-//! ring, so alongside fire-and-forget [`Dispatcher::send_to`] there is
-//! [`Dispatcher::invoke`], which blocks for the injected function's
-//! `(status, r0)` reply.
+//! frame ring. Alongside fire-and-forget [`Dispatcher::send_to`] (and its
+//! batched forms [`Dispatcher::send_batch_to`] /
+//! [`Dispatcher::inject_batch_by_key`]) sits the invocation API:
+//! [`Dispatcher::invoke_begin`] injects a frame and returns a
+//! [`PendingReply`] handle *without* holding the link across the wait, so
+//! up to `ClusterConfig::max_inflight` invocations pipeline per worker;
+//! [`PendingReply::wait`] collects `(status, r0, payload)` — the payload
+//! carried inline in the reply frame, pushed by the injected function
+//! through `reply_put` / `db_get`.
 
-use crate::ifunc::{IfuncHandle, IfuncMsg, Reply, SourceArgs};
+use std::collections::BTreeSet;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::ifunc::{IfuncHandle, IfuncMsg, Reply, ReplyRing, SourceArgs, REPLY_SLOTS};
 use crate::{Error, Result};
 
 use super::worker::GET_MISSING;
@@ -25,6 +35,190 @@ use super::Cluster;
 /// and platforms (no per-process seed).
 pub fn route_key(key: u64, n_workers: usize) -> usize {
     (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % n_workers.max(1)
+}
+
+/// Per-worker-link invocation window. Two guarantees, both needed to keep
+/// an unread invocation reply from being lapped (the worker answers
+/// *every* consumed frame, and the reply ring reuses a slot every
+/// `REPLY_SLOTS` frames):
+///
+/// * a **count** window: at most `max` invocations outstanding
+///   ([`InvokeWindow::acquire`] blocks past it), and
+/// * a **seq-distance** admission check on *every* frame sent — invoke or
+///   fire-and-forget — ([`InvokeWindow::admit`]): delivery stalls while
+///   any uncollected invocation's reply slot would be overwritten.
+///
+/// Both waits are bounded by `ClusterConfig::reply_timeout` and surface
+/// `Error::Transport` naming what is stuck, so a single-threaded caller
+/// that over-issues invocations (or interleaves ≥ `REPLY_SLOTS` sends
+/// behind an uncollected reply) gets an error, never a silent deadlock or
+/// a corrupted reply. Pure fire-and-forget traffic pays only one relaxed
+/// atomic load per send ([`InvokeWindow::admit`]'s fast path).
+pub(crate) struct InvokeWindow {
+    max: usize,
+    /// `awaiting.len()` mirror for the lock-free admit fast path. Reads
+    /// under the link lock are exact: `track` runs before the link lock
+    /// is released, so the lock's synchronizes-with edge publishes it.
+    awaiting_count: std::sync::atomic::AtomicUsize,
+    state: Mutex<WindowState>,
+    freed: Condvar,
+}
+
+#[derive(Default)]
+struct WindowState {
+    /// Invocations begun but not yet collected (count window).
+    inflight: usize,
+    /// Total releases ever — progress evidence for starved `acquire`
+    /// waiters (under contention `inflight` can read as pinned at `max`
+    /// at every wakeup even while slots turn over continuously).
+    releases: u64,
+    /// Reply seqs of sent-but-uncollected invocations (lap guard).
+    awaiting: BTreeSet<u64>,
+}
+
+impl InvokeWindow {
+    pub(crate) fn new(max: usize) -> Self {
+        InvokeWindow {
+            max,
+            awaiting_count: std::sync::atomic::AtomicUsize::new(0),
+            state: Mutex::new(WindowState::default()),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// Claim an invocation slot; blocks while `max` are outstanding and
+    /// errors after `timeout` without progress. Progress is the release
+    /// *generation*, not the observed count — under contention the count
+    /// can read as pinned at `max` at every wakeup even while slots turn
+    /// over, and churn must not be mistaken for a stuck window.
+    fn acquire(&self, timeout: Option<Duration>) -> std::result::Result<(), String> {
+        let mut st = self.state.lock().unwrap();
+        let mut deadline = timeout.map(|d| Instant::now() + d);
+        let mut last_releases = st.releases;
+        loop {
+            if st.inflight < self.max {
+                st.inflight += 1;
+                return Ok(());
+            }
+            if last_releases != st.releases {
+                last_releases = st.releases;
+                deadline = timeout.map(|d| Instant::now() + d);
+            }
+            if let Some(d) = deadline {
+                if Instant::now() > d {
+                    return Err(format!(
+                        "invocation window full ({} outstanding, max_inflight {}); \
+                         wait on or drop a PendingReply",
+                        st.inflight, self.max
+                    ));
+                }
+            }
+            let (g, _) = self.freed.wait_timeout(st, Duration::from_millis(1)).unwrap();
+            st = g;
+        }
+    }
+
+    /// Record a begun invocation's reply seq (after its frame was sent).
+    fn track(&self, seq: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.awaiting.insert(seq);
+        self.awaiting_count.store(st.awaiting.len(), std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Release one invocation slot; `seq` is its tracked reply seq (None
+    /// when the frame never went out).
+    fn release(&self, seq: Option<u64>) {
+        let mut st = self.state.lock().unwrap();
+        st.inflight -= 1;
+        st.releases += 1;
+        if let Some(s) = seq {
+            st.awaiting.remove(&s);
+            self.awaiting_count.store(st.awaiting.len(), std::sync::atomic::Ordering::Relaxed);
+        }
+        drop(st);
+        self.freed.notify_all();
+    }
+
+    /// Block until frames through `end_seq` can be delivered without
+    /// lapping any awaited reply (reply `T` overwrites reply `S`'s slot
+    /// iff `T >= S + REPLY_SLOTS`). The deadline resets whenever the
+    /// oldest awaited seq changes (progress), and expires with a message
+    /// naming the blocking invocation. With nothing awaited — all
+    /// fire-and-forget traffic — this is one relaxed load, no lock.
+    fn admit(&self, end_seq: u64, timeout: Option<Duration>) -> std::result::Result<(), String> {
+        if self.awaiting_count.load(std::sync::atomic::Ordering::Relaxed) == 0 {
+            return Ok(());
+        }
+        let mut st = self.state.lock().unwrap();
+        let mut deadline = timeout.map(|d| Instant::now() + d);
+        let mut last_oldest = None;
+        loop {
+            let Some(&oldest) = st.awaiting.iter().next() else { return Ok(()) };
+            if end_seq.saturating_sub(oldest) < REPLY_SLOTS as u64 {
+                return Ok(());
+            }
+            if last_oldest != Some(oldest) {
+                last_oldest = Some(oldest);
+                deadline = timeout.map(|d| Instant::now() + d);
+            }
+            if let Some(d) = deadline {
+                if Instant::now() > d {
+                    return Err(format!(
+                        "delivering frame seq {end_seq} would lap the unread reply for \
+                         invocation seq {oldest}; wait on or drop its PendingReply"
+                    ));
+                }
+            }
+            let (g, _) = self.freed.wait_timeout(st, Duration::from_millis(1)).unwrap();
+            st = g;
+        }
+    }
+}
+
+/// A not-yet-collected invocation: records the frame seq at send time and
+/// waits on the link's reply ring directly — no link lock held, so other
+/// invocations (and fire-and-forget sends) proceed concurrently on the
+/// same worker. Dropping the handle without waiting releases its window
+/// slot (the reply, when it arrives, simply goes unread).
+pub struct PendingReply {
+    replies: ReplyRing,
+    seq: u64,
+    worker: usize,
+    window: Arc<InvokeWindow>,
+    released: bool,
+}
+
+impl PendingReply {
+    /// The frame sequence number this handle waits for (1-based, per link).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// The worker index the invocation targeted.
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Block for the reply frame: `(status, r0, payload)`. A worker that
+    /// died mid-invoke surfaces as [`Error::Transport`] naming this worker
+    /// once `ClusterConfig::reply_timeout` expires without progress.
+    pub fn wait(mut self) -> Result<Reply> {
+        let out = self.replies.wait(self.seq).map_err(|e| match e {
+            Error::Transport(m) => Error::Transport(format!("worker {}: {m}", self.worker)),
+            other => other,
+        });
+        self.released = true;
+        self.window.release(Some(self.seq));
+        out
+    }
+}
+
+impl Drop for PendingReply {
+    fn drop(&mut self) {
+        if !self.released {
+            self.window.release(Some(self.seq));
+        }
+    }
 }
 
 pub struct Dispatcher<'c> {
@@ -46,56 +240,95 @@ impl<'c> Dispatcher<'c> {
         self.cluster.leader.register_ifunc(name)
     }
 
+    fn worker(&self, worker: usize) -> Result<&super::WorkerHandle> {
+        self.cluster
+            .workers
+            .get(worker)
+            .ok_or_else(|| Error::Other(format!("no worker {worker}")))
+    }
+
     /// Inject a prebuilt message to a specific worker (flow-controlled,
     /// non-blocking delivery; completion via [`Dispatcher::flush`]).
     pub fn send_to(&self, worker: usize, msg: &IfuncMsg) -> Result<()> {
-        let w = self
-            .cluster
-            .workers
-            .get(worker)
-            .ok_or_else(|| Error::Other(format!("no worker {worker}")))?;
-        w.link.lock().unwrap().send_frame(msg)
+        let w = self.worker(worker)?;
+        let mut link = w.link.lock().unwrap();
+        w.window
+            .admit(link.frames_sent() + 1, w.reply_timeout)
+            .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
+        link.send_frame(msg)
     }
 
-    /// Inject a message and block for the injected function's reply: the
-    /// `(seq, status, r0)` slot the worker writes after executing (or
-    /// rejecting) the frame. Holding the link across the wait serializes
-    /// invocations per worker. For invocations whose injected code writes
-    /// the worker's result region (`db_get`), use
-    /// [`Dispatcher::invoke_get`] — the region must be read under the
-    /// same lock.
-    pub fn invoke(&self, worker: usize, msg: &IfuncMsg) -> Result<Reply> {
-        let w = self
-            .cluster
-            .workers
-            .get(worker)
-            .ok_or_else(|| Error::Other(format!("no worker {worker}")))?;
+    /// Deliver a batch of frames to one worker through the transport's
+    /// coalesced path (one credit reservation + one flush on the ring;
+    /// back-to-back posts + one flush over AM).
+    pub fn send_batch_to(&self, worker: usize, msgs: &[IfuncMsg]) -> Result<()> {
+        if msgs.is_empty() {
+            return Ok(());
+        }
+        let w = self.worker(worker)?;
         let mut link = w.link.lock().unwrap();
-        link.send_frame(msg)?;
-        link.flush()?;
-        let seq = link.frames_sent();
-        link.replies().wait(seq)
+        w.window
+            .admit(link.frames_sent() + msgs.len() as u64, w.reply_timeout)
+            .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
+        link.send_batch(msgs)
+    }
+
+    /// Begin an invocation: inject `msg`, record its frame seq, and
+    /// release the link immediately. The returned [`PendingReply`] waits
+    /// for the payload-carrying reply frame without the link lock, so up
+    /// to `ClusterConfig::max_inflight` invocations pipeline per worker
+    /// (the call blocks while the window is full).
+    pub fn invoke_begin(&self, worker: usize, msg: &IfuncMsg) -> Result<PendingReply> {
+        fn send_locked(w: &super::WorkerHandle, worker: usize, msg: &IfuncMsg) -> Result<u64> {
+            // The link lock covers only delivery; it is released before
+            // the reply wait, which is what lets invocations pipeline.
+            let mut link = w.link.lock().unwrap();
+            w.window
+                .admit(link.frames_sent() + 1, w.reply_timeout)
+                .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
+            link.send_frame(msg)?;
+            link.flush()?;
+            let seq = link.frames_sent();
+            w.window.track(seq);
+            Ok(seq)
+        }
+        let w = self.worker(worker)?;
+        w.window
+            .acquire(w.reply_timeout)
+            .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
+        match send_locked(w, worker, msg) {
+            Ok(seq) => Ok(PendingReply {
+                replies: w.replies.clone(),
+                seq,
+                worker,
+                window: w.window.clone(),
+                released: false,
+            }),
+            Err(e) => {
+                w.window.release(None);
+                Err(e)
+            }
+        }
+    }
+
+    /// Inject a message and block for the injected function's reply frame
+    /// — [`Dispatcher::invoke_begin`] + [`PendingReply::wait`] in one
+    /// call. `reply.payload` carries whatever the function pushed through
+    /// `reply_put` / `db_get`.
+    pub fn invoke(&self, worker: usize, msg: &IfuncMsg) -> Result<Reply> {
+        self.invoke_begin(worker, msg)?.wait()
     }
 
     /// [`Dispatcher::invoke`] for record-returning ifuncs (`GetIfunc`):
-    /// waits for the reply and copies the worker's result region *before
-    /// releasing the link lock*, so a concurrent invocation to the same
-    /// worker cannot overwrite the region between the reply and the read.
-    /// The data vec is empty unless the reply is ok and `r0` is a length
-    /// (not [`GET_MISSING`]).
+    /// decodes the inline reply payload as f32 record elements. The data
+    /// vec is empty unless the reply is ok and `r0` is a length (not
+    /// [`GET_MISSING`]); a record too large for the inline cap comes back
+    /// as an overflowed reply ([`Reply::overflowed`]) with `r0` = its
+    /// element count.
     pub fn invoke_get(&self, worker: usize, msg: &IfuncMsg) -> Result<(Reply, Vec<f32>)> {
-        let w = self
-            .cluster
-            .workers
-            .get(worker)
-            .ok_or_else(|| Error::Other(format!("no worker {worker}")))?;
-        let mut link = w.link.lock().unwrap();
-        link.send_frame(msg)?;
-        link.flush()?;
-        let seq = link.frames_sent();
-        let reply = link.replies().wait(seq)?;
-        let data = if reply.ok && reply.r0 != GET_MISSING {
-            w.result_f32s(reply.r0 as usize)
+        let reply = self.invoke(worker, msg)?;
+        let data = if reply.ok() && reply.r0 != GET_MISSING {
+            reply.payload_f32s()
         } else {
             Vec::new()
         };
@@ -116,6 +349,44 @@ impl<'c> Dispatcher<'c> {
         Ok(worker)
     }
 
+    /// Batched [`Dispatcher::inject_by_key`]: bucket the requests by owner
+    /// worker, post each bucket through the link's coalesced
+    /// [`crate::ifunc::IfuncTransport::post_batch`] — *without* waiting —
+    /// then flush every touched link once, so the per-worker transfers
+    /// overlap instead of paying one completion round-trip per bucket.
+    /// Returns each request's placement, in input order.
+    pub fn inject_batch_by_key(
+        &self,
+        handle: &IfuncHandle,
+        reqs: &[(u64, SourceArgs)],
+    ) -> Result<Vec<usize>> {
+        let n = self.cluster.workers.len();
+        let mut buckets: Vec<Vec<IfuncMsg>> = (0..n).map(|_| Vec::new()).collect();
+        let mut placed = Vec::with_capacity(reqs.len());
+        for (key, args) in reqs {
+            let worker = route_key(*key, n);
+            buckets[worker].push(handle.msg_create(args)?);
+            placed.push(worker);
+        }
+        for (worker, msgs) in buckets.iter().enumerate() {
+            if msgs.is_empty() {
+                continue;
+            }
+            let w = self.worker(worker)?;
+            let mut link = w.link.lock().unwrap();
+            w.window
+                .admit(link.frames_sent() + msgs.len() as u64, w.reply_timeout)
+                .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
+            link.post_batch(msgs)?;
+        }
+        for (worker, msgs) in buckets.iter().enumerate() {
+            if !msgs.is_empty() {
+                self.worker(worker)?.link.lock().unwrap().flush()?;
+            }
+        }
+        Ok(placed)
+    }
+
     /// Flush delivery to every worker.
     pub fn flush(&self) -> Result<()> {
         for w in &self.cluster.workers {
@@ -127,8 +398,11 @@ impl<'c> Dispatcher<'c> {
     /// Block until every worker has consumed everything sent so far.
     pub fn barrier(&self) -> Result<()> {
         self.flush()?;
-        for w in &self.cluster.workers {
-            w.link.lock().unwrap().wait_consumed()?;
+        for (i, w) in self.cluster.workers.iter().enumerate() {
+            w.link.lock().unwrap().wait_consumed().map_err(|e| match e {
+                Error::Transport(m) => Error::Transport(format!("worker {i}: {m}")),
+                other => other,
+            })?;
         }
         Ok(())
     }
@@ -211,6 +485,29 @@ mod tests {
     }
 
     #[test]
+    fn batch_injection_buckets_match_routing() {
+        let cluster = Cluster::launch(
+            ClusterConfig { workers: 3, ..Default::default() },
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(CounterIfunc::default()));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+        let d = cluster.dispatcher();
+        let h = d.register("counter").unwrap();
+        let reqs: Vec<(u64, SourceArgs)> =
+            (0..90u64).map(|k| (k, SourceArgs::bytes(vec![0u8; 32]))).collect();
+        let placed = d.inject_batch_by_key(&h, &reqs).unwrap();
+        d.barrier().unwrap();
+        assert_eq!(d.total_executed(), 90);
+        for (i, (key, _)) in reqs.iter().enumerate() {
+            assert_eq!(placed[i], d.route_key(*key));
+        }
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
     fn routing_is_deterministic() {
         let cluster = Cluster::launch(
             ClusterConfig { workers: 4, ..Default::default() },
@@ -253,6 +550,31 @@ mod tests {
         }
         d.barrier().unwrap();
         assert_eq!(d.total_executed(), 40);
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn batched_send_survives_tiny_ring_wraps() {
+        // send_batch must fall back to frame-at-a-time (and stay correct)
+        // when a batch cannot be coalesced into one reservation.
+        let cluster = Cluster::launch(
+            ClusterConfig { workers: 1, ring_bytes: 4096, ..Default::default() },
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(CounterIfunc::default()));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+        let d = cluster.dispatcher();
+        let h = d.register("counter").unwrap();
+        let batch: Vec<_> = (0..8)
+            .map(|i| h.msg_create(&SourceArgs::bytes(vec![0u8; 400 + i * 100])).unwrap())
+            .collect();
+        for _ in 0..25 {
+            d.send_batch_to(0, &batch).unwrap();
+        }
+        d.barrier().unwrap();
+        assert_eq!(d.total_executed(), 200);
         cluster.shutdown().unwrap();
     }
 

@@ -12,8 +12,12 @@
 //! routes messages *to where the data lives* (hash placement by record
 //! key) over a per-worker [`crate::ifunc::IfuncTransport`] link selected
 //! by [`ClusterConfig::transport`] — RDMA-PUT rings (§3) or AM
-//! send-receive (§5.1) — each carrying a reply ring for
-//! [`Dispatcher::invoke`].
+//! send-receive (§5.1). Each link carries a payload-carrying reply frame
+//! ring: [`Dispatcher::invoke_begin`] pipelines up to
+//! [`ClusterConfig::max_inflight`] invocations per worker and
+//! [`PendingReply::wait`] collects `(status, r0, payload)`; batched
+//! fire-and-forget delivery goes through
+//! [`Dispatcher::inject_batch_by_key`].
 
 pub mod apps;
 pub mod dispatcher;
@@ -22,7 +26,7 @@ pub mod telemetry;
 pub mod worker;
 
 pub use apps::{DecodeInsertIfunc, GetIfunc, InsertIfunc};
-pub use dispatcher::{route_key, Dispatcher};
+pub use dispatcher::{route_key, Dispatcher, PendingReply};
 pub use store::{install_db_symbols, RecordStore};
 pub use telemetry::{ClusterSnapshot, ContextSnapshot};
 pub use worker::{WorkerHandle, WorkerStats, GET_MISSING};
@@ -44,6 +48,15 @@ pub struct ClusterConfig {
     pub ring_bytes: usize,
     /// How frames travel leader → worker.
     pub transport: TransportKind,
+    /// Max outstanding invocations per worker link
+    /// ([`Dispatcher::invoke_begin`] blocks past this). Clamped to
+    /// `1..=REPLY_SLOTS` so reply-frame laps can never outrun readers.
+    pub max_inflight: usize,
+    /// How long a reply wait (`invoke`, `PendingReply::wait`, `barrier`)
+    /// spins before surfacing `Error::Transport` with the worker index —
+    /// a dead worker mid-invoke fails the leader instead of hanging it.
+    /// `None` waits forever.
+    pub reply_timeout: Option<std::time::Duration>,
     pub wire: WireConfig,
     pub ctx: ContextConfig,
 }
@@ -54,6 +67,8 @@ impl Default for ClusterConfig {
             workers: 2,
             ring_bytes: 4 << 20,
             transport: TransportKind::Ring,
+            max_inflight: 16,
+            reply_timeout: Some(std::time::Duration::from_secs(10)),
             wire: WireConfig::off(),
             ctx: ContextConfig::default(),
         }

@@ -10,7 +10,9 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use crate::ifunc::Symbols;
+use crate::ifunc::{Symbols, TargetArgs};
+
+use super::worker::GET_MISSING;
 
 /// Concurrent keyed store of f32 records.
 #[derive(Default)]
@@ -51,10 +53,18 @@ impl RecordStore {
     }
 }
 
-/// Install the `db_insert` symbol bound to `store` on a context's symbol
-/// table. ABI: `r1` = record key, `r2` = payload byte offset of the f32
-/// data, `r3` = number of f32 elements.
+/// Install the store-backed symbols on a context's symbol table:
+///
+/// * `db_insert(key, off, n)` — decode `n` f32s at payload byte offset
+///   `off` and insert them under `key`,
+/// * `db_get(key)` — look `key` up and push the record's bytes into the
+///   current invocation's **reply payload** (shipped inline in the reply
+///   frame), returning the element count in `r0` — or
+///   [`GET_MISSING`] when the key is absent. The record the sender reads
+///   back is produced *by the injected function on the worker*; there is
+///   no leader-side store access and no shared result region.
 pub fn install_db_symbols(symbols: &Symbols, store: Arc<RecordStore>) {
+    let s = store.clone();
     symbols.install_fn("db_insert", move |ctx, [key, off, n, _]| {
         let off = off as usize;
         let n = n as usize;
@@ -66,8 +76,24 @@ pub fn install_db_symbols(symbols: &Symbols, store: Arc<RecordStore>) {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
-        store.insert(key, data);
+        s.insert(key, data);
         Ok(0)
+    });
+    symbols.install_fn("db_get", move |ctx, [key, _, _, _]| {
+        match store.get(key) {
+            None => Ok(GET_MISSING),
+            Some(data) => {
+                let ta = ctx.user.downcast_mut::<TargetArgs>().ok_or_else(|| {
+                    "db_get: target args are not ifunc TargetArgs".to_string()
+                })?;
+                let mut bytes = Vec::with_capacity(data.len() * 4);
+                for v in &data {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                ta.push_reply(&bytes);
+                Ok(data.len() as u64)
+            }
+        }
     });
 }
 

@@ -11,30 +11,28 @@
 //!   progressed with other UCX operations").
 //!
 //! Both paths run the same execution engine and answer every consumed
-//! frame — executed or rejected — through the link's reply ring, which is
-//! what `Dispatcher::invoke` and `Dispatcher::barrier` wait on.
+//! frame — executed or rejected — with a payload-carrying reply frame:
+//! whatever the injected function pushed through `reply_put` / `db_get`
+//! travels inline, which is what `Dispatcher::invoke`, `PendingReply`,
+//! and `Dispatcher::barrier` wait on. There is no leader-side result
+//! region: invocation results are messages, not shared memory.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::fabric::{MemPerm, MemoryRegion};
 use crate::ifunc::am_transport::{execute_am_frame, IFUNC_AM_ID};
 use crate::ifunc::{
-    AmTransport, IfuncRing, IfuncTransport, ReplyRing, ReplyWriter, RingTransport, TargetArgs,
-    TransportKind,
+    AmTransport, IfuncRing, IfuncTransport, PollResult, ReplyRing, ReplyWriter, RingTransport,
+    TargetArgs, TransportKind, REPLY_SLOTS,
 };
 use crate::log;
 use crate::ucp::{Context, Worker as UcpWorker};
 use crate::{Error, Result};
 
+use super::dispatcher::InvokeWindow;
 use super::store::RecordStore;
 use super::ClusterConfig;
 
-/// Bytes of the per-worker leader-side result region the `db_get` symbol
-/// writes records into (see `install_result_symbols`).
-pub const RESULT_REGION_BYTES: usize = 64 << 10;
-/// Largest record (in f32 elements) `db_get` can return.
-pub const RESULT_MAX_ELEMS: usize = RESULT_REGION_BYTES / 4;
 /// `db_get`'s r0 when the key is absent.
 pub const GET_MISSING: u64 = u64::MAX;
 
@@ -53,45 +51,16 @@ pub struct WorkerHandle {
     pub stats: Arc<WorkerStats>,
     /// Leader-side delivery channel (transport-generic).
     pub(crate) link: Mutex<Box<dyn IfuncTransport>>,
-    /// Leader-side region this worker's `db_get` writes records into.
-    result: Arc<MemoryRegion>,
+    /// Leader-side view of the link's reply ring, shared with the
+    /// transport so `PendingReply::wait` runs without the link lock.
+    pub(crate) replies: ReplyRing,
+    /// Caps outstanding invocations on this link (`max_inflight`) and
+    /// guards every send against lapping an uncollected reply.
+    pub(crate) window: Arc<InvokeWindow>,
+    /// `ClusterConfig::reply_timeout`, for the window's admission check.
+    pub(crate) reply_timeout: Option<std::time::Duration>,
     shutdown: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<Result<()>>>,
-}
-
-/// Install the worker-side `db_get` symbol: looks `r1` up in `store` and,
-/// when present, ships the record's f32s over the fabric into the leader's
-/// result region, returning the element count (or [`GET_MISSING`]). The
-/// record the sender reads back is produced *by the injected function on
-/// the worker* — the reply path's answer to leader-side store access.
-fn install_result_symbols(
-    ctx: &Arc<Context>,
-    store: Arc<RecordStore>,
-    ep_back: Arc<crate::ucp::Endpoint>,
-    result_rkey: crate::fabric::RKey,
-) {
-    ctx.symbols().install_fn("db_get", move |_, [key, _, _, _]| {
-        match store.get(key) {
-            None => Ok(GET_MISSING),
-            Some(data) => {
-                if data.len() > RESULT_MAX_ELEMS {
-                    return Err(format!(
-                        "db_get: record of {} elems exceeds result region ({RESULT_MAX_ELEMS})",
-                        data.len()
-                    ));
-                }
-                let mut bytes = Vec::with_capacity(data.len() * 4);
-                for v in &data {
-                    bytes.extend_from_slice(&v.to_le_bytes());
-                }
-                // Same QP as the reply that will follow this frame: RC
-                // ordering guarantees the data lands before the reply's
-                // seq word, so a sender that saw the reply may read it.
-                ep_back.put_nbi(result_rkey, 0, &bytes).map_err(|e| e.to_string())?;
-                Ok(data.len() as u64)
-            }
-        }
-    });
 }
 
 impl WorkerHandle {
@@ -103,14 +72,13 @@ impl WorkerHandle {
         leader_worker: &Arc<UcpWorker>,
         config: &ClusterConfig,
     ) -> Result<WorkerHandle> {
-        // Leader-side reply + result regions; worker-side back endpoint.
-        let replies = ReplyRing::new(leader);
+        // Leader-side reply region; worker-side back endpoint.
+        let replies = ReplyRing::new(leader, config.reply_timeout);
         let reply_rkey = replies.rkey();
-        let result = leader.mem_map(RESULT_REGION_BYTES, MemPerm::RWX);
+        let window = Arc::new(InvokeWindow::new(config.max_inflight.clamp(1, REPLY_SLOTS)));
         let ucp_worker = UcpWorker::new(&ctx);
         let ep = leader_worker.connect(&ucp_worker)?;
         let ep_back = ucp_worker.connect(leader_worker)?;
-        install_result_symbols(&ctx, store.clone(), ep_back.clone(), result.rkey());
 
         let shutdown = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(WorkerStats::default());
@@ -120,14 +88,14 @@ impl WorkerHandle {
                 let ring = IfuncRing::new(&ctx, config.ring_bytes)?;
                 let ring_rkey = ring.rkey();
                 // Leader-side credit word; worker puts consumed-bytes into it.
-                let credit = leader.mem_map(64, MemPerm::RWX);
+                let credit = leader.mem_map(64, crate::fabric::MemPerm::RWX);
                 let credit_rkey = credit.rkey();
                 let transport = Box::new(RingTransport::new(
                     ep,
                     ring_rkey,
                     config.ring_bytes,
                     credit,
-                    replies,
+                    replies.clone(),
                 ));
                 let (ctx2, store2, stop2, stats2) =
                     (ctx.clone(), store.clone(), shutdown.clone(), stats.clone());
@@ -143,12 +111,13 @@ impl WorkerHandle {
                         loop {
                             let frames_before = ring.consumed;
                             let polled = ctx2.poll_ifunc(&mut ring, &mut args);
+                            let no_message = matches!(&polled, Ok(PollResult::NoMessage));
                             match &polled {
-                                Ok(crate::ifunc::PollResult::Executed) => {
+                                Ok(PollResult::Executed(_)) => {
                                     stats2.executed.fetch_add(1, Ordering::Relaxed);
                                     idle = 0;
                                 }
-                                Ok(crate::ifunc::PollResult::NoMessage) => {}
+                                Ok(PollResult::NoMessage) => {}
                                 Err(e) => {
                                     // A faulty ifunc is consumed and
                                     // reported, but must not take the
@@ -169,15 +138,21 @@ impl WorkerHandle {
                                     .put_signal(credit_rkey, 0, ring.consumed_bytes)?;
                                 last_credit = ring.consumed_bytes;
                             }
-                            // One reply per consumed *frame* (not markers),
-                            // whether it executed or was rejected.
+                            // One reply frame per consumed *frame* (not
+                            // markers), whether it executed or was
+                            // rejected; executed frames carry the bytes
+                            // the injected function pushed.
                             if ring.consumed > frames_before {
-                                let ok =
-                                    matches!(polled, Ok(crate::ifunc::PollResult::Executed));
-                                let r0 = if ok { args.last_return.unwrap_or(0) } else { 0 };
-                                replies.push(ok, r0)?;
+                                match polled {
+                                    Ok(PollResult::Executed(out)) => {
+                                        replies.push(true, out.ret, &out.reply)?;
+                                    }
+                                    _ => {
+                                        replies.push(false, 0, &[])?;
+                                    }
+                                }
                             }
-                            if matches!(polled, Ok(crate::ifunc::PollResult::NoMessage)) {
+                            if no_message {
                                 if stop2.load(Ordering::Acquire) {
                                     ep_back2.qp().flush()?;
                                     return Ok(());
@@ -191,7 +166,7 @@ impl WorkerHandle {
                 (transport, thread)
             }
             TransportKind::Am => {
-                let transport = Box::new(AmTransport::new(ep, replies));
+                let transport = Box::new(AmTransport::new(ep, replies.clone()));
                 // The AM handler owns the reply writer and target args;
                 // it runs on the progress thread below.
                 let target_args =
@@ -201,18 +176,19 @@ impl WorkerHandle {
                 let (ctx2, stats2) = (ctx.clone(), stats.clone());
                 let rw = reply_writer.clone();
                 ucp_worker.set_am_handler(IFUNC_AM_ID, move |_, frame| {
-                    let (ok, r0) = match execute_am_frame(&ctx2, frame, &target_args) {
+                    let (ok, r0, payload) = match execute_am_frame(&ctx2, frame, &target_args)
+                    {
                         Ok(out) => {
                             stats2.executed.fetch_add(1, Ordering::Relaxed);
-                            (true, out.ret)
+                            (true, out.ret, out.reply)
                         }
                         Err(e) => {
                             stats2.failed.fetch_add(1, Ordering::Relaxed);
                             log::error!("worker {index}: ifunc failed: {e}");
-                            (false, 0)
+                            (false, 0, Vec::new())
                         }
                     };
-                    if let Err(e) = rw.lock().unwrap().push(ok, r0) {
+                    if let Err(e) = rw.lock().unwrap().push(ok, r0, &payload) {
                         log::error!("worker {index}: reply push failed: {e}");
                     }
                 });
@@ -246,7 +222,9 @@ impl WorkerHandle {
             store,
             stats,
             link: Mutex::new(transport),
-            result,
+            replies,
+            window,
+            reply_timeout: config.reply_timeout,
             shutdown,
             thread: Some(thread),
         })
@@ -255,16 +233,6 @@ impl WorkerHandle {
     /// Executed-message count (leader-visible).
     pub fn executed(&self) -> u64 {
         self.stats.executed.load(Ordering::Acquire)
-    }
-
-    /// Read the first `n` f32s of this worker's leader-side result region
-    /// (valid after an `invoke` whose injected code called `db_get`).
-    pub fn result_f32s(&self, n: usize) -> Vec<f32> {
-        let n = n.min(RESULT_MAX_ELEMS);
-        self.result.local_slice()[..n * 4]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect()
     }
 
     /// Signal shutdown and join the receive thread.

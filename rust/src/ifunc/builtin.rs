@@ -8,6 +8,8 @@
 //!   injected code runs with an *empty* GOT.
 //! * [`ChecksumIfunc`] — sums payload bytes in bytecode and reports the
 //!   result through a GOT call (`record_result`).
+//! * [`EchoIfunc`] — pushes its payload into the reply frame via
+//!   `reply_put`: the smallest payload-returning invocation.
 
 use crate::vm::Assembler;
 use crate::Result;
@@ -141,6 +143,39 @@ impl IfuncLibrary for ChecksumIfunc {
         a.bind(done);
         a.mov(1, 7);
         a.call("record_result");
+        a.halt();
+        let (vm_code, imports) = a.assemble();
+        CodeImage { imports, vm_code, hlo: vec![] }
+    }
+}
+
+/// Echo the whole payload back through the reply frame: `main` calls
+/// `reply_put(0, payload_len)` through the GOT, so the invocation's reply
+/// carries the payload bytes inline and `r0` is the reply length. The
+/// minimal payload-carrying *invocation* (vs the fire-and-forget
+/// builtins above) — used by the pipelined-invoke tests and benches to
+/// check per-seq payload integrity under concurrency.
+#[derive(Default)]
+pub struct EchoIfunc;
+
+impl IfuncLibrary for EchoIfunc {
+    fn name(&self) -> &str {
+        "echo"
+    }
+
+    fn payload_get_max_size(&self, source_args: &SourceArgs) -> usize {
+        source_args.len()
+    }
+
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+        copy_payload(payload, source_args)
+    }
+
+    fn code(&self) -> CodeImage {
+        let mut a = Assembler::new();
+        a.ldi(1, 0); // r1 = payload offset
+        a.paylen(2); // r2 = length
+        a.call("reply_put"); // r0 = accumulated reply bytes
         a.halt();
         let (vm_code, imports) = a.assemble();
         CodeImage { imports, vm_code, hlo: vec![] }

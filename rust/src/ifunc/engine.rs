@@ -36,7 +36,7 @@ use super::message::{CodeImage, Header};
 use super::TargetArgs;
 
 /// Structured result of executing one ifunc frame.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ExecOutcome {
     /// `r0` of the injected main at `HALT` — the function's return value
     /// (what the reply path carries back to the sender).
@@ -46,6 +46,10 @@ pub struct ExecOutcome {
     /// Whether the verified-program cache satisfied this frame (link and
     /// verify both skipped).
     pub cache_hit: bool,
+    /// Bytes the injected function queued for the reply frame through the
+    /// `reply_put` / `db_get` host symbols (empty when it pushed nothing).
+    /// The worker's reply writer ships these inline back to the sender.
+    pub reply: Vec<u8>,
 }
 
 impl Context {
@@ -117,10 +121,14 @@ impl Context {
             self.icache_stats(),
         );
 
-        // Stage 7: invoke main(payload, payload_size, target_args).
+        // Stage 7: invoke main(payload, payload_size, target_args). The
+        // reply accumulator starts empty per invocation; whatever the
+        // injected code pushed (via `reply_put` / `db_get`) is drained
+        // into the outcome for the caller's reply writer.
         let pay_start = header.payload_offset as usize;
         let pay_end = pay_start + header.payload_len as usize;
         target_args.hlo_name = linked.has_hlo.then(|| header.name.clone());
+        target_args.reply.clear();
         let outcome = vm::run(
             &linked.prog,
             &linked.got,
@@ -130,8 +138,9 @@ impl Context {
         );
         target_args.hlo_name = None;
         target_args.last_return = outcome.as_ref().map(|o| o.ret).ok();
+        let reply = std::mem::take(&mut target_args.reply);
         let o = outcome?;
-        Ok(ExecOutcome { ret: o.ret, steps: o.steps, cache_hit })
+        Ok(ExecOutcome { ret: o.ret, steps: o.steps, cache_hit, reply })
     }
 }
 
@@ -186,6 +195,25 @@ mod tests {
         let out = c.execute_frame(&h2, &mut f2, &mut args).unwrap();
         assert!(!out.cache_hit, "changed code relinks");
         assert_eq!(c.symbols().counter_value(), 2);
+    }
+
+    #[test]
+    fn exec_outcome_carries_reply_payload() {
+        use crate::ifunc::builtin::EchoIfunc;
+        let c = ctx();
+        let code = EchoIfunc.code();
+        let payload = *b"echo me back";
+        let (h, mut frame) = frame_for(&code, &payload);
+        let mut args = TargetArgs::none();
+        let out = c.execute_frame(&h, &mut frame, &mut args).unwrap();
+        assert_eq!(out.reply, payload.to_vec());
+        assert_eq!(out.ret, payload.len() as u64);
+        // The accumulator was drained into the outcome, not left behind.
+        assert!(args.reply.is_empty());
+        // A following non-replying frame must not inherit stale bytes.
+        let (h2, mut f2) = frame_for(&CounterIfunc::default().code(), &[0u8; 8]);
+        let out2 = c.execute_frame(&h2, &mut f2, &mut args).unwrap();
+        assert!(out2.reply.is_empty());
     }
 
     #[test]

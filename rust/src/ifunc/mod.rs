@@ -22,10 +22,14 @@
 //!   [`ExecOutcome`],
 //! * [`transport`] — the sender half behind [`IfuncTransport`]:
 //!   [`RingTransport`] is the paper's §3.3 RDMA-PUT ring,
-//!   [`AmTransport`] is the §5.1 send-receive successor,
-//! * [`reply`] — a per-worker reply ring carrying `(seq, status, r0)`
-//!   back to the sender, upgrading fire-and-forget injection to
-//!   invocation (`Dispatcher::invoke`),
+//!   [`AmTransport`] is the §5.1 send-receive successor; both take
+//!   multi-frame batches through [`IfuncTransport::send_batch`],
+//! * [`reply`] — a per-worker ring of payload-carrying reply *frames*
+//!   (`[payload][r0][payload_len][status][seq]`, seq written last — the
+//!   same §3.4 trailer-signal ordering data frames use), upgrading
+//!   fire-and-forget injection to invocation: injected code fills the
+//!   payload through the `reply_put` / `db_get` host symbols and the
+//!   sender collects it via `Dispatcher::invoke` / `PendingReply::wait`,
 //! * [`cache`] — §3.4's hash table, extended to cache the *verified
 //!   program* so repeat injections skip the bytecode verifier entirely.
 
@@ -48,7 +52,7 @@ pub use library::{HloIfuncLibrary, IfuncLibrary, LibraryDir, SourceArgs};
 pub use message::{CodeImage, IfuncMsg, IfuncMsgParams};
 pub use poll::PollResult;
 pub use registry::IfuncHandle;
-pub use reply::{Reply, ReplyRing, ReplyWriter};
+pub use reply::{Reply, ReplyRing, ReplyWriter, REPLY_INLINE_CAP, REPLY_SLOTS};
 pub use ring::{IfuncRing, SenderCursor};
 pub use transport::{AmTransport, IfuncTransport, RingTransport, TransportKind};
 
@@ -61,7 +65,8 @@ use crate::vm::SymbolTable;
 
 /// Target-process arguments handed to every invoked ifunc
 /// (`void *target_args` in Listing 1.1), plus the per-invocation bindings
-/// `ucp_poll_ifunc` stamps in (the HLO artifact name for `xla_exec`).
+/// `ucp_poll_ifunc` stamps in (the HLO artifact name for `xla_exec`, the
+/// reply-payload accumulator behind `reply_put`).
 pub struct TargetArgs {
     /// Application state (e.g. the `db_handler` of Listing 1.3).
     pub user: Box<dyn Any + Send>,
@@ -69,21 +74,34 @@ pub struct TargetArgs {
     pub(crate) hlo_name: Option<String>,
     /// `r0` of the last executed ifunc (diagnostics / tests).
     pub last_return: Option<u64>,
+    /// Reply-payload accumulator for the *current* invocation: host
+    /// symbols append here ([`TargetArgs::push_reply`]) and the engine
+    /// drains it into [`ExecOutcome::reply`] after `HALT`, from where the
+    /// worker's reply writer ships it inline to the sender.
+    pub(crate) reply: Vec<u8>,
 }
 
 impl TargetArgs {
     /// No application state.
     pub fn none() -> Self {
-        TargetArgs { user: Box::new(()), hlo_name: None, last_return: None }
+        TargetArgs { user: Box::new(()), hlo_name: None, last_return: None, reply: Vec::new() }
     }
 
     pub fn new(user: Box<dyn Any + Send>) -> Self {
-        TargetArgs { user, hlo_name: None, last_return: None }
+        TargetArgs { user, hlo_name: None, last_return: None, reply: Vec::new() }
     }
 
     /// Downcast the application state.
     pub fn user_as<T: 'static>(&mut self) -> Option<&mut T> {
         self.user.downcast_mut::<T>()
+    }
+
+    /// Append bytes to the current invocation's reply payload (what the
+    /// `reply_put` and `db_get` host symbols call). Bytes accumulate
+    /// across calls within one invocation; whether they fit the reply
+    /// frame's inline cap is the reply writer's concern.
+    pub fn push_reply(&mut self, bytes: &[u8]) {
+        self.reply.extend_from_slice(bytes);
     }
 }
 
@@ -101,6 +119,8 @@ impl Symbols {
     /// Standard bindings:
     /// * `counter_add(n)` — the §4.1 benchmark counter,
     /// * `record_result(v)` — stores `v` (checksums etc.),
+    /// * `reply_put(off, len)` — append `payload[off..off+len]` to the
+    ///   invocation's reply payload (shipped inline in the reply frame),
     /// * `log(v)` — debug logging,
     /// * `xla_exec(...)` — run the current ifunc's HLO artifact via PJRT.
     pub fn with_builtins() -> Self {
@@ -110,6 +130,22 @@ impl Symbols {
         let c = counter.clone();
         table.install_fn("counter_add", move |_, args| {
             Ok(c.fetch_add(args[0], Ordering::Relaxed) + args[0])
+        });
+        table.install_fn("reply_put", |ctx, [off, len, _, _]| {
+            let (off, len) = (off as usize, len as usize);
+            let end = off
+                .checked_add(len)
+                .filter(|&e| e <= ctx.payload.len())
+                .ok_or_else(|| format!(
+                    "reply_put: {len} bytes at {off} outside payload of {}",
+                    ctx.payload.len()
+                ))?;
+            let ta = ctx
+                .user
+                .downcast_mut::<TargetArgs>()
+                .ok_or_else(|| "reply_put: target args are not ifunc TargetArgs".to_string())?;
+            ta.reply.extend_from_slice(&ctx.payload[off..end]);
+            Ok(ta.reply.len() as u64)
         });
         let r = results.clone();
         table.install_fn("record_result", move |_, args| {
@@ -168,6 +204,7 @@ mod tests {
     fn symbols_builtin_counter() {
         let s = Symbols::with_builtins();
         assert!(s.table().contains("counter_add"));
+        assert!(s.table().contains("reply_put"));
         assert!(s.table().contains("xla_exec"));
         assert_eq!(s.counter_value(), 0);
     }

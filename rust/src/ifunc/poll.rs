@@ -29,15 +29,17 @@ use std::time::{Duration, Instant};
 use crate::ucp::Context;
 use crate::{Error, Result};
 
+use super::engine::ExecOutcome;
 use super::message::{Header, HEADER_BYTES, MAGIC, WRAP_MAGIC};
 use super::ring::IfuncRing;
 use super::TargetArgs;
 
 /// Result of one poll call (`ucs_status_t`: `UCS_OK` vs `UCS_ERR_NO_MESSAGE`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PollResult {
-    /// A message was received, linked, and executed.
-    Executed,
+    /// A message was received, linked, and executed; the outcome carries
+    /// `r0` and any reply payload the injected function pushed.
+    Executed(ExecOutcome),
     /// No complete message at the cursor.
     NoMessage,
 }
@@ -136,8 +138,7 @@ impl Context {
         ring.mr().store_u64_release(cursor, 0)?;
         ring.mr().store_u64_release(trailer_off, 0)?;
         ring.advance(frame_len);
-        outcome?;
-        Ok(PollResult::Executed)
+        Ok(PollResult::Executed(outcome?))
     }
 
     /// Blocking receive helper: poll until one message executes
@@ -150,7 +151,7 @@ impl Context {
         let mut idle = 0u32;
         loop {
             match self.poll_ifunc(ring, target_args)? {
-                PollResult::Executed => return Ok(()),
+                PollResult::Executed(_) => return Ok(()),
                 PollResult::NoMessage => {
                     crate::fabric::wire::backoff(idle);
                     idle += 1;

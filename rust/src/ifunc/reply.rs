@@ -1,73 +1,139 @@
-//! The injection reply path: a small per-worker reply ring carrying
-//! `(seq, status, r0)` back to the sender.
+//! The invocation reply path: a per-worker ring of payload-carrying
+//! **reply frames** flowing target → sender.
 //!
 //! The paper's ifuncs are fire-and-forget; anything the injected function
-//! computes stays on the target. This module adds the missing half of an
-//! *invocation*: after the execution engine finishes frame `seq` (the
+//! computes stays on the target. This module is the missing half of an
+//! *invocation* (§5): after the execution engine finishes frame `seq` (the
 //! `seq`-th frame delivered on the link, counting executed **and**
-//! rejected frames), the worker writes one fixed-size slot into a
-//! leader-mapped reply region with a one-sided put — the same mechanism
-//! frames travel by, just pointed back at the sender. The slot layout is
+//! rejected frames), the worker writes one reply frame into a
+//! leader-mapped reply region with one-sided puts — the same mechanism
+//! data frames travel by, just pointed back at the sender. Each frame
+//! occupies a fixed [`REPLY_FRAME_BYTES`] slot so the reader can find
+//! frame `seq` without parsing the stream, but carries a *variable*
+//! payload of up to [`REPLY_INLINE_CAP`] bytes:
 //!
 //! ```text
-//!  | r0     | 8 B   injected main's return value (0 when rejected)
-//!  | status | 8 B   1 = executed, 2 = rejected
-//!  | seq    | 8 B   frame sequence number, written last
+//!  | payload      | REPLY_INLINE_CAP B   reply bytes (first payload_len valid)
+//!  | r0           | 8 B   injected main's return value (0 when rejected)
+//!  | payload_len  | 8 B   valid payload bytes (0 on overflow/failure)
+//!  | status       | 8 B   1 = ok, 2 = rejected, 3 = payload overflow
+//!  | seq          | 8 B   frame sequence number, written last
 //! ```
 //!
 //! `seq` is the arrival barrier: the fabric delivers the final word of a
-//! put last (the trailer-signal property of §3.4), so once the reader
-//! observes `seq` in a slot, `r0` and `status` are valid. Slots are reused
-//! modulo [`REPLY_SLOTS`]; because the full 64-bit seq is stored, a reader
-//! that waited too long detects the overwrite instead of misreading.
+//! put last (the trailer-signal property of §3.4), and the trailer put is
+//! issued *after* the payload put on the same in-order QP, so once the
+//! reader observes `seq` in a slot, every other field — payload included —
+//! has landed. Slots are reused modulo [`REPLY_SLOTS`]; the writer runs a
+//! seqlock protocol (zero the seq word, write payload + trailer, publish
+//! the new seq last), and because the full 64-bit seq is stored, a reader
+//! that waited too long detects the overwrite — before or mid-copy —
+//! instead of misreading a later lap's payload.
+//!
+//! A reply payload larger than [`REPLY_INLINE_CAP`] is not truncated: the
+//! frame ships with [`STATUS_OVERFLOW`], an empty payload, and the
+//! injected function's `r0` intact — for `db_get` that is the old
+//! r0-as-length behavior, telling the caller how big the record it could
+//! not inline is.
 //!
 //! Both transports share this channel — it doubles as the completion
 //! credit `Dispatcher::barrier` waits on (the reply for the last frame
 //! sent implies, by in-order delivery, that every frame was consumed).
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::fabric::{MemPerm, MemoryRegion, RKey};
 use crate::ucp::{Context, Endpoint};
 use crate::{Error, Result};
 
-/// Slots in a reply ring. Replies are read promptly (an `invoke` waits for
-/// its own seq; `barrier` waits for the last), so a small ring suffices.
-pub const REPLY_SLOTS: usize = 256;
-/// Bytes per slot: `[r0 u64][status u64][seq u64]`.
-pub const REPLY_SLOT_BYTES: usize = 24;
+/// Frames in a reply ring. Replies are read promptly (an `invoke` waits
+/// for its own seq, `barrier` for the last, and the coordinator caps
+/// outstanding invocations at `ClusterConfig::max_inflight <= REPLY_SLOTS`
+/// so invocation replies cannot lap their readers).
+pub const REPLY_SLOTS: usize = 64;
+/// Largest payload a reply frame carries inline — sized to the largest
+/// record the deleted leader-side result region could return (64 KiB =
+/// 16384 f32s), so the refactor sheds no capability. Bigger results ship
+/// as [`STATUS_OVERFLOW`] with `r0` intact (for `db_get`: the record
+/// length).
+pub const REPLY_INLINE_CAP: usize = 64 << 10;
+/// Trailer: `[r0 u64][payload_len u64][status u64][seq u64]`.
+pub const REPLY_TRAILER_BYTES: usize = 32;
+/// Bytes per reply frame slot.
+pub const REPLY_FRAME_BYTES: usize = REPLY_INLINE_CAP + REPLY_TRAILER_BYTES;
 /// Total reply-region bytes.
-pub const REPLY_REGION_BYTES: usize = REPLY_SLOTS * REPLY_SLOT_BYTES;
+pub const REPLY_REGION_BYTES: usize = REPLY_SLOTS * REPLY_FRAME_BYTES;
 
 /// Frame executed to completion; `r0` is the injected main's return value.
 pub const STATUS_OK: u64 = 1;
 /// Frame consumed but rejected (decode/link/verify/runtime failure).
 pub const STATUS_FAILED: u64 = 2;
+/// Frame executed, but its reply payload exceeded [`REPLY_INLINE_CAP`]:
+/// the payload is dropped and only `r0` (for `db_get`: the length the
+/// caller asked about) comes back.
+pub const STATUS_OVERFLOW: u64 = 3;
 
-/// One injection's reply.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One invocation's reply: status + `r0` + the inline payload the injected
+/// function pushed via the `reply_put` / `db_get` host symbols.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Reply {
     /// Sequence number of the frame this reply answers (1-based).
     pub seq: u64,
-    /// Whether the injected function ran to completion.
-    pub ok: bool,
+    /// [`STATUS_OK`], [`STATUS_FAILED`], or [`STATUS_OVERFLOW`].
+    pub status: u64,
     /// `r0` at `HALT` (0 when the frame was rejected).
     pub r0: u64,
+    /// Inline reply payload (empty unless the injected function pushed
+    /// bytes and they fit [`REPLY_INLINE_CAP`]).
+    pub payload: Vec<u8>,
+}
+
+impl Reply {
+    /// Whether the injected function ran to completion (overflowed replies
+    /// did run, but report [`STATUS_OVERFLOW`] so the payload loss is
+    /// visible — they are *not* `ok`).
+    pub fn ok(&self) -> bool {
+        self.status == STATUS_OK
+    }
+
+    /// Whether the function executed but its reply payload exceeded
+    /// [`REPLY_INLINE_CAP`].
+    pub fn overflowed(&self) -> bool {
+        self.status == STATUS_OVERFLOW
+    }
+
+    /// Decode the payload as little-endian f32s (record bytes from
+    /// `db_get`); trailing partial words are ignored.
+    pub fn payload_f32s(&self) -> Vec<f32> {
+        self.payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
 }
 
 fn slot_off(seq: u64) -> usize {
-    ((seq - 1) as usize % REPLY_SLOTS) * REPLY_SLOT_BYTES
+    ((seq - 1) as usize % REPLY_SLOTS) * REPLY_FRAME_BYTES
 }
 
-/// Sender-side reply ring: a mapped region the worker puts slots into.
+/// Sender-side reply ring: a mapped region the worker puts frames into.
+/// Cheap to clone (the mapping is shared) so `PendingReply` handles can
+/// wait on it without holding any link lock.
+#[derive(Clone)]
 pub struct ReplyRing {
     mr: Arc<MemoryRegion>,
+    /// How long [`ReplyRing::wait`] spins before declaring the worker dead
+    /// (`None` = forever).
+    timeout: Option<Duration>,
 }
 
 impl ReplyRing {
-    /// Map a reply region on `ctx` (the sender/leader side).
-    pub fn new(ctx: &Context) -> Self {
-        ReplyRing { mr: ctx.mem_map(REPLY_REGION_BYTES, MemPerm::RWX) }
+    /// Map a reply region on `ctx` (the sender/leader side). `timeout`
+    /// bounds every [`ReplyRing::wait`]: a worker that dies mid-invoke
+    /// surfaces as [`Error::Transport`] instead of hanging the leader.
+    pub fn new(ctx: &Context, timeout: Option<Duration>) -> Self {
+        ReplyRing { mr: ctx.mem_map(REPLY_REGION_BYTES, MemPerm::RWX), timeout }
     }
 
     /// The rkey the worker-side [`ReplyWriter`] puts into.
@@ -75,24 +141,65 @@ impl ReplyRing {
         self.mr.rkey()
     }
 
-    /// Spin until the reply for frame `seq` (1-based) arrives. Errors if
-    /// the slot was already overwritten by a later lap of the ring.
+    /// Spin until the reply frame for `seq` (1-based) arrives and copy it
+    /// out. Errors if the slot was overwritten by a later lap of the ring
+    /// (detected before *and* mid-copy via the seqlock word), or if the
+    /// configured timeout expires first. The timeout is progress-based:
+    /// any movement of the slot's seq word (a slow worker draining a
+    /// backlog laps this slot every `REPLY_SLOTS` frames) resets the
+    /// deadline, so only a worker making *no* observable progress is
+    /// declared dead.
     pub fn wait(&self, seq: u64) -> Result<Reply> {
         debug_assert!(seq > 0, "frame seqs are 1-based");
         let off = slot_off(seq);
+        let trailer = off + REPLY_INLINE_CAP;
+        let mut deadline = self.timeout.map(|d| Instant::now() + d);
+        let mut last_got: Option<u64> = None;
         let mut i = 0u32;
         loop {
-            // seq occupies the slot's final word, so it lands last.
-            let got = self.mr.load_u64_acquire(off + 16)?;
+            // seq occupies the frame's final word, so it lands last.
+            let got = self.mr.load_u64_acquire(trailer + 24)?;
+            if last_got != Some(got) {
+                last_got = Some(got);
+                deadline = self.timeout.map(|d| Instant::now() + d);
+            }
             if got == seq {
-                let r0 = self.mr.load_u64_acquire(off)?;
-                let status = self.mr.load_u64_acquire(off + 8)?;
-                return Ok(Reply { seq, ok: status == STATUS_OK, r0 });
+                let r0 = self.mr.load_u64_acquire(trailer)?;
+                let len = self.mr.load_u64_acquire(trailer + 8)? as usize;
+                let status = self.mr.load_u64_acquire(trailer + 16)?;
+                if len > REPLY_INLINE_CAP {
+                    return Err(Error::Transport(format!(
+                        "reply frame for seq {seq} corrupt: payload_len {len}"
+                    )));
+                }
+                let payload = self.mr.local_slice()[off..off + len].to_vec();
+                // Seqlock re-check: a lap writer zeroes the seq word before
+                // touching the slot, so a torn payload copy is detectable.
+                // The acquire fence is the reader half of that protocol
+                // (smp_rmb in a classic seqlock): it keeps the plain
+                // payload loads above from being reordered past the
+                // validating seq load below on weakly-ordered CPUs.
+                std::sync::atomic::fence(std::sync::atomic::Ordering::Acquire);
+                if self.mr.load_u64_acquire(trailer + 24)? != seq {
+                    return Err(Error::Transport(format!(
+                        "reply for frame {seq} overwritten mid-read"
+                    )));
+                }
+                return Ok(Reply { seq, status, r0, payload });
             }
             if got > seq {
                 return Err(Error::Transport(format!(
                     "reply for frame {seq} overwritten (slot now holds seq {got})"
                 )));
+            }
+            if let Some(d) = deadline {
+                if Instant::now() > d {
+                    return Err(Error::Transport(format!(
+                        "no reply-ring progress for {:?} while waiting for the reply \
+                         to frame {seq} (worker dead or stalled?)",
+                        self.timeout.unwrap_or_default()
+                    )));
+                }
             }
             crate::fabric::wire::backoff(i);
             i += 1;
@@ -115,14 +222,34 @@ impl ReplyWriter {
     }
 
     /// Record the outcome of the next consumed frame; returns its seq.
-    pub fn push(&mut self, ok: bool, r0: u64) -> Result<u64> {
+    /// `payload` rides inline when it fits [`REPLY_INLINE_CAP`]; larger
+    /// payloads are dropped and the frame ships [`STATUS_OVERFLOW`] with
+    /// `r0` intact. Three ordered puts on one QP: seqlock-invalidate the
+    /// slot, write the payload, publish the trailer (seq word last).
+    pub fn push(&mut self, ok: bool, r0: u64, payload: &[u8]) -> Result<u64> {
         self.seq += 1;
-        let mut slot = [0u8; REPLY_SLOT_BYTES];
-        slot[0..8].copy_from_slice(&r0.to_le_bytes());
-        slot[8..16]
-            .copy_from_slice(&(if ok { STATUS_OK } else { STATUS_FAILED }).to_le_bytes());
-        slot[16..24].copy_from_slice(&self.seq.to_le_bytes());
-        self.ep.put_nbi(self.rkey, slot_off(self.seq), &slot)?;
+        let off = slot_off(self.seq);
+        let trailer = off + REPLY_INLINE_CAP;
+        // Invalidate before overwrite: a reader mid-copy of the previous
+        // lap's payload re-checks the seq word and sees 0, not stale data.
+        self.ep.put_nbi(self.rkey, trailer + 24, &0u64.to_le_bytes())?;
+        let status = if !ok {
+            STATUS_FAILED
+        } else if payload.len() > REPLY_INLINE_CAP {
+            STATUS_OVERFLOW
+        } else {
+            STATUS_OK
+        };
+        let payload = if status == STATUS_OK { payload } else { &[] };
+        if !payload.is_empty() {
+            self.ep.put_nbi(self.rkey, off, payload)?;
+        }
+        let mut t = [0u8; REPLY_TRAILER_BYTES];
+        t[0..8].copy_from_slice(&r0.to_le_bytes());
+        t[8..16].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        t[16..24].copy_from_slice(&status.to_le_bytes());
+        t[24..32].copy_from_slice(&self.seq.to_le_bytes());
+        self.ep.put_nbi(self.rkey, trailer, &t)?;
         Ok(self.seq)
     }
 
@@ -143,25 +270,52 @@ mod tests {
     use crate::fabric::{Fabric, WireConfig};
     use crate::ucp::{ContextConfig, Worker};
 
-    fn pair() -> (ReplyRing, ReplyWriter) {
+    fn pair_with(timeout: Option<Duration>) -> (ReplyRing, ReplyWriter) {
         let f = Fabric::new(2, WireConfig::off());
         let leader = Context::new(f.node(0), ContextConfig::default()).unwrap();
         let worker = Context::new(f.node(1), ContextConfig::default()).unwrap();
         let wl = Worker::new(&leader);
         let ww = Worker::new(&worker);
-        let ring = ReplyRing::new(&leader);
+        let ring = ReplyRing::new(&leader, timeout);
         let ep = ww.connect(&wl).unwrap();
         let rkey = ring.rkey();
         (ring, ReplyWriter::new(ep, rkey))
     }
 
+    fn pair() -> (ReplyRing, ReplyWriter) {
+        pair_with(None)
+    }
+
     #[test]
-    fn reply_roundtrip_preserves_r0_and_status() {
+    fn reply_roundtrip_preserves_r0_status_and_payload() {
         let (ring, mut w) = pair();
-        w.push(true, 42).unwrap();
-        w.push(false, 0).unwrap();
-        assert_eq!(ring.wait(1).unwrap(), Reply { seq: 1, ok: true, r0: 42 });
-        assert_eq!(ring.wait(2).unwrap(), Reply { seq: 2, ok: false, r0: 0 });
+        w.push(true, 42, b"record bytes").unwrap();
+        w.push(false, 0, &[]).unwrap();
+        w.push(true, 7, &[]).unwrap();
+        let r1 = ring.wait(1).unwrap();
+        assert_eq!(
+            r1,
+            Reply { seq: 1, status: STATUS_OK, r0: 42, payload: b"record bytes".to_vec() }
+        );
+        assert!(r1.ok());
+        let r2 = ring.wait(2).unwrap();
+        assert_eq!(r2.status, STATUS_FAILED);
+        assert!(!r2.ok() && r2.payload.is_empty());
+        let r3 = ring.wait(3).unwrap();
+        assert!(r3.ok() && r3.payload.is_empty());
+        assert_eq!(r3.r0, 7);
+    }
+
+    #[test]
+    fn oversized_payload_ships_overflow_with_r0_intact() {
+        let (ring, mut w) = pair();
+        let big = vec![0xA5u8; REPLY_INLINE_CAP + 1];
+        w.push(true, big.len() as u64, &big).unwrap();
+        let r = ring.wait(1).unwrap();
+        assert!(r.overflowed() && !r.ok());
+        assert!(r.payload.is_empty());
+        // The old r0-as-length behavior: the caller learns the size.
+        assert_eq!(r.r0, (REPLY_INLINE_CAP + 1) as u64);
     }
 
     #[test]
@@ -169,13 +323,36 @@ mod tests {
         let (ring, mut w) = pair();
         // Two full laps: seq N and N + REPLY_SLOTS share a slot.
         for i in 0..(2 * REPLY_SLOTS as u64) {
-            w.push(true, i).unwrap();
+            w.push(true, i, &i.to_le_bytes()).unwrap();
         }
         w.flush().unwrap();
         let last = 2 * REPLY_SLOTS as u64;
-        assert_eq!(ring.wait(last).unwrap().r0, last - 1);
+        let r = ring.wait(last).unwrap();
+        assert_eq!(r.r0, last - 1);
+        assert_eq!(r.payload, (last - 1).to_le_bytes());
         // The first lap's replies are gone; waiting for one must error,
         // not hand back the second lap's payload.
         assert!(ring.wait(1).is_err());
+    }
+
+    #[test]
+    fn wait_times_out_when_no_reply_ever_arrives() {
+        let (ring, _w) = pair_with(Some(Duration::from_millis(30)));
+        let err = ring.wait(1).unwrap_err();
+        assert!(
+            matches!(&err, Error::Transport(m) if m.contains("no reply-ring progress")),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn payload_f32s_decodes_record_bytes() {
+        let r = Reply {
+            seq: 1,
+            status: STATUS_OK,
+            r0: 2,
+            payload: [1.5f32, -2.0].iter().flat_map(|v| v.to_le_bytes()).collect(),
+        };
+        assert_eq!(r.payload_f32s(), vec![1.5, -2.0]);
     }
 }

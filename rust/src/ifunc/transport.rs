@@ -10,9 +10,15 @@
 //! * [`AmTransport`] — ship each frame as the payload of the reserved
 //!   ifunc active message; the worker's `ucp_worker_progress` executes it.
 //!
+//! Both take multi-frame batches through [`IfuncTransport::send_batch`]:
+//! the ring coalesces a batch into **one** credit reservation (instead of
+//! one capacity wait per frame) and one flush, and the AM path posts the
+//! whole batch before a single flush — the seam `Dispatcher`'s
+//! `inject_batch_by_key` delivers per-worker buckets through.
+//!
 //! Every transport also owns the link's [`ReplyRing`]: the worker answers
-//! frame `seq` with `(seq, status, r0)`, which gives `invoke` its return
-//! path and `barrier` its completion credit.
+//! frame `seq` with a payload-carrying reply frame, which gives `invoke`
+//! its return path and `barrier` its completion credit.
 
 use std::sync::Arc;
 
@@ -30,6 +36,25 @@ pub trait IfuncTransport: Send {
     /// Flow-controlled, non-blocking delivery of one frame. Completion is
     /// observed via [`IfuncTransport::flush`]; execution via the replies.
     fn send_frame(&mut self, msg: &IfuncMsg) -> Result<()>;
+
+    /// Post a batch of frames without waiting for completion, so batches
+    /// to *different* links can overlap (a later [`IfuncTransport::flush`]
+    /// observes completion). The default posts frame-at-a-time;
+    /// transports override to amortize per-frame costs (the ring
+    /// coalesces the batch's credit reservation into one wait).
+    fn post_batch(&mut self, msgs: &[IfuncMsg]) -> Result<()> {
+        for msg in msgs {
+            self.send_frame(msg)?;
+        }
+        Ok(())
+    }
+
+    /// Deliver a batch of frames with one flush at the end:
+    /// [`IfuncTransport::post_batch`] + [`IfuncTransport::flush`].
+    fn send_batch(&mut self, msgs: &[IfuncMsg]) -> Result<()> {
+        self.post_batch(msgs)?;
+        self.flush()
+    }
 
     /// Wait for local + remote completion of every posted send.
     fn flush(&self) -> Result<()>;
@@ -108,37 +133,11 @@ impl RingTransport {
             i += 1;
         }
     }
-}
 
-impl IfuncTransport for RingTransport {
-    fn send_frame(&mut self, msg: &IfuncMsg) -> Result<()> {
-        let tail = self.cursor.remaining_before_wrap();
-        if msg.len() > tail && tail + msg.len() > self.ring_bytes {
-            // Wrap where skipped tail + frame exceed the ring: the frame at
-            // offset 0 would overwrite the wrap marker before the parked
-            // poller reads it. Drain the ring, publish the marker alone,
-            // and wait for the poller's rewind credit before the frame.
-            self.wait_capacity(self.ring_bytes);
-            let at = self.ring_bytes - tail;
-            self.ep.put_nbi(
-                self.ring_rkey,
-                at,
-                &wrap_marker_word().to_le_bytes(),
-            )?;
-            self.sent_bytes += tail as u64;
-            self.ep.flush()?;
-            self.wait_capacity(self.ring_bytes);
-            self.cursor.reset();
-        }
-        // Seed bug: this waited for `frame + 8` bytes of room, but a frame
-        // that does not fit before the ring end also consumes the wasted
-        // tail through the wrap marker — under load the sender could lap
-        // the poller and overwrite an unconsumed frame at offset 0.
-        // Reserve the exact placement cost (tail + frame on a wrap)
-        // instead.
-        let tail = self.cursor.remaining_before_wrap();
-        let needed = if msg.len() > tail { tail + msg.len() } else { msg.len() };
-        self.wait_capacity(needed);
+    /// Place one frame at the cursor and PUT marker + frame, charging
+    /// `sent_bytes`. Callers must have reserved the frame's
+    /// [`placement_cost`] via [`RingTransport::wait_capacity`] first.
+    fn put_frame(&mut self, msg: &IfuncMsg) -> Result<()> {
         let placement = self.cursor.place(msg.len())?;
         if let Some(at) = placement.wrap_marker_at {
             // The wrap consumes the ring tail through the marker.
@@ -152,6 +151,88 @@ impl IfuncTransport for RingTransport {
         self.ep.put_nbi(self.ring_rkey, placement.offset, msg.frame())?;
         self.sent_bytes += msg.len() as u64;
         self.frames += 1;
+        Ok(())
+    }
+}
+
+/// Credit cost of placing a `frame_len`-byte frame with the sender cursor
+/// in state `cursor`: the frame alone on the straight path, skipped tail +
+/// frame on a wrap. `None` when the frame needs the drain-then-marker
+/// special path (tail + frame exceed the ring, so the frame at offset 0
+/// would overlap the wrap marker).
+fn placement_cost(cursor: &SenderCursor, ring_bytes: usize, frame_len: usize) -> Option<usize> {
+    let tail = cursor.remaining_before_wrap();
+    if frame_len > tail && tail + frame_len > ring_bytes {
+        return None;
+    }
+    Some(if frame_len > tail { tail + frame_len } else { frame_len })
+}
+
+impl IfuncTransport for RingTransport {
+    fn send_frame(&mut self, msg: &IfuncMsg) -> Result<()> {
+        if placement_cost(&self.cursor, self.ring_bytes, msg.len()).is_none() {
+            // Wrap where skipped tail + frame exceed the ring: the frame at
+            // offset 0 would overwrite the wrap marker before the parked
+            // poller reads it. Drain the ring, publish the marker alone,
+            // and wait for the poller's rewind credit before the frame.
+            let tail = self.cursor.remaining_before_wrap();
+            self.wait_capacity(self.ring_bytes);
+            let at = self.ring_bytes - tail;
+            self.ep.put_nbi(
+                self.ring_rkey,
+                at,
+                &wrap_marker_word().to_le_bytes(),
+            )?;
+            self.sent_bytes += tail as u64;
+            self.ep.flush()?;
+            self.wait_capacity(self.ring_bytes);
+            self.cursor.reset();
+        }
+        // Seed bug (fixed in PR 1): this waited for `frame + 8` bytes of
+        // room, but a frame that does not fit before the ring end also
+        // consumes the wasted tail through the wrap marker — under load
+        // the sender could lap the poller and overwrite an unconsumed
+        // frame at offset 0. Reserve the exact placement cost (tail +
+        // frame on a wrap) instead.
+        let needed = placement_cost(&self.cursor, self.ring_bytes, msg.len())
+            .unwrap_or(msg.len());
+        self.wait_capacity(needed);
+        self.put_frame(msg)
+    }
+
+    /// One credit reservation for the whole batch: simulate the cursor
+    /// over the frames, sum their placement costs, wait for that much
+    /// capacity once, then PUT every frame back-to-back. Falls back to
+    /// frame-at-a-time when a frame needs the drain-then-marker path or
+    /// the batch exceeds the ring.
+    fn post_batch(&mut self, msgs: &[IfuncMsg]) -> Result<()> {
+        let mut sim = self.cursor.clone();
+        let mut total = 0usize;
+        let mut coalesce = true;
+        for msg in msgs {
+            let cost = match placement_cost(&sim, self.ring_bytes, msg.len()) {
+                Some(c) if total + c <= self.ring_bytes => c,
+                _ => {
+                    coalesce = false;
+                    break;
+                }
+            };
+            if sim.place(msg.len()).is_err() {
+                coalesce = false;
+                break;
+            }
+            total += cost;
+        }
+        if coalesce {
+            self.wait_capacity(total);
+            for msg in msgs {
+                self.put_frame(msg)?;
+            }
+        } else {
+            for msg in msgs {
+                self.send_frame(msg)?;
+            }
+        }
         Ok(())
     }
 
@@ -188,6 +269,17 @@ impl IfuncTransport for AmTransport {
     fn send_frame(&mut self, msg: &IfuncMsg) -> Result<()> {
         ifunc_msg_send_am(&self.ep, msg)?;
         self.frames += 1;
+        Ok(())
+    }
+
+    /// Post the whole batch as back-to-back AM sends — completion waits
+    /// (and rendezvous handshakes) amortize over the batch instead of
+    /// serializing per frame; `send_batch`'s single flush observes them.
+    fn post_batch(&mut self, msgs: &[IfuncMsg]) -> Result<()> {
+        for msg in msgs {
+            ifunc_msg_send_am(&self.ep, msg)?;
+            self.frames += 1;
+        }
         Ok(())
     }
 

@@ -59,8 +59,11 @@
 //! let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 64])).unwrap();
 //! ep.ifunc_msg_send_nbix(&msg, ring.remote_addr(), ring.rkey()).unwrap();
 //! ep.flush().unwrap();
-//! while dst.poll_ifunc(&mut ring, &mut TargetArgs::none()).unwrap()
-//!     != PollResult::Executed {}
+//! let mut args = TargetArgs::none();
+//! while !matches!(
+//!     dst.poll_ifunc(&mut ring, &mut args).unwrap(),
+//!     PollResult::Executed(_)
+//! ) {}
 //! ```
 
 pub mod bench;
@@ -150,7 +153,7 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 /// Convenience re-exports covering the whole public API surface.
 pub mod prelude {
     pub use crate::bench::{BenchConfig, BenchMode};
-    pub use crate::coordinator::{Cluster, ClusterConfig, Dispatcher, RecordStore};
+    pub use crate::coordinator::{Cluster, ClusterConfig, Dispatcher, PendingReply, RecordStore};
     pub use crate::fabric::{Fabric, MemPerm, WireConfig};
     pub use crate::ifunc::{
         builtin::CounterIfunc, CodeImage, ExecOutcome, IfuncHandle, IfuncMsg, IfuncRing,

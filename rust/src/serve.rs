@@ -15,9 +15,9 @@
 //!
 //! `get` is served by injection too: a `GetIfunc` frame travels to the
 //! key's owner, the injected code calls `db_get` (which pushes the record
-//! into the leader's result region over the fabric), and the reply ring
-//! carries the element count back — the data in the response is computed
-//! by the injected function on the worker, not read from the store by the
+//! into the invocation's reply payload), and the reply frame carries the
+//! record bytes back inline — the data in the response is computed by the
+//! injected function on the worker, not read from the store by the
 //! leader.
 
 use std::io::{BufRead, BufReader, Write};
@@ -119,17 +119,21 @@ pub fn handle_line(cluster: &Cluster, handles: &ServeHandles, line: &str) -> Jso
                 Ok(m) => m,
                 Err(e) => return err_json(&e.to_string()),
             };
-            // Inject the lookup and wait for the injected function's r0;
-            // on success the record was pushed into this worker's result
-            // region by the worker itself (invoke_get copies it out under
-            // the link lock, so concurrent gets cannot clobber it).
+            // Inject the lookup and wait for the reply frame: the record
+            // bytes ride inline in the reply payload, pushed by the
+            // injected function on the worker — concurrent gets each
+            // carry their own frame, so nothing can clobber anything.
             match d.invoke_get(worker, &msg) {
-                Ok((reply, data)) if reply.ok && reply.r0 != GET_MISSING => Json::obj(vec![
+                Ok((reply, data)) if reply.ok() && reply.r0 != GET_MISSING => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("worker", Json::from(worker)),
                     ("data", Json::arr_f32(&data)),
                 ]),
-                Ok((reply, _)) if reply.ok => err_json("not found"),
+                Ok((reply, _)) if reply.overflowed() => err_json(&format!(
+                    "record of {} elems exceeds the inline reply cap",
+                    reply.r0
+                )),
+                Ok((reply, _)) if reply.ok() => err_json("not found"),
                 Ok(_) => err_json("get ifunc rejected on worker"),
                 Err(e) => err_json(&e.to_string()),
             }

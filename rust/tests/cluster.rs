@@ -6,7 +6,7 @@
 use two_chains::coordinator::{
     Cluster, ClusterConfig, ClusterSnapshot, GetIfunc, InsertIfunc, TransportKind, GET_MISSING,
 };
-use two_chains::ifunc::builtin::{ChecksumIfunc, CounterIfunc, OutOfBoundsIfunc};
+use two_chains::ifunc::builtin::{ChecksumIfunc, CounterIfunc, EchoIfunc, OutOfBoundsIfunc};
 use two_chains::ifunc::SourceArgs;
 use two_chains::util::XorShift;
 
@@ -166,7 +166,7 @@ fn invoke_returns_injected_r0() {
 
         // counter_add(1) returns the post-increment counter value in r0.
         let r1 = d.invoke(0, &msg).unwrap();
-        assert!(r1.ok, "{transport:?}");
+        assert!(r1.ok(), "{transport:?}");
         assert_eq!(r1.r0, 1, "{transport:?}");
         let r2 = d.invoke(0, &msg).unwrap();
         assert_eq!(r2.r0, 2, "{transport:?}");
@@ -176,7 +176,7 @@ fn invoke_returns_injected_r0() {
         let h_bad = d.register("oob").unwrap();
         let bad = h_bad.msg_create(&SourceArgs::bytes(vec![0u8; 16])).unwrap();
         let rf = d.invoke(0, &bad).unwrap();
-        assert!(!rf.ok, "{transport:?}");
+        assert!(!rf.ok(), "{transport:?}");
         // ...and the link keeps working afterwards.
         let r3 = d.invoke(0, &msg).unwrap();
         assert_eq!(r3.r0, 3, "{transport:?}");
@@ -219,8 +219,8 @@ fn insert_ifunc_ingestion_and_lookup() {
 
 /// The full serve `get` path, minus the socket: insert by injection, then
 /// look up by injection — the injected `GetIfunc` calls `db_get`, which
-/// pushes the record over the fabric into the leader's result region, and
-/// the reply carries the element count in r0.
+/// pushes the record bytes into the reply frame, and the reply carries the
+/// element count in r0 plus the record itself inline in its payload.
 #[test]
 fn get_ifunc_returns_worker_computed_data() {
     for_both_transports(|transport| {
@@ -249,7 +249,7 @@ fn get_ifunc_returns_worker_computed_data() {
             let w = d.route_key(key);
             let msg = h_get.msg_create(&GetIfunc::args(key)).unwrap();
             let (reply, fetched) = d.invoke_get(w, &msg).unwrap();
-            assert!(reply.ok, "{transport:?} key {key}");
+            assert!(reply.ok(), "{transport:?} key {key}");
             assert_eq!(reply.r0 as usize, data.len(), "{transport:?} key {key}");
             assert_eq!(fetched, data, "{transport:?} key {key}");
         }
@@ -259,9 +259,212 @@ fn get_ifunc_returns_worker_computed_data() {
         let w = d.route_key(absent);
         let msg = h_get.msg_create(&GetIfunc::args(absent)).unwrap();
         let (reply, fetched) = d.invoke_get(w, &msg).unwrap();
-        assert!(reply.ok, "{transport:?}");
+        assert!(reply.ok(), "{transport:?}");
         assert_eq!(reply.r0, GET_MISSING, "{transport:?}");
         assert!(fetched.is_empty(), "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
+}
+
+/// The tentpole's acceptance scenario: ≥ 4 invocations in flight against
+/// one worker at once (window > 1), each carrying a distinct payload —
+/// replies collected out of order must still match their seq's payload.
+#[test]
+fn pipelined_invocations_carry_per_seq_payloads() {
+    for_both_transports(|transport| {
+        let cluster = Cluster::launch(
+            ClusterConfig { workers: 1, transport, max_inflight: 8, ..Default::default() },
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(EchoIfunc));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(EchoIfunc));
+        let d = cluster.dispatcher();
+        let h = d.register("echo").unwrap();
+
+        let payloads: Vec<Vec<u8>> =
+            (0..6u8).map(|i| vec![i + 1; 64 + i as usize * 13]).collect();
+        // Issue every invocation before collecting any reply: all six are
+        // in flight concurrently (the window admits 8).
+        let pending: Vec<_> = payloads
+            .iter()
+            .map(|p| {
+                d.invoke_begin(0, &h.msg_create(&SourceArgs::bytes(p.clone())).unwrap())
+                    .unwrap()
+            })
+            .collect();
+        assert!(pending.len() >= 4, "need ≥ 4 concurrent in-flight invocations");
+        // Collect newest-first: out-of-order waits must not cross wires.
+        for (i, p) in pending.into_iter().enumerate().rev() {
+            let seq = p.seq();
+            let reply = p.wait().unwrap();
+            assert!(reply.ok(), "{transport:?} seq {seq}");
+            assert_eq!(reply.seq, seq, "{transport:?}");
+            assert_eq!(reply.payload, payloads[i], "{transport:?} seq {seq}");
+            assert_eq!(reply.r0 as usize, payloads[i].len(), "{transport:?} seq {seq}");
+        }
+        assert_eq!(d.total_executed(), payloads.len() as u64, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
+}
+
+/// An uncollected invocation reply survives a fire-and-forget flood far
+/// larger than the reply ring: sends stall at the lap boundary until a
+/// concurrent thread collects the reply, then the flood proceeds — the
+/// payload is never overwritten.
+#[test]
+fn pending_reply_survives_fire_and_forget_flood() {
+    for_both_transports(|transport| {
+        let cluster = Cluster::launch(
+            ClusterConfig { workers: 1, transport, ..Default::default() },
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(EchoIfunc));
+                ctx.library_dir().install(Box::new(CounterIfunc::default()));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(EchoIfunc));
+        cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+        let d = cluster.dispatcher();
+        let h_echo = d.register("echo").unwrap();
+        let h_cnt = d.register("counter").unwrap();
+
+        let body = b"survivor".to_vec();
+        let pending = d
+            .invoke_begin(0, &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap())
+            .unwrap();
+        // Collect the reply concurrently; the flood below stalls at the
+        // reply-ring lap boundary until this thread has read it.
+        let collector = std::thread::spawn(move || pending.wait().unwrap());
+        let cnt = h_cnt.msg_create(&SourceArgs::bytes(vec![0u8; 32])).unwrap();
+        let flood = 3 * two_chains::ifunc::REPLY_SLOTS;
+        for _ in 0..flood {
+            d.send_to(0, &cnt).unwrap();
+        }
+        let reply = collector.join().unwrap();
+        assert!(reply.ok(), "{transport:?}");
+        assert_eq!(reply.payload, body, "{transport:?}");
+        d.barrier().unwrap();
+        assert_eq!(d.total_executed(), 1 + flood as u64, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
+}
+
+/// A single-threaded caller that interleaves a ring's worth of sends
+/// behind an uncollected reply gets a clear transport error at the lap
+/// boundary (instead of silent reply corruption) — and the pending reply
+/// itself is still collectible afterwards.
+#[test]
+fn lap_guard_errors_instead_of_corrupting_reply() {
+    let cluster = Cluster::launch(
+        ClusterConfig {
+            workers: 1,
+            reply_timeout: Some(std::time::Duration::from_millis(50)),
+            ..Default::default()
+        },
+        |_, ctx, _| {
+            ctx.library_dir().install(Box::new(EchoIfunc));
+            ctx.library_dir().install(Box::new(CounterIfunc::default()));
+        },
+    )
+    .unwrap();
+    cluster.leader.library_dir().install(Box::new(EchoIfunc));
+    cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+    let d = cluster.dispatcher();
+    let h_echo = d.register("echo").unwrap();
+    let h_cnt = d.register("counter").unwrap();
+
+    let body = b"still here".to_vec();
+    let pending = d
+        .invoke_begin(0, &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap())
+        .unwrap();
+    let cnt = h_cnt.msg_create(&SourceArgs::bytes(vec![0u8; 32])).unwrap();
+    let mut lap_error = None;
+    for _ in 0..2 * two_chains::ifunc::REPLY_SLOTS {
+        if let Err(e) = d.send_to(0, &cnt) {
+            lap_error = Some(e);
+            break;
+        }
+    }
+    let err = lap_error.expect("send past the lap boundary must error, not corrupt");
+    assert!(err.to_string().contains("lap"), "{err}");
+    // The guarded reply is intact.
+    let reply = pending.wait().unwrap();
+    assert!(reply.ok());
+    assert_eq!(reply.payload, body);
+    d.barrier().unwrap();
+    cluster.shutdown().unwrap();
+}
+
+/// Over-issuing invocations past `max_inflight` without collecting any
+/// errors out (naming the full window) instead of deadlocking a
+/// single-threaded caller — and the link recovers once replies are
+/// collected.
+#[test]
+fn full_invoke_window_errors_instead_of_deadlocking() {
+    let cluster = Cluster::launch(
+        ClusterConfig {
+            workers: 1,
+            max_inflight: 2,
+            reply_timeout: Some(std::time::Duration::from_millis(50)),
+            ..Default::default()
+        },
+        |_, ctx, _| {
+            ctx.library_dir().install(Box::new(EchoIfunc));
+        },
+    )
+    .unwrap();
+    cluster.leader.library_dir().install(Box::new(EchoIfunc));
+    let d = cluster.dispatcher();
+    let h = d.register("echo").unwrap();
+    let msg = h.msg_create(&SourceArgs::bytes(b"w".to_vec())).unwrap();
+
+    let p1 = d.invoke_begin(0, &msg).unwrap();
+    let p2 = d.invoke_begin(0, &msg).unwrap();
+    let err = d.invoke_begin(0, &msg).expect_err("third begin must error, not hang");
+    assert!(err.to_string().contains("window full"), "{err}");
+    // Collecting the outstanding replies frees the window.
+    assert!(p1.wait().unwrap().ok());
+    assert!(p2.wait().unwrap().ok());
+    assert!(d.invoke(0, &msg).unwrap().ok());
+    cluster.shutdown().unwrap();
+}
+
+/// Mixed traffic: pipelined echo invocations interleaved with batched
+/// fire-and-forget counters on the same link stay correctly sequenced.
+#[test]
+fn pipelined_invokes_interleave_with_batched_sends() {
+    for_both_transports(|transport| {
+        let cluster = Cluster::launch(
+            ClusterConfig { workers: 1, transport, max_inflight: 4, ..Default::default() },
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(EchoIfunc));
+                ctx.library_dir().install(Box::new(CounterIfunc::default()));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(EchoIfunc));
+        cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+        let d = cluster.dispatcher();
+        let h_echo = d.register("echo").unwrap();
+        let h_cnt = d.register("counter").unwrap();
+        let counters: Vec<_> = (0..5)
+            .map(|_| h_cnt.msg_create(&SourceArgs::bytes(vec![0u8; 32])).unwrap())
+            .collect();
+
+        for round in 0..10u64 {
+            let body = round.to_le_bytes().to_vec();
+            let pending = d
+                .invoke_begin(0, &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap())
+                .unwrap();
+            d.send_batch_to(0, &counters).unwrap();
+            let reply = pending.wait().unwrap();
+            assert!(reply.ok(), "{transport:?} round {round}");
+            assert_eq!(reply.payload, body, "{transport:?} round {round}");
+        }
+        d.barrier().unwrap();
+        assert_eq!(d.total_executed(), 10 + 50, "{transport:?}");
         cluster.shutdown().unwrap();
     });
 }

@@ -4,8 +4,12 @@
 
 use two_chains::fabric::{Fabric, WireConfig};
 use two_chains::ifunc::builtin::{ChecksumIfunc, CounterIfunc, XorIfunc};
-use two_chains::ifunc::IfuncLibrary;
 use two_chains::ifunc::message::{CodeImage, Header, IfuncMsg, IfuncMsgParams};
+use two_chains::ifunc::reply::{
+    ReplyRing, ReplyWriter, REPLY_INLINE_CAP, REPLY_SLOTS, STATUS_FAILED, STATUS_OK,
+    STATUS_OVERFLOW,
+};
+use two_chains::ifunc::IfuncLibrary;
 use two_chains::ifunc::{IfuncRing, SenderCursor, SourceArgs, TargetArgs};
 use two_chains::ucp::{AmParams, Context, ContextConfig, Worker};
 use two_chains::util::XorShift;
@@ -173,6 +177,104 @@ fn prop_ring_wrap_sequences() {
             ep.flush().unwrap();
             dst.poll_ifunc_blocking(&mut ring, &mut args).unwrap();
             assert_eq!(dst.symbols().last_result(), expected_sum, "case {case}");
+        }
+    }
+}
+
+/// Stand up a leader-side reply ring and a worker-side writer on a fresh
+/// two-node fabric (the reply-frame wire-format harness).
+fn reply_pair() -> (ReplyRing, ReplyWriter) {
+    let f = Fabric::new(2, WireConfig::off());
+    let leader = Context::new(f.node(0), ContextConfig::default()).unwrap();
+    let worker = Context::new(f.node(1), ContextConfig::default()).unwrap();
+    let wl = Worker::new(&leader);
+    let ww = Worker::new(&worker);
+    let ring = ReplyRing::new(&leader, None);
+    let ep = ww.connect(&wl).unwrap();
+    let rkey = ring.rkey();
+    (ring, ReplyWriter::new(ep, rkey))
+}
+
+/// Reply-frame round trip: any (ok, r0, payload ≤ cap) encodes to a frame
+/// that decodes back identically — status, r0, and every payload byte.
+#[test]
+fn prop_reply_frame_roundtrip() {
+    let mut rng = XorShift::new(0x5EC0);
+    let (ring, mut w) = reply_pair();
+    for case in 0..200 {
+        let len = rng.below(REPLY_INLINE_CAP as u64 + 1) as usize;
+        let payload = rng.bytes(len);
+        let ok = rng.below(8) != 0;
+        let r0 = rng.next_u64();
+        let seq = w.push(ok, r0, &payload).unwrap();
+        w.flush().unwrap();
+        let reply = ring.wait(seq).unwrap();
+        assert_eq!(reply.seq, seq, "case {case}");
+        assert_eq!(reply.r0, r0, "case {case}");
+        if ok {
+            assert_eq!(reply.status, STATUS_OK, "case {case}");
+            assert_eq!(reply.payload, payload, "case {case} (len {len})");
+        } else {
+            assert_eq!(reply.status, STATUS_FAILED, "case {case}");
+            assert!(reply.payload.is_empty(), "case {case}");
+        }
+    }
+}
+
+/// The overflow boundary is exact: a payload of REPLY_INLINE_CAP bytes
+/// rides inline; one byte more ships STATUS_OVERFLOW with an empty
+/// payload and r0 (the old r0-as-length channel) intact.
+#[test]
+fn prop_reply_overflow_boundary() {
+    let (ring, mut w) = reply_pair();
+    let mut rng = XorShift::new(0x0F10);
+    for &len in &[
+        REPLY_INLINE_CAP - 1,
+        REPLY_INLINE_CAP,
+        REPLY_INLINE_CAP + 1,
+        REPLY_INLINE_CAP + rng.range(2, 4096) as usize,
+    ] {
+        let payload = rng.bytes(len);
+        let seq = w.push(true, len as u64, &payload).unwrap();
+        w.flush().unwrap();
+        let reply = ring.wait(seq).unwrap();
+        assert_eq!(reply.r0, len as u64, "len {len}");
+        if len <= REPLY_INLINE_CAP {
+            assert_eq!(reply.status, STATUS_OK, "len {len}");
+            assert_eq!(reply.payload, payload, "len {len}");
+        } else {
+            assert_eq!(reply.status, STATUS_OVERFLOW, "len {len}");
+            assert!(reply.payload.is_empty(), "len {len}");
+        }
+    }
+}
+
+/// Lap/overwrite detection under the frame layout: after a random number
+/// of extra laps, any seq more than REPLY_SLOTS behind the newest must
+/// error (never yield a later lap's payload), while every seq within the
+/// last ring of frames still reads back its own payload.
+#[test]
+fn prop_reply_lap_overwrite_detected() {
+    let mut rng = XorShift::new(0x1A95);
+    for case in 0..5 {
+        let (ring, mut w) = reply_pair();
+        let total = REPLY_SLOTS as u64 + rng.range(1, 3 * REPLY_SLOTS as u64);
+        for seq in 1..=total {
+            // Payload stamps the seq so a cross-lap mixup is detectable.
+            w.push(true, seq, &seq.to_le_bytes()).unwrap();
+        }
+        w.flush().unwrap();
+        // Everything still within the newest ring of slots reads back.
+        for _ in 0..20 {
+            let seq = rng.range(total - REPLY_SLOTS as u64 + 1, total);
+            let reply = ring.wait(seq).unwrap();
+            assert_eq!(reply.r0, seq, "case {case}");
+            assert_eq!(reply.payload, seq.to_le_bytes(), "case {case}");
+        }
+        // Anything older was lapped: error, not a later lap's bytes.
+        for _ in 0..20 {
+            let seq = rng.range(1, total - REPLY_SLOTS as u64);
+            assert!(ring.wait(seq).is_err(), "case {case}: seq {seq} of {total}");
         }
     }
 }

@@ -196,7 +196,10 @@ fn hostile_frame_is_consumed_not_spun_on() {
     let good = h.msg_create(&SourceArgs::bytes(vec![0; 8])).unwrap();
     ep.ifunc_msg_send_cursor(&good, &mut cursor, ring.rkey()).unwrap();
     ep.flush().unwrap();
-    assert_eq!(dst.poll_ifunc(&mut ring, &mut args).unwrap(), PollResult::Executed);
+    assert!(matches!(
+        dst.poll_ifunc(&mut ring, &mut args).unwrap(),
+        PollResult::Executed(_)
+    ));
     assert_eq!(dst.symbols().counter_value(), 1);
 }
 
@@ -236,7 +239,10 @@ fn truncated_frame_times_out_or_rejects() {
         ep.put_nbi(rkey, frame.len() - 8, &frame[frame.len() - 8..]).unwrap();
         ep.qp().flush().unwrap();
     });
-    assert_eq!(dst.poll_ifunc(&mut ring, &mut args).unwrap(), PollResult::Executed);
+    assert!(matches!(
+        dst.poll_ifunc(&mut ring, &mut args).unwrap(),
+        PollResult::Executed(_)
+    ));
     t.join().unwrap();
     assert_eq!(dst.symbols().counter_value(), 1);
 }
