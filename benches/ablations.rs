@@ -16,6 +16,11 @@
 //! * **F** — batched delivery: `send_batch` (one coalesced credit
 //!   reservation + one flush per 32-frame chunk) vs frame-at-a-time
 //!   (send + flush per frame), on both transports over the same workload.
+//! * **G** — reply streaming: big-record `invoke_get` with chunked
+//!   multi-frame replies (`stream_replies: true`) vs the old inline-cap
+//!   protocol (`stream_replies: false`), which *overflows* — ships no
+//!   payload at all — past 64 KiB. The old column is a floor: it prices
+//!   failing to return the record.
 //!
 //! Run: `cargo bench --bench ablations` (QUICK=1 for a smoke run).
 
@@ -23,7 +28,7 @@ use std::time::Instant;
 
 use two_chains::bench::harness::{BenchConfig, BenchPair};
 use two_chains::bench::{latency, report, throughput};
-use two_chains::coordinator::{Cluster, ClusterConfig, TransportKind};
+use two_chains::coordinator::{Cluster, ClusterConfig, GetIfunc, InsertIfunc, TransportKind};
 use two_chains::ifunc::builtin::CounterIfunc;
 use two_chains::ifunc::icache::IcacheConfig;
 use two_chains::ifunc::SourceArgs;
@@ -140,6 +145,54 @@ fn cluster_batched_throughput(
     msgs as f64 / dt
 }
 
+/// Abl G workload: `gets` big-record lookups against one worker, with
+/// replies either chunk-streamed (`stream: true` — the record actually
+/// comes back) or capped at one frame (`stream: false` — past 64 KiB the
+/// reply overflows with r0 only). Returns gets/second.
+fn cluster_get_throughput(
+    base: &BenchConfig,
+    transport: TransportKind,
+    record_bytes: usize,
+    stream: bool,
+    gets: usize,
+) -> f64 {
+    let cluster = Cluster::launch(
+        ClusterConfig {
+            workers: 1,
+            transport,
+            stream_replies: stream,
+            wire: base.wire,
+            ..Default::default()
+        },
+        |_, _, _| {},
+    )
+    .expect("cluster");
+    cluster.leader.library_dir().install(Box::new(InsertIfunc));
+    cluster.leader.library_dir().install(Box::new(GetIfunc));
+    let d = cluster.dispatcher();
+    let h_ins = d.register("insert").expect("register");
+    let h_get = d.register("get").expect("register");
+    let record: Vec<f32> = (0..record_bytes / 4).map(|i| i as f32).collect();
+    let key = 7u64;
+    d.send_to(0, &h_ins.msg_create(&InsertIfunc::args(key, &record)).expect("msg"))
+        .expect("insert");
+    d.barrier().expect("barrier");
+    let get = h_get.msg_create(&GetIfunc::args(key)).expect("msg");
+    let t0 = Instant::now();
+    for _ in 0..gets {
+        let (reply, data) = d.invoke_get(0, &get).expect("invoke_get");
+        let streamed_back = reply.ok() && data.len() == record_bytes / 4;
+        let overflowed = reply.overflowed() && data.is_empty();
+        assert!(
+            if stream || record_bytes <= 64 << 10 { streamed_back } else { overflowed },
+            "unexpected reply shape (stream={stream}, {record_bytes}B)"
+        );
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    cluster.shutdown().expect("shutdown");
+    gets as f64 / dt
+}
+
 fn main() {
     let quick = std::env::var("QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
     let base = BenchConfig {
@@ -242,6 +295,40 @@ fn main() {
                 transport.label()
             ),
             "msg/s",
+            &s,
+            false,
+        );
+    }
+
+    // Abl G — reply streaming vs the old inline cap, per transport, over
+    // record sizes straddling the 64 KiB chunk boundary. Column mapping
+    // (same trick as Abl E/F): `ifunc` column = streamed chunked replies
+    // (the record round-trips), `AM` column = stream_replies: false (past
+    // 64 KiB the reply overflows and carries nothing — the old protocol's
+    // price for *refusing* the record, shown for scale).
+    let record_sizes: &[usize] = if quick {
+        &[64 << 10, 256 << 10]
+    } else {
+        &[64 << 10, 256 << 10, 1 << 20]
+    };
+    for transport in [TransportKind::Ring, TransportKind::Am] {
+        let s: Vec<report::SeriesPoint> = record_sizes
+            .iter()
+            .map(|&size| {
+                let gets = if quick { 30 } else { 150 };
+                let streamed = cluster_get_throughput(&base, transport, size, true, gets);
+                let capped = cluster_get_throughput(&base, transport, size, false, gets);
+                eprint!(".");
+                report::SeriesPoint { size, ifunc: streamed, am: capped }
+            })
+            .collect();
+        report::print_series(
+            &format!(
+                "Abl G — {} transport: streamed big-record invoke_get (ifunc col) vs \
+                 stream_replies: false overflow (AM col)",
+                transport.label()
+            ),
+            "get/s",
             &s,
             false,
         );

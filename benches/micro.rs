@@ -208,6 +208,52 @@ fn main() {
         }
     }
 
+    // Big-record invoke_get: the reply streams as chunked frames (256 KiB
+    // = 4 chunks, 1 MiB = 16 chunks through the 64-slot reply ring). The
+    // `stream off` row is the old REPLY_INLINE_CAP behavior — the reply
+    // overflows and ships NO payload, so its time is a floor, not a fair
+    // rival: it measures what the old protocol charged for *failing* to
+    // return the record.
+    {
+        use two_chains::coordinator::{Cluster, ClusterConfig, GetIfunc, InsertIfunc};
+        for (name, bytes, stream) in [
+            ("invoke_get 256KiB record (streamed)", 256usize << 10, true),
+            ("invoke_get 1MiB record (streamed)", 1usize << 20, true),
+            ("invoke_get 1MiB record (stream off: overflow, no payload)", 1usize << 20, false),
+        ] {
+            let cluster = Cluster::launch(
+                ClusterConfig { workers: 1, stream_replies: stream, ..Default::default() },
+                |_, _, _| {},
+            )
+            .expect("cluster");
+            cluster.leader.library_dir().install(Box::new(InsertIfunc));
+            cluster.leader.library_dir().install(Box::new(GetIfunc));
+            let d = cluster.dispatcher();
+            let h_ins = d.register("insert").expect("register insert");
+            let h_get = d.register("get").expect("register get");
+            let record: Vec<f32> = (0..bytes / 4).map(|i| i as f32).collect();
+            let key = 7u64;
+            d.send_to(0, &h_ins.msg_create(&InsertIfunc::args(key, &record)).expect("msg"))
+                .expect("insert");
+            d.barrier().expect("barrier");
+            let get = h_get.msg_create(&GetIfunc::args(key)).expect("msg");
+            let iters = if quick { 20 } else { 200 };
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let (reply, data) = d.invoke_get(0, &get).expect("invoke_get");
+                if stream {
+                    assert!(reply.ok() && data.len() == bytes / 4);
+                } else {
+                    assert!(reply.overflowed() && data.is_empty());
+                }
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+            println!("{name:<44} {ns:>12.0} ns/op");
+            t.rows.push(MicroRow { name: name.to_string(), median_ns: ns, best_ns: ns });
+            cluster.shutdown().expect("shutdown");
+        }
+    }
+
     if let Some(path) = json_path() {
         let report = micro_json(&t.rows);
         std::fs::write(&path, &report).expect("write micro JSON report");

@@ -80,9 +80,11 @@ impl InsertIfunc {
 /// pushes the record's bytes into the invocation's **reply payload** and
 /// returns the element count in `r0`
 /// ([`crate::coordinator::GET_MISSING`] when absent). Paired with
-/// `Dispatcher::invoke` / `invoke_get`, the record arrives inline in the
-/// reply frame — computed and shipped *by the injected function on the
-/// worker*, with no leader-side store access and no shared result region.
+/// `Dispatcher::invoke` / `invoke_get`, the record arrives in the reply —
+/// one frame when it fits, a chunked stream when it does not, so record
+/// size never changes API behavior — computed and shipped *by the
+/// injected function on the worker*, with no leader-side store access and
+/// no shared result region.
 pub struct GetIfunc;
 
 impl GetIfunc {

@@ -16,14 +16,17 @@
 //! [`PendingReply`] handle *without* holding the link across the wait, so
 //! up to `ClusterConfig::max_inflight` invocations pipeline per worker;
 //! [`PendingReply::wait`] collects `(status, r0, payload)` — the payload
-//! carried inline in the reply frame, pushed by the injected function
-//! through `reply_put` / `db_get`.
+//! pushed by the injected function through `reply_put` / `db_get`, of
+//! **any size**: one reply frame when it fits, a reassembled chunk
+//! stream when it does not.
 
 use std::collections::BTreeSet;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::ifunc::{IfuncHandle, IfuncMsg, Reply, ReplyRing, SourceArgs, REPLY_SLOTS};
+use crate::ifunc::{
+    IfuncHandle, IfuncMsg, Reply, ReplyCollector, ReplyRing, SourceArgs, REPLY_SLOTS,
+};
 use crate::{Error, Result};
 
 use super::worker::GET_MISSING;
@@ -37,23 +40,27 @@ pub fn route_key(key: u64, n_workers: usize) -> usize {
     (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % n_workers.max(1)
 }
 
-/// Per-worker-link invocation window. Two guarantees, both needed to keep
-/// an unread invocation reply from being lapped (the worker answers
-/// *every* consumed frame, and the reply ring reuses a slot every
-/// `REPLY_SLOTS` frames):
+/// Per-worker-link invocation window.
 ///
-/// * a **count** window: at most `max` invocations outstanding
-///   ([`InvokeWindow::acquire`] blocks past it), and
-/// * a **seq-distance** admission check on *every* frame sent — invoke or
-///   fire-and-forget — ([`InvokeWindow::admit`]): delivery stalls while
-///   any uncollected invocation's reply slot would be overwritten.
+/// On every link it enforces the **count** window: at most `max`
+/// invocations outstanding ([`InvokeWindow::acquire`] blocks past it,
+/// bounded by `ClusterConfig::reply_timeout`).
 ///
-/// Both waits are bounded by `ClusterConfig::reply_timeout` and surface
-/// `Error::Transport` naming what is stuck, so a single-threaded caller
-/// that over-issues invocations (or interleaves ≥ `REPLY_SLOTS` sends
-/// behind an uncollected reply) gets an error, never a silent deadlock or
-/// a corrupted reply. Pure fire-and-forget traffic pays only one relaxed
-/// atomic load per send ([`InvokeWindow::admit`]'s fast path).
+/// On a **legacy** (non-streamed) link it additionally runs the
+/// **seq-distance** admission check on every frame sent — invoke or
+/// fire-and-forget — ([`InvokeWindow::admit`]): with one reply frame per
+/// ingress frame, reply `T` laps reply `S`'s slot iff `T >= S +
+/// REPLY_SLOTS`, so delivery stalls while any uncollected invocation's
+/// reply slot would be overwritten. Pure fire-and-forget traffic pays
+/// only one relaxed atomic load per send (the `admit` fast path).
+///
+/// On a **streamed** link that static arithmetic is meaningless — a
+/// k-chunk reply occupies k reply seqs, with k data-dependent — so lap
+/// protection moves to the reply layer itself: the `ReplyCollector`
+/// consumes reply frames in order (sends drive it via drain) and the
+/// worker's writer only recycles slots the collector has consumed. An
+/// uncollected invocation reply is parked in leader memory, never
+/// overwritten in the ring.
 pub(crate) struct InvokeWindow {
     max: usize,
     /// `awaiting.len()` mirror for the lock-free admit fast path. Reads
@@ -175,13 +182,22 @@ impl InvokeWindow {
     }
 }
 
-/// A not-yet-collected invocation: records the frame seq at send time and
-/// waits on the link's reply ring directly — no link lock held, so other
+/// How a [`PendingReply`] collects its reply: directly off its seq's slot
+/// (legacy one-frame-per-reply links) or through the link's shared
+/// [`ReplyCollector`] (streamed links, where a reply may span several
+/// chunk frames at unpredictable reply seqs).
+enum Collect {
+    Slot(ReplyRing),
+    Stream(Arc<ReplyCollector>),
+}
+
+/// A not-yet-collected invocation: records the ingress frame seq at send
+/// time and waits for its reply without the link lock, so other
 /// invocations (and fire-and-forget sends) proceed concurrently on the
 /// same worker. Dropping the handle without waiting releases its window
-/// slot (the reply, when it arrives, simply goes unread).
+/// slot (the reply, when it arrives, is simply discarded).
 pub struct PendingReply {
-    replies: ReplyRing,
+    how: Collect,
     seq: u64,
     worker: usize,
     window: Arc<InvokeWindow>,
@@ -199,14 +215,28 @@ impl PendingReply {
         self.worker
     }
 
-    /// Block for the reply frame: `(status, r0, payload)`. A worker that
-    /// died mid-invoke surfaces as [`Error::Transport`] naming this worker
-    /// once `ClusterConfig::reply_timeout` expires without progress.
+    /// Block for the reply — reassembled across chunk frames when the
+    /// injected function pushed more than one frame's worth of payload.
+    /// A worker that died mid-invoke surfaces as [`Error::Transport`]
+    /// naming this worker once `ClusterConfig::reply_timeout` expires
+    /// without progress.
     pub fn wait(mut self) -> Result<Reply> {
-        let out = self.replies.wait(self.seq).map_err(|e| match e {
+        let out = match &self.how {
+            Collect::Slot(ring) => ring.wait(self.seq),
+            Collect::Stream(c) => c.collect(self.seq),
+        }
+        .map_err(|e| match e {
             Error::Transport(m) => Error::Transport(format!("worker {}: {m}", self.worker)),
             other => other,
         });
+        if out.is_err() {
+            // A successful collect deregisters; a failed one must not
+            // leave the frame awaited forever (its reply — if it ever
+            // lands — would be parked with no one to claim it).
+            if let Collect::Stream(c) = &self.how {
+                c.unregister(self.seq);
+            }
+        }
         self.released = true;
         self.window.release(Some(self.seq));
         out
@@ -216,6 +246,9 @@ impl PendingReply {
 impl Drop for PendingReply {
     fn drop(&mut self) {
         if !self.released {
+            if let Collect::Stream(c) = &self.how {
+                c.unregister(self.seq);
+            }
             self.window.release(Some(self.seq));
         }
     }
@@ -247,14 +280,32 @@ impl<'c> Dispatcher<'c> {
             .ok_or_else(|| Error::Other(format!("no worker {worker}")))
     }
 
+    /// Per-send reply bookkeeping (runs under the link lock). On a
+    /// streamed link, drive the reply collector: consuming arrived reply
+    /// frames (discarding fire-and-forget ones) is what advances the
+    /// worker's slot-recycling credit, so a flood of sends can never
+    /// strand an uncollected invocation reply — a k-chunk reply holds
+    /// exactly its k slots until the collector has moved it into leader
+    /// memory. On a legacy link, run the seq-distance lap guard instead.
+    fn admit_or_drain(&self, w: &super::WorkerHandle, worker: usize, end_seq: u64) -> Result<()> {
+        match &w.collector {
+            Some(c) => c.drain().map_err(|e| match e {
+                Error::Transport(m) => Error::Transport(format!("worker {worker}: {m}")),
+                other => other,
+            }),
+            None => w
+                .window
+                .admit(end_seq, w.reply_timeout)
+                .map_err(|m| Error::Transport(format!("worker {worker}: {m}"))),
+        }
+    }
+
     /// Inject a prebuilt message to a specific worker (flow-controlled,
     /// non-blocking delivery; completion via [`Dispatcher::flush`]).
     pub fn send_to(&self, worker: usize, msg: &IfuncMsg) -> Result<()> {
         let w = self.worker(worker)?;
         let mut link = w.link.lock().unwrap();
-        w.window
-            .admit(link.frames_sent() + 1, w.reply_timeout)
-            .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
+        self.admit_or_drain(w, worker, link.frames_sent() + 1)?;
         link.send_frame(msg)
     }
 
@@ -267,38 +318,58 @@ impl<'c> Dispatcher<'c> {
         }
         let w = self.worker(worker)?;
         let mut link = w.link.lock().unwrap();
-        w.window
-            .admit(link.frames_sent() + msgs.len() as u64, w.reply_timeout)
-            .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
+        self.admit_or_drain(w, worker, link.frames_sent() + msgs.len() as u64)?;
         link.send_batch(msgs)
     }
 
     /// Begin an invocation: inject `msg`, record its frame seq, and
     /// release the link immediately. The returned [`PendingReply`] waits
-    /// for the payload-carrying reply frame without the link lock, so up
-    /// to `ClusterConfig::max_inflight` invocations pipeline per worker
-    /// (the call blocks while the window is full).
+    /// for the reply — chunk-streamed when large — without the link lock,
+    /// so up to `ClusterConfig::max_inflight` invocations pipeline per
+    /// worker (the call blocks while the window is full).
     pub fn invoke_begin(&self, worker: usize, msg: &IfuncMsg) -> Result<PendingReply> {
-        fn send_locked(w: &super::WorkerHandle, worker: usize, msg: &IfuncMsg) -> Result<u64> {
+        fn send_locked(
+            d: &Dispatcher<'_>,
+            w: &super::WorkerHandle,
+            worker: usize,
+            msg: &IfuncMsg,
+        ) -> Result<(u64, Collect)> {
             // The link lock covers only delivery; it is released before
             // the reply wait, which is what lets invocations pipeline.
             let mut link = w.link.lock().unwrap();
-            w.window
-                .admit(link.frames_sent() + 1, w.reply_timeout)
-                .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
-            link.send_frame(msg)?;
-            link.flush()?;
-            let seq = link.frames_sent();
-            w.window.track(seq);
-            Ok(seq)
+            let seq = link.frames_sent() + 1;
+            d.admit_or_drain(w, worker, seq)?;
+            match &w.collector {
+                Some(c) => {
+                    // Register *before* the frame goes out: once it is on
+                    // the wire a concurrent drain may meet the reply, and
+                    // only registered replies are parked rather than
+                    // dropped.
+                    c.register(seq);
+                    if let Err(e) = link.send_frame(msg).and_then(|()| link.flush()) {
+                        c.unregister(seq);
+                        return Err(e);
+                    }
+                    debug_assert_eq!(link.frames_sent(), seq);
+                    Ok((seq, Collect::Stream(c.clone())))
+                }
+                None => {
+                    link.send_frame(msg)?;
+                    link.flush()?;
+                    let seq = link.frames_sent();
+                    // Legacy lap guard: remember the awaited reply slot.
+                    w.window.track(seq);
+                    Ok((seq, Collect::Slot(w.replies.clone())))
+                }
+            }
         }
         let w = self.worker(worker)?;
         w.window
             .acquire(w.reply_timeout)
             .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
-        match send_locked(w, worker, msg) {
-            Ok(seq) => Ok(PendingReply {
-                replies: w.replies.clone(),
+        match send_locked(self, w, worker, msg) {
+            Ok((seq, how)) => Ok(PendingReply {
+                how,
                 seq,
                 worker,
                 window: w.window.clone(),
@@ -320,11 +391,13 @@ impl<'c> Dispatcher<'c> {
     }
 
     /// [`Dispatcher::invoke`] for record-returning ifuncs (`GetIfunc`):
-    /// decodes the inline reply payload as f32 record elements. The data
-    /// vec is empty unless the reply is ok and `r0` is a length (not
-    /// [`GET_MISSING`]); a record too large for the inline cap comes back
-    /// as an overflowed reply ([`Reply::overflowed`]) with `r0` = its
-    /// element count.
+    /// decodes the reply payload as f32 record elements. The data vec is
+    /// empty unless the reply is ok and `r0` is a length (not
+    /// [`GET_MISSING`]). Record size does not matter on a streamed link —
+    /// big records arrive as reassembled chunk streams; only a
+    /// `stream_replies: false` link still reports oversized records as
+    /// overflowed replies ([`Reply::overflowed`]) with `r0` = the element
+    /// count it could not ship.
     pub fn invoke_get(&self, worker: usize, msg: &IfuncMsg) -> Result<(Reply, Vec<f32>)> {
         let reply = self.invoke(worker, msg)?;
         let data = if reply.ok() && reply.r0 != GET_MISSING {
@@ -374,9 +447,7 @@ impl<'c> Dispatcher<'c> {
             }
             let w = self.worker(worker)?;
             let mut link = w.link.lock().unwrap();
-            w.window
-                .admit(link.frames_sent() + msgs.len() as u64, w.reply_timeout)
-                .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
+            self.admit_or_drain(w, worker, link.frames_sent() + msgs.len() as u64)?;
             link.post_batch(msgs)?;
         }
         for (worker, msgs) in buckets.iter().enumerate() {
@@ -396,15 +467,33 @@ impl<'c> Dispatcher<'c> {
     }
 
     /// Block until every worker has consumed everything sent so far.
+    /// Waits on each link's consumed-frame counter (one tick per ingress
+    /// frame — reply seqs are useless as a frame count once replies
+    /// chunk), draining the reply collector meanwhile so reply-slot
+    /// credit keeps flowing while the barrier spins.
     pub fn barrier(&self) -> Result<()> {
         self.flush()?;
         for (i, w) in self.cluster.workers.iter().enumerate() {
-            w.link.lock().unwrap().wait_consumed().map_err(|e| match e {
-                Error::Transport(m) => Error::Transport(format!("worker {i}: {m}")),
-                other => other,
-            })?;
+            let sent = w.link.lock().unwrap().frames_sent();
+            w.consumed
+                .wait(sent, || match &w.collector {
+                    Some(c) => c.drain(),
+                    None => Ok(()),
+                })
+                .map_err(|e| match e {
+                    Error::Transport(m) => Error::Transport(format!("worker {i}: {m}")),
+                    other => other,
+                })?;
         }
         Ok(())
+    }
+
+    /// Fault-injection hook for the security suite: write raw bytes into
+    /// a worker's delivery ring, bypassing all framing (hostile-sender
+    /// simulation). Ring transport only.
+    #[doc(hidden)]
+    pub fn debug_corrupt_ring(&self, worker: usize, offset: usize, data: &[u8]) -> Result<()> {
+        self.worker(worker)?.link.lock().unwrap().debug_put_raw(offset, data)
     }
 
     /// Total messages executed across workers.

@@ -13,11 +13,14 @@
 //! key) over a per-worker [`crate::ifunc::IfuncTransport`] link selected
 //! by [`ClusterConfig::transport`] — RDMA-PUT rings (§3) or AM
 //! send-receive (§5.1). Each link carries a payload-carrying reply frame
-//! ring: [`Dispatcher::invoke_begin`] pipelines up to
-//! [`ClusterConfig::max_inflight`] invocations per worker and
-//! [`PendingReply::wait`] collects `(status, r0, payload)`; batched
+//! ring with **no reply-size cap**: payloads past one frame stream as
+//! chunked frame sequences reassembled leader-side
+//! ([`ClusterConfig::stream_replies`]). [`Dispatcher::invoke_begin`]
+//! pipelines up to [`ClusterConfig::max_inflight`] invocations per worker
+//! and [`PendingReply::wait`] collects `(status, r0, payload)`; batched
 //! fire-and-forget delivery goes through
-//! [`Dispatcher::inject_batch_by_key`].
+//! [`Dispatcher::inject_batch_by_key`]; [`Dispatcher::barrier`] waits on
+//! per-worker consumed-frame counters.
 
 pub mod apps;
 pub mod dispatcher;
@@ -57,6 +60,13 @@ pub struct ClusterConfig {
     /// a dead worker mid-invoke fails the leader instead of hanging it.
     /// `None` waits forever.
     pub reply_timeout: Option<std::time::Duration>,
+    /// Stream reply payloads larger than one reply frame as chunked
+    /// multi-frame sequences (default). When off, the link runs the
+    /// legacy one-frame-per-reply protocol: big payloads come back as
+    /// `STATUS_OVERFLOW` with only `r0`, and every send is lap-guarded
+    /// against uncollected replies — kept so the ablation benches can
+    /// measure old vs new.
+    pub stream_replies: bool,
     pub wire: WireConfig,
     pub ctx: ContextConfig,
 }
@@ -69,6 +79,7 @@ impl Default for ClusterConfig {
             transport: TransportKind::Ring,
             max_inflight: 16,
             reply_timeout: Some(std::time::Duration::from_secs(10)),
+            stream_replies: true,
             wire: WireConfig::off(),
             ctx: ContextConfig::default(),
         }

@@ -58,11 +58,12 @@ impl RecordStore {
 /// * `db_insert(key, off, n)` — decode `n` f32s at payload byte offset
 ///   `off` and insert them under `key`,
 /// * `db_get(key)` — look `key` up and push the record's bytes into the
-///   current invocation's **reply payload** (shipped inline in the reply
-///   frame), returning the element count in `r0` — or
-///   [`GET_MISSING`] when the key is absent. The record the sender reads
-///   back is produced *by the injected function on the worker*; there is
-///   no leader-side store access and no shared result region.
+///   current invocation's **reply payload** — whatever its size: the
+///   reply path chunks payloads past one frame, so a record is never too
+///   big to return — with the element count in `r0`, or [`GET_MISSING`]
+///   when the key is absent. The record the sender reads back is produced
+///   *by the injected function on the worker*; there is no leader-side
+///   store access and no shared result region.
 pub fn install_db_symbols(symbols: &Symbols, store: Arc<RecordStore>) {
     let s = store.clone();
     symbols.install_fn("db_insert", move |ctx, [key, off, n, _]| {

@@ -11,19 +11,23 @@
 //!   progressed with other UCX operations").
 //!
 //! Both paths run the same execution engine and answer every consumed
-//! frame — executed or rejected — with a payload-carrying reply frame:
-//! whatever the injected function pushed through `reply_put` / `db_get`
-//! travels inline, which is what `Dispatcher::invoke`, `PendingReply`,
-//! and `Dispatcher::barrier` wait on. There is no leader-side result
-//! region: invocation results are messages, not shared memory.
+//! frame — executed or rejected — with one or more payload-carrying reply
+//! frames: whatever the injected function pushed through `reply_put` /
+//! `db_get` travels back, chunked into `STATUS_MORE` frames when it
+//! exceeds one slot (see `ifunc::reply`), which is what
+//! `Dispatcher::invoke` and `PendingReply` wait on. `Dispatcher::barrier`
+//! waits on a separate per-ingress-frame **consumed counter** the worker
+//! advances once per frame (a chunked reply occupies several reply seqs,
+//! so reply seqs are no longer a frame count). There is no leader-side
+//! result region: invocation results are messages, not shared memory.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::ifunc::am_transport::{execute_am_frame, IFUNC_AM_ID};
 use crate::ifunc::{
-    AmTransport, IfuncRing, IfuncTransport, PollResult, ReplyRing, ReplyWriter, RingTransport,
-    TargetArgs, TransportKind, REPLY_SLOTS,
+    AmTransport, ConsumedCounter, IfuncRing, IfuncTransport, PollResult, ReplyCollector,
+    ReplyRing, ReplyWriter, RingTransport, TargetArgs, TransportKind, REPLY_SLOTS,
 };
 use crate::log;
 use crate::ucp::{Context, Worker as UcpWorker};
@@ -54,8 +58,17 @@ pub struct WorkerHandle {
     /// Leader-side view of the link's reply ring, shared with the
     /// transport so `PendingReply::wait` runs without the link lock.
     pub(crate) replies: ReplyRing,
-    /// Caps outstanding invocations on this link (`max_inflight`) and
-    /// guards every send against lapping an uncollected reply.
+    /// Leader-side view of the link's consumed-frame counter — the
+    /// barrier credit (one tick per ingress frame, however many reply
+    /// frames it produced).
+    pub(crate) consumed: ConsumedCounter,
+    /// Streamed-reply reassembler (`None` when
+    /// `ClusterConfig::stream_replies` is off and the legacy
+    /// one-frame-per-reply slot protocol runs instead).
+    pub(crate) collector: Option<Arc<ReplyCollector>>,
+    /// Caps outstanding invocations on this link (`max_inflight`) and —
+    /// in legacy mode — guards every send against lapping an uncollected
+    /// reply.
     pub(crate) window: Arc<InvokeWindow>,
     /// `ClusterConfig::reply_timeout`, for the window's admission check.
     pub(crate) reply_timeout: Option<std::time::Duration>,
@@ -72,16 +85,34 @@ impl WorkerHandle {
         leader_worker: &Arc<UcpWorker>,
         config: &ClusterConfig,
     ) -> Result<WorkerHandle> {
-        // Leader-side reply region; worker-side back endpoint.
+        // Leader-side reply region + consumed counter; worker-side back
+        // endpoint.
         let replies = ReplyRing::new(leader, config.reply_timeout);
         let reply_rkey = replies.rkey();
+        let consumed = ConsumedCounter::new(leader, config.reply_timeout);
+        let consumed_rkey = consumed.rkey();
         let window = Arc::new(InvokeWindow::new(config.max_inflight.clamp(1, REPLY_SLOTS)));
         let ucp_worker = UcpWorker::new(&ctx);
         let ep = leader_worker.connect(&ucp_worker)?;
         let ep_back = ucp_worker.connect(leader_worker)?;
 
+        // Streamed replies: a worker-local credit word the leader-side
+        // collector advances as it consumes reply frames (the writer's
+        // slot-recycling gate), plus the collector itself on a dedicated
+        // leader → worker endpoint.
+        let (collector, reply_credit) = if config.stream_replies {
+            let credit_mr = ctx.mem_map(64, crate::fabric::MemPerm::RWX);
+            let credit_ep = leader_worker.connect(&ucp_worker)?;
+            let collector =
+                Arc::new(ReplyCollector::new(replies.clone(), credit_ep, credit_mr.rkey()));
+            (Some(collector), Some(credit_mr))
+        } else {
+            (None, None)
+        };
+
         let shutdown = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(WorkerStats::default());
+        let stream = config.stream_replies;
 
         let (transport, thread): (Box<dyn IfuncTransport>, _) = match config.transport {
             TransportKind::Ring => {
@@ -96,35 +127,69 @@ impl WorkerHandle {
                     config.ring_bytes,
                     credit,
                     replies.clone(),
+                    consumed.clone(),
                 ));
                 let (ctx2, store2, stop2, stats2) =
                     (ctx.clone(), store.clone(), shutdown.clone(), stats.clone());
                 let ep_back2 = ep_back.clone();
+                let reply_credit2 = reply_credit.clone();
                 let thread = std::thread::Builder::new()
                     .name(format!("ifunc-worker-{index}"))
                     .spawn(move || -> Result<()> {
                         let mut ring = ring;
                         let mut args = TargetArgs::new(Box::new(store2));
-                        let mut replies = ReplyWriter::new(ep_back2.clone(), reply_rkey);
+                        let mut replies = ReplyWriter::with_mode(
+                            ep_back2.clone(),
+                            reply_rkey,
+                            stream,
+                            reply_credit2,
+                        );
                         let mut idle = 0u32;
                         let mut last_credit = 0u64;
+                        // Cursor position of the last *non-consuming*
+                        // error already reported (a header-invalid frame
+                        // parks at the cursor; report it once, not per
+                        // spin).
+                        let mut stuck_reported_at: Option<u64> = None;
                         loop {
                             let frames_before = ring.consumed;
                             let polled = ctx2.poll_ifunc(&mut ring, &mut args);
                             let no_message = matches!(&polled, Ok(PollResult::NoMessage));
+                            let consumed_frame = ring.consumed > frames_before;
+                            let mut stuck = false;
                             match &polled {
                                 Ok(PollResult::Executed(_)) => {
                                     stats2.executed.fetch_add(1, Ordering::Relaxed);
                                     idle = 0;
                                 }
                                 Ok(PollResult::NoMessage) => {}
-                                Err(e) => {
+                                Err(e) if consumed_frame => {
                                     // A faulty ifunc is consumed and
                                     // reported, but must not take the
                                     // device down.
                                     stats2.failed.fetch_add(1, Ordering::Relaxed);
                                     log::error!("worker {index}: ifunc failed: {e}");
                                     idle = 0;
+                                }
+                                Err(e) => {
+                                    // The frame did NOT advance
+                                    // `ring.consumed` (header-integrity
+                                    // failure — the length is untrusted,
+                                    // so poll cannot skip it). It parks
+                                    // at the cursor and this error
+                                    // repeats every poll: treat it like
+                                    // an idle spin — back off and honor
+                                    // shutdown — instead of hot-looping
+                                    // forever with `stop()` unreachable.
+                                    if stuck_reported_at != Some(ring.consumed_bytes) {
+                                        stuck_reported_at = Some(ring.consumed_bytes);
+                                        stats2.failed.fetch_add(1, Ordering::Relaxed);
+                                        log::error!(
+                                            "worker {index}: unconsumable frame parked at \
+                                             the ring cursor: {e}"
+                                        );
+                                    }
+                                    stuck = true;
                                 }
                             }
                             // Push the credit word whenever consumption
@@ -138,22 +203,47 @@ impl WorkerHandle {
                                     .put_signal(credit_rkey, 0, ring.consumed_bytes)?;
                                 last_credit = ring.consumed_bytes;
                             }
-                            // One reply frame per consumed *frame* (not
+                            // One reply stream per consumed *frame* (not
                             // markers), whether it executed or was
                             // rejected; executed frames carry the bytes
-                            // the injected function pushed.
-                            if ring.consumed > frames_before {
-                                match polled {
+                            // the injected function pushed, chunked when
+                            // they exceed one reply slot. A reply-path
+                            // error is logged and counted — never fatal
+                            // to the worker thread (the leader sees it
+                            // as a reply timeout, not a dead link).
+                            if consumed_frame {
+                                let pushed = match polled {
                                     Ok(PollResult::Executed(out)) => {
-                                        replies.push(true, out.ret, &out.reply)?;
+                                        replies.push(ring.consumed, true, out.ret, &out.reply)
                                     }
-                                    _ => {
-                                        replies.push(false, 0, &[])?;
-                                    }
+                                    _ => replies.push(ring.consumed, false, 0, &[]),
+                                };
+                                if let Err(e) = pushed {
+                                    stats2.failed.fetch_add(1, Ordering::Relaxed);
+                                    log::error!("worker {index}: reply push failed: {e}");
+                                }
+                                // Barrier credit: one tick per ingress
+                                // frame, independent of how many reply
+                                // frames the stream needed. Like every
+                                // reply-path error: log, never die — a
+                                // failed put degrades to a barrier
+                                // timeout, not a dead link.
+                                if let Err(e) =
+                                    ep_back2.qp().put_signal(consumed_rkey, 0, ring.consumed)
+                                {
+                                    log::error!(
+                                        "worker {index}: consumed-credit put failed: {e}"
+                                    );
                                 }
                             }
-                            if no_message {
+                            // Drain reply chunks parked on collector
+                            // credit.
+                            if let Err(e) = replies.pump() {
+                                log::error!("worker {index}: reply pump failed: {e}");
+                            }
+                            if no_message || stuck {
                                 if stop2.load(Ordering::Acquire) {
+                                    let _ = replies.pump();
                                     ep_back2.qp().flush()?;
                                     return Ok(());
                                 }
@@ -166,16 +256,26 @@ impl WorkerHandle {
                 (transport, thread)
             }
             TransportKind::Am => {
-                let transport = Box::new(AmTransport::new(ep, replies.clone()));
+                let transport =
+                    Box::new(AmTransport::new(ep, replies.clone(), consumed.clone()));
                 // The AM handler owns the reply writer and target args;
                 // it runs on the progress thread below.
                 let target_args =
                     Arc::new(Mutex::new(TargetArgs::new(Box::new(store.clone()))));
-                let reply_writer =
-                    Arc::new(Mutex::new(ReplyWriter::new(ep_back.clone(), reply_rkey)));
+                let reply_writer = Arc::new(Mutex::new(ReplyWriter::with_mode(
+                    ep_back.clone(),
+                    reply_rkey,
+                    stream,
+                    reply_credit.clone(),
+                )));
+                let frames = Arc::new(AtomicU64::new(0));
                 let (ctx2, stats2) = (ctx.clone(), stats.clone());
                 let rw = reply_writer.clone();
+                let (frames2, ep_back3) = (frames.clone(), ep_back.clone());
                 ucp_worker.set_am_handler(IFUNC_AM_ID, move |_, frame| {
+                    // Ingress frame seq: handlers run serially on the
+                    // progress thread, so this matches delivery order.
+                    let frame_seq = frames2.fetch_add(1, Ordering::Relaxed) + 1;
                     let (ok, r0, payload) = match execute_am_frame(&ctx2, frame, &target_args)
                     {
                         Ok(out) => {
@@ -188,19 +288,32 @@ impl WorkerHandle {
                             (false, 0, Vec::new())
                         }
                     };
-                    if let Err(e) = rw.lock().unwrap().push(ok, r0, &payload) {
+                    if let Err(e) = rw.lock().unwrap().push(frame_seq, ok, r0, &payload) {
                         log::error!("worker {index}: reply push failed: {e}");
+                    }
+                    if let Err(e) = ep_back3.qp().put_signal(consumed_rkey, 0, frame_seq) {
+                        log::error!("worker {index}: consumed-credit put failed: {e}");
                     }
                 });
                 let (stop2, ep_back2) = (shutdown.clone(), ep_back.clone());
+                let rw2 = reply_writer.clone();
                 let uw = ucp_worker.clone();
                 let thread = std::thread::Builder::new()
                     .name(format!("ifunc-worker-{index}"))
                     .spawn(move || -> Result<()> {
                         let mut idle = 0u32;
                         loop {
-                            if uw.progress() == 0 {
+                            let progressed = uw.progress();
+                            // Drain reply chunks parked on collector
+                            // credit (the handler must never block inside
+                            // `progress`, so queued chunks are pumped
+                            // from here).
+                            if let Err(e) = rw2.lock().unwrap().pump() {
+                                log::error!("worker {index}: reply pump failed: {e}");
+                            }
+                            if progressed == 0 {
                                 if stop2.load(Ordering::Acquire) {
+                                    let _ = rw2.lock().unwrap().pump();
                                     ep_back2.qp().flush()?;
                                     return Ok(());
                                 }
@@ -223,6 +336,8 @@ impl WorkerHandle {
             stats,
             link: Mutex::new(transport),
             replies,
+            consumed,
+            collector,
             window,
             reply_timeout: config.reply_timeout,
             shutdown,

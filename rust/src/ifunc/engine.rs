@@ -46,9 +46,11 @@ pub struct ExecOutcome {
     /// Whether the verified-program cache satisfied this frame (link and
     /// verify both skipped).
     pub cache_hit: bool,
-    /// Bytes the injected function queued for the reply frame through the
-    /// `reply_put` / `db_get` host symbols (empty when it pushed nothing).
-    /// The worker's reply writer ships these inline back to the sender.
+    /// Bytes the injected function queued for the reply through the
+    /// `reply_put` / `db_get` host symbols (empty when it pushed
+    /// nothing). The worker's reply writer ships these back to the
+    /// sender — one reply frame when they fit, a chunked stream when
+    /// they do not; there is no size cap here.
     pub reply: Vec<u8>,
 }
 

@@ -25,11 +25,14 @@
 //!   [`AmTransport`] is the §5.1 send-receive successor; both take
 //!   multi-frame batches through [`IfuncTransport::send_batch`],
 //! * [`reply`] — a per-worker ring of payload-carrying reply *frames*
-//!   (`[payload][r0][payload_len][status][seq]`, seq written last — the
-//!   same §3.4 trailer-signal ordering data frames use), upgrading
-//!   fire-and-forget injection to invocation: injected code fills the
-//!   payload through the `reply_put` / `db_get` host symbols and the
-//!   sender collects it via `Dispatcher::invoke` / `PendingReply::wait`,
+//!   (`[payload][frame_seq][r0][total_len][payload_len][status][seq]`,
+//!   seq written last — the same §3.4 trailer-signal ordering data frames
+//!   use), upgrading fire-and-forget injection to invocation: injected
+//!   code fills the payload through the `reply_put` / `db_get` host
+//!   symbols — **any size**: payloads past one frame stream as
+//!   `STATUS_MORE` chunk frames that the leader-side `ReplyCollector`
+//!   reassembles — and the sender collects it via `Dispatcher::invoke` /
+//!   `PendingReply::wait`,
 //! * [`cache`] — §3.4's hash table, extended to cache the *verified
 //!   program* so repeat injections skip the bytecode verifier entirely.
 
@@ -52,9 +55,13 @@ pub use library::{HloIfuncLibrary, IfuncLibrary, LibraryDir, SourceArgs};
 pub use message::{CodeImage, IfuncMsg, IfuncMsgParams};
 pub use poll::PollResult;
 pub use registry::IfuncHandle;
-pub use reply::{Reply, ReplyRing, ReplyWriter, REPLY_INLINE_CAP, REPLY_SLOTS};
+pub use reply::{
+    Reply, ReplyCollector, ReplyRing, ReplyWriter, REPLY_INLINE_CAP, REPLY_SLOTS,
+};
 pub use ring::{IfuncRing, SenderCursor};
-pub use transport::{AmTransport, IfuncTransport, RingTransport, TransportKind};
+pub use transport::{
+    AmTransport, ConsumedCounter, IfuncTransport, RingTransport, TransportKind,
+};
 
 use std::any::Any;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -98,8 +105,9 @@ impl TargetArgs {
 
     /// Append bytes to the current invocation's reply payload (what the
     /// `reply_put` and `db_get` host symbols call). Bytes accumulate
-    /// across calls within one invocation; whether they fit the reply
-    /// frame's inline cap is the reply writer's concern.
+    /// across calls within one invocation with **no size cap**: the reply
+    /// writer ships whatever fits one frame inline and streams anything
+    /// larger as chunk frames.
     pub fn push_reply(&mut self, bytes: &[u8]) {
         self.reply.extend_from_slice(bytes);
     }

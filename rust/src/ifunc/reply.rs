@@ -1,104 +1,143 @@
 //! The invocation reply path: a per-worker ring of payload-carrying
-//! **reply frames** flowing target → sender.
+//! **reply frames** flowing target → sender, with replies larger than one
+//! frame streamed as a pipelined sequence of chunk frames.
 //!
 //! The paper's ifuncs are fire-and-forget; anything the injected function
 //! computes stays on the target. This module is the missing half of an
-//! *invocation* (§5): after the execution engine finishes frame `seq` (the
-//! `seq`-th frame delivered on the link, counting executed **and**
-//! rejected frames), the worker writes one reply frame into a
-//! leader-mapped reply region with one-sided puts — the same mechanism
-//! data frames travel by, just pointed back at the sender. Each frame
-//! occupies a fixed [`REPLY_FRAME_BYTES`] slot so the reader can find
-//! frame `seq` without parsing the stream, but carries a *variable*
-//! payload of up to [`REPLY_INLINE_CAP`] bytes:
+//! *invocation* (§5): after the execution engine finishes ingress frame
+//! `frame_seq` (the `frame_seq`-th frame delivered on the link, counting
+//! executed **and** rejected frames), the worker writes one *or more*
+//! reply frames into a leader-mapped reply region with one-sided puts —
+//! the same mechanism data frames travel by, just pointed back at the
+//! sender. Each reply frame occupies a fixed [`REPLY_FRAME_BYTES`] slot so
+//! the reader can find reply frame `seq` without parsing the stream, and
+//! carries a *variable* chunk of up to [`REPLY_INLINE_CAP`] bytes:
 //!
 //! ```text
-//!  | payload      | REPLY_INLINE_CAP B   reply bytes (first payload_len valid)
-//!  | r0           | 8 B   injected main's return value (0 when rejected)
-//!  | payload_len  | 8 B   valid payload bytes (0 on overflow/failure)
-//!  | status       | 8 B   1 = ok, 2 = rejected, 3 = payload overflow
-//!  | seq          | 8 B   frame sequence number, written last
+//!  | payload      | REPLY_INLINE_CAP B  chunk bytes (first payload_len valid)
+//!  | frame_seq    | 8 B  ingress frame this reply answers (1-based)
+//!  | r0           | 8 B  final chunk: injected main's return value
+//!  |              |      STATUS_MORE chunks: byte offset of this chunk
+//!  | total_len    | 8 B  full reply payload bytes across the whole stream
+//!  | payload_len  | 8 B  valid chunk bytes in THIS frame
+//!  | status       | 8 B  1 ok · 2 rejected · 3 overflow · 4 more chunks follow
+//!  | seq          | 8 B  reply frame sequence number, written last
 //! ```
 //!
 //! `seq` is the arrival barrier: the fabric delivers the final word of a
 //! put last (the trailer-signal property of §3.4), and the trailer put is
-//! issued *after* the payload put on the same in-order QP, so once the
-//! reader observes `seq` in a slot, every other field — payload included —
+//! issued *after* the chunk put on the same in-order QP, so once the
+//! reader observes `seq` in a slot, every other field — chunk included —
 //! has landed. Slots are reused modulo [`REPLY_SLOTS`]; the writer runs a
-//! seqlock protocol (zero the seq word, write payload + trailer, publish
-//! the new seq last), and because the full 64-bit seq is stored, a reader
-//! that waited too long detects the overwrite — before or mid-copy —
-//! instead of misreading a later lap's payload.
+//! seqlock protocol (zero the seq word, write chunk + trailer, publish the
+//! new seq last), and because the full 64-bit seq is stored, a reader that
+//! missed a slot detects the overwrite — before or mid-copy — instead of
+//! misreading a later lap's chunk.
 //!
-//! A reply payload larger than [`REPLY_INLINE_CAP`] is not truncated: the
-//! frame ships with [`STATUS_OVERFLOW`], an empty payload, and the
-//! injected function's `r0` intact — for `db_get` that is the old
-//! r0-as-length behavior, telling the caller how big the record it could
-//! not inline is.
+//! ## Streamed replies (no inline cap)
 //!
-//! Both transports share this channel — it doubles as the completion
-//! credit `Dispatcher::barrier` waits on (the reply for the last frame
-//! sent implies, by in-order delivery, that every frame was consumed).
+//! A reply payload larger than [`REPLY_INLINE_CAP`] is **chunked**, the
+//! way sPIN streams packet-sized handler output: chunks 1..k-1 ship with
+//! [`STATUS_MORE`] (their trailer carries the stream's `total_len` and the
+//! chunk's byte offset in the `r0` word), and the final chunk carries the
+//! real status and `r0`. Every chunk occupies the next reply seq slot, so
+//! one k-chunk reply consumes k slots of the ring — the leader-side
+//! [`ReplyCollector`] reassembles the stream in seq order with the seqlock
+//! lap checks intact, and feeds a *collected-watermark* credit back to the
+//! worker so the [`ReplyWriter`] never overwrites a slot the collector has
+//! not consumed. Replies larger than the whole ring therefore stream
+//! through it as a sliding window. The writer itself never blocks: chunks
+//! it cannot place yet queue worker-side and drain on
+//! [`ReplyWriter::pump`] as credit arrives — a worker is never wedged by a
+//! leader that is slow to collect.
+//!
+//! [`STATUS_OVERFLOW`] remains as a wire-compat status for a worker
+//! configured with streaming disabled (`ClusterConfig::stream_replies:
+//! false`): the frame ships an empty payload with `r0` intact (for
+//! `db_get` that is the old r0-as-length behavior) and `total_len` set to
+//! the size the caller missed.
+//!
+//! Both transports share this channel. Barrier/consumed credit is **not**
+//! derived from reply seqs (a k-chunk reply advances them by k): the
+//! worker advances a dedicated per-ingress-frame counter instead
+//! ([`super::transport::ConsumedCounter`]).
 
-use std::sync::Arc;
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::fabric::{MemPerm, MemoryRegion, RKey};
 use crate::ucp::{Context, Endpoint};
 use crate::{Error, Result};
 
-/// Frames in a reply ring. Replies are read promptly (an `invoke` waits
-/// for its own seq, `barrier` for the last, and the coordinator caps
-/// outstanding invocations at `ClusterConfig::max_inflight <= REPLY_SLOTS`
-/// so invocation replies cannot lap their readers).
+/// Frames in a reply ring. Streamed replies are consumed promptly (the
+/// [`ReplyCollector`] reads reply frames strictly in seq order and every
+/// send/collect drives it), and the writer-side credit gate keeps chunk
+/// `seq` within `REPLY_SLOTS` of the collector's watermark, so slots are
+/// recycled without ever lapping an unread frame.
 pub const REPLY_SLOTS: usize = 64;
-/// Largest payload a reply frame carries inline — sized to the largest
-/// record the deleted leader-side result region could return (64 KiB =
-/// 16384 f32s), so the refactor sheds no capability. Bigger results ship
-/// as [`STATUS_OVERFLOW`] with `r0` intact (for `db_get`: the record
-/// length).
+/// Largest payload one reply frame carries inline (64 KiB). This is a
+/// *chunk size*, not a reply-size cap: bigger payloads stream as multiple
+/// chunk frames. Only a worker with `stream_replies: false` still reports
+/// [`STATUS_OVERFLOW`] beyond it.
 pub const REPLY_INLINE_CAP: usize = 64 << 10;
-/// Trailer: `[r0 u64][payload_len u64][status u64][seq u64]`.
-pub const REPLY_TRAILER_BYTES: usize = 32;
+/// Trailer: `[frame_seq u64][r0 u64][total_len u64][payload_len u64][status u64][seq u64]`.
+pub const REPLY_TRAILER_BYTES: usize = 48;
 /// Bytes per reply frame slot.
 pub const REPLY_FRAME_BYTES: usize = REPLY_INLINE_CAP + REPLY_TRAILER_BYTES;
 /// Total reply-region bytes.
 pub const REPLY_REGION_BYTES: usize = REPLY_SLOTS * REPLY_FRAME_BYTES;
 
+// Trailer field offsets (relative to the trailer base).
+const T_FRAME_SEQ: usize = 0;
+const T_R0: usize = 8;
+const T_TOTAL: usize = 16;
+const T_LEN: usize = 24;
+const T_STATUS: usize = 32;
+const T_SEQ: usize = 40;
+
 /// Frame executed to completion; `r0` is the injected main's return value.
 pub const STATUS_OK: u64 = 1;
 /// Frame consumed but rejected (decode/link/verify/runtime failure).
 pub const STATUS_FAILED: u64 = 2;
-/// Frame executed, but its reply payload exceeded [`REPLY_INLINE_CAP`]:
-/// the payload is dropped and only `r0` (for `db_get`: the length the
-/// caller asked about) comes back.
+/// Streaming disabled and the reply payload exceeded
+/// [`REPLY_INLINE_CAP`]: the payload is dropped and only `r0` (for
+/// `db_get`: the length the caller asked about) comes back. Kept for
+/// wire compat with `stream_replies: false` workers — a streaming worker
+/// never produces it.
 pub const STATUS_OVERFLOW: u64 = 3;
+/// A chunk of a streamed reply; more chunks follow at the next seqs. The
+/// trailer's `r0` word holds this chunk's byte offset into the stream and
+/// `total_len` the full payload size.
+pub const STATUS_MORE: u64 = 4;
 
-/// One invocation's reply: status + `r0` + the inline payload the injected
-/// function pushed via the `reply_put` / `db_get` host symbols.
+/// One invocation's reply: status + `r0` + the payload the injected
+/// function pushed via the `reply_put` / `db_get` host symbols
+/// (reassembled across chunk frames by the [`ReplyCollector`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Reply {
-    /// Sequence number of the frame this reply answers (1-based).
+    /// Sequence number of the ingress frame this reply answers (1-based).
     pub seq: u64,
     /// [`STATUS_OK`], [`STATUS_FAILED`], or [`STATUS_OVERFLOW`].
     pub status: u64,
     /// `r0` at `HALT` (0 when the frame was rejected).
     pub r0: u64,
-    /// Inline reply payload (empty unless the injected function pushed
-    /// bytes and they fit [`REPLY_INLINE_CAP`]).
+    /// Reply payload (empty unless the injected function pushed bytes).
     pub payload: Vec<u8>,
 }
 
 impl Reply {
-    /// Whether the injected function ran to completion (overflowed replies
-    /// did run, but report [`STATUS_OVERFLOW`] so the payload loss is
-    /// visible — they are *not* `ok`).
+    /// Whether the injected function ran to completion (an overflowed
+    /// reply from a non-streaming worker did run, but reports
+    /// [`STATUS_OVERFLOW`] so the payload loss is visible — it is *not*
+    /// `ok`).
     pub fn ok(&self) -> bool {
         self.status == STATUS_OK
     }
 
-    /// Whether the function executed but its reply payload exceeded
-    /// [`REPLY_INLINE_CAP`].
+    /// Whether the function executed on a `stream_replies: false` worker
+    /// and its reply payload exceeded [`REPLY_INLINE_CAP`]. Streaming
+    /// workers never overflow — any size ships chunked.
     pub fn overflowed(&self) -> bool {
         self.status == STATUS_OVERFLOW
     }
@@ -118,20 +157,20 @@ fn slot_off(seq: u64) -> usize {
 }
 
 /// Sender-side reply ring: a mapped region the worker puts frames into.
-/// Cheap to clone (the mapping is shared) so `PendingReply` handles can
-/// wait on it without holding any link lock.
+/// Cheap to clone (the mapping is shared) so `PendingReply` handles and
+/// the [`ReplyCollector`] can use it without holding any link lock.
 #[derive(Clone)]
 pub struct ReplyRing {
     mr: Arc<MemoryRegion>,
-    /// How long [`ReplyRing::wait`] spins before declaring the worker dead
-    /// (`None` = forever).
-    timeout: Option<Duration>,
+    /// How long reply waits spin without progress before declaring the
+    /// worker dead (`None` = forever).
+    pub(crate) timeout: Option<Duration>,
 }
 
 impl ReplyRing {
     /// Map a reply region on `ctx` (the sender/leader side). `timeout`
-    /// bounds every [`ReplyRing::wait`]: a worker that dies mid-invoke
-    /// surfaces as [`Error::Transport`] instead of hanging the leader.
+    /// bounds every wait: a worker that dies mid-invoke surfaces as
+    /// [`Error::Transport`] instead of hanging the leader.
     pub fn new(ctx: &Context, timeout: Option<Duration>) -> Self {
         ReplyRing { mr: ctx.mem_map(REPLY_REGION_BYTES, MemPerm::RWX), timeout }
     }
@@ -141,56 +180,85 @@ impl ReplyRing {
         self.mr.rkey()
     }
 
-    /// Spin until the reply frame for `seq` (1-based) arrives and copy it
-    /// out. Errors if the slot was overwritten by a later lap of the ring
-    /// (detected before *and* mid-copy via the seqlock word), or if the
-    /// configured timeout expires first. The timeout is progress-based:
-    /// any movement of the slot's seq word (a slow worker draining a
-    /// backlog laps this slot every `REPLY_SLOTS` frames) resets the
-    /// deadline, so only a worker making *no* observable progress is
-    /// declared dead.
-    pub fn wait(&self, seq: u64) -> Result<Reply> {
-        debug_assert!(seq > 0, "frame seqs are 1-based");
+    /// Read the trailer + chunk of reply frame `seq` if it has fully
+    /// arrived in its slot. Returns the inner `Err(word)` while the slot
+    /// still holds an older (or zeroed) seq word — the observed word
+    /// rides along for progress detection; hard-errors if the slot was
+    /// lapped past `seq` or overwritten mid-copy (seqlock).
+    fn read_frame(&self, seq: u64) -> Result<std::result::Result<RawFrame, u64>> {
+        debug_assert!(seq > 0, "reply frame seqs are 1-based");
         let off = slot_off(seq);
         let trailer = off + REPLY_INLINE_CAP;
+        let got = self.mr.load_u64_acquire(trailer + T_SEQ)?;
+        if got < seq {
+            return Ok(Err(got));
+        }
+        if got > seq {
+            return Err(Error::Transport(format!(
+                "reply frame {seq} overwritten (slot now holds seq {got})"
+            )));
+        }
+        let frame_seq = self.mr.load_u64_acquire(trailer + T_FRAME_SEQ)?;
+        let r0 = self.mr.load_u64_acquire(trailer + T_R0)?;
+        let total_len = self.mr.load_u64_acquire(trailer + T_TOTAL)?;
+        let len = self.mr.load_u64_acquire(trailer + T_LEN)? as usize;
+        let status = self.mr.load_u64_acquire(trailer + T_STATUS)?;
+        if len > REPLY_INLINE_CAP {
+            return Err(Error::Transport(format!(
+                "reply frame {seq} corrupt: payload_len {len}"
+            )));
+        }
+        let chunk = self.mr.local_slice()[off..off + len].to_vec();
+        // Seqlock re-check: a lap writer zeroes the seq word before
+        // touching the slot, so a torn chunk copy is detectable. The
+        // acquire fence is the reader half of that protocol (smp_rmb in a
+        // classic seqlock): it keeps the plain chunk loads above from
+        // being reordered past the validating seq load below on
+        // weakly-ordered CPUs.
+        std::sync::atomic::fence(std::sync::atomic::Ordering::Acquire);
+        if self.mr.load_u64_acquire(trailer + T_SEQ)? != seq {
+            return Err(Error::Transport(format!(
+                "reply frame {seq} overwritten mid-read"
+            )));
+        }
+        Ok(Ok(RawFrame { frame_seq, r0, total_len, len: len as u64, status, chunk }))
+    }
+
+    /// Spin until reply frame `seq` (1-based) arrives and copy it out —
+    /// the **one-frame-per-ingress-frame** reader used when streaming is
+    /// disabled (reply seq ≡ ingress frame seq). Errors if the slot was
+    /// overwritten by a later lap of the ring, if the frame is a
+    /// [`STATUS_MORE`] chunk (a streamed reply needs the
+    /// [`ReplyCollector`]), or if the configured timeout expires first.
+    /// The timeout is progress-based: any movement of the slot's seq word
+    /// resets the deadline, so only a worker making *no* observable
+    /// progress is declared dead.
+    pub fn wait(&self, seq: u64) -> Result<Reply> {
         let mut deadline = self.timeout.map(|d| Instant::now() + d);
         let mut last_got: Option<u64> = None;
         let mut i = 0u32;
         loop {
-            // seq occupies the frame's final word, so it lands last.
-            let got = self.mr.load_u64_acquire(trailer + 24)?;
-            if last_got != Some(got) {
-                last_got = Some(got);
-                deadline = self.timeout.map(|d| Instant::now() + d);
-            }
-            if got == seq {
-                let r0 = self.mr.load_u64_acquire(trailer)?;
-                let len = self.mr.load_u64_acquire(trailer + 8)? as usize;
-                let status = self.mr.load_u64_acquire(trailer + 16)?;
-                if len > REPLY_INLINE_CAP {
-                    return Err(Error::Transport(format!(
-                        "reply frame for seq {seq} corrupt: payload_len {len}"
-                    )));
+            match self.read_frame(seq)? {
+                Ok(f) => {
+                    if f.status == STATUS_MORE {
+                        return Err(Error::Transport(format!(
+                            "reply frame {seq} is a stream chunk; this link was \
+                             configured without reply streaming"
+                        )));
+                    }
+                    return Ok(Reply {
+                        seq,
+                        status: f.status,
+                        r0: f.r0,
+                        payload: f.chunk,
+                    });
                 }
-                let payload = self.mr.local_slice()[off..off + len].to_vec();
-                // Seqlock re-check: a lap writer zeroes the seq word before
-                // touching the slot, so a torn payload copy is detectable.
-                // The acquire fence is the reader half of that protocol
-                // (smp_rmb in a classic seqlock): it keeps the plain
-                // payload loads above from being reordered past the
-                // validating seq load below on weakly-ordered CPUs.
-                std::sync::atomic::fence(std::sync::atomic::Ordering::Acquire);
-                if self.mr.load_u64_acquire(trailer + 24)? != seq {
-                    return Err(Error::Transport(format!(
-                        "reply for frame {seq} overwritten mid-read"
-                    )));
+                Err(got) => {
+                    if last_got != Some(got) {
+                        last_got = Some(got);
+                        deadline = self.timeout.map(|d| Instant::now() + d);
+                    }
                 }
-                return Ok(Reply { seq, status, r0, payload });
-            }
-            if got > seq {
-                return Err(Error::Transport(format!(
-                    "reply for frame {seq} overwritten (slot now holds seq {got})"
-                )));
             }
             if let Some(d) = deadline {
                 if Instant::now() > d {
@@ -207,60 +275,417 @@ impl ReplyRing {
     }
 }
 
+/// A fully-arrived reply frame, fields straight off the wire.
+struct RawFrame {
+    frame_seq: u64,
+    r0: u64,
+    total_len: u64,
+    len: u64,
+    status: u64,
+    chunk: Vec<u8>,
+}
+
+/// A reply frame built but possibly not yet placeable in the ring (the
+/// slot it needs may still hold a chunk the collector has not consumed).
+struct QueuedFrame {
+    seq: u64,
+    frame_seq: u64,
+    status: u64,
+    r0: u64,
+    total_len: u64,
+    chunk: Vec<u8>,
+}
+
 /// Worker-side reply writer bound to one sender's reply ring.
+///
+/// In streaming mode ([`ReplyWriter::with_mode`] with `stream = true`),
+/// payloads larger than [`REPLY_INLINE_CAP`] split into chunk frames, and
+/// a chunk is only placed in the ring once the collector's
+/// collected-watermark credit says its slot is free — frames that cannot
+/// be placed yet queue locally and drain on [`ReplyWriter::pump`]. The
+/// writer therefore **never blocks**: a leader that is slow to collect
+/// costs worker memory (bounded by its own uncollected backlog), never
+/// worker liveness.
 pub struct ReplyWriter {
     ep: Arc<Endpoint>,
     rkey: RKey,
+    /// Reply frames assigned (queued or written).
     seq: u64,
+    queue: VecDeque<QueuedFrame>,
+    stream: bool,
+    /// Worker-local word the leader's collector puts its consumed
+    /// watermark into; `None` disables the credit gate (legacy mode, and
+    /// wire-format unit harnesses that read promptly).
+    credit: Option<Arc<MemoryRegion>>,
 }
 
 impl ReplyWriter {
     /// `ep` is a worker → sender endpoint; `rkey` names the sender's
-    /// reply region.
+    /// reply region. Legacy (non-streaming, uncredited) mode: one frame
+    /// per push, [`STATUS_OVERFLOW`] past the cap.
     pub fn new(ep: Arc<Endpoint>, rkey: RKey) -> Self {
-        ReplyWriter { ep, rkey, seq: 0 }
+        Self::with_mode(ep, rkey, false, None)
     }
 
-    /// Record the outcome of the next consumed frame; returns its seq.
-    /// `payload` rides inline when it fits [`REPLY_INLINE_CAP`]; larger
-    /// payloads are dropped and the frame ships [`STATUS_OVERFLOW`] with
-    /// `r0` intact. Three ordered puts on one QP: seqlock-invalidate the
-    /// slot, write the payload, publish the trailer (seq word last).
-    pub fn push(&mut self, ok: bool, r0: u64, payload: &[u8]) -> Result<u64> {
+    /// Full constructor: `stream` turns big payloads into chunk streams;
+    /// `credit` is the worker-local region holding the collector's
+    /// consumed watermark (slot recycling gate).
+    pub fn with_mode(
+        ep: Arc<Endpoint>,
+        rkey: RKey,
+        stream: bool,
+        credit: Option<Arc<MemoryRegion>>,
+    ) -> Self {
+        ReplyWriter { ep, rkey, seq: 0, queue: VecDeque::new(), stream, credit }
+    }
+
+    /// Record the outcome of consumed ingress frame `frame_seq`; returns
+    /// the reply seq of the stream's **final** frame. A payload within
+    /// [`REPLY_INLINE_CAP`] ships as one frame; larger payloads ship as a
+    /// chunk stream (streaming mode) or a payload-less
+    /// [`STATUS_OVERFLOW`] frame with `r0` intact (legacy mode). Frames
+    /// whose slots are not yet free queue locally (see
+    /// [`ReplyWriter::pump`]).
+    pub fn push(&mut self, frame_seq: u64, ok: bool, r0: u64, payload: &[u8]) -> Result<u64> {
+        let total = payload.len() as u64;
+        if !ok {
+            self.enqueue(frame_seq, STATUS_FAILED, r0, 0, Vec::new());
+        } else if payload.len() <= REPLY_INLINE_CAP {
+            self.enqueue(frame_seq, STATUS_OK, r0, total, payload.to_vec());
+        } else if !self.stream {
+            self.enqueue(frame_seq, STATUS_OVERFLOW, r0, total, Vec::new());
+        } else {
+            let mut off = 0usize;
+            while payload.len() - off > REPLY_INLINE_CAP {
+                let chunk = payload[off..off + REPLY_INLINE_CAP].to_vec();
+                self.enqueue(frame_seq, STATUS_MORE, off as u64, total, chunk);
+                off += REPLY_INLINE_CAP;
+            }
+            self.enqueue(frame_seq, STATUS_OK, r0, total, payload[off..].to_vec());
+        }
+        let last = self.seq;
+        self.pump()?;
+        Ok(last)
+    }
+
+    fn enqueue(&mut self, frame_seq: u64, status: u64, r0: u64, total_len: u64, chunk: Vec<u8>) {
         self.seq += 1;
-        let off = slot_off(self.seq);
+        let seq = self.seq;
+        self.queue.push_back(QueuedFrame { seq, frame_seq, status, r0, total_len, chunk });
+    }
+
+    /// Place every queued frame whose slot the collector has released
+    /// (`seq <= watermark + REPLY_SLOTS`). Non-blocking; the worker's
+    /// receive loop calls this once per iteration so queued chunks drain
+    /// as credit arrives. A frame whose puts fail is dropped (reported to
+    /// the caller once) so a broken back-channel cannot wedge the loop in
+    /// an error-retry spin.
+    pub fn pump(&mut self) -> Result<()> {
+        while let Some(front) = self.queue.front() {
+            if let Some(credit) = &self.credit {
+                let collected = credit.load_u64_acquire(0)?;
+                if front.seq > collected + REPLY_SLOTS as u64 {
+                    return Ok(());
+                }
+            }
+            let f = self.queue.pop_front().unwrap();
+            self.write_frame(&f)?;
+        }
+        Ok(())
+    }
+
+    /// Three ordered puts on one QP: seqlock-invalidate the slot, write
+    /// the chunk, publish the trailer (seq word last).
+    fn write_frame(&self, f: &QueuedFrame) -> Result<()> {
+        let off = slot_off(f.seq);
         let trailer = off + REPLY_INLINE_CAP;
         // Invalidate before overwrite: a reader mid-copy of the previous
-        // lap's payload re-checks the seq word and sees 0, not stale data.
-        self.ep.put_nbi(self.rkey, trailer + 24, &0u64.to_le_bytes())?;
-        let status = if !ok {
-            STATUS_FAILED
-        } else if payload.len() > REPLY_INLINE_CAP {
-            STATUS_OVERFLOW
-        } else {
-            STATUS_OK
-        };
-        let payload = if status == STATUS_OK { payload } else { &[] };
-        if !payload.is_empty() {
-            self.ep.put_nbi(self.rkey, off, payload)?;
+        // lap's chunk re-checks the seq word and sees 0, not stale data.
+        self.ep.put_nbi(self.rkey, trailer + T_SEQ, &0u64.to_le_bytes())?;
+        if !f.chunk.is_empty() {
+            self.ep.put_nbi(self.rkey, off, &f.chunk)?;
         }
         let mut t = [0u8; REPLY_TRAILER_BYTES];
-        t[0..8].copy_from_slice(&r0.to_le_bytes());
-        t[8..16].copy_from_slice(&(payload.len() as u64).to_le_bytes());
-        t[16..24].copy_from_slice(&status.to_le_bytes());
-        t[24..32].copy_from_slice(&self.seq.to_le_bytes());
-        self.ep.put_nbi(self.rkey, trailer, &t)?;
-        Ok(self.seq)
+        t[T_FRAME_SEQ..T_FRAME_SEQ + 8].copy_from_slice(&f.frame_seq.to_le_bytes());
+        t[T_R0..T_R0 + 8].copy_from_slice(&f.r0.to_le_bytes());
+        t[T_TOTAL..T_TOTAL + 8].copy_from_slice(&f.total_len.to_le_bytes());
+        t[T_LEN..T_LEN + 8].copy_from_slice(&(f.chunk.len() as u64).to_le_bytes());
+        t[T_STATUS..T_STATUS + 8].copy_from_slice(&f.status.to_le_bytes());
+        t[T_SEQ..T_SEQ + 8].copy_from_slice(&f.seq.to_le_bytes());
+        self.ep.put_nbi(self.rkey, trailer, &t)
     }
 
-    /// Frames replied to so far.
+    /// Reply frames assigned so far (queued + written).
     pub fn seq(&self) -> u64 {
         self.seq
     }
 
-    /// Local completion of all pushed replies.
+    /// Frames built but not yet placed in the ring (waiting on credit).
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Local completion of all placed reply frames.
     pub fn flush(&self) -> Result<()> {
         self.ep.qp().flush()
+    }
+}
+
+/// A streamed reply mid-reassembly.
+struct StreamInProgress {
+    frame_seq: u64,
+    total: u64,
+    buf: Vec<u8>,
+}
+
+struct CollectorState {
+    /// Next reply frame seq to consume (1-based, strictly sequential).
+    next_seq: u64,
+    /// Partially reassembled chunk stream, if any.
+    cur: Option<StreamInProgress>,
+    /// Ingress frame seqs with a registered waiter; completed replies for
+    /// anyone else (fire-and-forget traffic) are dropped on the floor.
+    awaited: BTreeSet<u64>,
+    /// Reassembled, unclaimed replies keyed by ingress frame seq.
+    ready: HashMap<u64, Reply>,
+}
+
+/// Leader-side reply consumer for streamed links: reads reply frames
+/// **strictly in seq order**, reassembles chunk streams, parks replies
+/// for registered waiters, and feeds the consumed watermark back to the
+/// worker's [`ReplyWriter`] so slots recycle without laps.
+///
+/// The collector is driven cooperatively: [`ReplyCollector::collect`]
+/// (a `PendingReply` waiting) and [`ReplyCollector::drain`] (every
+/// fire-and-forget send, and the barrier wait) both advance it, so reply
+/// frames are consumed even when nobody is waiting — which is what keeps
+/// the worker-side queue bounded during floods. Because a k-chunk reply
+/// occupies k reply seqs, this watermark — not a frame count — is the
+/// unit the lap protection works in.
+pub struct ReplyCollector {
+    ring: ReplyRing,
+    /// Leader → worker endpoint for the watermark credit put.
+    ep: Arc<Endpoint>,
+    /// Worker-side credit word ([`ReplyWriter`]'s `credit` region).
+    credit_rkey: RKey,
+    state: Mutex<CollectorState>,
+}
+
+/// One step of the collector: a frame was consumed, or the next frame has
+/// not fully arrived (carrying the observed seq word for progress
+/// detection).
+enum Step {
+    Consumed,
+    Waiting(u64),
+}
+
+impl ReplyCollector {
+    /// `ring` is the leader-side mapping the worker writes into; `ep` +
+    /// `credit_rkey` name the worker-local watermark word the collector
+    /// puts its progress into.
+    pub fn new(ring: ReplyRing, ep: Arc<Endpoint>, credit_rkey: RKey) -> Self {
+        ReplyCollector {
+            ring,
+            ep,
+            credit_rkey,
+            state: Mutex::new(CollectorState {
+                next_seq: 1,
+                cur: None,
+                awaited: BTreeSet::new(),
+                ready: HashMap::new(),
+            }),
+        }
+    }
+
+    /// Register ingress frame `frame_seq` as awaited **before its frame
+    /// is sent** — the collector keeps (rather than drops) its reply when
+    /// the stream completes. Call order matters: registering after the
+    /// send races a concurrent drain.
+    pub fn register(&self, frame_seq: u64) {
+        self.state.lock().unwrap().awaited.insert(frame_seq);
+    }
+
+    /// Forget an awaited frame (waiter dropped without collecting); any
+    /// parked reply is discarded.
+    pub fn unregister(&self, frame_seq: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.awaited.remove(&frame_seq);
+        st.ready.remove(&frame_seq);
+    }
+
+    /// Consume every reply frame that has fully arrived, without
+    /// blocking. Called from the send paths so collection keeps pace with
+    /// injection even when no invocation is waiting.
+    pub fn drain(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        self.advance_batch(&mut st, None).map(|_| ())
+    }
+
+    /// Consume frames until the next one has not arrived — or until
+    /// `stop_at`'s reply completes (a waiter should take its reply before
+    /// the rest of the backlog is processed, and a *later* frame's error
+    /// must not mask a reply that already reassembled) — then publish the
+    /// watermark credit **once** for the whole batch (the writer only
+    /// needs the latest value; one put per consumed frame would cost
+    /// O(backlog) ops on the credit endpoint under the collector mutex).
+    /// Returns the last [`Step::Waiting`] observation (0 when stopped
+    /// early on `stop_at`).
+    fn advance_batch(&self, st: &mut CollectorState, stop_at: Option<u64>) -> Result<u64> {
+        let before = st.next_seq;
+        let out = loop {
+            if let Some(t) = stop_at {
+                if st.ready.contains_key(&t) {
+                    break Ok(0);
+                }
+            }
+            match self.advance_one(st) {
+                Ok(Step::Consumed) => continue,
+                Ok(Step::Waiting(word)) => break Ok(word),
+                Err(e) => break Err(e),
+            }
+        };
+        if st.next_seq != before {
+            self.ep.qp().put_signal(self.credit_rkey, 0, st.next_seq - 1)?;
+        }
+        out
+    }
+
+    /// Block until the reply for ingress frame `frame_seq` is fully
+    /// reassembled, driving the collector meanwhile. The timeout is
+    /// progress-based: it resets whenever the collector consumes a frame
+    /// or the next slot's seq word moves (a chunk mid-arrival).
+    pub fn collect(&self, frame_seq: u64) -> Result<Reply> {
+        let mut deadline = self.ring.timeout.map(|d| Instant::now() + d);
+        let mut last_obs: Option<(u64, u64)> = None;
+        let mut i = 0u32;
+        loop {
+            let obs;
+            {
+                let mut st = self.state.lock().unwrap();
+                if let Some(r) = st.ready.remove(&frame_seq) {
+                    st.awaited.remove(&frame_seq);
+                    return Ok(r);
+                }
+                let word = self.advance_batch(&mut st, Some(frame_seq))?;
+                if let Some(r) = st.ready.remove(&frame_seq) {
+                    st.awaited.remove(&frame_seq);
+                    return Ok(r);
+                }
+                obs = (st.next_seq, word);
+            }
+            if last_obs != Some(obs) {
+                last_obs = Some(obs);
+                deadline = self.ring.timeout.map(|d| Instant::now() + d);
+            }
+            if let Some(d) = deadline {
+                if Instant::now() > d {
+                    return Err(Error::Transport(format!(
+                        "no reply-ring progress for {:?} while waiting for the reply \
+                         to frame {frame_seq} (worker dead or stalled?)",
+                        self.ring.timeout.unwrap_or_default()
+                    )));
+                }
+            }
+            crate::fabric::wire::backoff(i);
+            i += 1;
+        }
+    }
+
+    /// Try to consume the reply frame at `next_seq`: reassemble it into
+    /// the current stream (or complete one), advance the watermark
+    /// credit, and report progress. Chunk-splice hazards — a lap arriving
+    /// mid-stream, chunks from different ingress frames, offset/total
+    /// mismatches — are hard errors, never silent reassembly of bytes
+    /// from two different replies.
+    fn advance_one(&self, st: &mut CollectorState) -> Result<Step> {
+        let seq = st.next_seq;
+        let f = match self.ring.read_frame(seq)? {
+            Ok(f) => f,
+            Err(word) => return Ok(Step::Waiting(word)),
+        };
+        match f.status {
+            STATUS_MORE => {
+                let off = f.r0;
+                match &mut st.cur {
+                    None => {
+                        if off != 0 {
+                            return Err(Error::Transport(format!(
+                                "reply stream for frame {} starts at chunk offset {off}, \
+                                 not 0 (earlier chunks lapped?)",
+                                f.frame_seq
+                            )));
+                        }
+                        st.cur = Some(StreamInProgress {
+                            frame_seq: f.frame_seq,
+                            total: f.total_len,
+                            buf: f.chunk,
+                        });
+                    }
+                    Some(cur) => {
+                        if cur.frame_seq != f.frame_seq
+                            || cur.total != f.total_len
+                            || off != cur.buf.len() as u64
+                        {
+                            return Err(Error::Transport(format!(
+                                "reply chunk at seq {seq} does not continue the open \
+                                 stream (frame {} offset {} vs chunk for frame {} \
+                                 offset {off}) — refusing to splice replies",
+                                cur.frame_seq,
+                                cur.buf.len(),
+                                f.frame_seq
+                            )));
+                        }
+                        cur.buf.extend_from_slice(&f.chunk);
+                    }
+                }
+            }
+            STATUS_OK | STATUS_FAILED | STATUS_OVERFLOW => {
+                let reply = match st.cur.take() {
+                    Some(mut cur) => {
+                        if cur.frame_seq != f.frame_seq || f.total_len != cur.total {
+                            return Err(Error::Transport(format!(
+                                "final reply chunk at seq {seq} answers frame {} but the \
+                                 open stream belongs to frame {} — refusing to splice",
+                                f.frame_seq, cur.frame_seq
+                            )));
+                        }
+                        cur.buf.extend_from_slice(&f.chunk);
+                        if cur.buf.len() as u64 != cur.total {
+                            return Err(Error::Transport(format!(
+                                "reply stream for frame {} reassembled to {} of {} bytes",
+                                f.frame_seq,
+                                cur.buf.len(),
+                                cur.total
+                            )));
+                        }
+                        Reply { seq: f.frame_seq, status: f.status, r0: f.r0, payload: cur.buf }
+                    }
+                    None => {
+                        if f.status != STATUS_OVERFLOW && f.total_len != f.len {
+                            return Err(Error::Transport(format!(
+                                "single-frame reply for frame {} claims total_len {} \
+                                 but carries {} bytes",
+                                f.frame_seq, f.total_len, f.len
+                            )));
+                        }
+                        Reply { seq: f.frame_seq, status: f.status, r0: f.r0, payload: f.chunk }
+                    }
+                };
+                if st.awaited.contains(&reply.seq) {
+                    st.ready.insert(reply.seq, reply);
+                }
+                // Unawaited (fire-and-forget) replies are dropped here.
+            }
+            other => {
+                return Err(Error::Transport(format!(
+                    "reply frame {seq} carries unknown status {other}"
+                )));
+            }
+        }
+        st.next_seq += 1;
+        // The watermark credit is published by `advance_batch`, once per
+        // batch of consumed frames.
+        Ok(Step::Consumed)
     }
 }
 
@@ -270,6 +695,35 @@ mod tests {
     use crate::fabric::{Fabric, WireConfig};
     use crate::ucp::{ContextConfig, Worker};
 
+    struct Harness {
+        ring: ReplyRing,
+        /// Worker-local credit word (the writer's gate; tests can also
+        /// poke it directly to simulate rogue credit).
+        credit: Arc<MemoryRegion>,
+        /// Leader → worker ep for a collector.
+        fwd_ep: Arc<Endpoint>,
+    }
+
+    fn harness(timeout: Option<Duration>) -> (Harness, ReplyWriter) {
+        let f = Fabric::new(2, WireConfig::off());
+        let leader = Context::new(f.node(0), ContextConfig::default()).unwrap();
+        let worker = Context::new(f.node(1), ContextConfig::default()).unwrap();
+        let wl = Worker::new(&leader);
+        let ww = Worker::new(&worker);
+        let ring = ReplyRing::new(&leader, timeout);
+        let credit = worker.mem_map(64, MemPerm::RWX);
+        let ep = ww.connect(&wl).unwrap();
+        let fwd_ep = wl.connect(&ww).unwrap();
+        let rkey = ring.rkey();
+        let writer = ReplyWriter::with_mode(ep, rkey, true, Some(credit.clone()));
+        (Harness { ring, credit, fwd_ep }, writer)
+    }
+
+    fn collector(h: &Harness) -> ReplyCollector {
+        ReplyCollector::new(h.ring.clone(), h.fwd_ep.clone(), h.credit.rkey())
+    }
+
+    /// Legacy pair: non-streaming, uncredited writer + slot reader.
     fn pair_with(timeout: Option<Duration>) -> (ReplyRing, ReplyWriter) {
         let f = Fabric::new(2, WireConfig::off());
         let leader = Context::new(f.node(0), ContextConfig::default()).unwrap();
@@ -289,9 +743,9 @@ mod tests {
     #[test]
     fn reply_roundtrip_preserves_r0_status_and_payload() {
         let (ring, mut w) = pair();
-        w.push(true, 42, b"record bytes").unwrap();
-        w.push(false, 0, &[]).unwrap();
-        w.push(true, 7, &[]).unwrap();
+        w.push(1, true, 42, b"record bytes").unwrap();
+        w.push(2, false, 0, &[]).unwrap();
+        w.push(3, true, 7, &[]).unwrap();
         let r1 = ring.wait(1).unwrap();
         assert_eq!(
             r1,
@@ -307,10 +761,10 @@ mod tests {
     }
 
     #[test]
-    fn oversized_payload_ships_overflow_with_r0_intact() {
+    fn legacy_oversized_payload_ships_overflow_with_r0_intact() {
         let (ring, mut w) = pair();
         let big = vec![0xA5u8; REPLY_INLINE_CAP + 1];
-        w.push(true, big.len() as u64, &big).unwrap();
+        w.push(1, true, big.len() as u64, &big).unwrap();
         let r = ring.wait(1).unwrap();
         assert!(r.overflowed() && !r.ok());
         assert!(r.payload.is_empty());
@@ -321,9 +775,9 @@ mod tests {
     #[test]
     fn slots_wrap_and_overwrite_is_detected() {
         let (ring, mut w) = pair();
-        // Two full laps: seq N and N + REPLY_SLOTS share a slot.
+        // Two full laps: reply seq N and N + REPLY_SLOTS share a slot.
         for i in 0..(2 * REPLY_SLOTS as u64) {
-            w.push(true, i, &i.to_le_bytes()).unwrap();
+            w.push(i + 1, true, i, &i.to_le_bytes()).unwrap();
         }
         w.flush().unwrap();
         let last = 2 * REPLY_SLOTS as u64;
@@ -354,5 +808,134 @@ mod tests {
             payload: [1.5f32, -2.0].iter().flat_map(|v| v.to_le_bytes()).collect(),
         };
         assert_eq!(r.payload_f32s(), vec![1.5, -2.0]);
+    }
+
+    #[test]
+    fn chunked_reply_reassembles_across_slots() {
+        let (h, mut w) = harness(None);
+        let c = collector(&h);
+        let payload: Vec<u8> =
+            (0..(2 * REPLY_INLINE_CAP + 1234)).map(|i| (i % 251) as u8).collect();
+        c.register(1);
+        let last = w.push(1, true, 99, &payload).unwrap();
+        assert_eq!(last, 3, "2*CAP + rest = 3 chunk frames");
+        w.flush().unwrap();
+        let r = c.collect(1).unwrap();
+        assert!(r.ok());
+        assert_eq!(r.r0, 99);
+        assert_eq!(r.seq, 1);
+        assert_eq!(r.payload, payload);
+    }
+
+    #[test]
+    fn exact_multiple_of_cap_has_no_empty_tail_chunk() {
+        let (h, mut w) = harness(None);
+        let c = collector(&h);
+        let payload = vec![0x5Au8; 3 * REPLY_INLINE_CAP];
+        c.register(1);
+        let last = w.push(1, true, 7, &payload).unwrap();
+        assert_eq!(last, 3, "k * CAP must ship exactly k chunks");
+        w.flush().unwrap();
+        let r = c.collect(1).unwrap();
+        assert_eq!(r.payload, payload);
+    }
+
+    #[test]
+    fn empty_payload_is_a_single_frame() {
+        let (h, mut w) = harness(None);
+        let c = collector(&h);
+        c.register(1);
+        assert_eq!(w.push(1, true, 3, &[]).unwrap(), 1);
+        w.flush().unwrap();
+        let r = c.collect(1).unwrap();
+        assert!(r.ok() && r.payload.is_empty());
+        assert_eq!(r.r0, 3);
+    }
+
+    #[test]
+    fn writer_queues_past_credit_and_drains_on_pump() {
+        let (h, mut w) = harness(None);
+        // A stream longer than the whole ring: only REPLY_SLOTS chunks
+        // can be placed before the collector grants more credit.
+        let chunks = REPLY_SLOTS + 9;
+        let payload = vec![1u8; chunks * REPLY_INLINE_CAP];
+        w.push(1, true, 1, &payload).unwrap();
+        assert_eq!(w.pending(), 9, "chunks past the ring must queue, not lap");
+        // Simulate the collector consuming everything so far.
+        h.credit.store_u64_release(0, REPLY_SLOTS as u64).unwrap();
+        w.pump().unwrap();
+        assert_eq!(w.pending(), 0);
+    }
+
+    #[test]
+    fn collector_streams_a_reply_larger_than_the_ring() {
+        let (h, mut w) = harness(None);
+        let c = Arc::new(collector(&h));
+        let chunks = REPLY_SLOTS + 17;
+        let payload: Vec<u8> =
+            (0..chunks * REPLY_INLINE_CAP).map(|i| (i % 239) as u8).collect();
+        c.register(1);
+        w.push(1, true, 42, &payload).unwrap();
+        let c2 = c.clone();
+        let t = std::thread::spawn(move || c2.collect(1));
+        // Drain the worker-side queue as the collector grants credit.
+        while w.pending() > 0 {
+            w.pump().unwrap();
+            std::thread::yield_now();
+        }
+        w.flush().unwrap();
+        let r = t.join().unwrap().unwrap();
+        assert_eq!(r.payload, payload);
+        assert_eq!(r.r0, 42);
+    }
+
+    #[test]
+    fn fire_and_forget_replies_are_drained_not_hoarded() {
+        let (h, mut w) = harness(None);
+        let c = collector(&h);
+        for i in 1..=10u64 {
+            w.push(i, true, i, &[]).unwrap();
+        }
+        w.flush().unwrap();
+        c.drain().unwrap();
+        // Nothing registered, so nothing parked — and the watermark
+        // reached the writer (flush: credit puts are asynchronous).
+        h.fwd_ep.flush().unwrap();
+        assert_eq!(h.credit.load_u64_acquire(0).unwrap(), 10);
+        assert!(c.state.lock().unwrap().ready.is_empty());
+    }
+
+    #[test]
+    fn lap_mid_stream_errors_instead_of_splicing() {
+        let (h, mut w) = harness(None);
+        let c = collector(&h);
+        c.register(1);
+        // A stream one lap longer than the ring, with the credit gate in
+        // place: the writer parks the chunks past slot REPLY_SLOTS.
+        let chunks = REPLY_SLOTS + 6;
+        let payload = vec![9u8; chunks * REPLY_INLINE_CAP];
+        w.push(1, true, 0, &payload).unwrap();
+        // Rogue credit (a buggy or hostile collector impl): the writer
+        // now laps the *unread* head of its own stream.
+        h.credit.store_u64_release(0, chunks as u64).unwrap();
+        w.pump().unwrap();
+        w.flush().unwrap();
+        // The collector must refuse to stitch chunk 65 (offset 64*CAP)
+        // in place of lapped chunk 1 — error, never a spliced payload.
+        let err = c.collect(1).unwrap_err();
+        assert!(
+            err.to_string().contains("overwritten") || err.to_string().contains("lapped"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn streaming_reply_on_legacy_reader_is_an_error() {
+        let (h, mut w) = harness(None);
+        let payload = vec![0u8; REPLY_INLINE_CAP + 1];
+        w.push(1, true, 0, &payload).unwrap();
+        w.flush().unwrap();
+        let err = h.ring.wait(1).unwrap_err();
+        assert!(err.to_string().contains("stream chunk"), "{err}");
     }
 }

@@ -16,20 +16,89 @@
 //! whole batch before a single flush — the seam `Dispatcher`'s
 //! `inject_batch_by_key` delivers per-worker buckets through.
 //!
-//! Every transport also owns the link's [`ReplyRing`]: the worker answers
-//! frame `seq` with a payload-carrying reply frame, which gives `invoke`
-//! its return path and `barrier` its completion credit.
+//! Every transport also owns the link's [`ReplyRing`] (the `invoke`
+//! return path) and its [`ConsumedCounter`] (the `barrier` completion
+//! credit). The two are deliberately separate: a streamed reply occupies
+//! *k* reply seqs for one ingress frame, so "reply seq == frames sent" is
+//! no longer a consumption signal — the worker instead advances the
+//! consumed counter once per ingress frame it handles, executed or
+//! rejected.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use crate::fabric::{MemoryRegion, RKey};
-use crate::ucp::Endpoint;
+use crate::fabric::{MemPerm, MemoryRegion, RKey};
+use crate::ucp::{Context, Endpoint};
 use crate::{Error, Result};
 
 use super::am_transport::ifunc_msg_send_am;
 use super::message::IfuncMsg;
 use super::reply::ReplyRing;
 use super::ring::{wrap_marker_word, SenderCursor};
+
+/// Leader-side view of a link's **consumed-frame counter**: an 8-byte
+/// word the worker advances (with the same signal-put the ring's byte
+/// credit uses) once per ingress frame it has handled — executed or
+/// rejected. `Dispatcher::barrier` waits on this instead of on reply
+/// seqs, because a chunked reply advances the reply ring by more than one
+/// slot per frame. Cheap to clone (the mapping is shared).
+#[derive(Clone)]
+pub struct ConsumedCounter {
+    mr: Arc<MemoryRegion>,
+    timeout: Option<Duration>,
+}
+
+impl ConsumedCounter {
+    /// Map the counter word on `ctx` (the sender/leader side); `timeout`
+    /// bounds [`ConsumedCounter::wait`] the same way the reply timeout
+    /// bounds reply waits.
+    pub fn new(ctx: &Context, timeout: Option<Duration>) -> Self {
+        ConsumedCounter { mr: ctx.mem_map(64, MemPerm::RWX), timeout }
+    }
+
+    /// The rkey the worker's signal-puts target.
+    pub fn rkey(&self) -> RKey {
+        self.mr.rkey()
+    }
+
+    /// Ingress frames the worker has reported consumed so far.
+    pub fn frames(&self) -> Result<u64> {
+        self.mr.load_u64_acquire(0)
+    }
+
+    /// Block until the worker has consumed `target` frames, invoking
+    /// `progress` each spin (the streamed-reply path drains the link's
+    /// reply collector there, so a worker parked on reply credit can
+    /// never stall the barrier). The timeout is progress-based: any
+    /// advance of the counter resets the deadline.
+    pub fn wait(&self, target: u64, mut progress: impl FnMut() -> Result<()>) -> Result<()> {
+        let mut deadline = self.timeout.map(|d| Instant::now() + d);
+        let mut last = None;
+        let mut i = 0u32;
+        loop {
+            let consumed = self.frames()?;
+            if consumed >= target {
+                return Ok(());
+            }
+            progress()?;
+            if last != Some(consumed) {
+                last = Some(consumed);
+                deadline = self.timeout.map(|d| Instant::now() + d);
+            }
+            if let Some(d) = deadline {
+                if Instant::now() > d {
+                    return Err(Error::Transport(format!(
+                        "worker consumed {consumed} of {target} frames with no progress \
+                         for {:?} (dead or stalled?)",
+                        self.timeout.unwrap_or_default()
+                    )));
+                }
+            }
+            crate::fabric::wire::backoff(i);
+            i += 1;
+        }
+    }
+}
 
 /// A sender-side ifunc delivery channel to one worker.
 pub trait IfuncTransport: Send {
@@ -62,18 +131,28 @@ pub trait IfuncTransport: Send {
     /// Frames sent over this link so far (the seq of the last frame).
     fn frames_sent(&self) -> u64;
 
-    /// The link's reply ring (one slot per consumed frame).
+    /// The link's reply ring (reply frames, possibly several per consumed
+    /// frame when replies stream).
     fn replies(&self) -> &ReplyRing;
 
+    /// The link's consumed-frame counter (one tick per ingress frame).
+    fn consumed(&self) -> &ConsumedCounter;
+
     /// Block until the worker has consumed — executed or rejected — every
-    /// frame sent so far. Completion credit: the reply for the last frame
-    /// implies, by in-order delivery, that all earlier frames are done.
+    /// frame sent so far, per its consumed-frame counter. Callers that
+    /// must keep a reply collector moving while they wait (the streamed
+    /// dispatcher barrier) should wait on [`IfuncTransport::consumed`]
+    /// directly with a drain hook.
     fn wait_consumed(&self) -> Result<()> {
-        let sent = self.frames_sent();
-        if sent > 0 {
-            self.replies().wait(sent)?;
-        }
-        Ok(())
+        self.consumed().wait(self.frames_sent(), || Ok(()))
+    }
+
+    /// Fault-injection hook for the security tests: write raw bytes into
+    /// the delivery channel's remote buffer, bypassing framing. Errors on
+    /// transports without a raw remote buffer.
+    #[doc(hidden)]
+    fn debug_put_raw(&mut self, _offset: usize, _data: &[u8]) -> Result<()> {
+        Err(Error::Other("raw ring access unsupported on this transport".into()))
     }
 }
 
@@ -91,6 +170,7 @@ pub struct RingTransport {
     /// Sender-local word the worker writes its consumed-bytes count into.
     credit: Arc<MemoryRegion>,
     replies: ReplyRing,
+    consumed: ConsumedCounter,
 }
 
 impl RingTransport {
@@ -100,6 +180,7 @@ impl RingTransport {
         ring_bytes: usize,
         credit: Arc<MemoryRegion>,
         replies: ReplyRing,
+        consumed: ConsumedCounter,
     ) -> Self {
         RingTransport {
             ep,
@@ -110,6 +191,7 @@ impl RingTransport {
             frames: 0,
             credit,
             replies,
+            consumed,
         }
     }
 
@@ -247,6 +329,15 @@ impl IfuncTransport for RingTransport {
     fn replies(&self) -> &ReplyRing {
         &self.replies
     }
+
+    fn consumed(&self) -> &ConsumedCounter {
+        &self.consumed
+    }
+
+    fn debug_put_raw(&mut self, offset: usize, data: &[u8]) -> Result<()> {
+        self.ep.put_nbi(self.ring_rkey, offset, data)?;
+        self.ep.flush()
+    }
 }
 
 /// Send-receive delivery (§5.1): frames ride the reserved ifunc AM and the
@@ -257,11 +348,12 @@ pub struct AmTransport {
     ep: Arc<Endpoint>,
     frames: u64,
     replies: ReplyRing,
+    consumed: ConsumedCounter,
 }
 
 impl AmTransport {
-    pub fn new(ep: Arc<Endpoint>, replies: ReplyRing) -> Self {
-        AmTransport { ep, frames: 0, replies }
+    pub fn new(ep: Arc<Endpoint>, replies: ReplyRing, consumed: ConsumedCounter) -> Self {
+        AmTransport { ep, frames: 0, replies, consumed }
     }
 }
 
@@ -293,6 +385,10 @@ impl IfuncTransport for AmTransport {
 
     fn replies(&self) -> &ReplyRing {
         &self.replies
+    }
+
+    fn consumed(&self) -> &ConsumedCounter {
+        &self.consumed
     }
 }
 

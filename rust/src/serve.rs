@@ -13,12 +13,19 @@
 //! {"cmd":"stats"}                            -> {"ok":true,"executed":N}
 //! ```
 //!
-//! `get` is served by injection too: a `GetIfunc` frame travels to the
-//! key's owner, the injected code calls `db_get` (which pushes the record
-//! into the invocation's reply payload), and the reply frame carries the
-//! record bytes back inline — the data in the response is computed by the
-//! injected function on the worker, not read from the store by the
-//! leader.
+//! Both commands are **invocations on the record's owning worker** —
+//! nothing touches any other link, so concurrent clients hitting
+//! different shards never serialize on each other:
+//!
+//! * `insert` injects an `InsertIfunc` frame to the key's owner and waits
+//!   for *that worker's* reply (not a full-cluster barrier — one slow or
+//!   busy worker cannot stall inserts bound elsewhere),
+//! * `get` injects a `GetIfunc` frame; the injected code calls `db_get`,
+//!   which pushes the record into the invocation's reply payload, and the
+//!   reply carries the record back — chunk-streamed when it exceeds one
+//!   reply frame, so records of any size round-trip. The data in the
+//!   response is computed by the injected function on the worker, not
+//!   read from the store by the leader.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -36,17 +43,25 @@ pub struct ServeHandles {
     pub get: IfuncHandle,
 }
 
-pub fn serve(workers: usize, listen: &str, transport: TransportKind) -> Result<()> {
+/// Boot the worker pool and register the serve ifuncs (shared by the TCP
+/// entry point and the in-process tests).
+pub fn launch(workers: usize, transport: TransportKind) -> Result<(Arc<Cluster>, ServeHandles)> {
     let cluster = Arc::new(Cluster::launch(
         ClusterConfig { workers, transport, ..Default::default() },
         |_, _, _| {},
     )?);
     cluster.leader.library_dir().install(Box::new(InsertIfunc));
     cluster.leader.library_dir().install(Box::new(GetIfunc));
-    let handles = Arc::new(ServeHandles {
+    let handles = ServeHandles {
         insert: cluster.leader.register_ifunc("insert")?,
         get: cluster.leader.register_ifunc("get")?,
-    });
+    };
+    Ok((cluster, handles))
+}
+
+pub fn serve(workers: usize, listen: &str, transport: TransportKind) -> Result<()> {
+    let (cluster, handles) = launch(workers, transport)?;
+    let handles = Arc::new(handles);
 
     let listener = TcpListener::bind(listen)?;
     println!(
@@ -100,13 +115,21 @@ pub fn handle_line(cluster: &Cluster, handles: &ServeHandles, line: &str) -> Jso
             let Some(data) = req.get("data").and_then(|v| v.as_f32_vec()) else {
                 return err_json("insert needs data array");
             };
-            match d
-                .inject_by_key(&handles.insert, key, &InsertIfunc::args(key, &data))
-                .and_then(|w| d.barrier().map(|_| w))
-            {
-                Ok(worker) => {
+            // An invocation on the owning worker alone: wait for *its*
+            // reply, not a full-cluster barrier — a barrier here would
+            // flush and wait on every link, so one client inserting to
+            // worker 0 would serialize behind unrelated traffic (or a
+            // parked frame) on worker N.
+            let worker = d.route_key(key);
+            let msg = match handles.insert.msg_create(&InsertIfunc::args(key, &data)) {
+                Ok(m) => m,
+                Err(e) => return err_json(&e.to_string()),
+            };
+            match d.invoke(worker, &msg) {
+                Ok(reply) if reply.ok() => {
                     Json::obj(vec![("ok", Json::Bool(true)), ("worker", Json::from(worker))])
                 }
+                Ok(_) => err_json("insert ifunc rejected on worker"),
                 Err(e) => err_json(&e.to_string()),
             }
         }
@@ -119,20 +142,23 @@ pub fn handle_line(cluster: &Cluster, handles: &ServeHandles, line: &str) -> Jso
                 Ok(m) => m,
                 Err(e) => return err_json(&e.to_string()),
             };
-            // Inject the lookup and wait for the reply frame: the record
-            // bytes ride inline in the reply payload, pushed by the
-            // injected function on the worker — concurrent gets each
-            // carry their own frame, so nothing can clobber anything.
+            // Inject the lookup and wait for the reply: the record bytes
+            // ride in the reply payload — streamed across chunk frames
+            // when the record exceeds one — pushed by the injected
+            // function on the worker. Concurrent gets each carry their
+            // own frame, so nothing can clobber anything, and record
+            // size never changes the protocol.
             match d.invoke_get(worker, &msg) {
                 Ok((reply, data)) if reply.ok() && reply.r0 != GET_MISSING => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("worker", Json::from(worker)),
                     ("data", Json::arr_f32(&data)),
                 ]),
-                Ok((reply, _)) if reply.overflowed() => err_json(&format!(
-                    "record of {} elems exceeds the inline reply cap",
-                    reply.r0
-                )),
+                Ok((reply, _)) if reply.overflowed() => {
+                    // Only reachable on a stream_replies: false cluster
+                    // (serve always streams); kept for wire compat.
+                    err_json("record too large for this link (reply streaming disabled)")
+                }
                 Ok((reply, _)) if reply.ok() => err_json("not found"),
                 Ok(_) => err_json("get ifunc rejected on worker"),
                 Err(e) => err_json(&e.to_string()),
@@ -151,5 +177,36 @@ pub fn handle_line(cluster: &Cluster, handles: &ServeHandles, line: &str) -> Jso
             ),
         ]),
         _ => err_json("unknown cmd (insert/get/stats)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full JSON protocol in-process (no socket): a record well past
+    /// one reply frame (80 KB > 64 KiB) inserts to its owning worker and
+    /// streams back intact through `get`.
+    #[test]
+    fn json_insert_then_get_streams_a_big_record() {
+        let (cluster, handles) = launch(2, TransportKind::Ring).unwrap();
+        let n = 20_000usize; // 80 KB of f32s — past the old inline cap
+        let data: String = (0..n).map(|i| format!("{}", i % 17)).collect::<Vec<_>>().join(",");
+        let resp = handle_line(
+            &cluster,
+            &handles,
+            &format!("{{\"cmd\":\"insert\",\"key\":7,\"data\":[{data}]}}"),
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+
+        let resp = handle_line(&cluster, &handles, "{\"cmd\":\"get\",\"key\":7}");
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let got = resp.get("data").unwrap().as_f32_vec().unwrap();
+        assert_eq!(got.len(), n);
+        let want: Vec<f32> = (0..n).map(|i| (i % 17) as f32).collect();
+        assert_eq!(got, want);
+
+        let resp = handle_line(&cluster, &handles, "{\"cmd\":\"get\",\"key\":999}");
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp}");
     }
 }

@@ -351,15 +351,19 @@ fn pending_reply_survives_fire_and_forget_flood() {
     });
 }
 
-/// A single-threaded caller that interleaves a ring's worth of sends
-/// behind an uncollected reply gets a clear transport error at the lap
-/// boundary (instead of silent reply corruption) — and the pending reply
-/// itself is still collectible afterwards.
+/// Legacy-mode (`stream_replies: false`) regression: a single-threaded
+/// caller that interleaves a ring's worth of sends behind an uncollected
+/// reply gets a clear transport error at the lap boundary (instead of
+/// silent reply corruption) — and the pending reply itself is still
+/// collectible afterwards. (A streamed link has no lap boundary: the
+/// collector parks the reply in leader memory and the flood proceeds —
+/// see `pending_reply_survives_fire_and_forget_flood`.)
 #[test]
 fn lap_guard_errors_instead_of_corrupting_reply() {
     let cluster = Cluster::launch(
         ClusterConfig {
             workers: 1,
+            stream_replies: false,
             reply_timeout: Some(std::time::Duration::from_millis(50)),
             ..Default::default()
         },
@@ -428,6 +432,161 @@ fn full_invoke_window_errors_instead_of_deadlocking() {
     assert!(p1.wait().unwrap().ok());
     assert!(p2.wait().unwrap().ok());
     assert!(d.invoke(0, &msg).unwrap().ok());
+    cluster.shutdown().unwrap();
+}
+
+/// The tentpole acceptance scenario: a 1 MiB record — 16× the reply
+/// frame's chunk size — round-trips through `insert` + `invoke_get` on
+/// both transports. The reply streams as 16 chunk frames through a
+/// 64-slot ring and reassembles bit-exact.
+#[test]
+fn get_streams_a_1mib_record_over_both_transports() {
+    for_both_transports(|transport| {
+        let cluster = Cluster::launch(
+            ClusterConfig { workers: 2, transport, ..Default::default() },
+            |_, _, _| {},
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(InsertIfunc));
+        cluster.leader.library_dir().install(Box::new(GetIfunc));
+        let d = cluster.dispatcher();
+        let h_ins = d.register("insert").unwrap();
+        let h_get = d.register("get").unwrap();
+
+        let n = (1usize << 20) / 4; // 262144 f32 elements = 1 MiB
+        let data: Vec<f32> = (0..n).map(|i| (i % 1009) as f32).collect();
+        let key = 0xB16_DA7A;
+        d.inject_by_key(&h_ins, key, &InsertIfunc::args(key, &data)).unwrap();
+        d.barrier().unwrap();
+
+        let w = d.route_key(key);
+        let msg = h_get.msg_create(&GetIfunc::args(key)).unwrap();
+        let (reply, fetched) = d.invoke_get(w, &msg).unwrap();
+        assert!(reply.ok(), "{transport:?}: {:?}", reply.status);
+        assert!(!reply.overflowed(), "{transport:?}: streamed links never overflow");
+        assert_eq!(reply.r0 as usize, n, "{transport:?}");
+        assert_eq!(fetched.len(), n, "{transport:?}");
+        assert_eq!(fetched, data, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
+}
+
+/// Chunked reply streams interleaved with fire-and-forget floods bigger
+/// than the whole reply ring, on both transports: every chunk of every
+/// stream reassembles intact — the flood's replies recycle slots around
+/// the parked invocation reply without ever splicing into it.
+#[test]
+fn chunked_replies_interleave_with_fire_and_forget_floods() {
+    for_both_transports(|transport| {
+        let cluster = Cluster::launch(
+            ClusterConfig { workers: 1, transport, max_inflight: 4, ..Default::default() },
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(EchoIfunc));
+                ctx.library_dir().install(Box::new(CounterIfunc::default()));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(EchoIfunc));
+        cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+        let d = cluster.dispatcher();
+        let h_echo = d.register("echo").unwrap();
+        let h_cnt = d.register("counter").unwrap();
+        let cnt = h_cnt.msg_create(&SourceArgs::bytes(vec![0u8; 32])).unwrap();
+
+        let flood = 2 * two_chains::ifunc::REPLY_SLOTS;
+        let rounds = 4u64;
+        for round in 0..rounds {
+            // ~3 chunks of reply payload, stamped per round.
+            let body: Vec<u8> = (0..200_000usize)
+                .map(|i| ((i as u64 + round) % 251) as u8)
+                .collect();
+            let pending = d
+                .invoke_begin(0, &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap())
+                .unwrap();
+            for _ in 0..flood {
+                d.send_to(0, &cnt).unwrap();
+            }
+            let reply = pending.wait().unwrap();
+            assert!(reply.ok(), "{transport:?} round {round}");
+            assert_eq!(reply.payload, body, "{transport:?} round {round}");
+            assert_eq!(reply.r0 as usize, body.len(), "{transport:?} round {round}");
+        }
+        d.barrier().unwrap();
+        assert_eq!(d.total_executed(), rounds * (1 + flood as u64), "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
+}
+
+/// The serve-path fix: an insert is an invocation on the *owning* worker
+/// only. A sibling worker parked inside a long-running injected function
+/// (gated on a host symbol this test controls) must not delay it — the
+/// old insert-then-cluster-barrier flow would hang here until the gate
+/// opened.
+#[test]
+fn inserts_do_not_wait_on_other_workers_consumption() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    struct GateIfunc;
+    impl two_chains::ifunc::IfuncLibrary for GateIfunc {
+        fn name(&self) -> &str {
+            "gate"
+        }
+        fn payload_get_max_size(&self, a: &SourceArgs) -> usize {
+            a.len()
+        }
+        fn payload_init(&self, p: &mut [u8], a: &SourceArgs) -> two_chains::Result<usize> {
+            p[..a.len()].copy_from_slice(a.as_bytes());
+            Ok(a.len())
+        }
+        fn code(&self) -> two_chains::ifunc::CodeImage {
+            let mut a = two_chains::vm::Assembler::new();
+            a.call("gate_wait");
+            a.halt();
+            let (vm_code, imports) = a.assemble();
+            two_chains::ifunc::CodeImage { imports, vm_code, hlo: vec![] }
+        }
+    }
+
+    let gate = Arc::new(AtomicBool::new(false));
+    let g = gate.clone();
+    let cluster = Cluster::launch(
+        ClusterConfig { workers: 2, ..Default::default() },
+        move |_, ctx, _| {
+            let g = g.clone();
+            ctx.symbols().install_fn("gate_wait", move |_, _| {
+                while !g.load(Ordering::Acquire) {
+                    std::thread::yield_now();
+                }
+                Ok(0)
+            });
+        },
+    )
+    .unwrap();
+    cluster.leader.library_dir().install(Box::new(GateIfunc));
+    cluster.leader.library_dir().install(Box::new(InsertIfunc));
+    let d = cluster.dispatcher();
+    let h_gate = d.register("gate").unwrap();
+    let h_ins = d.register("insert").unwrap();
+
+    let key0 = (0u64..).find(|k| d.route_key(*k) == 0).unwrap();
+
+    // Park worker 1 inside the gated function (its receive loop is now
+    // busy; its consumed counter will not move).
+    d.send_to(1, &h_gate.msg_create(&SourceArgs::bytes(vec![0u8; 8])).unwrap()).unwrap();
+
+    // Serve-style insert to worker 0: an invocation on its own link —
+    // completes while worker 1 is still parked.
+    let reply =
+        d.invoke(0, &h_ins.msg_create(&InsertIfunc::args(key0, &[1.0, 2.0, 3.0])).unwrap())
+            .unwrap();
+    assert!(reply.ok());
+    assert_eq!(cluster.workers[0].store.get(key0), Some(vec![1.0, 2.0, 3.0]));
+    assert_eq!(cluster.workers[1].executed(), 0, "worker 1 must still be parked");
+
+    gate.store(true, Ordering::Release);
+    d.barrier().unwrap();
+    assert_eq!(cluster.workers[1].executed(), 1);
     cluster.shutdown().unwrap();
 }
 

@@ -6,8 +6,8 @@ use two_chains::fabric::{Fabric, WireConfig};
 use two_chains::ifunc::builtin::{ChecksumIfunc, CounterIfunc, XorIfunc};
 use two_chains::ifunc::message::{CodeImage, Header, IfuncMsg, IfuncMsgParams};
 use two_chains::ifunc::reply::{
-    ReplyRing, ReplyWriter, REPLY_INLINE_CAP, REPLY_SLOTS, STATUS_FAILED, STATUS_OK,
-    STATUS_OVERFLOW,
+    ReplyCollector, ReplyRing, ReplyWriter, REPLY_INLINE_CAP, REPLY_SLOTS, STATUS_FAILED,
+    STATUS_OK, STATUS_OVERFLOW,
 };
 use two_chains::ifunc::IfuncLibrary;
 use two_chains::ifunc::{IfuncRing, SenderCursor, SourceArgs, TargetArgs};
@@ -201,12 +201,12 @@ fn reply_pair() -> (ReplyRing, ReplyWriter) {
 fn prop_reply_frame_roundtrip() {
     let mut rng = XorShift::new(0x5EC0);
     let (ring, mut w) = reply_pair();
-    for case in 0..200 {
+    for case in 0..200u64 {
         let len = rng.below(REPLY_INLINE_CAP as u64 + 1) as usize;
         let payload = rng.bytes(len);
         let ok = rng.below(8) != 0;
         let r0 = rng.next_u64();
-        let seq = w.push(ok, r0, &payload).unwrap();
+        let seq = w.push(case + 1, ok, r0, &payload).unwrap();
         w.flush().unwrap();
         let reply = ring.wait(seq).unwrap();
         assert_eq!(reply.seq, seq, "case {case}");
@@ -221,21 +221,25 @@ fn prop_reply_frame_roundtrip() {
     }
 }
 
-/// The overflow boundary is exact: a payload of REPLY_INLINE_CAP bytes
-/// rides inline; one byte more ships STATUS_OVERFLOW with an empty
-/// payload and r0 (the old r0-as-length channel) intact.
+/// The legacy (`stream_replies: false`) overflow boundary is exact: a
+/// payload of REPLY_INLINE_CAP bytes rides inline; one byte more ships
+/// STATUS_OVERFLOW with an empty payload and r0 (the old r0-as-length
+/// channel) intact.
 #[test]
 fn prop_reply_overflow_boundary() {
     let (ring, mut w) = reply_pair();
     let mut rng = XorShift::new(0x0F10);
-    for &len in &[
+    for (i, &len) in [
         REPLY_INLINE_CAP - 1,
         REPLY_INLINE_CAP,
         REPLY_INLINE_CAP + 1,
         REPLY_INLINE_CAP + rng.range(2, 4096) as usize,
-    ] {
+    ]
+    .iter()
+    .enumerate()
+    {
         let payload = rng.bytes(len);
-        let seq = w.push(true, len as u64, &payload).unwrap();
+        let seq = w.push(i as u64 + 1, true, len as u64, &payload).unwrap();
         w.flush().unwrap();
         let reply = ring.wait(seq).unwrap();
         assert_eq!(reply.r0, len as u64, "len {len}");
@@ -261,7 +265,7 @@ fn prop_reply_lap_overwrite_detected() {
         let total = REPLY_SLOTS as u64 + rng.range(1, 3 * REPLY_SLOTS as u64);
         for seq in 1..=total {
             // Payload stamps the seq so a cross-lap mixup is detectable.
-            w.push(true, seq, &seq.to_le_bytes()).unwrap();
+            w.push(seq, true, seq, &seq.to_le_bytes()).unwrap();
         }
         w.flush().unwrap();
         // Everything still within the newest ring of slots reads back.
@@ -277,6 +281,132 @@ fn prop_reply_lap_overwrite_detected() {
             assert!(ring.wait(seq).is_err(), "case {case}: seq {seq} of {total}");
         }
     }
+}
+
+/// Streamed-reply wire-format harness: leader-side ring + collector,
+/// worker-side chunking writer gated on a test-visible credit word.
+struct StreamHarness {
+    collector: std::sync::Arc<ReplyCollector>,
+    writer: ReplyWriter,
+    /// The writer's slot-recycling gate (worker-local word the collector
+    /// normally advances; tests can poke it to simulate rogue credit).
+    credit: std::sync::Arc<two_chains::fabric::MemoryRegion>,
+    /// Absorbs the collector's watermark puts when the test drives the
+    /// writer's gate by hand.
+    _sink: std::sync::Arc<two_chains::fabric::MemoryRegion>,
+}
+
+fn stream_harness(collector_feeds_credit: bool) -> StreamHarness {
+    use two_chains::fabric::MemPerm;
+    let f = Fabric::new(2, WireConfig::off());
+    let leader = Context::new(f.node(0), ContextConfig::default()).unwrap();
+    let worker = Context::new(f.node(1), ContextConfig::default()).unwrap();
+    let wl = Worker::new(&leader);
+    let ww = Worker::new(&worker);
+    let ring = ReplyRing::new(&leader, None);
+    let credit = worker.mem_map(64, MemPerm::RWX);
+    let sink = worker.mem_map(64, MemPerm::RWX);
+    let back_ep = ww.connect(&wl).unwrap();
+    let fwd_ep = wl.connect(&ww).unwrap();
+    // With `collector_feeds_credit` the collector's watermark puts land
+    // in the writer's gate word (the production wiring); otherwise they
+    // land in a sink and the *test* owns the gate (lap injection).
+    let collector_rkey = if collector_feeds_credit { credit.rkey() } else { sink.rkey() };
+    let collector =
+        std::sync::Arc::new(ReplyCollector::new(ring.clone(), fwd_ep, collector_rkey));
+    let writer = ReplyWriter::with_mode(back_ep, ring.rkey(), true, Some(credit.clone()));
+    StreamHarness { collector, writer, credit, _sink: sink }
+}
+
+/// Chunk-boundary exactness: payloads of exactly k * REPLY_INLINE_CAP,
+/// the empty payload, and off-by-one sizes all reassemble bit-identical
+/// with the expected chunk count (no empty tail chunk at exact
+/// multiples).
+#[test]
+fn prop_chunked_reply_boundaries_reassemble_exactly() {
+    let mut h = stream_harness(true);
+    let mut rng = XorShift::new(0xC4C4);
+    let cases: Vec<(usize, u64)> = vec![
+        (0, 1),
+        (1, 1),
+        (REPLY_INLINE_CAP - 1, 1),
+        (REPLY_INLINE_CAP, 1),
+        (REPLY_INLINE_CAP + 1, 2),
+        (2 * REPLY_INLINE_CAP, 2),
+        (2 * REPLY_INLINE_CAP + 1, 3),
+        (3 * REPLY_INLINE_CAP, 3),
+        (3 * REPLY_INLINE_CAP + rng.range(1, 1000) as usize, 4),
+    ];
+    let mut expected_last = 0u64;
+    for (frame, (len, chunks)) in cases.into_iter().enumerate() {
+        let frame_seq = frame as u64 + 1;
+        let payload = rng.bytes(len);
+        let r0 = rng.next_u64();
+        h.collector.register(frame_seq);
+        let last = h.writer.push(frame_seq, true, r0, &payload).unwrap();
+        expected_last += chunks;
+        assert_eq!(last, expected_last, "len {len}: wrong chunk count");
+        h.writer.flush().unwrap();
+        let reply = h.collector.collect(frame_seq).unwrap();
+        assert_eq!(reply.seq, frame_seq, "len {len}");
+        assert_eq!(reply.status, STATUS_OK, "len {len}");
+        assert_eq!(reply.r0, r0, "len {len}");
+        assert_eq!(reply.payload, payload, "len {len}");
+    }
+}
+
+/// Random payload sizes spanning 0 to several chunks, with random
+/// ok/failed outcomes, all round-trip through the collector in order.
+#[test]
+fn prop_streamed_replies_roundtrip_random_sizes() {
+    let mut h = stream_harness(true);
+    let mut rng = XorShift::new(0x57E4);
+    for frame_seq in 1..=60u64 {
+        let len = rng.below(3 * REPLY_INLINE_CAP as u64) as usize;
+        let ok = rng.below(10) != 0;
+        let payload = rng.bytes(len);
+        let r0 = rng.next_u64();
+        h.collector.register(frame_seq);
+        h.writer.push(frame_seq, ok, r0, &payload).unwrap();
+        // The slot-recycling credit from earlier collects arrives
+        // asynchronously; pump until this push's chunks are all placed.
+        while h.writer.pending() > 0 {
+            h.writer.pump().unwrap();
+            std::thread::yield_now();
+        }
+        h.writer.flush().unwrap();
+        let reply = h.collector.collect(frame_seq).unwrap();
+        assert_eq!(reply.r0, r0, "frame {frame_seq}");
+        if ok {
+            assert_eq!(reply.payload, payload, "frame {frame_seq} (len {len})");
+        } else {
+            assert_eq!(reply.status, STATUS_FAILED, "frame {frame_seq}");
+            assert!(reply.payload.is_empty(), "frame {frame_seq}");
+        }
+    }
+}
+
+/// A lap arriving mid-stream must error, never splice chunks from
+/// different laps into one payload: with rogue credit the writer laps the
+/// unread head of its own 70-chunk stream, and the collector refuses.
+#[test]
+fn prop_reply_lap_mid_stream_errors_not_splices() {
+    let mut h = stream_harness(false);
+    h.collector.register(1);
+    let chunks = REPLY_SLOTS + 6;
+    let payload = vec![0xEEu8; chunks * REPLY_INLINE_CAP];
+    h.writer.push(1, true, 0, &payload).unwrap();
+    // The credit gate held back the chunks past the ring...
+    assert_eq!(h.writer.pending(), 6);
+    // ...until rogue credit releases them over the unread head.
+    h.credit.store_u64_release(0, chunks as u64).unwrap();
+    h.writer.pump().unwrap();
+    h.writer.flush().unwrap();
+    let err = h.collector.collect(1).unwrap_err();
+    assert!(
+        err.to_string().contains("overwritten") || err.to_string().contains("lapped"),
+        "{err}"
+    );
 }
 
 /// AM transport: any random sequence of payload sizes (spanning all three

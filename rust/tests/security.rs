@@ -203,6 +203,42 @@ fn hostile_frame_is_consumed_not_spun_on() {
     assert_eq!(dst.symbols().counter_value(), 1);
 }
 
+/// Worker-liveness regression: a frame whose *header* fails validation
+/// cannot be consumed (its length is untrusted), so it parks at the poll
+/// cursor and `poll_ifunc` errors on every iteration with `no_message ==
+/// false`. The receive loop used to skip both the shutdown check and the
+/// backoff on that path — `WorkerHandle::stop()` / `Cluster::shutdown()`
+/// would join forever while the thread hot-spun at 100% CPU. Now a
+/// non-consuming error is treated like an idle spin: reported once,
+/// backed off, and shutdown-aware.
+#[test]
+fn corrupt_header_frame_does_not_hang_shutdown() {
+    use two_chains::coordinator::{Cluster, ClusterConfig};
+
+    let cluster = Cluster::launch(
+        ClusterConfig { workers: 1, ..Default::default() },
+        |_, _, _| {},
+    )
+    .unwrap();
+    let d = cluster.dispatcher();
+    // Hostile write straight into the worker's ring at the poll cursor:
+    // nonzero, not MAGIC, not WRAP — permanently unconsumable.
+    d.debug_corrupt_ring(0, 0, &0xDEAD_BEEF_u64.to_le_bytes()).unwrap();
+    // Let the worker thread meet the poisoned word.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    let t = std::thread::spawn(move || cluster.shutdown());
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while !t.is_finished() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "Cluster::shutdown() hung on a header-invalid frame parked at the cursor"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    t.join().unwrap().unwrap();
+}
+
 #[test]
 fn garbage_in_ring_is_rejected_not_executed() {
     let (_src, dst, ep) = pair();
