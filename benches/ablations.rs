@@ -21,8 +21,15 @@
 //!   protocol (`stream_replies: false`), which *overflows* — ships no
 //!   payload at all — past 64 KiB. The old column is a floor: it prices
 //!   failing to return the record.
+//! * **H** — intra-node transport: ring vs AM vs shm through the
+//!   identical cluster harness, over small frames (delivery-dominated)
+//!   and 1 MiB streamed gets (reply-stream-dominated). The shm column is
+//!   the colocated fast path: no NIC engine, no wire model, no
+//!   completion waits — its delta against ring prices the whole emulated
+//!   fabric.
 //!
-//! Run: `cargo bench --bench ablations` (QUICK=1 for a smoke run).
+//! Run: `cargo bench --bench ablations` (QUICK=1 for a smoke run;
+//! ABL=E,H runs only the named ablations — CI's bench smoke uses ABL=H).
 
 use std::time::Instant;
 
@@ -195,6 +202,15 @@ fn cluster_get_throughput(
 
 fn main() {
     let quick = std::env::var("QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    // ABL=E,H (letters, any separator) restricts the run to the named
+    // ablations; unset runs everything.
+    let only: Option<Vec<char>> = std::env::var("ABL").ok().map(|v| {
+        v.chars()
+            .filter(char::is_ascii_alphabetic)
+            .map(|c| c.to_ascii_uppercase())
+            .collect()
+    });
+    let run = |letter: char| only.as_ref().is_none_or(|s| s.contains(&letter));
     let base = BenchConfig {
         sizes: if quick {
             vec![64, 8192]
@@ -207,97 +223,109 @@ fn main() {
     };
 
     // Abl A — I-cache coherence.
-    for (label, icache) in [
-        ("non-coherent I-cache (paper testbed)", IcacheConfig::non_coherent()),
-        ("coherent I-cache (paper §5.1 future work)", IcacheConfig::coherent()),
-    ] {
-        let cfg = BenchConfig { icache, ..base.clone() };
-        let s = lat_series(&cfg);
-        report::print_series(&format!("Abl A — latency, {label}"), "ns", &s, true);
+    if run('A') {
+        for (label, icache) in [
+            ("non-coherent I-cache (paper testbed)", IcacheConfig::non_coherent()),
+            ("coherent I-cache (paper §5.1 future work)", IcacheConfig::coherent()),
+        ] {
+            let cfg = BenchConfig { icache, ..base.clone() };
+            let s = lat_series(&cfg);
+            report::print_series(&format!("Abl A — latency, {label}"), "ns", &s, true);
+        }
     }
 
     // Abl B — auto-registration cache.
-    for (label, cache) in [("cache on (paper)", true), ("cache off", false)] {
-        let cfg = BenchConfig { cache_enabled: cache, ..base.clone() };
-        let s = lat_series(&cfg);
-        report::print_series(&format!("Abl B — latency, {label}"), "ns", &s, true);
+    if run('B') {
+        for (label, cache) in [("cache on (paper)", true), ("cache off", false)] {
+            let cfg = BenchConfig { cache_enabled: cache, ..base.clone() };
+            let s = lat_series(&cfg);
+            report::print_series(&format!("Abl B — latency, {label}"), "ns", &s, true);
+        }
     }
 
     // Abl C — rendezvous threshold.
-    for thresh in [1024usize, 2000, 8192, 16384] {
-        let cfg = BenchConfig {
-            am: AmParams { rndv_threshold: thresh, ..base.am },
-            ..base.clone()
-        };
-        let s = tput_series(&cfg);
-        report::print_series(
-            &format!("Abl C — throughput, UCX_RNDV_THRESH={thresh}"),
-            "msg/s",
-            &s,
-            false,
-        );
+    if run('C') {
+        for thresh in [1024usize, 2000, 8192, 16384] {
+            let cfg = BenchConfig {
+                am: AmParams { rndv_threshold: thresh, ..base.am },
+                ..base.clone()
+            };
+            let s = tput_series(&cfg);
+            report::print_series(
+                &format!("Abl C — throughput, UCX_RNDV_THRESH={thresh}"),
+                "msg/s",
+                &s,
+                false,
+            );
+        }
     }
 
     // Abl D — shipped-code size.
-    for pad in [0usize, 64, 512] {
-        let cfg = BenchConfig { code_pad: pad, ..base.clone() };
-        let s = lat_series(&cfg);
-        report::print_series(
-            &format!("Abl D — latency, +{pad} padding instrs (+{} code bytes)", pad * 8),
-            "ns",
-            &s,
-            true,
-        );
+    if run('D') {
+        for pad in [0usize, 64, 512] {
+            let cfg = BenchConfig { code_pad: pad, ..base.clone() };
+            let s = lat_series(&cfg);
+            report::print_series(
+                &format!("Abl D — latency, +{pad} padding instrs (+{} code bytes)", pad * 8),
+                "ns",
+                &s,
+                true,
+            );
+        }
     }
 
     // Abl E — delivery transport through the identical cluster harness.
     // SeriesPoint's `ifunc` column = ring transport, `am` column = ifuncs
     // over AM (both run the same injected counter through the dispatcher).
-    let s: Vec<report::SeriesPoint> = base
-        .sizes
-        .iter()
-        .map(|&size| {
-            let msgs = base.msgs_per_size.min((64 << 20) / size.max(1)).max(50);
-            let ring = cluster_throughput(&base, TransportKind::Ring, size, msgs);
-            let am = cluster_throughput(&base, TransportKind::Am, size, msgs);
-            eprint!(".");
-            report::SeriesPoint { size, ifunc: ring, am }
-        })
-        .collect();
-    report::print_series(
-        "Abl E — cluster throughput, ring transport vs AM transport",
-        "msg/s",
-        &s,
-        false,
-    );
+    if run('E') {
+        let s: Vec<report::SeriesPoint> = base
+            .sizes
+            .iter()
+            .map(|&size| {
+                let msgs = base.msgs_per_size.min((64 << 20) / size.max(1)).max(50);
+                let ring = cluster_throughput(&base, TransportKind::Ring, size, msgs);
+                let am = cluster_throughput(&base, TransportKind::Am, size, msgs);
+                eprint!(".");
+                report::SeriesPoint { size, ifunc: ring, am }
+            })
+            .collect();
+        report::print_series(
+            "Abl E — cluster throughput, ring transport vs AM transport",
+            "msg/s",
+            &s,
+            false,
+        );
+    }
 
     // Abl F — batched vs frame-at-a-time delivery, per transport, on the
     // identical workload. Column mapping (same trick as Abl E): `ifunc`
     // column = send_batch_to in chunks of 32, `AM` column = chunks of 1
     // (send + flush per frame) — so a positive "ifunc vs AM" % is the
     // batching win.
-    for transport in [TransportKind::Ring, TransportKind::Am] {
-        let s: Vec<report::SeriesPoint> = base
-            .sizes
-            .iter()
-            .map(|&size| {
-                let msgs = base.msgs_per_size.min((64 << 20) / size.max(1)).max(50);
-                let batched = cluster_batched_throughput(&base, transport, size, msgs, 32);
-                let single = cluster_batched_throughput(&base, transport, size, msgs, 1);
-                eprint!(".");
-                report::SeriesPoint { size, ifunc: batched, am: single }
-            })
-            .collect();
-        report::print_series(
-            &format!(
-                "Abl F — {} transport: batched send_batch (ifunc col) vs \
-                 frame-at-a-time (AM col)",
-                transport.label()
-            ),
-            "msg/s",
-            &s,
-            false,
-        );
+    if run('F') {
+        for transport in [TransportKind::Ring, TransportKind::Am] {
+            let s: Vec<report::SeriesPoint> = base
+                .sizes
+                .iter()
+                .map(|&size| {
+                    let msgs = base.msgs_per_size.min((64 << 20) / size.max(1)).max(50);
+                    let batched = cluster_batched_throughput(&base, transport, size, msgs, 32);
+                    let single = cluster_batched_throughput(&base, transport, size, msgs, 1);
+                    eprint!(".");
+                    report::SeriesPoint { size, ifunc: batched, am: single }
+                })
+                .collect();
+            report::print_series(
+                &format!(
+                    "Abl F — {} transport: batched send_batch (ifunc col) vs \
+                     frame-at-a-time (AM col)",
+                    transport.label()
+                ),
+                "msg/s",
+                &s,
+                false,
+            );
+        }
     }
 
     // Abl G — reply streaming vs the old inline cap, per transport, over
@@ -311,26 +339,69 @@ fn main() {
     } else {
         &[64 << 10, 256 << 10, 1 << 20]
     };
-    for transport in [TransportKind::Ring, TransportKind::Am] {
-        let s: Vec<report::SeriesPoint> = record_sizes
-            .iter()
-            .map(|&size| {
-                let gets = if quick { 30 } else { 150 };
-                let streamed = cluster_get_throughput(&base, transport, size, true, gets);
-                let capped = cluster_get_throughput(&base, transport, size, false, gets);
-                eprint!(".");
-                report::SeriesPoint { size, ifunc: streamed, am: capped }
-            })
-            .collect();
-        report::print_series(
-            &format!(
-                "Abl G — {} transport: streamed big-record invoke_get (ifunc col) vs \
-                 stream_replies: false overflow (AM col)",
-                transport.label()
-            ),
-            "get/s",
-            &s,
-            false,
+    if run('G') {
+        for transport in [TransportKind::Ring, TransportKind::Am] {
+            let s: Vec<report::SeriesPoint> = record_sizes
+                .iter()
+                .map(|&size| {
+                    let gets = if quick { 30 } else { 150 };
+                    let streamed = cluster_get_throughput(&base, transport, size, true, gets);
+                    let capped = cluster_get_throughput(&base, transport, size, false, gets);
+                    eprint!(".");
+                    report::SeriesPoint { size, ifunc: streamed, am: capped }
+                })
+                .collect();
+            report::print_series(
+                &format!(
+                    "Abl G — {} transport: streamed big-record invoke_get (ifunc col) vs \
+                     stream_replies: false overflow (AM col)",
+                    transport.label()
+                ),
+                "get/s",
+                &s,
+                false,
+            );
+        }
+    }
+
+    // Abl H — intra-node transport: ring vs AM vs shm on the identical
+    // cluster harness. Two regimes: small fire-and-forget frames (the
+    // per-delivery overhead is the whole story) and 1 MiB streamed
+    // invoke_get (the reply chunk stream dominates). The final column is
+    // the shm speedup over the fabric ring — the price of the emulated
+    // PUT path that colocated workers no longer pay.
+    if run('H') {
+        let sizes: &[usize] = if quick { &[64, 8192] } else { &[64, 1024, 8192, 65536] };
+        println!("\n== Abl H — cluster throughput by transport (small frames, msg/s) ==");
+        println!(
+            "{:>10}  {:>12}  {:>12}  {:>12}  {:>12}",
+            "size", "ring", "am", "shm", "shm vs ring"
         );
+        for &size in sizes {
+            let msgs = base.msgs_per_size.min((64 << 20) / size.max(1)).max(50);
+            let ring = cluster_throughput(&base, TransportKind::Ring, size, msgs);
+            let am = cluster_throughput(&base, TransportKind::Am, size, msgs);
+            let shm = cluster_throughput(&base, TransportKind::Shm, size, msgs);
+            println!(
+                "{size:>10}  {ring:>12.0}  {am:>12.0}  {shm:>12.0}  {:>+11.1}%",
+                (shm - ring) / ring * 100.0
+            );
+        }
+        let get_sizes: &[usize] = if quick { &[1 << 20] } else { &[64 << 10, 1 << 20] };
+        println!("\n== Abl H — streamed invoke_get by transport (get/s) ==");
+        println!(
+            "{:>10}  {:>12}  {:>12}  {:>12}  {:>12}",
+            "record", "ring", "am", "shm", "shm vs ring"
+        );
+        for &bytes in get_sizes {
+            let gets = if quick { 20 } else { 100 };
+            let ring = cluster_get_throughput(&base, TransportKind::Ring, bytes, true, gets);
+            let am = cluster_get_throughput(&base, TransportKind::Am, bytes, true, gets);
+            let shm = cluster_get_throughput(&base, TransportKind::Shm, bytes, true, gets);
+            println!(
+                "{bytes:>10}  {ring:>12.2}  {am:>12.2}  {shm:>12.2}  {:>+11.1}%",
+                (shm - ring) / ring * 100.0
+            );
+        }
     }
 }

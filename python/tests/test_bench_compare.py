@@ -101,6 +101,32 @@ class TestDeltaMath:
         assert "new" in out
         assert "gone" in out
 
+    def test_new_rows_never_trip_the_threshold(
+        self, bench_compare, tmp_path, monkeypatch, capsys
+    ):
+        # A new transport adds rows the committed baseline predates (the
+        # shm rows of PR 5). However slow those rows are, they are
+        # informational: only metrics present in BOTH reports feed the
+        # regression threshold.
+        base = write_report(tmp_path / "base.json", [row("decode", 100.0)])
+        cur = write_report(
+            tmp_path / "cur.json",
+            [
+                row("decode", 101.0),  # within threshold
+                row("ifunc shm memcpy+poll+execute (64B)", 9_999_999.0),
+                row("invoke_get 1MiB record (streamed, shm)", 9_999_999.0),
+            ],
+        )
+        rc = run_main(
+            bench_compare,
+            monkeypatch,
+            [str(cur), "--baseline", str(base), "--threshold", "5"],
+        )
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "2 new metric(s)" in out
+        assert "not a failure" in out
+
 
 class TestThresholdExit:
     def test_regression_beyond_threshold_exits_2(

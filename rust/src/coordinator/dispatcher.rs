@@ -8,8 +8,9 @@
 //!
 //! Delivery is transport-generic: each worker link is an
 //! [`crate::ifunc::IfuncTransport`] chosen by `ClusterConfig::transport`
-//! (RDMA-PUT ring or AM send-receive), and every link carries a reply
-//! frame ring. Alongside fire-and-forget [`Dispatcher::send_to`] (and its
+//! (RDMA-PUT ring, AM send-receive, or intra-node shared memory), and
+//! every link carries a reply frame ring. Alongside fire-and-forget
+//! [`Dispatcher::send_to`] (and its
 //! batched forms [`Dispatcher::send_batch_to`] /
 //! [`Dispatcher::inject_batch_by_key`]) sits the invocation API:
 //! [`Dispatcher::invoke_begin`] injects a frame and returns a
@@ -27,10 +28,21 @@ use std::time::{Duration, Instant};
 use crate::ifunc::{
     IfuncHandle, IfuncMsg, Reply, ReplyCollector, ReplyRing, SourceArgs, REPLY_SLOTS,
 };
+use crate::util::sync::{lock_recover, wait_timeout_recover};
 use crate::{Error, Result};
 
 use super::worker::GET_MISSING;
 use super::Cluster;
+
+/// Prefix a transport error with the worker it came from — delivery
+/// errors (a dead worker's full ring, a lapped reply) surface from deep
+/// inside the link, which has no idea which worker index it is.
+fn tag_worker(worker: usize, e: Error) -> Error {
+    match e {
+        Error::Transport(m) => Error::Transport(format!("worker {worker}: {m}")),
+        other => other,
+    }
+}
 
 /// Deterministic key → worker placement (the locality map), as a free
 /// function so it can be tested — and reasoned about — without standing up
@@ -99,7 +111,7 @@ impl InvokeWindow {
     /// can read as pinned at `max` at every wakeup even while slots turn
     /// over, and churn must not be mistaken for a stuck window.
     fn acquire(&self, timeout: Option<Duration>) -> std::result::Result<(), String> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         let mut deadline = timeout.map(|d| Instant::now() + d);
         let mut last_releases = st.releases;
         loop {
@@ -120,14 +132,13 @@ impl InvokeWindow {
                     ));
                 }
             }
-            let (g, _) = self.freed.wait_timeout(st, Duration::from_millis(1)).unwrap();
-            st = g;
+            st = wait_timeout_recover(&self.freed, st, Duration::from_millis(1));
         }
     }
 
     /// Record a begun invocation's reply seq (after its frame was sent).
     fn track(&self, seq: u64) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         st.awaiting.insert(seq);
         self.awaiting_count.store(st.awaiting.len(), std::sync::atomic::Ordering::Relaxed);
     }
@@ -135,7 +146,7 @@ impl InvokeWindow {
     /// Release one invocation slot; `seq` is its tracked reply seq (None
     /// when the frame never went out).
     fn release(&self, seq: Option<u64>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         st.inflight -= 1;
         st.releases += 1;
         if let Some(s) = seq {
@@ -156,7 +167,7 @@ impl InvokeWindow {
         if self.awaiting_count.load(std::sync::atomic::Ordering::Relaxed) == 0 {
             return Ok(());
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         let mut deadline = timeout.map(|d| Instant::now() + d);
         let mut last_oldest = None;
         loop {
@@ -176,8 +187,7 @@ impl InvokeWindow {
                     ));
                 }
             }
-            let (g, _) = self.freed.wait_timeout(st, Duration::from_millis(1)).unwrap();
-            st = g;
+            st = wait_timeout_recover(&self.freed, st, Duration::from_millis(1));
         }
     }
 }
@@ -225,10 +235,7 @@ impl PendingReply {
             Collect::Slot(ring) => ring.wait(self.seq),
             Collect::Stream(c) => c.collect(self.seq),
         }
-        .map_err(|e| match e {
-            Error::Transport(m) => Error::Transport(format!("worker {}: {m}", self.worker)),
-            other => other,
-        });
+        .map_err(|e| tag_worker(self.worker, e));
         if out.is_err() {
             // A successful collect deregisters; a failed one must not
             // leave the frame awaited forever (its reply — if it ever
@@ -289,10 +296,7 @@ impl<'c> Dispatcher<'c> {
     /// memory. On a legacy link, run the seq-distance lap guard instead.
     fn admit_or_drain(&self, w: &super::WorkerHandle, worker: usize, end_seq: u64) -> Result<()> {
         match &w.collector {
-            Some(c) => c.drain().map_err(|e| match e {
-                Error::Transport(m) => Error::Transport(format!("worker {worker}: {m}")),
-                other => other,
-            }),
+            Some(c) => c.drain().map_err(|e| tag_worker(worker, e)),
             None => w
                 .window
                 .admit(end_seq, w.reply_timeout)
@@ -304,9 +308,9 @@ impl<'c> Dispatcher<'c> {
     /// non-blocking delivery; completion via [`Dispatcher::flush`]).
     pub fn send_to(&self, worker: usize, msg: &IfuncMsg) -> Result<()> {
         let w = self.worker(worker)?;
-        let mut link = w.link.lock().unwrap();
+        let mut link = lock_recover(&w.link);
         self.admit_or_drain(w, worker, link.frames_sent() + 1)?;
-        link.send_frame(msg)
+        link.send_frame(msg).map_err(|e| tag_worker(worker, e))
     }
 
     /// Deliver a batch of frames to one worker through the transport's
@@ -317,9 +321,9 @@ impl<'c> Dispatcher<'c> {
             return Ok(());
         }
         let w = self.worker(worker)?;
-        let mut link = w.link.lock().unwrap();
+        let mut link = lock_recover(&w.link);
         self.admit_or_drain(w, worker, link.frames_sent() + msgs.len() as u64)?;
-        link.send_batch(msgs)
+        link.send_batch(msgs).map_err(|e| tag_worker(worker, e))
     }
 
     /// Begin an invocation: inject `msg`, record its frame seq, and
@@ -336,7 +340,7 @@ impl<'c> Dispatcher<'c> {
         ) -> Result<(u64, Collect)> {
             // The link lock covers only delivery; it is released before
             // the reply wait, which is what lets invocations pipeline.
-            let mut link = w.link.lock().unwrap();
+            let mut link = lock_recover(&w.link);
             let seq = link.frames_sent() + 1;
             d.admit_or_drain(w, worker, seq)?;
             match &w.collector {
@@ -348,14 +352,14 @@ impl<'c> Dispatcher<'c> {
                     c.register(seq);
                     if let Err(e) = link.send_frame(msg).and_then(|()| link.flush()) {
                         c.unregister(seq);
-                        return Err(e);
+                        return Err(tag_worker(worker, e));
                     }
                     debug_assert_eq!(link.frames_sent(), seq);
                     Ok((seq, Collect::Stream(c.clone())))
                 }
                 None => {
-                    link.send_frame(msg)?;
-                    link.flush()?;
+                    link.send_frame(msg).map_err(|e| tag_worker(worker, e))?;
+                    link.flush().map_err(|e| tag_worker(worker, e))?;
                     let seq = link.frames_sent();
                     // Legacy lap guard: remember the awaited reply slot.
                     w.window.track(seq);
@@ -446,13 +450,15 @@ impl<'c> Dispatcher<'c> {
                 continue;
             }
             let w = self.worker(worker)?;
-            let mut link = w.link.lock().unwrap();
+            let mut link = lock_recover(&w.link);
             self.admit_or_drain(w, worker, link.frames_sent() + msgs.len() as u64)?;
-            link.post_batch(msgs)?;
+            link.post_batch(msgs).map_err(|e| tag_worker(worker, e))?;
         }
         for (worker, msgs) in buckets.iter().enumerate() {
             if !msgs.is_empty() {
-                self.worker(worker)?.link.lock().unwrap().flush()?;
+                lock_recover(&self.worker(worker)?.link)
+                    .flush()
+                    .map_err(|e| tag_worker(worker, e))?;
             }
         }
         Ok(placed)
@@ -460,8 +466,8 @@ impl<'c> Dispatcher<'c> {
 
     /// Flush delivery to every worker.
     pub fn flush(&self) -> Result<()> {
-        for w in &self.cluster.workers {
-            w.link.lock().unwrap().flush()?;
+        for (i, w) in self.cluster.workers.iter().enumerate() {
+            lock_recover(&w.link).flush().map_err(|e| tag_worker(i, e))?;
         }
         Ok(())
     }
@@ -474,26 +480,23 @@ impl<'c> Dispatcher<'c> {
     pub fn barrier(&self) -> Result<()> {
         self.flush()?;
         for (i, w) in self.cluster.workers.iter().enumerate() {
-            let sent = w.link.lock().unwrap().frames_sent();
+            let sent = lock_recover(&w.link).frames_sent();
             w.consumed
                 .wait(sent, || match &w.collector {
                     Some(c) => c.drain(),
                     None => Ok(()),
                 })
-                .map_err(|e| match e {
-                    Error::Transport(m) => Error::Transport(format!("worker {i}: {m}")),
-                    other => other,
-                })?;
+                .map_err(|e| tag_worker(i, e))?;
         }
         Ok(())
     }
 
     /// Fault-injection hook for the security suite: write raw bytes into
     /// a worker's delivery ring, bypassing all framing (hostile-sender
-    /// simulation). Ring transport only.
+    /// simulation). Ring-protocol transports only (fabric ring and shm).
     #[doc(hidden)]
     pub fn debug_corrupt_ring(&self, worker: usize, offset: usize, data: &[u8]) -> Result<()> {
-        self.worker(worker)?.link.lock().unwrap().debug_put_raw(offset, data)
+        lock_recover(&self.worker(worker)?.link).debug_put_raw(offset, data)
     }
 
     /// Total messages executed across workers.

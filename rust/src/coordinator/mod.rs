@@ -11,8 +11,11 @@
 //! [`RecordStore`] and a receive thread; the leader's [`Dispatcher`]
 //! routes messages *to where the data lives* (hash placement by record
 //! key) over a per-worker [`crate::ifunc::IfuncTransport`] link selected
-//! by [`ClusterConfig::transport`] — RDMA-PUT rings (§3) or AM
-//! send-receive (§5.1). Each link carries a payload-carrying reply frame
+//! by [`ClusterConfig::transport`] — RDMA-PUT rings (§3), AM
+//! send-receive (§5.1), or intra-node shared memory for colocated
+//! workers (§1's DPU/CSD on the host: same ring protocol, delivered by
+//! memcpy, signalled by process-shared atomics). Each link carries a
+//! payload-carrying reply frame
 //! ring with **no reply-size cap**: payloads past one frame stream as
 //! chunked frame sequences reassembled leader-side
 //! ([`ClusterConfig::stream_replies`]). [`Dispatcher::invoke_begin`]

@@ -1,6 +1,6 @@
 //! Device-side worker: a polling "DPU/CSD process".
 //!
-//! Each worker executes whatever the host injects — over either transport:
+//! Each worker executes whatever the host injects — over any transport:
 //!
 //! * **ring** ([`TransportKind::Ring`]): a dedicated thread runs
 //!   `ucp_poll_ifunc` against the worker's RWX ring and pushes a
@@ -8,9 +8,14 @@
 //!   flow-control without ever overwriting an unconsumed frame,
 //! * **am** ([`TransportKind::Am`]): frames arrive as active messages and
 //!   the thread simply progresses the UCP worker (§5.1's "ifuncs will be
-//!   progressed with other UCX operations").
+//!   progressed with other UCX operations"),
+//! * **shm** ([`TransportKind::Shm`]): the *same* poll loop as ring — the
+//!   frames were memcpy'd into the shared ring mapping by the colocated
+//!   leader — but every return signal (byte credit, reply frames,
+//!   consumed counter) is a plain release-store into the shared words
+//!   instead of a fabric put; no endpoint exists on the link at all.
 //!
-//! Both paths run the same execution engine and answer every consumed
+//! All paths run the same execution engine and answer every consumed
 //! frame — executed or rejected — with one or more payload-carrying reply
 //! frames: whatever the injected function pushed through `reply_put` /
 //! `db_get` travels back, chunked into `STATUS_MORE` frames when it
@@ -25,12 +30,15 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::ifunc::am_transport::{execute_am_frame, IFUNC_AM_ID};
+use crate::ifunc::transport::PutSink;
 use crate::ifunc::{
     AmTransport, ConsumedCounter, IfuncRing, IfuncTransport, PollResult, ReplyCollector,
-    ReplyRing, ReplyWriter, RingTransport, TargetArgs, TransportKind, REPLY_SLOTS,
+    ReplyRing, ReplyWriter, RingTransport, ShmTransport, TargetArgs, TransportKind,
+    REPLY_SLOTS,
 };
 use crate::log;
 use crate::ucp::{Context, Worker as UcpWorker};
+use crate::util::sync::lock_recover;
 use crate::{Error, Result};
 
 use super::dispatcher::InvokeWindow;
@@ -76,6 +84,142 @@ pub struct WorkerHandle {
     thread: Option<std::thread::JoinHandle<Result<()>>>,
 }
 
+/// The ring-delivery receive loop, shared verbatim by the fabric ring and
+/// shm transports — only where the return signals land differs (`credit`
+/// and `consumed` sinks; the reply writer carries its own sink). Per
+/// iteration: poll the ring, push byte credit on any consumption
+/// (including wrap rewinds), answer each consumed frame with a reply
+/// stream plus a consumed-counter tick, and pump reply chunks parked on
+/// collector credit.
+#[allow(clippy::too_many_arguments)]
+fn ring_receive_loop(
+    index: usize,
+    ctx: Arc<Context>,
+    mut ring: IfuncRing,
+    store: Arc<RecordStore>,
+    mut replies: ReplyWriter,
+    credit: PutSink,
+    consumed: PutSink,
+    stats: Arc<WorkerStats>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut args = TargetArgs::new(Box::new(store));
+    let mut idle = 0u32;
+    let mut last_credit = 0u64;
+    // Cursor position of the last *non-consuming* error already reported
+    // (a header-invalid frame parks at the cursor; report it once, not
+    // per spin).
+    let mut stuck_reported_at: Option<u64> = None;
+    loop {
+        let frames_before = ring.consumed;
+        let polled = ctx.poll_ifunc(&mut ring, &mut args);
+        let no_message = matches!(&polled, Ok(PollResult::NoMessage));
+        let consumed_frame = ring.consumed > frames_before;
+        let mut stuck = false;
+        match &polled {
+            Ok(PollResult::Executed(_)) => {
+                stats.executed.fetch_add(1, Ordering::Relaxed);
+                idle = 0;
+            }
+            Ok(PollResult::NoMessage) => {}
+            Err(e) if consumed_frame => {
+                // A faulty ifunc is consumed and reported, but must not
+                // take the device down.
+                stats.failed.fetch_add(1, Ordering::Relaxed);
+                log::error!("worker {index}: ifunc failed: {e}");
+                idle = 0;
+            }
+            Err(e) => {
+                // The frame did NOT advance `ring.consumed`
+                // (header-integrity failure — the length is untrusted, so
+                // poll cannot skip it). It parks at the cursor and this
+                // error repeats every poll: treat it like an idle spin —
+                // back off and honor shutdown — instead of hot-looping
+                // forever with `stop()` unreachable.
+                if stuck_reported_at != Some(ring.consumed_bytes) {
+                    stuck_reported_at = Some(ring.consumed_bytes);
+                    stats.failed.fetch_add(1, Ordering::Relaxed);
+                    log::error!(
+                        "worker {index}: unconsumable frame parked at the ring cursor: {e}"
+                    );
+                }
+                stuck = true;
+            }
+        }
+        // Push the credit word whenever consumption advanced — including
+        // marker-only polls (a wrap rewind reports NoMessage but consumes
+        // the ring tail, and the oversized-wrap send path waits on
+        // exactly that credit).
+        if ring.consumed_bytes != last_credit {
+            credit.signal(0, ring.consumed_bytes)?;
+            last_credit = ring.consumed_bytes;
+        }
+        // One reply stream per consumed *frame* (not markers), whether it
+        // executed or was rejected; executed frames carry the bytes the
+        // injected function pushed, chunked when they exceed one reply
+        // slot. A reply-path error is logged and counted — never fatal to
+        // the worker thread (the leader sees it as a reply timeout, not a
+        // dead link).
+        if consumed_frame {
+            let pushed = match polled {
+                Ok(PollResult::Executed(out)) => {
+                    replies.push(ring.consumed, true, out.ret, &out.reply)
+                }
+                _ => replies.push(ring.consumed, false, 0, &[]),
+            };
+            if let Err(e) = pushed {
+                stats.failed.fetch_add(1, Ordering::Relaxed);
+                log::error!("worker {index}: reply push failed: {e}");
+            }
+            // Barrier credit: one tick per ingress frame, independent of
+            // how many reply frames the stream needed. Like every
+            // reply-path error: log, never die — a failed put degrades to
+            // a barrier timeout, not a dead link.
+            if let Err(e) = consumed.signal(0, ring.consumed) {
+                log::error!("worker {index}: consumed-credit put failed: {e}");
+            }
+        }
+        // Drain reply chunks parked on collector credit.
+        if let Err(e) = replies.pump() {
+            log::error!("worker {index}: reply pump failed: {e}");
+        }
+        if no_message || stuck {
+            if stop.load(Ordering::Acquire) {
+                let _ = replies.pump();
+                replies.flush()?;
+                credit.flush()?;
+                consumed.flush()?;
+                return Ok(());
+            }
+            crate::fabric::wire::backoff(idle);
+            idle += 1;
+        }
+    }
+}
+
+/// Fabric-link streamed-reply wiring, shared by the ring and AM spawn
+/// paths: a worker-local watermark word the leader-side collector
+/// advances as it consumes reply frames (the writer's slot-recycling
+/// gate), plus the collector itself on a dedicated leader → worker
+/// endpoint. Both `None` when `stream_replies` is off (the shm branch
+/// wires its collector over shared mappings instead).
+#[allow(clippy::type_complexity)]
+fn fabric_reply_collector(
+    ctx: &Arc<Context>,
+    leader_worker: &Arc<UcpWorker>,
+    ucp_worker: &Arc<UcpWorker>,
+    replies: &ReplyRing,
+    stream: bool,
+) -> Result<(Option<Arc<ReplyCollector>>, Option<Arc<crate::fabric::MemoryRegion>>)> {
+    if !stream {
+        return Ok((None, None));
+    }
+    let credit_mr = ctx.mem_map(64, crate::fabric::MemPerm::RW);
+    let credit_ep = leader_worker.connect(ucp_worker)?;
+    let collector = Arc::new(ReplyCollector::new(replies.clone(), credit_ep, credit_mr.rkey()));
+    Ok((Some(collector), Some(credit_mr)))
+}
+
 impl WorkerHandle {
     pub(crate) fn spawn(
         index: usize,
@@ -85,177 +229,113 @@ impl WorkerHandle {
         leader_worker: &Arc<UcpWorker>,
         config: &ClusterConfig,
     ) -> Result<WorkerHandle> {
-        // Leader-side reply region + consumed counter; worker-side back
-        // endpoint.
+        // Leader-side reply region + consumed counter (transport-shared).
         let replies = ReplyRing::new(leader, config.reply_timeout);
         let reply_rkey = replies.rkey();
         let consumed = ConsumedCounter::new(leader, config.reply_timeout);
         let consumed_rkey = consumed.rkey();
         let window = Arc::new(InvokeWindow::new(config.max_inflight.clamp(1, REPLY_SLOTS)));
-        let ucp_worker = UcpWorker::new(&ctx);
-        let ep = leader_worker.connect(&ucp_worker)?;
-        let ep_back = ucp_worker.connect(leader_worker)?;
-
-        // Streamed replies: a worker-local credit word the leader-side
-        // collector advances as it consumes reply frames (the writer's
-        // slot-recycling gate), plus the collector itself on a dedicated
-        // leader → worker endpoint.
-        let (collector, reply_credit) = if config.stream_replies {
-            let credit_mr = ctx.mem_map(64, crate::fabric::MemPerm::RWX);
-            let credit_ep = leader_worker.connect(&ucp_worker)?;
-            let collector =
-                Arc::new(ReplyCollector::new(replies.clone(), credit_ep, credit_mr.rkey()));
-            (Some(collector), Some(credit_mr))
-        } else {
-            (None, None)
-        };
-
         let shutdown = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(WorkerStats::default());
         let stream = config.stream_replies;
 
-        let (transport, thread): (Box<dyn IfuncTransport>, _) = match config.transport {
+        type Spawned = (
+            Box<dyn IfuncTransport>,
+            Option<Arc<ReplyCollector>>,
+            std::thread::JoinHandle<Result<()>>,
+        );
+        let (transport, collector, thread): Spawned = match config.transport {
             TransportKind::Ring => {
+                let ucp_worker = UcpWorker::new(&ctx);
+                let ep = leader_worker.connect(&ucp_worker)?;
+                let ep_back = ucp_worker.connect(leader_worker)?;
+                let (collector, reply_credit) =
+                    fabric_reply_collector(&ctx, leader_worker, &ucp_worker, &replies, stream)?;
                 let ring = IfuncRing::new(&ctx, config.ring_bytes)?;
-                let ring_rkey = ring.rkey();
                 // Leader-side credit word; worker puts consumed-bytes into it.
-                let credit = leader.mem_map(64, crate::fabric::MemPerm::RWX);
-                let credit_rkey = credit.rkey();
+                let credit = leader.mem_map(64, crate::fabric::MemPerm::RW);
                 let transport = Box::new(RingTransport::new(
                     ep,
-                    ring_rkey,
+                    ring.rkey(),
                     config.ring_bytes,
-                    credit,
+                    credit.clone(),
                     replies.clone(),
                     consumed.clone(),
                 ));
+                let writer =
+                    ReplyWriter::with_mode(ep_back.clone(), reply_rkey, stream, reply_credit);
+                let credit_sink = PutSink::Fabric { ep: ep_back.clone(), rkey: credit.rkey() };
+                let consumed_sink = PutSink::Fabric { ep: ep_back, rkey: consumed_rkey };
                 let (ctx2, store2, stop2, stats2) =
                     (ctx.clone(), store.clone(), shutdown.clone(), stats.clone());
-                let ep_back2 = ep_back.clone();
-                let reply_credit2 = reply_credit.clone();
                 let thread = std::thread::Builder::new()
                     .name(format!("ifunc-worker-{index}"))
-                    .spawn(move || -> Result<()> {
-                        let mut ring = ring;
-                        let mut args = TargetArgs::new(Box::new(store2));
-                        let mut replies = ReplyWriter::with_mode(
-                            ep_back2.clone(),
-                            reply_rkey,
-                            stream,
-                            reply_credit2,
-                        );
-                        let mut idle = 0u32;
-                        let mut last_credit = 0u64;
-                        // Cursor position of the last *non-consuming*
-                        // error already reported (a header-invalid frame
-                        // parks at the cursor; report it once, not per
-                        // spin).
-                        let mut stuck_reported_at: Option<u64> = None;
-                        loop {
-                            let frames_before = ring.consumed;
-                            let polled = ctx2.poll_ifunc(&mut ring, &mut args);
-                            let no_message = matches!(&polled, Ok(PollResult::NoMessage));
-                            let consumed_frame = ring.consumed > frames_before;
-                            let mut stuck = false;
-                            match &polled {
-                                Ok(PollResult::Executed(_)) => {
-                                    stats2.executed.fetch_add(1, Ordering::Relaxed);
-                                    idle = 0;
-                                }
-                                Ok(PollResult::NoMessage) => {}
-                                Err(e) if consumed_frame => {
-                                    // A faulty ifunc is consumed and
-                                    // reported, but must not take the
-                                    // device down.
-                                    stats2.failed.fetch_add(1, Ordering::Relaxed);
-                                    log::error!("worker {index}: ifunc failed: {e}");
-                                    idle = 0;
-                                }
-                                Err(e) => {
-                                    // The frame did NOT advance
-                                    // `ring.consumed` (header-integrity
-                                    // failure — the length is untrusted,
-                                    // so poll cannot skip it). It parks
-                                    // at the cursor and this error
-                                    // repeats every poll: treat it like
-                                    // an idle spin — back off and honor
-                                    // shutdown — instead of hot-looping
-                                    // forever with `stop()` unreachable.
-                                    if stuck_reported_at != Some(ring.consumed_bytes) {
-                                        stuck_reported_at = Some(ring.consumed_bytes);
-                                        stats2.failed.fetch_add(1, Ordering::Relaxed);
-                                        log::error!(
-                                            "worker {index}: unconsumable frame parked at \
-                                             the ring cursor: {e}"
-                                        );
-                                    }
-                                    stuck = true;
-                                }
-                            }
-                            // Push the credit word whenever consumption
-                            // advanced — including marker-only polls (a
-                            // wrap rewind reports NoMessage but consumes
-                            // the ring tail, and the oversized-wrap send
-                            // path waits on exactly that credit).
-                            if ring.consumed_bytes != last_credit {
-                                ep_back2
-                                    .qp()
-                                    .put_signal(credit_rkey, 0, ring.consumed_bytes)?;
-                                last_credit = ring.consumed_bytes;
-                            }
-                            // One reply stream per consumed *frame* (not
-                            // markers), whether it executed or was
-                            // rejected; executed frames carry the bytes
-                            // the injected function pushed, chunked when
-                            // they exceed one reply slot. A reply-path
-                            // error is logged and counted — never fatal
-                            // to the worker thread (the leader sees it
-                            // as a reply timeout, not a dead link).
-                            if consumed_frame {
-                                let pushed = match polled {
-                                    Ok(PollResult::Executed(out)) => {
-                                        replies.push(ring.consumed, true, out.ret, &out.reply)
-                                    }
-                                    _ => replies.push(ring.consumed, false, 0, &[]),
-                                };
-                                if let Err(e) = pushed {
-                                    stats2.failed.fetch_add(1, Ordering::Relaxed);
-                                    log::error!("worker {index}: reply push failed: {e}");
-                                }
-                                // Barrier credit: one tick per ingress
-                                // frame, independent of how many reply
-                                // frames the stream needed. Like every
-                                // reply-path error: log, never die — a
-                                // failed put degrades to a barrier
-                                // timeout, not a dead link.
-                                if let Err(e) =
-                                    ep_back2.qp().put_signal(consumed_rkey, 0, ring.consumed)
-                                {
-                                    log::error!(
-                                        "worker {index}: consumed-credit put failed: {e}"
-                                    );
-                                }
-                            }
-                            // Drain reply chunks parked on collector
-                            // credit.
-                            if let Err(e) = replies.pump() {
-                                log::error!("worker {index}: reply pump failed: {e}");
-                            }
-                            if no_message || stuck {
-                                if stop2.load(Ordering::Acquire) {
-                                    let _ = replies.pump();
-                                    ep_back2.qp().flush()?;
-                                    return Ok(());
-                                }
-                                crate::fabric::wire::backoff(idle);
-                                idle += 1;
-                            }
-                        }
+                    .spawn(move || {
+                        ring_receive_loop(
+                            index,
+                            ctx2,
+                            ring,
+                            store2,
+                            writer,
+                            credit_sink,
+                            consumed_sink,
+                            stats2,
+                            stop2,
+                        )
                     })
                     .expect("spawn worker thread");
-                (transport, thread)
+                (transport, collector, thread)
+            }
+            TransportKind::Shm => {
+                // Colocated worker: no UCP worker, no endpoints — every
+                // channel on the link is a shared mapping. The delivery
+                // ring keeps its RWX grant (it holds code); all the
+                // counter/reply words are plain RW.
+                let (collector, reply_credit) = if stream {
+                    let credit_mr = ctx.mem_map(64, crate::fabric::MemPerm::RW);
+                    let collector =
+                        Arc::new(ReplyCollector::shm(replies.clone(), credit_mr.clone()));
+                    (Some(collector), Some(credit_mr))
+                } else {
+                    (None, None)
+                };
+                let ring = IfuncRing::new(&ctx, config.ring_bytes)?;
+                let credit = leader.mem_map(64, crate::fabric::MemPerm::RW);
+                let transport = Box::new(ShmTransport::new(
+                    ring.region(),
+                    credit.clone(),
+                    replies.clone(),
+                    consumed.clone(),
+                ));
+                let writer = ReplyWriter::shm(&replies, stream, reply_credit);
+                let credit_sink = PutSink::Shm(credit);
+                let consumed_sink = PutSink::Shm(consumed.region());
+                let (ctx2, store2, stop2, stats2) =
+                    (ctx.clone(), store.clone(), shutdown.clone(), stats.clone());
+                let thread = std::thread::Builder::new()
+                    .name(format!("ifunc-worker-{index}"))
+                    .spawn(move || {
+                        ring_receive_loop(
+                            index,
+                            ctx2,
+                            ring,
+                            store2,
+                            writer,
+                            credit_sink,
+                            consumed_sink,
+                            stats2,
+                            stop2,
+                        )
+                    })
+                    .expect("spawn worker thread");
+                (transport, collector, thread)
             }
             TransportKind::Am => {
+                let ucp_worker = UcpWorker::new(&ctx);
+                let ep = leader_worker.connect(&ucp_worker)?;
+                let ep_back = ucp_worker.connect(leader_worker)?;
+                let (collector, reply_credit) =
+                    fabric_reply_collector(&ctx, leader_worker, &ucp_worker, &replies, stream)?;
                 let transport =
                     Box::new(AmTransport::new(ep, replies.clone(), consumed.clone()));
                 // The AM handler owns the reply writer and target args;
@@ -266,7 +346,7 @@ impl WorkerHandle {
                     ep_back.clone(),
                     reply_rkey,
                     stream,
-                    reply_credit.clone(),
+                    reply_credit,
                 )));
                 let frames = Arc::new(AtomicU64::new(0));
                 let (ctx2, stats2) = (ctx.clone(), stats.clone());
@@ -276,19 +356,19 @@ impl WorkerHandle {
                     // Ingress frame seq: handlers run serially on the
                     // progress thread, so this matches delivery order.
                     let frame_seq = frames2.fetch_add(1, Ordering::Relaxed) + 1;
-                    let (ok, r0, payload) = match execute_am_frame(&ctx2, frame, &target_args)
-                    {
-                        Ok(out) => {
-                            stats2.executed.fetch_add(1, Ordering::Relaxed);
-                            (true, out.ret, out.reply)
-                        }
-                        Err(e) => {
-                            stats2.failed.fetch_add(1, Ordering::Relaxed);
-                            log::error!("worker {index}: ifunc failed: {e}");
-                            (false, 0, Vec::new())
-                        }
-                    };
-                    if let Err(e) = rw.lock().unwrap().push(frame_seq, ok, r0, &payload) {
+                    let (ok, r0, payload) =
+                        match execute_am_frame(&ctx2, frame, &target_args) {
+                            Ok(out) => {
+                                stats2.executed.fetch_add(1, Ordering::Relaxed);
+                                (true, out.ret, out.reply)
+                            }
+                            Err(e) => {
+                                stats2.failed.fetch_add(1, Ordering::Relaxed);
+                                log::error!("worker {index}: ifunc failed: {e}");
+                                (false, 0, Vec::new())
+                            }
+                        };
+                    if let Err(e) = lock_recover(&rw).push(frame_seq, ok, r0, &payload) {
                         log::error!("worker {index}: reply push failed: {e}");
                     }
                     if let Err(e) = ep_back3.qp().put_signal(consumed_rkey, 0, frame_seq) {
@@ -308,12 +388,12 @@ impl WorkerHandle {
                             // credit (the handler must never block inside
                             // `progress`, so queued chunks are pumped
                             // from here).
-                            if let Err(e) = rw2.lock().unwrap().pump() {
+                            if let Err(e) = lock_recover(&rw2).pump() {
                                 log::error!("worker {index}: reply pump failed: {e}");
                             }
                             if progressed == 0 {
                                 if stop2.load(Ordering::Acquire) {
-                                    let _ = rw2.lock().unwrap().pump();
+                                    let _ = lock_recover(&rw2).pump();
                                     ep_back2.qp().flush()?;
                                     return Ok(());
                                 }
@@ -325,7 +405,7 @@ impl WorkerHandle {
                         }
                     })
                     .expect("spawn worker thread");
-                (transport, thread)
+                (transport, collector, thread)
             }
         };
 

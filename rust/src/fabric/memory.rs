@@ -60,6 +60,15 @@ bitflags_lite! {
     }
 }
 
+impl MemPerm {
+    /// Read + write only — the right grant for plain counter and reply
+    /// words (credit, consumed-frame, reply rings): peers PUT into them
+    /// and the owner loads them, but nothing ever needs the atomic bit.
+    /// Full [`MemPerm::RWX`] stays reserved for the code ring, which in
+    /// the paper's model additionally holds executable frames.
+    pub const RW: MemPerm = MemPerm(MemPerm::REMOTE_READ.0 | MemPerm::REMOTE_WRITE.0);
+}
+
 /// A remote key: 32 bits, as defined by the IBTA standard (paper §3.5).
 pub type RKey = u32;
 
@@ -159,6 +168,32 @@ impl MemoryRegion {
             std::ptr::copy_nonoverlapping(data.as_ptr(), self.base_ptr().add(offset), data.len());
         }
         Ok(())
+    }
+
+    /// Local-delivery path for colocated senders (the intra-node shm
+    /// transport): write `data` under the same data-before-signal
+    /// contract the NIC engine gives remote puts — when the write ends on
+    /// an 8-byte boundary its final word is release-stored so a poller
+    /// acquiring that word observes every preceding byte. No rkey or
+    /// permission check runs: the writer shares the owner's address
+    /// space, which is exactly what distinguishes this path from
+    /// [`crate::fabric::Qp::put_nbi`].
+    pub fn put_local(&self, offset: usize, data: &[u8]) -> Result<()> {
+        self.check_bounds(offset, data.len())?;
+        let len = data.len();
+        if len >= 8 && (offset + len) % 8 == 0 {
+            let (body, tail) = data.split_at(len - 8);
+            if !body.is_empty() {
+                self.write_bytes(offset, body)?;
+            }
+            let word = u64::from_le_bytes(tail.try_into().unwrap());
+            self.store_u64_release(offset + len - 8, word)
+        } else {
+            self.write_bytes(offset, data)?;
+            // Conservative: make the bytes visible to subsequent acquires.
+            std::sync::atomic::fence(Ordering::Release);
+            Ok(())
+        }
     }
 
     /// Remote read path used by the NIC engine for GET.
@@ -279,11 +314,31 @@ mod tests {
     }
 
     #[test]
+    fn put_local_delivers_with_tail_signal() {
+        let mr = MemoryRegion::new(64, MemPerm::RW);
+        // 16 bytes ending on an 8-byte boundary: body + release-stored tail.
+        let mut frame = [0u8; 16];
+        frame[..8].copy_from_slice(b"datadata");
+        frame[8..].copy_from_slice(&0xFEED_F00Du64.to_le_bytes());
+        mr.put_local(0, &frame).unwrap();
+        assert_eq!(mr.load_u64_acquire(8).unwrap(), 0xFEED_F00D);
+        assert_eq!(&mr.local_slice()[..8], b"datadata");
+        // Unaligned-end writes still land (fence-ordered).
+        mr.put_local(17, b"odd").unwrap();
+        assert_eq!(&mr.local_slice()[17..20], b"odd");
+        // Bounds are still enforced — shm skips rkey checks, not safety.
+        assert!(mr.put_local(60, &[0u8; 8]).is_err());
+    }
+
+    #[test]
     fn perm_allows() {
         assert!(MemPerm::RWX.allows(MemPerm::REMOTE_WRITE));
         assert!(!MemPerm::REMOTE_READ.allows(MemPerm::REMOTE_WRITE));
         let rw = MemPerm::REMOTE_READ | MemPerm::REMOTE_WRITE;
         assert!(rw.allows(MemPerm::REMOTE_READ));
         assert!(!rw.allows(MemPerm::REMOTE_ATOMIC));
+        assert_eq!(MemPerm::RW, rw);
+        assert!(MemPerm::RWX.allows(MemPerm::RW));
+        assert!(!MemPerm::RW.allows(MemPerm::RWX));
     }
 }

@@ -273,21 +273,10 @@ impl Node {
     /// if the write ends on an 8-byte boundary, the final word is stored
     /// with release ordering so a poller acquiring it observes every
     /// preceding byte — the paper's trailer-signal protocol (Fig. 2).
+    /// Shared with the intra-node shm transport, which performs the same
+    /// delivery without the NIC engine (`MemoryRegion::put_local`).
     fn deliver_put(&self, mr: &MemoryRegion, offset: usize, data: &[u8]) {
-        let len = data.len();
-        let end = offset + len;
-        if len >= 8 && end % 8 == 0 {
-            let (body, tail) = data.split_at(len - 8);
-            if !body.is_empty() {
-                mr.write_bytes(offset, body).expect("bounds pre-checked");
-            }
-            let word = u64::from_le_bytes(tail.try_into().unwrap());
-            mr.store_u64_release(end - 8, word).expect("aligned tail");
-        } else {
-            mr.write_bytes(offset, data).expect("bounds pre-checked");
-            // Conservative: make the bytes visible to subsequent acquires.
-            std::sync::atomic::fence(Ordering::Release);
-        }
+        mr.put_local(offset, data).expect("bounds pre-checked");
     }
 }
 

@@ -22,8 +22,11 @@
 //!   [`ExecOutcome`],
 //! * [`transport`] — the sender half behind [`IfuncTransport`]:
 //!   [`RingTransport`] is the paper's §3.3 RDMA-PUT ring,
-//!   [`AmTransport`] is the §5.1 send-receive successor; both take
-//!   multi-frame batches through [`IfuncTransport::send_batch`],
+//!   [`AmTransport`] is the §5.1 send-receive successor, and
+//!   [`ShmTransport`] is the intra-node colocated path (§1's
+//!   DPU/CSD-on-the-host deployment: the same ring protocol delivered by
+//!   direct memcpy into the shared mapping, no fabric emulation at all);
+//!   all take multi-frame batches through [`IfuncTransport::send_batch`],
 //! * [`reply`] — a per-worker ring of payload-carrying reply *frames*
 //!   (`[payload][frame_seq][r0][total_len][payload_len][status][seq]`,
 //!   seq written last — the same §3.4 trailer-signal ordering data frames
@@ -48,6 +51,7 @@ pub mod registry;
 pub mod reply;
 pub mod ring;
 pub mod send;
+pub mod shm_transport;
 pub mod transport;
 
 pub use engine::ExecOutcome;
@@ -59,6 +63,7 @@ pub use reply::{
     Reply, ReplyCollector, ReplyRing, ReplyWriter, REPLY_INLINE_CAP, REPLY_SLOTS,
 };
 pub use ring::{IfuncRing, SenderCursor};
+pub use shm_transport::ShmTransport;
 pub use transport::{
     AmTransport, ConsumedCounter, IfuncTransport, RingTransport, TransportKind,
 };

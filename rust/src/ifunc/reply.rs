@@ -70,6 +70,8 @@ use crate::fabric::{MemPerm, MemoryRegion, RKey};
 use crate::ucp::{Context, Endpoint};
 use crate::{Error, Result};
 
+use super::transport::PutSink;
+
 /// Frames in a reply ring. Streamed replies are consumed promptly (the
 /// [`ReplyCollector`] reads reply frames strictly in seq order and every
 /// send/collect drives it), and the writer-side credit gate keeps chunk
@@ -172,12 +174,22 @@ impl ReplyRing {
     /// bounds every wait: a worker that dies mid-invoke surfaces as
     /// [`Error::Transport`] instead of hanging the leader.
     pub fn new(ctx: &Context, timeout: Option<Duration>) -> Self {
-        ReplyRing { mr: ctx.mem_map(REPLY_REGION_BYTES, MemPerm::RWX), timeout }
+        // Reply frames are written and read, never remotely
+        // atomically-updated: no reason to grant more than RW (the code
+        // ring alone keeps RWX).
+        ReplyRing { mr: ctx.mem_map(REPLY_REGION_BYTES, MemPerm::RW), timeout }
     }
 
     /// The rkey the worker-side [`ReplyWriter`] puts into.
     pub fn rkey(&self) -> RKey {
         self.mr.rkey()
+    }
+
+    /// The reply region itself, for a *colocated* writer
+    /// ([`ReplyWriter::shm`]) that stores frames into the shared mapping
+    /// directly instead of putting through a fabric endpoint.
+    pub(crate) fn region(&self) -> Arc<MemoryRegion> {
+        self.mr.clone()
     }
 
     /// Read the trailer + chunk of reply frame `seq` if it has fully
@@ -307,8 +319,9 @@ struct QueuedFrame {
 /// costs worker memory (bounded by its own uncollected backlog), never
 /// worker liveness.
 pub struct ReplyWriter {
-    ep: Arc<Endpoint>,
-    rkey: RKey,
+    /// Where reply-frame puts land: a worker → sender endpoint (fabric
+    /// links) or the leader's reply mapping shared directly (shm links).
+    sink: PutSink,
     /// Reply frames assigned (queued or written).
     seq: u64,
     queue: VecDeque<QueuedFrame>,
@@ -336,7 +349,21 @@ impl ReplyWriter {
         stream: bool,
         credit: Option<Arc<MemoryRegion>>,
     ) -> Self {
-        ReplyWriter { ep, rkey, seq: 0, queue: VecDeque::new(), stream, credit }
+        Self::with_sink(PutSink::Fabric { ep, rkey }, stream, credit)
+    }
+
+    /// Colocated (shm-link) writer: reply frames are stored straight into
+    /// `ring`'s mapping — identical seqlock slot protocol, no endpoint.
+    pub fn shm(
+        ring: &ReplyRing,
+        stream: bool,
+        credit: Option<Arc<MemoryRegion>>,
+    ) -> Self {
+        Self::with_sink(PutSink::Shm(ring.region()), stream, credit)
+    }
+
+    fn with_sink(sink: PutSink, stream: bool, credit: Option<Arc<MemoryRegion>>) -> Self {
+        ReplyWriter { sink, seq: 0, queue: VecDeque::new(), stream, credit }
     }
 
     /// Record the outcome of consumed ingress frame `frame_seq`; returns
@@ -401,9 +428,9 @@ impl ReplyWriter {
         let trailer = off + REPLY_INLINE_CAP;
         // Invalidate before overwrite: a reader mid-copy of the previous
         // lap's chunk re-checks the seq word and sees 0, not stale data.
-        self.ep.put_nbi(self.rkey, trailer + T_SEQ, &0u64.to_le_bytes())?;
+        self.sink.signal(trailer + T_SEQ, 0)?;
         if !f.chunk.is_empty() {
-            self.ep.put_nbi(self.rkey, off, &f.chunk)?;
+            self.sink.put(off, &f.chunk)?;
         }
         let mut t = [0u8; REPLY_TRAILER_BYTES];
         t[T_FRAME_SEQ..T_FRAME_SEQ + 8].copy_from_slice(&f.frame_seq.to_le_bytes());
@@ -412,7 +439,9 @@ impl ReplyWriter {
         t[T_LEN..T_LEN + 8].copy_from_slice(&(f.chunk.len() as u64).to_le_bytes());
         t[T_STATUS..T_STATUS + 8].copy_from_slice(&f.status.to_le_bytes());
         t[T_SEQ..T_SEQ + 8].copy_from_slice(&f.seq.to_le_bytes());
-        self.ep.put_nbi(self.rkey, trailer, &t)
+        // The trailer put ends on the seq word, which both sinks deliver
+        // as the release-stored tail — the publish of the whole frame.
+        self.sink.put(trailer, &t)
     }
 
     /// Reply frames assigned so far (queued + written).
@@ -425,9 +454,9 @@ impl ReplyWriter {
         self.queue.len()
     }
 
-    /// Local completion of all placed reply frames.
+    /// Local completion of all placed reply frames (immediate on shm).
     pub fn flush(&self) -> Result<()> {
-        self.ep.qp().flush()
+        self.sink.flush()
     }
 }
 
@@ -464,10 +493,10 @@ struct CollectorState {
 /// unit the lap protection works in.
 pub struct ReplyCollector {
     ring: ReplyRing,
-    /// Leader → worker endpoint for the watermark credit put.
-    ep: Arc<Endpoint>,
-    /// Worker-side credit word ([`ReplyWriter`]'s `credit` region).
-    credit_rkey: RKey,
+    /// Where the watermark credit lands: a leader → worker endpoint put
+    /// targeting the worker's credit word (fabric links), or the shared
+    /// credit word stored directly (shm links).
+    credit: PutSink,
     state: Mutex<CollectorState>,
 }
 
@@ -484,10 +513,20 @@ impl ReplyCollector {
     /// `credit_rkey` name the worker-local watermark word the collector
     /// puts its progress into.
     pub fn new(ring: ReplyRing, ep: Arc<Endpoint>, credit_rkey: RKey) -> Self {
+        Self::with_credit(ring, PutSink::Fabric { ep, rkey: credit_rkey })
+    }
+
+    /// Colocated (shm-link) collector: the watermark credit is stored
+    /// straight into the shared `credit` word instead of put over a
+    /// fabric endpoint.
+    pub fn shm(ring: ReplyRing, credit: Arc<MemoryRegion>) -> Self {
+        Self::with_credit(ring, PutSink::Shm(credit))
+    }
+
+    fn with_credit(ring: ReplyRing, credit: PutSink) -> Self {
         ReplyCollector {
             ring,
-            ep,
-            credit_rkey,
+            credit,
             state: Mutex::new(CollectorState {
                 next_seq: 1,
                 cur: None,
@@ -502,6 +541,11 @@ impl ReplyCollector {
     /// the stream completes. Call order matters: registering after the
     /// send races a concurrent drain.
     pub fn register(&self, frame_seq: u64) {
+        // Collector locks deliberately keep std's poisoning semantics
+        // (unlike the dispatcher/window locks, which recover): a chunk
+        // stream mid-reassembly is multi-step state, and resuming from a
+        // torn `cur` after a panic could splice a corrupted payload that
+        // still reports ok. Poison-and-fail is the safe failure mode.
         self.state.lock().unwrap().awaited.insert(frame_seq);
     }
 
@@ -545,7 +589,7 @@ impl ReplyCollector {
             }
         };
         if st.next_seq != before {
-            self.ep.qp().put_signal(self.credit_rkey, 0, st.next_seq - 1)?;
+            self.credit.signal(0, st.next_seq - 1)?;
         }
         out
     }
@@ -711,7 +755,7 @@ mod tests {
         let wl = Worker::new(&leader);
         let ww = Worker::new(&worker);
         let ring = ReplyRing::new(&leader, timeout);
-        let credit = worker.mem_map(64, MemPerm::RWX);
+        let credit = worker.mem_map(64, MemPerm::RW);
         let ep = ww.connect(&wl).unwrap();
         let fwd_ep = wl.connect(&ww).unwrap();
         let rkey = ring.rkey();
@@ -927,6 +971,36 @@ mod tests {
             err.to_string().contains("overwritten") || err.to_string().contains("lapped"),
             "{err}"
         );
+    }
+
+    /// The colocated flavor of the whole reply path: writer, chunk
+    /// stream, credit gate, and collector all ride shared mappings — no
+    /// endpoint anywhere — and behave identically to the fabric pair.
+    #[test]
+    fn shm_writer_and_collector_stream_a_chunked_reply() {
+        let f = Fabric::new(1, WireConfig::off());
+        let leader = Context::new(f.node(0), ContextConfig::default()).unwrap();
+        let ring = ReplyRing::new(&leader, None);
+        let credit = leader.mem_map(64, MemPerm::RW);
+        let c = ReplyCollector::shm(ring.clone(), credit.clone());
+        let mut w = ReplyWriter::shm(&ring, true, Some(credit));
+        let payload: Vec<u8> =
+            (0..(2 * REPLY_INLINE_CAP + 777)).map(|i| (i % 253) as u8).collect();
+        c.register(1);
+        let last = w.push(1, true, 11, &payload).unwrap();
+        assert_eq!(last, 3);
+        w.flush().unwrap();
+        let r = c.collect(1).unwrap();
+        assert!(r.ok());
+        assert_eq!(r.r0, 11);
+        assert_eq!(r.payload, payload);
+        // Fire-and-forget replies drain and feed the shared watermark
+        // word synchronously (no endpoint flush needed on shm).
+        for i in 2..=5u64 {
+            w.push(i, true, i, &[]).unwrap();
+        }
+        c.drain().unwrap();
+        assert_eq!(w.pending(), 0);
     }
 
     #[test]

@@ -74,6 +74,14 @@ impl IfuncRing {
         &self.mr
     }
 
+    /// The ring mapping itself, for a *colocated* sender: the intra-node
+    /// shm transport writes frames into this region directly (the §3.3
+    /// "consensus about where the target expects messages" degenerates,
+    /// on one host, to sharing the mapping instead of shipping an rkey).
+    pub fn region(&self) -> Arc<MemoryRegion> {
+        self.mr.clone()
+    }
+
     pub(crate) fn cursor(&self) -> usize {
         self.cursor
     }

@@ -1,0 +1,195 @@
+//! Intra-node shared-memory ifunc delivery — the colocated fast path.
+//!
+//! The paper's primary deployment picture (§1) dispatches functions to
+//! engines *on the same host* as the leader: a SmartNIC/DPU on the PCIe
+//! bus or a computational storage drive. Both existing transports still
+//! pay the full emulated-fabric PUT path for that case — rkey lookup, a
+//! posted `NetOp` handed to the target's NIC engine thread, completion
+//! counting, and the modeled wire cost — even though leader and worker
+//! share an address space. [`ShmTransport`] removes all of it: frames are
+//! memcpy'd straight into the worker's ring mapping with the same
+//! data-before-signal ordering the NIC engine would apply
+//! ([`crate::fabric::MemoryRegion::put_local`]), and the return channel
+//! (reply frames, byte credit, consumed-frame counter) travels back
+//! through plain process-shared release/acquire words.
+//!
+//! Everything *protocol-shaped* is unchanged, on purpose:
+//!
+//! * the **wire format** is the §3.3/§3.4 frame layout byte-for-byte —
+//!   header, payload, trailer signal written last — so the worker runs
+//!   the identical `ucp_poll_ifunc` loop and execution engine,
+//! * placement is the same [`crate::ifunc::SenderCursor`] + wrap-marker
+//!   protocol with byte-credit flow control ([`ShmTransport`] simply
+//!   *wraps* the ring-protocol core with a
+//!   [`super::transport::PutSink::Shm`] sink, so the two cannot drift),
+//! * replies stream through the same [`crate::ifunc::ReplyRing`] /
+//!   `ReplyCollector` machinery, and barriers wait on the same
+//!   [`super::transport::ConsumedCounter`] — the worker just advances
+//!   them with release-stores instead of fabric signal-puts.
+//!
+//! This is the §5.1 argument run in the opposite direction: where the AM
+//! transport trades the RWX-ring consensus for simplicity at the cost of
+//! a copy-on-execute, shm keeps in-place ring execution and deletes the
+//! fabric round trip — the cheapest possible delivery when "remote" is a
+//! bus hop, not a network. Abl H measures exactly that delta.
+
+use std::sync::Arc;
+
+use crate::fabric::MemoryRegion;
+use crate::Result;
+
+use super::message::IfuncMsg;
+use super::reply::ReplyRing;
+use super::transport::{ConsumedCounter, IfuncTransport, PutSink, RingTransport};
+
+/// The third [`IfuncTransport`]: ring-protocol delivery into a shared
+/// mapping. Construct with the worker's ring region
+/// ([`crate::ifunc::IfuncRing::region`]) and a leader-side byte-credit
+/// word the colocated worker advances with release-stores.
+pub struct ShmTransport {
+    /// The ring-protocol core, pointed at the shared mapping instead of a
+    /// fabric endpoint. Same cursor, same wrap markers, same credit
+    /// arithmetic, same bounded capacity wait.
+    core: RingTransport,
+}
+
+impl ShmTransport {
+    /// `ring` is the worker's ifunc ring mapping, shared directly (the
+    /// intra-node rkey "consensus" of §3.3 degenerates to handing over
+    /// the mapping); `credit` is the leader-side consumed-bytes word the
+    /// worker's poll loop stores into.
+    pub fn new(
+        ring: Arc<MemoryRegion>,
+        credit: Arc<MemoryRegion>,
+        replies: ReplyRing,
+        consumed: ConsumedCounter,
+    ) -> Self {
+        let ring_bytes = ring.len();
+        ShmTransport {
+            core: RingTransport::with_sink(
+                PutSink::Shm(ring),
+                ring_bytes,
+                credit,
+                replies,
+                consumed,
+            ),
+        }
+    }
+}
+
+impl IfuncTransport for ShmTransport {
+    fn send_frame(&mut self, msg: &IfuncMsg) -> Result<()> {
+        self.core.send_frame(msg)
+    }
+
+    fn post_batch(&mut self, msgs: &[IfuncMsg]) -> Result<()> {
+        self.core.post_batch(msgs)
+    }
+
+    /// Shm puts complete at the store itself; nothing to wait for.
+    fn flush(&self) -> Result<()> {
+        self.core.flush()
+    }
+
+    fn frames_sent(&self) -> u64 {
+        self.core.frames_sent()
+    }
+
+    fn replies(&self) -> &ReplyRing {
+        self.core.replies()
+    }
+
+    fn consumed(&self) -> &ConsumedCounter {
+        self.core.consumed()
+    }
+
+    fn debug_put_raw(&mut self, offset: usize, data: &[u8]) -> Result<()> {
+        self.core.debug_put_raw(offset, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Fabric, WireConfig};
+    use crate::ifunc::builtin::CounterIfunc;
+    use crate::ifunc::{IfuncRing, SourceArgs, TargetArgs};
+    use crate::ucp::{Context, ContextConfig};
+
+    /// Drive one frame sender → ring → poll entirely without endpoints:
+    /// the whole transport is two mappings and the shared protocol.
+    #[test]
+    fn shm_frames_execute_without_any_endpoint() {
+        let f = Fabric::new(1, WireConfig::off());
+        let ctx = Context::new(f.node(0), ContextConfig::default()).unwrap();
+        ctx.library_dir().install(Box::new(CounterIfunc::default()));
+        let mut ring = IfuncRing::new(&ctx, 1 << 16).unwrap();
+        let credit = ctx.mem_map(64, crate::fabric::MemPerm::RW);
+        let replies = ReplyRing::new(&ctx, None);
+        let consumed = ConsumedCounter::new(&ctx, None);
+        let mut t =
+            ShmTransport::new(ring.region(), credit.clone(), replies, consumed);
+
+        let h = ctx.register_ifunc("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 700])).unwrap();
+        let mut args = TargetArgs::none();
+        // Enough frames to wrap the 64 KiB ring several times; the poll
+        // side pushes byte credit exactly like the worker loop does.
+        for i in 0..300u64 {
+            t.send_frame(&msg).unwrap();
+            ctx.poll_ifunc_blocking(&mut ring, &mut args).unwrap();
+            credit.store_u64_release(0, ring.consumed_bytes).unwrap();
+            assert_eq!(ctx.symbols().counter_value(), i + 1);
+        }
+        assert_eq!(t.frames_sent(), 300);
+    }
+
+    /// A batch coalesces through the same single-reservation path as the
+    /// fabric ring transport.
+    #[test]
+    fn shm_post_batch_delivers_all_frames() {
+        let f = Fabric::new(1, WireConfig::off());
+        let ctx = Context::new(f.node(0), ContextConfig::default()).unwrap();
+        ctx.library_dir().install(Box::new(CounterIfunc::default()));
+        let mut ring = IfuncRing::new(&ctx, 1 << 16).unwrap();
+        let credit = ctx.mem_map(64, crate::fabric::MemPerm::RW);
+        let replies = ReplyRing::new(&ctx, None);
+        let consumed = ConsumedCounter::new(&ctx, None);
+        let mut t =
+            ShmTransport::new(ring.region(), credit.clone(), replies, consumed);
+
+        let h = ctx.register_ifunc("counter").unwrap();
+        let batch: Vec<IfuncMsg> = (0..8)
+            .map(|i| h.msg_create(&SourceArgs::bytes(vec![0u8; 64 + i * 32])).unwrap())
+            .collect();
+        t.send_batch(&batch).unwrap();
+        let mut args = TargetArgs::none();
+        for _ in 0..batch.len() {
+            ctx.poll_ifunc_blocking(&mut ring, &mut args).unwrap();
+            credit.store_u64_release(0, ring.consumed_bytes).unwrap();
+        }
+        assert_eq!(ctx.symbols().counter_value(), batch.len() as u64);
+    }
+
+    /// The bounded capacity wait fires on shm exactly as on the fabric
+    /// ring: nobody polling + a full ring = a transport error naming the
+    /// stalled credit, not an infinite spin.
+    #[test]
+    fn shm_full_ring_with_no_poller_errors_not_hangs() {
+        let f = Fabric::new(1, WireConfig::off());
+        let ctx = Context::new(f.node(0), ContextConfig::default()).unwrap();
+        ctx.library_dir().install(Box::new(CounterIfunc::default()));
+        let ring = IfuncRing::new(&ctx, 4096).unwrap();
+        let credit = ctx.mem_map(64, crate::fabric::MemPerm::RW);
+        let replies = ReplyRing::new(&ctx, Some(std::time::Duration::from_millis(50)));
+        let consumed = ConsumedCounter::new(&ctx, None);
+        let mut t = ShmTransport::new(ring.region(), credit, replies, consumed);
+
+        let h = ctx.register_ifunc("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 512])).unwrap();
+        let err = (0..64)
+            .find_map(|_| t.send_frame(&msg).err())
+            .expect("a 4 KiB ring with no poller must run out of credit");
+        assert!(err.to_string().contains("no ring credit progress"), "{err}");
+    }
+}

@@ -2,19 +2,26 @@
 //!
 //! The paper ships frames with one-sided RDMA PUTs into a target-managed
 //! ring (§3.3) and names send-receive delivery as the successor (§5.1).
-//! Both now exist behind one sender-side abstraction, so the coordinator,
-//! the serve path, and the ablation benches are transport-generic:
+//! All three now exist behind one sender-side abstraction, so the
+//! coordinator, the serve path, and the ablation benches are
+//! transport-generic:
 //!
 //! * [`RingTransport`] — PUT frames through a [`SenderCursor`] into the
 //!   worker's RWX ring, with wrap markers and byte-credit flow control,
 //! * [`AmTransport`] — ship each frame as the payload of the reserved
-//!   ifunc active message; the worker's `ucp_worker_progress` executes it.
+//!   ifunc active message; the worker's `ucp_worker_progress` executes it,
+//! * [`super::shm_transport::ShmTransport`] — the same ring protocol for
+//!   a *colocated* worker (§1's SmartNIC/DPU/CSD on the host): frames are
+//!   memcpy'd straight into the shared ring mapping through a
+//!   [`PutSink::Shm`], skipping the `Endpoint::put_nbi` emulation, the
+//!   NIC engine, and the wire model entirely.
 //!
-//! Both take multi-frame batches through [`IfuncTransport::send_batch`]:
-//! the ring coalesces a batch into **one** credit reservation (instead of
-//! one capacity wait per frame) and one flush, and the AM path posts the
-//! whole batch before a single flush — the seam `Dispatcher`'s
-//! `inject_batch_by_key` delivers per-worker buckets through.
+//! All take multi-frame batches through [`IfuncTransport::send_batch`]:
+//! the ring protocol (fabric and shm alike) coalesces a batch into
+//! **one** credit reservation (instead of one capacity wait per frame)
+//! and one flush, and the AM path posts the whole batch before a single
+//! flush — the seam `Dispatcher`'s `inject_batch_by_key` delivers
+//! per-worker buckets through.
 //!
 //! Every transport also owns the link's [`ReplyRing`] (the `invoke`
 //! return path) and its [`ConsumedCounter`] (the `barrier` completion
@@ -36,6 +43,49 @@ use super::message::IfuncMsg;
 use super::reply::ReplyRing;
 use super::ring::{wrap_marker_word, SenderCursor};
 
+/// Where a sender's one-sided puts land: through a fabric endpoint onto a
+/// peer's rkey-registered region (the emulated-RDMA path, paying NIC
+/// engine + wire model + completion tracking), or directly into a
+/// process-shared mapping (the intra-node shm path — the same
+/// data-before-signal ordering via [`MemoryRegion::put_local`], but no
+/// rkey lookup, no posted operation, and a no-op flush). The ring
+/// protocol, the reply writer, and the credit words are all written
+/// against this seam, which is what lets `ShmTransport` reuse them
+/// byte-for-byte.
+#[derive(Clone)]
+pub(crate) enum PutSink {
+    /// Emulated fabric: `ep.put_nbi(rkey, ..)`, flushed for completion.
+    Fabric { ep: Arc<Endpoint>, rkey: RKey },
+    /// Same-address-space delivery into a shared mapping.
+    Shm(Arc<MemoryRegion>),
+}
+
+impl PutSink {
+    pub(crate) fn put(&self, offset: usize, data: &[u8]) -> Result<()> {
+        match self {
+            PutSink::Fabric { ep, rkey } => ep.put_nbi(*rkey, offset, data),
+            PutSink::Shm(mr) => mr.put_local(offset, data),
+        }
+    }
+
+    /// 8-byte signal put (release-stored on delivery on both paths).
+    pub(crate) fn signal(&self, offset: usize, value: u64) -> Result<()> {
+        match self {
+            PutSink::Fabric { ep, rkey } => ep.qp().put_signal(*rkey, offset, value),
+            PutSink::Shm(mr) => mr.store_u64_release(offset, value),
+        }
+    }
+
+    /// Wait for completion of every posted put. Shm puts complete at the
+    /// store itself, so there is nothing to wait for.
+    pub(crate) fn flush(&self) -> Result<()> {
+        match self {
+            PutSink::Fabric { ep, .. } => ep.flush(),
+            PutSink::Shm(_) => Ok(()),
+        }
+    }
+}
+
 /// Leader-side view of a link's **consumed-frame counter**: an 8-byte
 /// word the worker advances (with the same signal-put the ring's byte
 /// credit uses) once per ingress frame it has handled — executed or
@@ -53,12 +103,21 @@ impl ConsumedCounter {
     /// bounds [`ConsumedCounter::wait`] the same way the reply timeout
     /// bounds reply waits.
     pub fn new(ctx: &Context, timeout: Option<Duration>) -> Self {
-        ConsumedCounter { mr: ctx.mem_map(64, MemPerm::RWX), timeout }
+        // A plain counter word: peers write and the owner reads — it
+        // never needs the atomic bit, so no RWX grant (that stays with
+        // the code ring alone).
+        ConsumedCounter { mr: ctx.mem_map(64, MemPerm::RW), timeout }
     }
 
     /// The rkey the worker's signal-puts target.
     pub fn rkey(&self) -> RKey {
         self.mr.rkey()
+    }
+
+    /// The counter word itself, for a *colocated* worker that advances it
+    /// with a release-store instead of a fabric signal-put (shm links).
+    pub(crate) fn region(&self) -> Arc<MemoryRegion> {
+        self.mr.clone()
     }
 
     /// Ingress frames the worker has reported consumed so far.
@@ -156,13 +215,17 @@ pub trait IfuncTransport: Send {
     }
 }
 
-/// RDMA-PUT ring delivery (the paper's §3 transport).
+/// Ring-protocol frame delivery: the paper's §3 transport when its sink
+/// is a fabric endpoint ([`RingTransport::new`]), and the intra-node shm
+/// fast path when the sink is the shared ring mapping itself
+/// ([`super::shm_transport::ShmTransport`] wraps that flavor). One
+/// implementation, one wire format, one `SenderCursor`/wrap-marker
+/// protocol — only where the bytes land differs.
 pub struct RingTransport {
-    /// Sender → worker endpoint (ifunc puts).
-    ep: Arc<Endpoint>,
+    /// Where frame/marker puts land (fabric endpoint or shared mapping).
+    sink: PutSink,
     /// Worker ring placement cursor.
     cursor: SenderCursor,
-    ring_rkey: RKey,
     ring_bytes: usize,
     /// Bytes sent (frames + wrap markers).
     sent_bytes: u64,
@@ -182,10 +245,25 @@ impl RingTransport {
         replies: ReplyRing,
         consumed: ConsumedCounter,
     ) -> Self {
+        Self::with_sink(
+            PutSink::Fabric { ep, rkey: ring_rkey },
+            ring_bytes,
+            credit,
+            replies,
+            consumed,
+        )
+    }
+
+    pub(crate) fn with_sink(
+        sink: PutSink,
+        ring_bytes: usize,
+        credit: Arc<MemoryRegion>,
+        replies: ReplyRing,
+        consumed: ConsumedCounter,
+    ) -> Self {
         RingTransport {
-            ep,
+            sink,
             cursor: SenderCursor::new(ring_bytes),
-            ring_rkey,
             ring_bytes,
             sent_bytes: 0,
             frames: 0,
@@ -203,13 +281,36 @@ impl RingTransport {
     /// ring offset), the frame at offset 0 overlaps the wrap marker, so
     /// the sender drains the ring and publishes the marker *before* the
     /// frame (see [`RingTransport::send_frame`]).
-    fn wait_capacity(&self, needed: usize) {
+    ///
+    /// The wait is deadline-bounded the same way `ConsumedCounter::wait`
+    /// is: any advance of the worker's byte credit resets the clock, and a
+    /// credit that never moves for the link's `reply_timeout` surfaces as
+    /// [`Error::Transport`] — a worker that dies with a full ring fails
+    /// the sender instead of hanging it forever. (This used to be the one
+    /// wait in the codebase with no deadline.)
+    fn wait_capacity(&self, needed: usize) -> Result<()> {
         let budget = self.ring_bytes.saturating_sub(needed) as u64;
+        let timeout = self.replies.timeout;
+        let mut deadline = timeout.map(|d| Instant::now() + d);
+        let mut last = None;
         let mut i = 0u32;
         loop {
-            let consumed = self.credit.load_u64_acquire(0).unwrap();
+            let consumed = self.credit.load_u64_acquire(0)?;
             if self.sent_bytes.saturating_sub(consumed) <= budget {
-                return;
+                return Ok(());
+            }
+            if last != Some(consumed) {
+                last = Some(consumed);
+                deadline = timeout.map(|d| Instant::now() + d);
+            }
+            if let Some(d) = deadline {
+                if Instant::now() > d {
+                    return Err(Error::Transport(format!(
+                        "no ring credit progress for {:?} while waiting for {needed} \
+                         bytes of ring capacity (worker dead with a full ring?)",
+                        timeout.unwrap_or_default()
+                    )));
+                }
             }
             crate::fabric::wire::backoff(i);
             i += 1;
@@ -223,14 +324,10 @@ impl RingTransport {
         let placement = self.cursor.place(msg.len())?;
         if let Some(at) = placement.wrap_marker_at {
             // The wrap consumes the ring tail through the marker.
-            self.ep.put_nbi(
-                self.ring_rkey,
-                at,
-                &wrap_marker_word().to_le_bytes(),
-            )?;
+            self.sink.put(at, &wrap_marker_word().to_le_bytes())?;
             self.sent_bytes += (self.ring_bytes - at) as u64;
         }
-        self.ep.put_nbi(self.ring_rkey, placement.offset, msg.frame())?;
+        self.sink.put(placement.offset, msg.frame())?;
         self.sent_bytes += msg.len() as u64;
         self.frames += 1;
         Ok(())
@@ -258,16 +355,12 @@ impl IfuncTransport for RingTransport {
             // poller reads it. Drain the ring, publish the marker alone,
             // and wait for the poller's rewind credit before the frame.
             let tail = self.cursor.remaining_before_wrap();
-            self.wait_capacity(self.ring_bytes);
+            self.wait_capacity(self.ring_bytes)?;
             let at = self.ring_bytes - tail;
-            self.ep.put_nbi(
-                self.ring_rkey,
-                at,
-                &wrap_marker_word().to_le_bytes(),
-            )?;
+            self.sink.put(at, &wrap_marker_word().to_le_bytes())?;
             self.sent_bytes += tail as u64;
-            self.ep.flush()?;
-            self.wait_capacity(self.ring_bytes);
+            self.sink.flush()?;
+            self.wait_capacity(self.ring_bytes)?;
             self.cursor.reset();
         }
         // Seed bug (fixed in PR 1): this waited for `frame + 8` bytes of
@@ -278,7 +371,7 @@ impl IfuncTransport for RingTransport {
         // frame on a wrap) instead.
         let needed = placement_cost(&self.cursor, self.ring_bytes, msg.len())
             .unwrap_or(msg.len());
-        self.wait_capacity(needed);
+        self.wait_capacity(needed)?;
         self.put_frame(msg)
     }
 
@@ -306,7 +399,7 @@ impl IfuncTransport for RingTransport {
             total += cost;
         }
         if coalesce {
-            self.wait_capacity(total);
+            self.wait_capacity(total)?;
             for msg in msgs {
                 self.put_frame(msg)?;
             }
@@ -319,7 +412,7 @@ impl IfuncTransport for RingTransport {
     }
 
     fn flush(&self) -> Result<()> {
-        self.ep.flush()
+        self.sink.flush()
     }
 
     fn frames_sent(&self) -> u64 {
@@ -335,8 +428,8 @@ impl IfuncTransport for RingTransport {
     }
 
     fn debug_put_raw(&mut self, offset: usize, data: &[u8]) -> Result<()> {
-        self.ep.put_nbi(self.ring_rkey, offset, data)?;
-        self.ep.flush()
+        self.sink.put(offset, data)?;
+        self.sink.flush()
     }
 }
 
@@ -400,6 +493,10 @@ pub enum TransportKind {
     Ring,
     /// Frames as active-message payloads (paper §5.1).
     Am,
+    /// Intra-node shared memory: the ring protocol with frames memcpy'd
+    /// directly into the colocated worker's ring mapping (the paper's §1
+    /// SmartNIC/DPU/CSD-on-the-host deployment; no fabric emulation).
+    Shm,
 }
 
 impl TransportKind {
@@ -407,8 +504,13 @@ impl TransportKind {
         match self {
             TransportKind::Ring => "ring",
             TransportKind::Am => "am",
+            TransportKind::Shm => "shm",
         }
     }
+
+    /// Every delivery transport, for test/bench scenario matrices.
+    pub const ALL: [TransportKind; 3] =
+        [TransportKind::Ring, TransportKind::Am, TransportKind::Shm];
 }
 
 impl std::str::FromStr for TransportKind {
@@ -417,7 +519,8 @@ impl std::str::FromStr for TransportKind {
         match s {
             "ring" => Ok(TransportKind::Ring),
             "am" => Ok(TransportKind::Am),
-            other => Err(Error::Other(format!("unknown transport {other:?} (ring|am)"))),
+            "shm" => Ok(TransportKind::Shm),
+            other => Err(Error::Other(format!("unknown transport {other:?} (ring|am|shm)"))),
         }
     }
 }

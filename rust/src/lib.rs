@@ -19,8 +19,9 @@
 //!                 ucp_ifunc_msg_create, ucp_ifunc_msg_send_nbix,
 //!                 ucp_poll_ifunc — split into one execution engine
 //!                 (decode/cache/link/verify/invoke), pluggable delivery
-//!                 transports (RDMA-PUT ring, AM send-receive), a reply
-//!                 ring, the verified-program cache, the I-cache model
+//!                 transports (RDMA-PUT ring, AM send-receive, intra-node
+//!                 shared memory), a reply ring, the verified-program
+//!                 cache, the I-cache model
 //!   ucp/          UCP-like mid layer: Context/Worker/Endpoint, mem_map,
 //!                 rkey pack/unpack, put_nbi, flush, Active Messages
 //!                 (the baseline), eager + rendezvous protocols

@@ -5,7 +5,7 @@
 //!                                 [--rndv-thresh N] [--code-pad N]
 //!                                 [--msgs N] [--iters N] [--sizes a,b,c]
 //! repro demo                      # Listing 1.3/1.4 flow on the fabric
-//! repro serve [--workers N] [--listen ADDR] [--transport ring|am]
+//! repro serve [--workers N] [--listen ADDR] [--transport ring|am|shm]
 //! repro info
 //! ```
 //!
@@ -47,7 +47,8 @@ BENCH OPTIONS:
 SERVE OPTIONS:
   --workers <n>           device workers (default 2)
   --listen <addr>         TCP listen address (default 127.0.0.1:7100)
-  --transport <ring|am>   frame delivery transport (default ring)
+  --transport <ring|am|shm>  frame delivery transport (default ring; shm =
+                          colocated workers over intra-node shared memory)
 ";
 
 #[derive(Default, Clone)]

@@ -186,10 +186,17 @@ mod tests {
 
     /// The full JSON protocol in-process (no socket): a record well past
     /// one reply frame (80 KB > 64 KiB) inserts to its owning worker and
-    /// streams back intact through `get`.
+    /// streams back intact through `get` — over every serve transport,
+    /// including the colocated shm pool.
     #[test]
     fn json_insert_then_get_streams_a_big_record() {
-        let (cluster, handles) = launch(2, TransportKind::Ring).unwrap();
+        for transport in TransportKind::ALL {
+            json_roundtrip_on(transport);
+        }
+    }
+
+    fn json_roundtrip_on(transport: TransportKind) {
+        let (cluster, handles) = launch(2, transport).unwrap();
         let n = 20_000usize; // 80 KB of f32s — past the old inline cap
         let data: String = (0..n).map(|i| format!("{}", i % 17)).collect::<Vec<_>>().join(",");
         let resp = handle_line(

@@ -5,6 +5,8 @@
 pub mod json;
 pub mod logger;
 pub mod rng;
+pub mod sync;
 
 pub use json::Json;
 pub use rng::XorShift;
+pub use sync::{lock_recover, wait_timeout_recover};

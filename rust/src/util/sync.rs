@@ -1,0 +1,92 @@
+//! Poison-tolerant locking.
+//!
+//! `std`'s mutexes poison when a holder panics, and `lock().unwrap()`
+//! then turns *one* panicking thread into a panic in **every** other
+//! thread that touches the same lock — on a shared dispatcher link that
+//! cascade takes down every client of the worker, which is strictly worse
+//! than the original failure. The shared state guarded by the
+//! coordinator's locks (transport cursors, window counters) is updated in
+//! small all-or-nothing steps, so recovering the guard is sound; the
+//! helpers below do that, logging the first recovery so the underlying
+//! panic still gets surfaced somewhere. State that is *not* all-or-nothing
+//! — the reply collector's multi-step chunk reassembly — deliberately
+//! keeps std's poisoning semantics instead of using these.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::log;
+
+static POISON_SEEN: AtomicBool = AtomicBool::new(false);
+
+fn note_poison() {
+    // Log once per process: the interesting event is the panic that
+    // poisoned the lock (reported by the panicking thread itself);
+    // repeating a warning per recovering caller would just be noise.
+    if !POISON_SEEN.swap(true, Ordering::Relaxed) {
+        log::warn!(
+            "recovered a poisoned lock (another thread panicked while holding it); \
+             continuing — further recoveries will be silent"
+        );
+    }
+}
+
+/// `m.lock()` that recovers the guard from a poisoned mutex instead of
+/// propagating the panic to this (innocent) thread.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| {
+        note_poison();
+        poisoned.into_inner()
+    })
+}
+
+/// [`Condvar::wait_timeout`] with the same recovery (the reacquired lock
+/// may have been poisoned while this thread slept).
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((g, _)) => g,
+        Err(poisoned) => {
+            note_poison();
+            poisoned.into_inner().0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_a_poisoning_panic() {
+        let m = Arc::new(Mutex::new(7u64));
+        let m2 = m.clone();
+        // Poison the mutex: panic while holding the guard.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        // An innocent thread still gets the guard — and the state.
+        let mut g = lock_recover(&m);
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_recover_returns_the_guard() {
+        let m = Mutex::new(1u32);
+        let cv = Condvar::new();
+        let g = lock_recover(&m);
+        let g = wait_timeout_recover(&cv, g, Duration::from_millis(1));
+        assert_eq!(*g, 1);
+    }
+}

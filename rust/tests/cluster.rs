@@ -1,7 +1,8 @@
 //! Coordinator integration: failure injection, mixed workloads, placement
 //! invariants, telemetry accounting, reply-path invocation — each traffic
-//! scenario driven over *both* delivery transports (RDMA-PUT ring and AM
-//! send-receive) through the identical cluster harness.
+//! scenario driven over *every* delivery transport (RDMA-PUT ring, AM
+//! send-receive, and intra-node shared memory) through the identical
+//! cluster harness.
 
 use two_chains::coordinator::{
     Cluster, ClusterConfig, ClusterSnapshot, GetIfunc, InsertIfunc, TransportKind, GET_MISSING,
@@ -11,9 +12,9 @@ use two_chains::ifunc::SourceArgs;
 use two_chains::util::XorShift;
 
 /// Run `scenario` once per transport, so every assertion below holds for
-/// the ring and the AM delivery path alike.
-fn for_both_transports(scenario: impl Fn(TransportKind)) {
-    for transport in [TransportKind::Ring, TransportKind::Am] {
+/// the ring, AM, and intra-node shm delivery paths alike.
+fn for_each_transport(scenario: impl Fn(TransportKind)) {
+    for transport in TransportKind::ALL {
         scenario(transport);
     }
 }
@@ -40,7 +41,7 @@ fn counter_cluster(workers: usize, transport: TransportKind) -> Cluster {
 /// counted, and never corrupt the stream.
 #[test]
 fn failure_injection_does_not_stall_the_stream() {
-    for_both_transports(|transport| {
+    for_each_transport(|transport| {
         let cluster = counter_cluster(2, transport);
         let d = cluster.dispatcher();
         let h_good = d.register("counter").unwrap();
@@ -82,7 +83,7 @@ fn failure_injection_does_not_stall_the_stream() {
 /// cache.
 #[test]
 fn mixed_types_share_a_link() {
-    for_both_transports(|transport| {
+    for_each_transport(|transport| {
         let cluster = counter_cluster(1, transport);
         let d = cluster.dispatcher();
         let h_counter = d.register("counter").unwrap();
@@ -133,7 +134,7 @@ fn placement_is_total_and_balanced() {
 /// Telemetry accounting matches ground truth after a burst.
 #[test]
 fn telemetry_matches_ground_truth() {
-    for_both_transports(|transport| {
+    for_each_transport(|transport| {
         let cluster = counter_cluster(3, transport);
         let d = cluster.dispatcher();
         let h = d.register("counter").unwrap();
@@ -158,7 +159,7 @@ fn telemetry_matches_ground_truth() {
 /// desynchronizing later invocations.
 #[test]
 fn invoke_returns_injected_r0() {
-    for_both_transports(|transport| {
+    for_each_transport(|transport| {
         let cluster = counter_cluster(2, transport);
         let d = cluster.dispatcher();
         let h = d.register("counter").unwrap();
@@ -223,7 +224,7 @@ fn insert_ifunc_ingestion_and_lookup() {
 /// element count in r0 plus the record itself inline in its payload.
 #[test]
 fn get_ifunc_returns_worker_computed_data() {
-    for_both_transports(|transport| {
+    for_each_transport(|transport| {
         let cluster = Cluster::launch(
             ClusterConfig { workers: 3, transport, ..Default::default() },
             |_, _, _| {},
@@ -271,7 +272,7 @@ fn get_ifunc_returns_worker_computed_data() {
 /// replies collected out of order must still match their seq's payload.
 #[test]
 fn pipelined_invocations_carry_per_seq_payloads() {
-    for_both_transports(|transport| {
+    for_each_transport(|transport| {
         let cluster = Cluster::launch(
             ClusterConfig { workers: 1, transport, max_inflight: 8, ..Default::default() },
             |_, ctx, _| {
@@ -315,7 +316,7 @@ fn pipelined_invocations_carry_per_seq_payloads() {
 /// payload is never overwritten.
 #[test]
 fn pending_reply_survives_fire_and_forget_flood() {
-    for_both_transports(|transport| {
+    for_each_transport(|transport| {
         let cluster = Cluster::launch(
             ClusterConfig { workers: 1, transport, ..Default::default() },
             |_, ctx, _| {
@@ -437,11 +438,11 @@ fn full_invoke_window_errors_instead_of_deadlocking() {
 
 /// The tentpole acceptance scenario: a 1 MiB record — 16× the reply
 /// frame's chunk size — round-trips through `insert` + `invoke_get` on
-/// both transports. The reply streams as 16 chunk frames through a
-/// 64-slot ring and reassembles bit-exact.
+/// every transport (ring, AM, and shm). The reply streams as 16 chunk
+/// frames through a 64-slot ring and reassembles bit-exact.
 #[test]
-fn get_streams_a_1mib_record_over_both_transports() {
-    for_both_transports(|transport| {
+fn get_streams_a_1mib_record_over_all_transports() {
+    for_each_transport(|transport| {
         let cluster = Cluster::launch(
             ClusterConfig { workers: 2, transport, ..Default::default() },
             |_, _, _| {},
@@ -477,7 +478,7 @@ fn get_streams_a_1mib_record_over_both_transports() {
 /// the parked invocation reply without ever splicing into it.
 #[test]
 fn chunked_replies_interleave_with_fire_and_forget_floods() {
-    for_both_transports(|transport| {
+    for_each_transport(|transport| {
         let cluster = Cluster::launch(
             ClusterConfig { workers: 1, transport, max_inflight: 4, ..Default::default() },
             |_, ctx, _| {
@@ -521,7 +522,8 @@ fn chunked_replies_interleave_with_fire_and_forget_floods() {
 /// only. A sibling worker parked inside a long-running injected function
 /// (gated on a host symbol this test controls) must not delay it — the
 /// old insert-then-cluster-barrier flow would hang here until the gate
-/// opened.
+/// opened. Runs over every transport: the independence property is about
+/// link isolation, which each delivery path must preserve.
 #[test]
 fn inserts_do_not_wait_on_other_workers_consumption() {
     use std::sync::atomic::{AtomicBool, Ordering};
@@ -548,53 +550,63 @@ fn inserts_do_not_wait_on_other_workers_consumption() {
         }
     }
 
-    let gate = Arc::new(AtomicBool::new(false));
-    let g = gate.clone();
-    let cluster = Cluster::launch(
-        ClusterConfig { workers: 2, ..Default::default() },
-        move |_, ctx, _| {
-            let g = g.clone();
-            ctx.symbols().install_fn("gate_wait", move |_, _| {
-                while !g.load(Ordering::Acquire) {
-                    std::thread::yield_now();
-                }
-                Ok(0)
-            });
-        },
-    )
-    .unwrap();
-    cluster.leader.library_dir().install(Box::new(GateIfunc));
-    cluster.leader.library_dir().install(Box::new(InsertIfunc));
-    let d = cluster.dispatcher();
-    let h_gate = d.register("gate").unwrap();
-    let h_ins = d.register("insert").unwrap();
+    for_each_transport(|transport| {
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = gate.clone();
+        let cluster = Cluster::launch(
+            ClusterConfig { workers: 2, transport, ..Default::default() },
+            move |_, ctx, _| {
+                let g = g.clone();
+                ctx.symbols().install_fn("gate_wait", move |_, _| {
+                    while !g.load(Ordering::Acquire) {
+                        std::thread::yield_now();
+                    }
+                    Ok(0)
+                });
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(GateIfunc));
+        cluster.leader.library_dir().install(Box::new(InsertIfunc));
+        let d = cluster.dispatcher();
+        let h_gate = d.register("gate").unwrap();
+        let h_ins = d.register("insert").unwrap();
 
-    let key0 = (0u64..).find(|k| d.route_key(*k) == 0).unwrap();
+        let key0 = (0u64..).find(|k| d.route_key(*k) == 0).unwrap();
 
-    // Park worker 1 inside the gated function (its receive loop is now
-    // busy; its consumed counter will not move).
-    d.send_to(1, &h_gate.msg_create(&SourceArgs::bytes(vec![0u8; 8])).unwrap()).unwrap();
+        // Park worker 1 inside the gated function (its receive loop is now
+        // busy; its consumed counter will not move).
+        d.send_to(1, &h_gate.msg_create(&SourceArgs::bytes(vec![0u8; 8])).unwrap()).unwrap();
 
-    // Serve-style insert to worker 0: an invocation on its own link —
-    // completes while worker 1 is still parked.
-    let reply =
-        d.invoke(0, &h_ins.msg_create(&InsertIfunc::args(key0, &[1.0, 2.0, 3.0])).unwrap())
-            .unwrap();
-    assert!(reply.ok());
-    assert_eq!(cluster.workers[0].store.get(key0), Some(vec![1.0, 2.0, 3.0]));
-    assert_eq!(cluster.workers[1].executed(), 0, "worker 1 must still be parked");
+        // Serve-style insert to worker 0: an invocation on its own link —
+        // completes while worker 1 is still parked.
+        let reply =
+            d.invoke(0, &h_ins.msg_create(&InsertIfunc::args(key0, &[1.0, 2.0, 3.0])).unwrap())
+                .unwrap();
+        assert!(reply.ok(), "{transport:?}");
+        assert_eq!(
+            cluster.workers[0].store.get(key0),
+            Some(vec![1.0, 2.0, 3.0]),
+            "{transport:?}"
+        );
+        assert_eq!(
+            cluster.workers[1].executed(),
+            0,
+            "{transport:?}: worker 1 must still be parked"
+        );
 
-    gate.store(true, Ordering::Release);
-    d.barrier().unwrap();
-    assert_eq!(cluster.workers[1].executed(), 1);
-    cluster.shutdown().unwrap();
+        gate.store(true, Ordering::Release);
+        d.barrier().unwrap();
+        assert_eq!(cluster.workers[1].executed(), 1, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
 }
 
 /// Mixed traffic: pipelined echo invocations interleaved with batched
 /// fire-and-forget counters on the same link stay correctly sequenced.
 #[test]
 fn pipelined_invokes_interleave_with_batched_sends() {
-    for_both_transports(|transport| {
+    for_each_transport(|transport| {
         let cluster = Cluster::launch(
             ClusterConfig { workers: 1, transport, max_inflight: 4, ..Default::default() },
             |_, ctx, _| {

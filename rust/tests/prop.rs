@@ -304,8 +304,8 @@ fn stream_harness(collector_feeds_credit: bool) -> StreamHarness {
     let wl = Worker::new(&leader);
     let ww = Worker::new(&worker);
     let ring = ReplyRing::new(&leader, None);
-    let credit = worker.mem_map(64, MemPerm::RWX);
-    let sink = worker.mem_map(64, MemPerm::RWX);
+    let credit = worker.mem_map(64, MemPerm::RW);
+    let sink = worker.mem_map(64, MemPerm::RW);
     let back_ep = ww.connect(&wl).unwrap();
     let fwd_ep = wl.connect(&ww).unwrap();
     // With `collector_feeds_credit` the collector's watermark puts land
@@ -383,6 +383,78 @@ fn prop_streamed_replies_roundtrip_random_sizes() {
             assert_eq!(reply.status, STATUS_FAILED, "frame {frame_seq}");
             assert!(reply.payload.is_empty(), "frame {frame_seq}");
         }
+    }
+}
+
+/// The shm flavor of the streamed-reply harness: writer, credit word,
+/// and collector all share mappings directly (no endpoints anywhere).
+/// Random payload sizes spanning 0 to several chunks must round-trip
+/// identically to the fabric pair — same seqlock slots, same watermark
+/// credit, different delivery.
+#[test]
+fn prop_shm_streamed_replies_roundtrip_random_sizes() {
+    use two_chains::fabric::MemPerm;
+    let f = Fabric::new(1, WireConfig::off());
+    let leader = Context::new(f.node(0), ContextConfig::default()).unwrap();
+    let ring = ReplyRing::new(&leader, None);
+    let credit = leader.mem_map(64, MemPerm::RW);
+    let collector = ReplyCollector::shm(ring.clone(), credit.clone());
+    let mut writer = ReplyWriter::shm(&ring, true, Some(credit));
+    let mut rng = XorShift::new(0x54A1);
+    for frame_seq in 1..=60u64 {
+        let len = rng.below(3 * REPLY_INLINE_CAP as u64) as usize;
+        let ok = rng.below(10) != 0;
+        let payload = rng.bytes(len);
+        let r0 = rng.next_u64();
+        collector.register(frame_seq);
+        writer.push(frame_seq, ok, r0, &payload).unwrap();
+        while writer.pending() > 0 {
+            writer.pump().unwrap();
+            std::thread::yield_now();
+        }
+        writer.flush().unwrap();
+        let reply = collector.collect(frame_seq).unwrap();
+        assert_eq!(reply.r0, r0, "frame {frame_seq}");
+        if ok {
+            assert_eq!(reply.payload, payload, "frame {frame_seq} (len {len})");
+        } else {
+            assert_eq!(reply.status, STATUS_FAILED, "frame {frame_seq}");
+            assert!(reply.payload.is_empty(), "frame {frame_seq}");
+        }
+    }
+}
+
+/// Full-stack transport equivalence: random-size echo invocations (0 to
+/// past the chunk boundary) return bit-identical payloads over the ring,
+/// AM, and shm transports — the scenario matrix's property-test arm.
+#[test]
+fn prop_invoke_echo_roundtrips_on_every_transport() {
+    use two_chains::coordinator::{Cluster, ClusterConfig, TransportKind};
+    use two_chains::ifunc::builtin::EchoIfunc;
+    for transport in TransportKind::ALL {
+        let cluster = Cluster::launch(
+            ClusterConfig { workers: 1, transport, ..Default::default() },
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(EchoIfunc));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(EchoIfunc));
+        let d = cluster.dispatcher();
+        let h = d.register("echo").unwrap();
+        let mut rng = XorShift::new(0xEC40);
+        for case in 0..25 {
+            // Sizes straddling 0, sub-frame, and multi-chunk replies.
+            let len = *rng.pick(&[0usize, 1, 64, 4096, 70_000, 150_000]);
+            let payload = rng.bytes(len);
+            let reply = d
+                .invoke(0, &h.msg_create(&SourceArgs::bytes(payload.clone())).unwrap())
+                .unwrap();
+            assert!(reply.ok(), "{transport:?} case {case}");
+            assert_eq!(reply.r0 as usize, len, "{transport:?} case {case}");
+            assert_eq!(reply.payload, payload, "{transport:?} case {case} (len {len})");
+        }
+        cluster.shutdown().unwrap();
     }
 }
 

@@ -213,30 +213,85 @@ fn hostile_frame_is_consumed_not_spun_on() {
 /// backed off, and shutdown-aware.
 #[test]
 fn corrupt_header_frame_does_not_hang_shutdown() {
-    use two_chains::coordinator::{Cluster, ClusterConfig};
+    use two_chains::coordinator::{Cluster, ClusterConfig, TransportKind};
 
-    let cluster = Cluster::launch(
-        ClusterConfig { workers: 1, ..Default::default() },
-        |_, _, _| {},
-    )
-    .unwrap();
-    let d = cluster.dispatcher();
-    // Hostile write straight into the worker's ring at the poll cursor:
-    // nonzero, not MAGIC, not WRAP — permanently unconsumable.
-    d.debug_corrupt_ring(0, 0, &0xDEAD_BEEF_u64.to_le_bytes()).unwrap();
-    // Let the worker thread meet the poisoned word.
-    std::thread::sleep(std::time::Duration::from_millis(50));
+    // Both ring-protocol transports share the poll loop (and the
+    // `debug_put_raw` fault hook): the liveness property must hold on the
+    // fabric ring and the intra-node shm ring alike.
+    for transport in [TransportKind::Ring, TransportKind::Shm] {
+        let cluster = Cluster::launch(
+            ClusterConfig { workers: 1, transport, ..Default::default() },
+            |_, _, _| {},
+        )
+        .unwrap();
+        let d = cluster.dispatcher();
+        // Hostile write straight into the worker's ring at the poll cursor:
+        // nonzero, not MAGIC, not WRAP — permanently unconsumable.
+        d.debug_corrupt_ring(0, 0, &0xDEAD_BEEF_u64.to_le_bytes()).unwrap();
+        // Let the worker thread meet the poisoned word.
+        std::thread::sleep(std::time::Duration::from_millis(50));
 
-    let t = std::thread::spawn(move || cluster.shutdown());
-    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
-    while !t.is_finished() {
-        assert!(
-            std::time::Instant::now() < deadline,
-            "Cluster::shutdown() hung on a header-invalid frame parked at the cursor"
-        );
-        std::thread::sleep(std::time::Duration::from_millis(5));
+        let t = std::thread::spawn(move || cluster.shutdown());
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while !t.is_finished() {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "Cluster::shutdown() hung on a header-invalid frame parked at the \
+                 cursor ({transport:?})"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        t.join().unwrap().unwrap();
     }
-    t.join().unwrap().unwrap();
+}
+
+/// Flow-control liveness regression (the PR 5 headline bugfix):
+/// `RingTransport::wait_capacity` was the one wait in the codebase with
+/// no deadline — a worker that died with a full ring left every sender
+/// spinning forever (and a deregistered credit word would have *panicked*
+/// the sender via `load_u64_acquire(0).unwrap()`). Injecting into a dead
+/// worker whose ring is saturated must now surface `Error::Transport`
+/// naming the worker and the stalled credit, on the fabric ring and the
+/// shm ring alike. This test hangs on the old `wait_capacity` and passes
+/// on the bounded one.
+#[test]
+fn dead_worker_with_full_ring_errors_instead_of_hanging() {
+    use two_chains::coordinator::{Cluster, ClusterConfig, TransportKind};
+
+    for transport in [TransportKind::Ring, TransportKind::Shm] {
+        let mut cluster = Cluster::launch(
+            ClusterConfig {
+                workers: 1,
+                transport,
+                ring_bytes: 4096,
+                reply_timeout: Some(std::time::Duration::from_millis(200)),
+                ..Default::default()
+            },
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(CounterIfunc::default()));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+        // Fault injection: kill the worker's receive loop. Its byte
+        // credit is frozen at whatever it last pushed, so a few sends
+        // fill the 4 KiB ring and the next one needs credit that will
+        // never come.
+        cluster.workers[0].stop().unwrap();
+
+        let d = cluster.dispatcher();
+        let h = d.register("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 512])).unwrap();
+        let err = (0..64)
+            .find_map(|_| d.send_to(0, &msg).err())
+            .expect("injecting into a dead worker's full ring must error, not hang");
+        assert!(
+            err.to_string().contains("no ring credit progress"),
+            "{transport:?}: {err}"
+        );
+        assert!(err.to_string().contains("worker 0"), "{transport:?}: {err}");
+        cluster.shutdown().unwrap();
+    }
 }
 
 #[test]

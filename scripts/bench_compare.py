@@ -70,10 +70,16 @@ def main() -> int:
     width = max((len(n) for n in cur), default=20)
     print(f"{'metric':<{width}}  {'baseline':>12}  {'current':>12}  {'delta':>8}")
     worst = 0.0
+    new_rows = []
     for name, row in cur.items():
         b = base.get(name)
         if b is None:
+            # A metric the baseline predates (e.g. the shm transport
+            # rows): informational only. New rows never feed `worst`, so
+            # they can never trip --threshold — only rows present in BOTH
+            # reports are compared.
             print(f"{name:<{width}}  {'—':>12}  {fmt_ns(row['median_ns']):>12}  {'new':>8}")
+            new_rows.append(name)
             continue
         delta = (row["median_ns"] - b["median_ns"]) / b["median_ns"] * 100.0
         worst = max(worst, delta)
@@ -85,6 +91,12 @@ def main() -> int:
         if name not in cur:
             print(f"{name:<{width}}  {fmt_ns(base[name]['median_ns']):>12}  "
                   f"{'—':>12}  {'gone':>8}")
+    if new_rows:
+        print(
+            f"\nbench_compare: {len(new_rows)} new metric(s) with no baseline row "
+            "(informational, not a failure) — refresh the baseline from a trusted "
+            "CI run to start tracking them."
+        )
 
     if args.threshold is not None and worst > args.threshold:
         print(f"\nbench_compare: worst regression {worst:+.1f}% exceeds "
