@@ -27,15 +27,23 @@
 //!   the colocated fast path: no NIC engine, no wire model, no
 //!   completion waits — its delta against ring prices the whole emulated
 //!   fabric.
+//! * **I** — collective invocation: `invoke_all` scatter-gather (one
+//!   fan-out posting every link before any flush, replies merged at the
+//!   leader) vs a leader-side loop of sequential `invoke_one` calls, over
+//!   2/4/8 workers on every transport. The speedup column is what
+//!   overlapping the per-link transfers buys — it should grow with the
+//!   worker count.
 //!
 //! Run: `cargo bench --bench ablations` (QUICK=1 for a smoke run;
-//! ABL=E,H runs only the named ablations — CI's bench smoke uses ABL=H).
+//! ABL=E,H runs only the named ablations — CI's bench smoke uses ABL=H,I).
 
 use std::time::Instant;
 
 use two_chains::bench::harness::{BenchConfig, BenchPair};
 use two_chains::bench::{latency, report, throughput};
-use two_chains::coordinator::{Cluster, ClusterConfig, GetIfunc, InsertIfunc, TransportKind};
+use two_chains::coordinator::{
+    Cluster, ClusterConfig, GetIfunc, InsertIfunc, Target, TransportKind,
+};
 use two_chains::ifunc::builtin::CounterIfunc;
 use two_chains::ifunc::icache::IcacheConfig;
 use two_chains::ifunc::SourceArgs;
@@ -80,12 +88,12 @@ fn cluster_throughput(
     msgs: usize,
 ) -> f64 {
     let cluster = Cluster::launch(
-        ClusterConfig {
-            workers: 1,
-            transport,
-            wire: base.wire,
-            ..Default::default()
-        },
+        ClusterConfig::builder()
+            .workers(1)
+            .transport(transport)
+            .wire(base.wire)
+            .build()
+            .expect("config"),
         |_, ctx, _| {
             ctx.library_dir().install(Box::new(CounterIfunc::default()));
         },
@@ -97,7 +105,7 @@ fn cluster_throughput(
     let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; size])).expect("msg");
     let t0 = Instant::now();
     for _ in 0..msgs {
-        d.send_to(0, &msg).expect("send");
+        d.send(Target::Worker(0), &msg).expect("send");
     }
     d.barrier().expect("barrier");
     let dt = t0.elapsed().as_secs_f64();
@@ -107,8 +115,8 @@ fn cluster_throughput(
 }
 
 /// Abl F workload: completed delivery of `msgs` frames in chunks of
-/// `batch`. `batch == 1` is frame-at-a-time (`send_to` + flush per
-/// frame); `batch > 1` goes through `send_batch_to` — one coalesced
+/// `batch`. `batch == 1` is frame-at-a-time (`send` + flush per
+/// frame); `batch > 1` goes through `send_batch` — one coalesced
 /// credit reservation + one flush per chunk on the ring, back-to-back
 /// posts + one flush over AM — so the delta is exactly what batching
 /// amortizes (per-frame completion waits and capacity checks).
@@ -120,12 +128,12 @@ fn cluster_batched_throughput(
     batch: usize,
 ) -> f64 {
     let cluster = Cluster::launch(
-        ClusterConfig {
-            workers: 1,
-            transport,
-            wire: base.wire,
-            ..Default::default()
-        },
+        ClusterConfig::builder()
+            .workers(1)
+            .transport(transport)
+            .wire(base.wire)
+            .build()
+            .expect("config"),
         |_, ctx, _| {
             ctx.library_dir().install(Box::new(CounterIfunc::default()));
         },
@@ -142,7 +150,7 @@ fn cluster_batched_throughput(
         let take = left.min(batch);
         // A 1-frame batch degenerates to send + flush, so the two
         // modes differ only in chunking.
-        d.send_batch_to(0, &frames[..take]).expect("send_batch");
+        d.send_batch(Target::Worker(0), &frames[..take]).expect("send_batch");
         left -= take;
     }
     d.barrier().expect("barrier");
@@ -164,13 +172,13 @@ fn cluster_get_throughput(
     gets: usize,
 ) -> f64 {
     let cluster = Cluster::launch(
-        ClusterConfig {
-            workers: 1,
-            transport,
-            stream_replies: stream,
-            wire: base.wire,
-            ..Default::default()
-        },
+        ClusterConfig::builder()
+            .workers(1)
+            .transport(transport)
+            .stream_replies(stream)
+            .wire(base.wire)
+            .build()
+            .expect("config"),
         |_, _, _| {},
     )
     .expect("cluster");
@@ -181,13 +189,13 @@ fn cluster_get_throughput(
     let h_get = d.register("get").expect("register");
     let record: Vec<f32> = (0..record_bytes / 4).map(|i| i as f32).collect();
     let key = 7u64;
-    d.send_to(0, &h_ins.msg_create(&InsertIfunc::args(key, &record)).expect("msg"))
+    d.send(Target::Worker(0), &h_ins.msg_create(&InsertIfunc::args(key, &record)).expect("msg"))
         .expect("insert");
     d.barrier().expect("barrier");
     let get = h_get.msg_create(&GetIfunc::args(key)).expect("msg");
     let t0 = Instant::now();
     for _ in 0..gets {
-        let (reply, data) = d.invoke_get(0, &get).expect("invoke_get");
+        let (reply, data) = d.fetch(Target::Worker(0), &get).expect("fetch");
         let streamed_back = reply.ok() && data.len() == record_bytes / 4;
         let overflowed = reply.overflowed() && data.is_empty();
         assert!(
@@ -198,6 +206,52 @@ fn cluster_get_throughput(
     let dt = t0.elapsed().as_secs_f64();
     cluster.shutdown().expect("shutdown");
     gets as f64 / dt
+}
+
+/// Abl I workload: `rounds` full-cluster invocation rounds against
+/// `workers` workers — either one `invoke_all` per round (scatter-gather:
+/// the fan-out posts every link before any flush, so per-link transfers
+/// overlap and the merged wait collects replies as they land) or a
+/// leader-side loop of sequential `invoke_one` calls (each round-trips
+/// one worker before touching the next). Returns invocations/second.
+fn collective_throughput(
+    base: &BenchConfig,
+    transport: TransportKind,
+    workers: usize,
+    scatter: bool,
+    rounds: usize,
+) -> f64 {
+    let cluster = Cluster::launch(
+        ClusterConfig::builder()
+            .workers(workers)
+            .transport(transport)
+            .wire(base.wire)
+            .build()
+            .expect("config"),
+        |_, ctx, _| {
+            ctx.library_dir().install(Box::new(CounterIfunc::default()));
+        },
+    )
+    .expect("cluster");
+    cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+    let d = cluster.dispatcher();
+    let h = d.register("counter").expect("register");
+    let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 64])).expect("msg");
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        if scatter {
+            let merged = d.invoke_all(&msg).expect("invoke_all").wait().expect("wait");
+            assert!(merged.all_ok());
+        } else {
+            for w in 0..workers {
+                assert!(d.invoke_one(Target::Worker(w), &msg).expect("invoke_one").ok());
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(d.total_executed(), (rounds * workers) as u64);
+    cluster.shutdown().expect("shutdown");
+    (rounds * workers) as f64 / dt
 }
 
 fn main() {
@@ -299,7 +353,7 @@ fn main() {
 
     // Abl F — batched vs frame-at-a-time delivery, per transport, on the
     // identical workload. Column mapping (same trick as Abl E): `ifunc`
-    // column = send_batch_to in chunks of 32, `AM` column = chunks of 1
+    // column = send_batch in chunks of 32, `AM` column = chunks of 1
     // (send + flush per frame) — so a positive "ifunc vs AM" % is the
     // batching win.
     if run('F') {
@@ -402,6 +456,30 @@ fn main() {
                 "{bytes:>10}  {ring:>12.2}  {am:>12.2}  {shm:>12.2}  {:>+11.1}%",
                 (shm - ring) / ring * 100.0
             );
+        }
+    }
+
+    // Abl I — collective scatter-gather vs the leader-side invoke loop,
+    // over 2/4/8 workers on every transport. The loop pays one full
+    // round trip per worker per round; the collective overlaps all of
+    // them, so its speedup should grow with the worker count.
+    if run('I') {
+        let rounds = if quick { 50 } else { 400 };
+        println!("\n== Abl I — collective invocation throughput (64B, invocations/s) ==");
+        println!(
+            "{:>10}  {:>8}  {:>14}  {:>14}  {:>10}",
+            "transport", "workers", "scatter-gather", "leader loop", "speedup"
+        );
+        for transport in TransportKind::ALL {
+            for workers in [2usize, 4, 8] {
+                let sg = collective_throughput(&base, transport, workers, true, rounds);
+                let looped = collective_throughput(&base, transport, workers, false, rounds);
+                println!(
+                    "{:>10}  {workers:>8}  {sg:>14.0}  {looped:>14.0}  {:>9.2}x",
+                    transport.label(),
+                    sg / looped
+                );
+            }
         }
     }
 }

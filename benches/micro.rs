@@ -200,7 +200,7 @@ fn main() {
     // collection on the same link.
     {
         use std::collections::VecDeque;
-        use two_chains::coordinator::{Cluster, ClusterConfig, TransportKind};
+        use two_chains::coordinator::{Cluster, ClusterConfig, Target, TransportKind};
         // Window 1/4/16 on the default ring transport (the PR 3 rows),
         // plus a window-16 shm row: the same pipelined workload on the
         // intra-node fast path.
@@ -211,7 +211,12 @@ fn main() {
             (16, TransportKind::Shm),
         ] {
             let cluster = Cluster::launch(
-                ClusterConfig { workers: 1, max_inflight: window, transport, ..Default::default() },
+                ClusterConfig::builder()
+                    .workers(1)
+                    .max_inflight(window)
+                    .transport(transport)
+                    .build()
+                    .expect("config"),
                 |_, ctx, _| {
                     ctx.library_dir().install(Box::new(CounterIfunc::default()));
                 },
@@ -228,7 +233,7 @@ fn main() {
                 if pending.len() == window {
                     pending.pop_front().unwrap().wait().expect("reply");
                 }
-                pending.push_back(d.invoke_begin(0, &m).expect("invoke_begin"));
+                pending.push_back(d.invoke_begin(Target::Worker(0), &m).expect("invoke_begin"));
             }
             while let Some(p) = pending.pop_front() {
                 p.wait().expect("reply");
@@ -246,6 +251,36 @@ fn main() {
         }
     }
 
+    // Collective invocation: one `invoke_all` fan-out + merged wait per
+    // iteration against a 4-worker pool — the per-round cost of a full
+    // scatter-gather (inject once, every link posted before the flush
+    // pass, replies collected per worker at the leader).
+    {
+        use two_chains::coordinator::{Cluster, ClusterConfig};
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(4).build().expect("config"),
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(CounterIfunc::default()));
+            },
+        )
+        .expect("cluster");
+        cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+        let d = cluster.dispatcher();
+        let h = d.register("counter").expect("register");
+        let m = h.msg_create(&SourceArgs::bytes(vec![0u8; 64])).expect("msg");
+        let iters = if quick { 100 } else { 1000 };
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let merged = d.invoke_all(&m).expect("invoke_all").wait().expect("wait");
+            assert!(merged.all_ok() && merged.len() == 4);
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let name = "invoke_all (4 workers, 64B)".to_string();
+        println!("{name:<44} {ns:>12.0} ns/op");
+        t.rows.push(MicroRow { name, median_ns: ns, best_ns: ns });
+        cluster.shutdown().expect("shutdown");
+    }
+
     // Big-record invoke_get: the reply streams as chunked frames (256 KiB
     // = 4 chunks, 1 MiB = 16 chunks through the 64-slot reply ring). The
     // `stream off` row is the old REPLY_INLINE_CAP behavior — the reply
@@ -253,7 +288,9 @@ fn main() {
     // rival: it measures what the old protocol charged for *failing* to
     // return the record.
     {
-        use two_chains::coordinator::{Cluster, ClusterConfig, GetIfunc, InsertIfunc, TransportKind};
+        use two_chains::coordinator::{
+            Cluster, ClusterConfig, GetIfunc, InsertIfunc, Target, TransportKind,
+        };
         for (name, bytes, stream, transport) in [
             ("invoke_get 256KiB record (streamed)", 256usize << 10, true, TransportKind::Ring),
             ("invoke_get 1MiB record (streamed)", 1usize << 20, true, TransportKind::Ring),
@@ -271,12 +308,12 @@ fn main() {
             ),
         ] {
             let cluster = Cluster::launch(
-                ClusterConfig {
-                    workers: 1,
-                    stream_replies: stream,
-                    transport,
-                    ..Default::default()
-                },
+                ClusterConfig::builder()
+                    .workers(1)
+                    .stream_replies(stream)
+                    .transport(transport)
+                    .build()
+                    .expect("config"),
                 |_, _, _| {},
             )
             .expect("cluster");
@@ -287,14 +324,17 @@ fn main() {
             let h_get = d.register("get").expect("register get");
             let record: Vec<f32> = (0..bytes / 4).map(|i| i as f32).collect();
             let key = 7u64;
-            d.send_to(0, &h_ins.msg_create(&InsertIfunc::args(key, &record)).expect("msg"))
-                .expect("insert");
+            d.send(
+                Target::Worker(0),
+                &h_ins.msg_create(&InsertIfunc::args(key, &record)).expect("msg"),
+            )
+            .expect("insert");
             d.barrier().expect("barrier");
             let get = h_get.msg_create(&GetIfunc::args(key)).expect("msg");
             let iters = if quick { 20 } else { 200 };
             let t0 = Instant::now();
             for _ in 0..iters {
-                let (reply, data) = d.invoke_get(0, &get).expect("invoke_get");
+                let (reply, data) = d.fetch(Target::Worker(0), &get).expect("fetch");
                 if stream {
                     assert!(reply.ok() && data.len() == bytes / 4);
                 } else {

@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use two_chains::coordinator::{
     apps::{DecodeInsertIfunc, SIGNAL_N},
-    Cluster, ClusterConfig, GetIfunc, GET_MISSING,
+    Cluster, ClusterConfig, GetIfunc, Target, GET_MISSING,
 };
 use two_chains::fabric::WireConfig;
 use two_chains::{Error, Result};
@@ -61,11 +61,7 @@ fn main() -> Result<()> {
     println!("corpus: {n_records} recordings x {SIGNAL_N} samples, {n_workers} workers\n");
 
     let cluster = Cluster::launch(
-        ClusterConfig {
-            workers: n_workers,
-            wire: WireConfig::connectx6(),
-            ..Default::default()
-        },
+        ClusterConfig::builder().workers(n_workers).wire(WireConfig::connectx6()).build()?,
         |_, _, _| {},
     )?;
     cluster.leader.library_dir().install(Box::new(DecodeInsertIfunc::load(&artifacts)?));
@@ -78,7 +74,8 @@ fn main() -> Result<()> {
 
     let t0 = Instant::now();
     for (key, record) in &corpus {
-        d.inject_by_key(&handle, *key, &DecodeInsertIfunc::args(*key, record))?;
+        let msg = handle.msg_create(&DecodeInsertIfunc::args(*key, record))?;
+        d.send(Target::Key(*key), &msg)?;
     }
     d.barrier()?;
     let dt = t0.elapsed();
@@ -130,7 +127,7 @@ fn main() -> Result<()> {
     let h_get = d.register("get")?;
     for key in [0u64, n_records as u64 / 2, n_records as u64 - 1] {
         let w = d.route_key(key);
-        let (reply, fetched) = d.invoke_get(w, &h_get.msg_create(&GetIfunc::args(key))?)?;
+        let (reply, fetched) = d.fetch(Target::Key(key), &h_get.msg_create(&GetIfunc::args(key))?)?;
         if !reply.ok() || reply.r0 == GET_MISSING {
             return Err(Error::Other(format!("get({key}) failed on worker {w}")));
         }

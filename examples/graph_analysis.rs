@@ -24,7 +24,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use two_chains::coordinator::{Cluster, ClusterConfig};
+use two_chains::coordinator::{Cluster, ClusterConfig, FilterIfunc, Target};
 use two_chains::ifunc::{CodeImage, IfuncLibrary, SourceArgs};
 use two_chains::util::XorShift;
 use two_chains::vm::Assembler;
@@ -111,7 +111,45 @@ fn owner(v: usize) -> usize {
     v / VERTS_PER_WORKER
 }
 
+/// The collective-invocation demo (needs no PJRT backend): each worker's
+/// store is seeded with shard-local records, one `invoke_all` injects the
+/// `FilterIfunc` query on every worker simultaneously, and the leader
+/// merges the per-worker match lists with worker attribution — a
+/// full-cluster scan where only the query and the matches cross the
+/// fabric.
+fn scatter_gather_demo() -> two_chains::Result<()> {
+    println!("== scatter-gather: shard-local filter on every worker ==");
+    let cluster = Cluster::launch(
+        ClusterConfig::builder().workers(WORKERS).build()?,
+        |i, _, store| {
+            // Worker i owns keys 1000i..1000i+99; the first element is a
+            // pseudo-random score the injected filter thresholds on.
+            let mut rng = XorShift::new(42 + i as u64);
+            for j in 0..100u64 {
+                store.insert(1000 * i as u64 + j, vec![rng.below(1000) as f32 / 1000.0]);
+            }
+        },
+    )?;
+    cluster.leader.library_dir().install(Box::new(FilterIfunc));
+    let d = cluster.dispatcher();
+    let h = d.register("filter")?;
+    let threshold = 0.9f32;
+    let msg = h.msg_create(&FilterIfunc::args(threshold))?;
+    let t0 = Instant::now();
+    let merged = d.invoke_all(&msg)?.wait()?;
+    let us = t0.elapsed().as_secs_f64() * 1e6;
+    let mut total = 0usize;
+    for (worker, reply) in merged.replies() {
+        let matches = FilterIfunc::matches(&reply.payload);
+        println!("  worker {worker}: {} of 100 records >= {threshold}", matches.len());
+        total += matches.len();
+    }
+    println!("  {total} matches merged from {} shards in {us:.0} us\n", merged.len());
+    cluster.shutdown()
+}
+
 fn main() -> two_chains::Result<()> {
+    scatter_gather_demo()?;
     if !two_chains::runtime::pjrt_available() {
         eprintln!("graph_analysis needs a real PJRT backend (stubbed; see rust/src/xla.rs)");
         return Ok(());
@@ -154,7 +192,7 @@ fn main() -> two_chains::Result<()> {
 
     let parts2 = partitions.clone();
     let cluster = Cluster::launch(
-        ClusterConfig { workers: WORKERS, ring_bytes: 16 << 20, ..Default::default() },
+        ClusterConfig::builder().workers(WORKERS).ring_bytes(16 << 20).build()?,
         move |i, ctx, _| {
             let part = parts2[i].clone();
             // load_state: pack [contrib | ranks] into the ifunc payload.
@@ -224,16 +262,15 @@ fn main() -> two_chains::Result<()> {
             // Chunk below the ring frame limit.
             for chunk in bytes.chunks(1 << 20) {
                 let msg = h_push.msg_create(&SourceArgs::bytes(chunk.to_vec()))?;
-                d.send_to(w, &msg)?;
+                d.send(Target::Worker(w), &msg)?;
             }
         }
         d.barrier()?;
-        // 3) combine on-device via the graphcmb artifact.
-        for w in 0..WORKERS {
-            let msg = h_combine.msg_create(&SourceArgs::none())?;
-            d.send_to(w, &msg)?;
-        }
-        d.barrier()?;
+        // 3) combine on-device via the graphcmb artifact: one collective
+        // fan-out, every link posted before the flush pass, the merged
+        // wait standing in for the old send-per-worker + barrier.
+        let msg = h_combine.msg_create(&SourceArgs::none())?;
+        d.invoke_all(&msg)?.wait()?;
         let total: f32 =
             partitions.iter().map(|p| p.lock().unwrap().ranks.iter().sum::<f32>()).sum();
         let ms = t0.elapsed().as_secs_f64() * 1e3;

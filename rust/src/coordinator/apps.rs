@@ -80,7 +80,7 @@ impl InsertIfunc {
 /// pushes the record's bytes into the invocation's **reply payload** and
 /// returns the element count in `r0`
 /// ([`crate::coordinator::GET_MISSING`] when absent). Paired with
-/// `Dispatcher::invoke` / `invoke_get`, the record arrives in the reply —
+/// `Dispatcher::invoke_one` / `fetch`, the record arrives in the reply —
 /// one frame when it fits, a chunked stream when it does not, so record
 /// size never changes API behavior — computed and shipped *by the
 /// injected function on the worker*, with no leader-side store access and
@@ -91,6 +91,64 @@ impl GetIfunc {
     /// Pack a lookup request payload.
     pub fn args(key: u64) -> SourceArgs {
         SourceArgs::bytes(key.to_le_bytes().to_vec())
+    }
+}
+
+/// Shard-local filter ifunc — the collective-invocation demo workload
+/// (the paper's closing motivation: data too big for one device, so the
+/// *query* moves to every shard). Payload = `[threshold f32 bits as u64]`;
+/// main reads it and calls the worker-side `db_filter` GOT symbol, which
+/// scans only the records *this* worker owns and pushes each match as
+/// `[key u64][first f32]` into the reply payload (`r0` = match count).
+/// Injected once and fanned out with `Dispatcher::invoke_all`, the
+/// per-worker replies merge at the leader with worker attribution — a
+/// full-cluster scan where only matches travel the fabric.
+pub struct FilterIfunc;
+
+impl FilterIfunc {
+    /// Pack a filter request payload: the f32 threshold as its raw bit
+    /// pattern (widened to u64, little-endian — what `db_filter`
+    /// expects in its first argument register).
+    pub fn args(threshold: f32) -> SourceArgs {
+        SourceArgs::bytes((threshold.to_bits() as u64).to_le_bytes().to_vec())
+    }
+
+    /// Decode one worker's reply payload into `(key, first_element)`
+    /// matches (the leader-side half of the merge).
+    pub fn matches(payload: &[u8]) -> Vec<(u64, f32)> {
+        payload
+            .chunks_exact(12)
+            .map(|c| {
+                let key = u64::from_le_bytes(c[..8].try_into().unwrap());
+                let v = f32::from_le_bytes(c[8..].try_into().unwrap());
+                (key, v)
+            })
+            .collect()
+    }
+}
+
+impl IfuncLibrary for FilterIfunc {
+    fn name(&self) -> &str {
+        "filter"
+    }
+
+    fn payload_get_max_size(&self, source_args: &SourceArgs) -> usize {
+        source_args.len()
+    }
+
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+        payload[..source_args.len()].copy_from_slice(source_args.as_bytes());
+        Ok(source_args.len())
+    }
+
+    fn code(&self) -> CodeImage {
+        let mut a = Assembler::new();
+        a.ldi(2, 0);
+        a.ldw(1, 2, 0, 0); // r1 = threshold bits (payload[0..8])
+        a.call("db_filter"); // r0 = shard-local match count
+        a.halt();
+        let (vm_code, imports) = a.assemble();
+        CodeImage { imports, vm_code, hlo: vec![] }
     }
 }
 

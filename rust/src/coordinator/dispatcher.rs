@@ -6,20 +6,37 @@
 //! hash, and every injected function targeting a key is routed to the
 //! worker that owns it — the code moves, the data does not.
 //!
+//! Routing is expressed once, through [`Target`]: a destination is a
+//! single worker ([`Target::Worker`]), the owner of a key
+//! ([`Target::Key`]), an explicit worker set ([`Target::Set`]), or the
+//! whole cluster ([`Target::All`]). Every entry point takes a `Target`,
+//! so unicast, keyed, and collective paths share one call surface:
+//!
+//! * [`Dispatcher::send`] / [`Dispatcher::send_batch`] — fire-and-forget
+//!   delivery (flow-controlled, non-blocking; completion via
+//!   [`Dispatcher::flush`]), fanned out per resolved worker,
+//! * [`Dispatcher::invoke_begin`] / [`Dispatcher::invoke_one`] /
+//!   [`Dispatcher::fetch`] — unicast invocation: inject a frame, get a
+//!   [`PendingReply`] (or block for the [`Reply`] / decoded record),
+//! * [`Dispatcher::invoke_multi`] / [`Dispatcher::invoke_all`] —
+//!   **collective** invocation (the paper's closing motivation): inject
+//!   one program, fan the frame out across the worker set through the
+//!   transports' post/flush seam (frames posted per link without
+//!   waiting, then one flush pass, so per-link transfers overlap), and
+//!   merge the replies through [`MultiPendingReply`] with per-worker
+//!   attribution and partial-failure reporting,
+//! * [`Dispatcher::scatter`] — batched keyed delivery: bucket requests by
+//!   owner worker, post each bucket coalesced, flush every touched link
+//!   once.
+//!
 //! Delivery is transport-generic: each worker link is an
 //! [`crate::ifunc::IfuncTransport`] chosen by `ClusterConfig::transport`
 //! (RDMA-PUT ring, AM send-receive, or intra-node shared memory), and
-//! every link carries a reply frame ring. Alongside fire-and-forget
-//! [`Dispatcher::send_to`] (and its
-//! batched forms [`Dispatcher::send_batch_to`] /
-//! [`Dispatcher::inject_batch_by_key`]) sits the invocation API:
-//! [`Dispatcher::invoke_begin`] injects a frame and returns a
-//! [`PendingReply`] handle *without* holding the link across the wait, so
-//! up to `ClusterConfig::max_inflight` invocations pipeline per worker;
-//! [`PendingReply::wait`] collects `(status, r0, payload)` — the payload
-//! pushed by the injected function through `reply_put` / `db_get`, of
-//! **any size**: one reply frame when it fits, a reassembled chunk
-//! stream when it does not.
+//! every link carries a reply frame ring. Invocations pipeline up to
+//! `ClusterConfig::max_inflight` per worker; [`PendingReply::wait`]
+//! collects `(status, r0, payload)` — the payload pushed by the injected
+//! function through `reply_put` / `db_get`, of **any size**: one reply
+//! frame when it fits, a reassembled chunk stream when it does not.
 
 use std::collections::BTreeSet;
 use std::sync::{Arc, Condvar, Mutex};
@@ -50,6 +67,35 @@ fn tag_worker(worker: usize, e: Error) -> Error {
 /// and platforms (no per-process seed).
 pub fn route_key(key: u64, n_workers: usize) -> usize {
     (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % n_workers.max(1)
+}
+
+/// Where an injection goes: the dispatcher's single routing vocabulary.
+///
+/// Unicast targets ([`Target::Worker`], [`Target::Key`]) resolve to one
+/// worker and are accepted everywhere. Collective targets
+/// ([`Target::Set`], [`Target::All`]) resolve to an ordered worker set
+/// and are accepted by the fire-and-forget and collective entry points
+/// ([`Dispatcher::send`], [`Dispatcher::send_batch`],
+/// [`Dispatcher::invoke_multi`]); the single-reply entry points
+/// ([`Dispatcher::invoke_begin`], [`Dispatcher::invoke_one`],
+/// [`Dispatcher::fetch`]) reject them, since one `PendingReply` cannot
+/// carry many workers' replies.
+///
+/// A `Set` is validated against the cluster (unknown indices error) and
+/// deduplicated preserving first occurrence; an empty set is an error,
+/// never a silent no-op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target<'a> {
+    /// One specific worker by index.
+    Worker(usize),
+    /// The worker owning `key` under the cluster's hash placement
+    /// ([`route_key`]).
+    Key(u64),
+    /// An explicit set of worker indices (order preserved, duplicates
+    /// ignored).
+    Set(&'a [usize]),
+    /// Every worker in the cluster.
+    All,
 }
 
 /// Per-worker-link invocation window.
@@ -157,6 +203,12 @@ impl InvokeWindow {
         self.freed.notify_all();
     }
 
+    /// Sent-but-uncollected invocation count (legacy lap-guard set size) —
+    /// the stale-waiter probe for tests.
+    pub(crate) fn awaiting_len(&self) -> usize {
+        self.awaiting_count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
     /// Block until frames through `end_seq` can be delivered without
     /// lapping any awaited reply (reply `T` overwrites reply `S`'s slot
     /// iff `T >= S + REPLY_SLOTS`). The deadline resets whenever the
@@ -261,6 +313,101 @@ impl Drop for PendingReply {
     }
 }
 
+/// The merged result of a collective invocation: every targeted worker's
+/// [`Reply`], attributed by worker index, in target-resolution order.
+pub struct MultiReply {
+    replies: Vec<(usize, Reply)>,
+}
+
+impl MultiReply {
+    /// `(worker, reply)` pairs in the order the target resolved.
+    pub fn replies(&self) -> &[(usize, Reply)] {
+        &self.replies
+    }
+
+    /// The reply a specific worker sent, if it was targeted.
+    pub fn reply_for(&self, worker: usize) -> Option<&Reply> {
+        self.replies.iter().find(|(w, _)| *w == worker).map(|(_, r)| r)
+    }
+
+    /// Whether every worker's injected function reported success
+    /// (delivery succeeded on all of them by construction — a delivery
+    /// or timeout failure surfaces as `Err` from
+    /// [`MultiPendingReply::wait`], never as a present-but-failed entry).
+    pub fn all_ok(&self) -> bool {
+        self.replies.iter().all(|(_, r)| r.ok())
+    }
+
+    pub fn len(&self) -> usize {
+        self.replies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replies.is_empty()
+    }
+
+    /// Consume into the raw `(worker, reply)` pairs.
+    pub fn into_replies(self) -> Vec<(usize, Reply)> {
+        self.replies
+    }
+}
+
+/// The in-flight half of a collective invocation: one [`PendingReply`]
+/// per targeted worker, all injected before a single flush pass so the
+/// per-link transfers overlap. [`MultiPendingReply::wait`] merges them;
+/// dropping the handle without waiting releases every per-worker window
+/// slot and collector registration (no stale waiters), exactly like
+/// dropping the individual [`PendingReply`]s.
+pub struct MultiPendingReply {
+    pending: Vec<PendingReply>,
+}
+
+impl MultiPendingReply {
+    /// The targeted workers, in resolution order.
+    pub fn workers(&self) -> Vec<usize> {
+        self.pending.iter().map(|p| p.worker()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Collect every worker's reply. All-or-error: `Ok` only when **all**
+    /// targeted workers replied (their replies merged into a
+    /// [`MultiReply`] with per-worker attribution); any delivery failure
+    /// or reply timeout waits out the *rest* of the set first, then
+    /// surfaces as [`Error::Transport`] reporting which workers failed,
+    /// which replied, and the first failure's cause — so a partial
+    /// failure names the dead workers instead of discarding the evidence.
+    pub fn wait(self) -> Result<MultiReply> {
+        let mut replies = Vec::with_capacity(self.pending.len());
+        let mut failures: Vec<(usize, Error)> = Vec::new();
+        for p in self.pending {
+            let worker = p.worker();
+            match p.wait() {
+                Ok(r) => replies.push((worker, r)),
+                Err(e) => failures.push((worker, e)),
+            }
+        }
+        if failures.is_empty() {
+            return Ok(MultiReply { replies });
+        }
+        let failed: Vec<String> = failures.iter().map(|(w, _)| w.to_string()).collect();
+        let replied: Vec<String> = replies.iter().map(|(w, _)| w.to_string()).collect();
+        let (first_worker, first_err) = &failures[0];
+        Err(Error::Transport(format!(
+            "collective invocation: worker(s) [{}] failed, worker(s) [{}] replied; \
+             first failure on worker {first_worker}: {first_err}",
+            failed.join(", "),
+            replied.join(", "),
+        )))
+    }
+}
+
 pub struct Dispatcher<'c> {
     cluster: &'c Cluster,
 }
@@ -287,6 +434,56 @@ impl<'c> Dispatcher<'c> {
             .ok_or_else(|| Error::Other(format!("no worker {worker}")))
     }
 
+    /// Resolve a unicast target to its one worker. Collective targets are
+    /// rejected: one [`PendingReply`] cannot carry many workers' replies.
+    fn resolve_one(&self, target: Target<'_>) -> Result<usize> {
+        match target {
+            Target::Worker(w) => {
+                self.worker(w)?;
+                Ok(w)
+            }
+            Target::Key(k) => Ok(self.route_key(k)),
+            Target::Set(_) | Target::All => Err(Error::Other(format!(
+                "collective target {target:?} has no single reply; \
+                 use invoke_multi / invoke_all"
+            ))),
+        }
+    }
+
+    /// Resolve any target to its ordered worker set: validated against
+    /// the cluster, deduplicated preserving first occurrence, never
+    /// empty.
+    fn resolve_set(&self, target: Target<'_>) -> Result<Vec<usize>> {
+        let n = self.cluster.workers.len();
+        match target {
+            Target::Worker(w) => {
+                self.worker(w)?;
+                Ok(vec![w])
+            }
+            Target::Key(k) => Ok(vec![self.route_key(k)]),
+            Target::All => Ok((0..n).collect()),
+            Target::Set(set) => {
+                if set.is_empty() {
+                    return Err(Error::Other(
+                        "empty Target::Set — a collective over no workers is a bug, \
+                         not a no-op"
+                            .into(),
+                    ));
+                }
+                let mut seen = vec![false; n];
+                let mut out = Vec::with_capacity(set.len());
+                for &w in set {
+                    self.worker(w)?;
+                    if !seen[w] {
+                        seen[w] = true;
+                        out.push(w);
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+
     /// Per-send reply bookkeeping (runs under the link lock). On a
     /// streamed link, drive the reply collector: consuming arrived reply
     /// frames (discarding fire-and-forget ones) is what advances the
@@ -304,74 +501,101 @@ impl<'c> Dispatcher<'c> {
         }
     }
 
-    /// Inject a prebuilt message to a specific worker (flow-controlled,
-    /// non-blocking delivery; completion via [`Dispatcher::flush`]).
-    pub fn send_to(&self, worker: usize, msg: &IfuncMsg) -> Result<()> {
-        let w = self.worker(worker)?;
-        let mut link = lock_recover(&w.link);
-        self.admit_or_drain(w, worker, link.frames_sent() + 1)?;
-        link.send_frame(msg).map_err(|e| tag_worker(worker, e))
+    /// Inject a prebuilt message to every worker the target resolves to
+    /// (flow-controlled, non-blocking delivery; completion via
+    /// [`Dispatcher::flush`]). For a collective target the same frame is
+    /// delivered once per worker — the program is injected once and
+    /// fanned out, not re-created per destination.
+    pub fn send(&self, target: Target<'_>, msg: &IfuncMsg) -> Result<()> {
+        for worker in self.resolve_set(target)? {
+            let w = self.worker(worker)?;
+            let mut link = lock_recover(&w.link);
+            self.admit_or_drain(w, worker, link.frames_sent() + 1)?;
+            link.send_frame(msg).map_err(|e| tag_worker(worker, e))?;
+        }
+        Ok(())
     }
 
-    /// Deliver a batch of frames to one worker through the transport's
-    /// coalesced path (one credit reservation + one flush on the ring;
-    /// back-to-back posts + one flush over AM).
-    pub fn send_batch_to(&self, worker: usize, msgs: &[IfuncMsg]) -> Result<()> {
+    /// Deliver a batch of frames to every worker the target resolves to,
+    /// through the transport's coalesced path (one credit reservation on
+    /// the ring; back-to-back posts over AM). Collective targets post
+    /// every link's batch first — without waiting — then flush each
+    /// touched link once, so per-link transfers overlap.
+    pub fn send_batch(&self, target: Target<'_>, msgs: &[IfuncMsg]) -> Result<()> {
         if msgs.is_empty() {
             return Ok(());
         }
-        let w = self.worker(worker)?;
-        let mut link = lock_recover(&w.link);
-        self.admit_or_drain(w, worker, link.frames_sent() + msgs.len() as u64)?;
-        link.send_batch(msgs).map_err(|e| tag_worker(worker, e))
+        let workers = self.resolve_set(target)?;
+        for &worker in &workers {
+            let w = self.worker(worker)?;
+            let mut link = lock_recover(&w.link);
+            self.admit_or_drain(w, worker, link.frames_sent() + msgs.len() as u64)?;
+            link.post_batch(msgs).map_err(|e| tag_worker(worker, e))?;
+        }
+        for &worker in &workers {
+            lock_recover(&self.worker(worker)?.link)
+                .flush()
+                .map_err(|e| tag_worker(worker, e))?;
+        }
+        Ok(())
     }
 
-    /// Begin an invocation: inject `msg`, record its frame seq, and
-    /// release the link immediately. The returned [`PendingReply`] waits
-    /// for the reply — chunk-streamed when large — without the link lock,
-    /// so up to `ClusterConfig::max_inflight` invocations pipeline per
-    /// worker (the call blocks while the window is full).
-    pub fn invoke_begin(&self, worker: usize, msg: &IfuncMsg) -> Result<PendingReply> {
-        fn send_locked(
-            d: &Dispatcher<'_>,
-            w: &super::WorkerHandle,
-            worker: usize,
-            msg: &IfuncMsg,
-        ) -> Result<(u64, Collect)> {
-            // The link lock covers only delivery; it is released before
-            // the reply wait, which is what lets invocations pipeline.
-            let mut link = lock_recover(&w.link);
-            let seq = link.frames_sent() + 1;
-            d.admit_or_drain(w, worker, seq)?;
-            match &w.collector {
-                Some(c) => {
-                    // Register *before* the frame goes out: once it is on
-                    // the wire a concurrent drain may meet the reply, and
-                    // only registered replies are parked rather than
-                    // dropped.
-                    c.register(seq);
-                    if let Err(e) = link.send_frame(msg).and_then(|()| link.flush()) {
-                        c.unregister(seq);
-                        return Err(tag_worker(worker, e));
-                    }
-                    debug_assert_eq!(link.frames_sent(), seq);
-                    Ok((seq, Collect::Stream(c.clone())))
+    /// Post one invocation frame on `worker`'s link and wire up its reply
+    /// collection. Runs under the link lock, which covers only delivery —
+    /// it is released before any reply wait, which is what lets
+    /// invocations pipeline. With `flush_now` the frame's completion is
+    /// awaited before returning (the unicast path); the collective path
+    /// passes `false` and runs one flush pass after the whole fan-out has
+    /// been posted, so the per-link transfers overlap.
+    fn post_invoke_locked(
+        &self,
+        w: &super::WorkerHandle,
+        worker: usize,
+        msg: &IfuncMsg,
+        flush_now: bool,
+    ) -> Result<(u64, Collect)> {
+        let mut link = lock_recover(&w.link);
+        let seq = link.frames_sent() + 1;
+        self.admit_or_drain(w, worker, seq)?;
+        match &w.collector {
+            Some(c) => {
+                // Register *before* the frame goes out: once it is on
+                // the wire a concurrent drain may meet the reply, and
+                // only registered replies are parked rather than
+                // dropped.
+                c.register(seq);
+                let posted = link
+                    .post_frame(msg)
+                    .and_then(|()| if flush_now { link.flush() } else { Ok(()) });
+                if let Err(e) = posted {
+                    c.unregister(seq);
+                    return Err(tag_worker(worker, e));
                 }
-                None => {
-                    link.send_frame(msg).map_err(|e| tag_worker(worker, e))?;
+                debug_assert_eq!(link.frames_sent(), seq);
+                Ok((seq, Collect::Stream(c.clone())))
+            }
+            None => {
+                link.post_frame(msg).map_err(|e| tag_worker(worker, e))?;
+                if flush_now {
                     link.flush().map_err(|e| tag_worker(worker, e))?;
-                    let seq = link.frames_sent();
-                    // Legacy lap guard: remember the awaited reply slot.
-                    w.window.track(seq);
-                    Ok((seq, Collect::Slot(w.replies.clone())))
                 }
+                let seq = link.frames_sent();
+                // Legacy lap guard: remember the awaited reply slot.
+                w.window.track(seq);
+                Ok((seq, Collect::Slot(w.replies.clone())))
             }
         }
+    }
+
+    /// Claim a window slot on `worker` and post one invocation frame;
+    /// the slot is released on any error so a failed begin never leaks
+    /// window capacity.
+    fn begin_on(&self, worker: usize, msg: &IfuncMsg, flush_now: bool) -> Result<PendingReply> {
         let w = self.worker(worker)?;
         w.window
             .acquire(w.reply_timeout)
             .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
-        match send_locked(self, w, worker, msg) {
+        match self.post_invoke_locked(w, worker, msg, flush_now) {
             Ok((seq, how)) => Ok(PendingReply {
                 how,
                 seq,
@@ -386,24 +610,69 @@ impl<'c> Dispatcher<'c> {
         }
     }
 
+    /// Begin a unicast invocation: inject `msg` at the resolved worker,
+    /// record its frame seq, and release the link immediately. The
+    /// returned [`PendingReply`] waits for the reply — chunk-streamed
+    /// when large — without the link lock, so up to
+    /// `ClusterConfig::max_inflight` invocations pipeline per worker
+    /// (the call blocks while the window is full). Collective targets
+    /// are rejected; use [`Dispatcher::invoke_multi`].
+    pub fn invoke_begin(&self, target: Target<'_>, msg: &IfuncMsg) -> Result<PendingReply> {
+        self.begin_on(self.resolve_one(target)?, msg, true)
+    }
+
     /// Inject a message and block for the injected function's reply frame
     /// — [`Dispatcher::invoke_begin`] + [`PendingReply::wait`] in one
     /// call. `reply.payload` carries whatever the function pushed through
     /// `reply_put` / `db_get`.
-    pub fn invoke(&self, worker: usize, msg: &IfuncMsg) -> Result<Reply> {
-        self.invoke_begin(worker, msg)?.wait()
+    pub fn invoke_one(&self, target: Target<'_>, msg: &IfuncMsg) -> Result<Reply> {
+        self.invoke_begin(target, msg)?.wait()
     }
 
-    /// [`Dispatcher::invoke`] for record-returning ifuncs (`GetIfunc`):
-    /// decodes the reply payload as f32 record elements. The data vec is
-    /// empty unless the reply is ok and `r0` is a length (not
-    /// [`GET_MISSING`]). Record size does not matter on a streamed link —
-    /// big records arrive as reassembled chunk streams; only a
+    /// Begin a **collective** invocation: inject the same program on
+    /// every worker the target resolves to. Frames are posted per link
+    /// without waiting, then one flush pass covers the whole fan-out, so
+    /// the per-link transfers overlap instead of paying one completion
+    /// round-trip per worker. Each worker's reply is tracked by its own
+    /// [`PendingReply`]; [`MultiPendingReply::wait`] merges them with
+    /// per-worker attribution and partial-failure reporting.
+    ///
+    /// A failure *during* the fan-out (window timeout, dead link) aborts
+    /// the call; already-posted invocations are unwound — their window
+    /// slots released, their collector registrations removed — by the
+    /// partial handle set dropping.
+    pub fn invoke_multi(&self, target: Target<'_>, msg: &IfuncMsg) -> Result<MultiPendingReply> {
+        let workers = self.resolve_set(target)?;
+        let mut pending = Vec::with_capacity(workers.len());
+        for &worker in &workers {
+            pending.push(self.begin_on(worker, msg, false)?);
+        }
+        // One flush pass for the whole fan-out: every link's transfer is
+        // already posted, so the completions overlap.
+        for &worker in &workers {
+            lock_recover(&self.worker(worker)?.link)
+                .flush()
+                .map_err(|e| tag_worker(worker, e))?;
+        }
+        Ok(MultiPendingReply { pending })
+    }
+
+    /// [`Dispatcher::invoke_multi`] over [`Target::All`]: scatter one
+    /// program to every worker, gather every reply.
+    pub fn invoke_all(&self, msg: &IfuncMsg) -> Result<MultiPendingReply> {
+        self.invoke_multi(Target::All, msg)
+    }
+
+    /// [`Dispatcher::invoke_one`] for record-returning ifuncs
+    /// (`GetIfunc`): decodes the reply payload as f32 record elements.
+    /// The data vec is empty unless the reply is ok and `r0` is a length
+    /// (not [`GET_MISSING`]). Record size does not matter on a streamed
+    /// link — big records arrive as reassembled chunk streams; only a
     /// `stream_replies: false` link still reports oversized records as
     /// overflowed replies ([`Reply::overflowed`]) with `r0` = the element
     /// count it could not ship.
-    pub fn invoke_get(&self, worker: usize, msg: &IfuncMsg) -> Result<(Reply, Vec<f32>)> {
-        let reply = self.invoke(worker, msg)?;
+    pub fn fetch(&self, target: Target<'_>, msg: &IfuncMsg) -> Result<(Reply, Vec<f32>)> {
+        let reply = self.invoke_one(target, msg)?;
         let data = if reply.ok() && reply.r0 != GET_MISSING {
             reply.payload_f32s()
         } else {
@@ -412,27 +681,13 @@ impl<'c> Dispatcher<'c> {
         Ok((reply, data))
     }
 
-    /// Create + route + send in one call: the payload goes to the worker
-    /// owning `key`.
-    pub fn inject_by_key(
-        &self,
-        handle: &IfuncHandle,
-        key: u64,
-        args: &SourceArgs,
-    ) -> Result<usize> {
-        let worker = self.route_key(key);
-        let msg = handle.msg_create(args)?;
-        self.send_to(worker, &msg)?;
-        Ok(worker)
-    }
-
-    /// Batched [`Dispatcher::inject_by_key`]: bucket the requests by owner
-    /// worker, post each bucket through the link's coalesced
+    /// Batched keyed delivery: bucket the requests by owner worker, post
+    /// each bucket through the link's coalesced
     /// [`crate::ifunc::IfuncTransport::post_batch`] — *without* waiting —
     /// then flush every touched link once, so the per-worker transfers
     /// overlap instead of paying one completion round-trip per bucket.
     /// Returns each request's placement, in input order.
-    pub fn inject_batch_by_key(
+    pub fn scatter(
         &self,
         handle: &IfuncHandle,
         reqs: &[(u64, SourceArgs)],
@@ -462,6 +717,62 @@ impl<'c> Dispatcher<'c> {
             }
         }
         Ok(placed)
+    }
+
+    // ------------------------------------------------------------------
+    // Legacy per-shape entry points, kept as thin wrappers so existing
+    // callers keep compiling. Each names its `Target`-based replacement;
+    // the migration table lives in CHANGES.md.
+    // ------------------------------------------------------------------
+
+    /// Inject a prebuilt message to a specific worker.
+    #[deprecated(note = "use `send(Target::Worker(worker), msg)`")]
+    pub fn send_to(&self, worker: usize, msg: &IfuncMsg) -> Result<()> {
+        self.send(Target::Worker(worker), msg)
+    }
+
+    /// Deliver a batch of frames to one worker.
+    #[deprecated(note = "use `send_batch(Target::Worker(worker), msgs)`")]
+    pub fn send_batch_to(&self, worker: usize, msgs: &[IfuncMsg]) -> Result<()> {
+        self.send_batch(Target::Worker(worker), msgs)
+    }
+
+    /// Inject a message and block for its reply.
+    #[deprecated(note = "use `invoke_one(Target::Worker(worker), msg)`")]
+    pub fn invoke(&self, worker: usize, msg: &IfuncMsg) -> Result<Reply> {
+        self.invoke_one(Target::Worker(worker), msg)
+    }
+
+    /// Invoke a record-returning ifunc and decode its payload.
+    #[deprecated(note = "use `fetch(Target::Worker(worker), msg)`")]
+    pub fn invoke_get(&self, worker: usize, msg: &IfuncMsg) -> Result<(Reply, Vec<f32>)> {
+        self.fetch(Target::Worker(worker), msg)
+    }
+
+    /// Create + route + send in one call: the payload goes to the worker
+    /// owning `key`.
+    #[deprecated(note = "use `send(Target::Key(key), &handle.msg_create(args)?)` \
+                         (placement via `route_key`)")]
+    pub fn inject_by_key(
+        &self,
+        handle: &IfuncHandle,
+        key: u64,
+        args: &SourceArgs,
+    ) -> Result<usize> {
+        let worker = self.route_key(key);
+        let msg = handle.msg_create(args)?;
+        self.send(Target::Worker(worker), &msg)?;
+        Ok(worker)
+    }
+
+    /// Batched keyed injection.
+    #[deprecated(note = "use `scatter(handle, reqs)`")]
+    pub fn inject_batch_by_key(
+        &self,
+        handle: &IfuncHandle,
+        reqs: &[(u64, SourceArgs)],
+    ) -> Result<Vec<usize>> {
+        self.scatter(handle, reqs)
     }
 
     /// Flush delivery to every worker.
@@ -499,6 +810,19 @@ impl<'c> Dispatcher<'c> {
         lock_recover(&self.worker(worker)?.link).debug_put_raw(offset, data)
     }
 
+    /// Outstanding reply registrations on a worker's link — the
+    /// stale-waiter probe for the drop-without-wait property tests:
+    /// collector-awaited seqs on a streamed link, the window's lap-guard
+    /// set size on a legacy one.
+    #[doc(hidden)]
+    pub fn debug_awaited(&self, worker: usize) -> Result<usize> {
+        let w = self.worker(worker)?;
+        Ok(match &w.collector {
+            Some(c) => c.debug_awaited(),
+            None => w.window.awaiting_len(),
+        })
+    }
+
     /// Total messages executed across workers.
     pub fn total_executed(&self) -> u64 {
         self.cluster.workers.iter().map(|w| w.executed()).sum()
@@ -508,7 +832,7 @@ impl<'c> Dispatcher<'c> {
 #[cfg(test)]
 mod tests {
     use super::super::{Cluster, ClusterConfig};
-    use super::route_key;
+    use super::{route_key, Target};
     use crate::ifunc::builtin::CounterIfunc;
     use crate::ifunc::SourceArgs;
 
@@ -551,9 +875,31 @@ mod tests {
     }
 
     #[test]
+    fn target_resolution_validates_and_dedups() {
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(3).build().unwrap(),
+            |_, _, _| {},
+        )
+        .unwrap();
+        let d = cluster.dispatcher();
+        assert_eq!(d.resolve_set(Target::All).unwrap(), vec![0, 1, 2]);
+        assert_eq!(d.resolve_set(Target::Worker(1)).unwrap(), vec![1]);
+        assert_eq!(d.resolve_set(Target::Set(&[2, 0, 2, 0])).unwrap(), vec![2, 0]);
+        assert_eq!(d.resolve_set(Target::Key(5)).unwrap(), vec![d.route_key(5)]);
+        // Out-of-range and empty sets are errors, not silent no-ops.
+        assert!(d.resolve_set(Target::Set(&[3])).is_err());
+        assert!(d.resolve_set(Target::Set(&[])).is_err());
+        assert!(d.resolve_one(Target::Worker(9)).is_err());
+        // Single-reply entry points reject collective targets.
+        assert!(d.resolve_one(Target::All).is_err());
+        assert!(d.resolve_one(Target::Set(&[0, 1])).is_err());
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
     fn dispatch_counter_to_all_workers() {
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 3, ..Default::default() },
+            ClusterConfig::builder().workers(3).build().unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(CounterIfunc::default()));
             },
@@ -563,9 +909,9 @@ mod tests {
         cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
         let d = cluster.dispatcher();
         let h = d.register("counter").unwrap();
-        let args = SourceArgs::bytes(vec![0u8; 32]);
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 32])).unwrap();
         for key in 0..60u64 {
-            d.inject_by_key(&h, key, &args).unwrap();
+            d.send(Target::Key(key), &msg).unwrap();
         }
         d.barrier().unwrap();
         assert_eq!(d.total_executed(), 60);
@@ -579,7 +925,7 @@ mod tests {
     #[test]
     fn batch_injection_buckets_match_routing() {
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 3, ..Default::default() },
+            ClusterConfig::builder().workers(3).build().unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(CounterIfunc::default()));
             },
@@ -590,7 +936,7 @@ mod tests {
         let h = d.register("counter").unwrap();
         let reqs: Vec<(u64, SourceArgs)> =
             (0..90u64).map(|k| (k, SourceArgs::bytes(vec![0u8; 32]))).collect();
-        let placed = d.inject_batch_by_key(&h, &reqs).unwrap();
+        let placed = d.scatter(&h, &reqs).unwrap();
         d.barrier().unwrap();
         assert_eq!(d.total_executed(), 90);
         for (i, (key, _)) in reqs.iter().enumerate() {
@@ -600,9 +946,35 @@ mod tests {
     }
 
     #[test]
+    fn collective_send_reaches_every_worker() {
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(4).build().unwrap(),
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(CounterIfunc::default()));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+        let d = cluster.dispatcher();
+        let h = d.register("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 32])).unwrap();
+        // One frame to All = one execution per worker; a Set hits exactly
+        // its members.
+        d.send(Target::All, &msg).unwrap();
+        d.send(Target::Set(&[1, 3]), &msg).unwrap();
+        d.barrier().unwrap();
+        assert_eq!(d.total_executed(), 6);
+        for (i, w) in cluster.workers.iter().enumerate() {
+            let expect = if i == 1 || i == 3 { 2 } else { 1 };
+            assert_eq!(w.executed(), expect, "worker {i}");
+        }
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
     fn routing_is_deterministic() {
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 4, ..Default::default() },
+            ClusterConfig::builder().workers(4).build().unwrap(),
             |_, _, _| {},
         )
         .unwrap();
@@ -621,7 +993,7 @@ mod tests {
         // frame at offset 0 would overwrite the wrap marker unless the
         // sender waits for the poller's rewind credit first.
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 1, ring_bytes: 4096, ..Default::default() },
+            ClusterConfig::builder().workers(1).ring_bytes(4096).build().unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(CounterIfunc::default()));
             },
@@ -637,8 +1009,8 @@ mod tests {
         let small = h.msg_create(&SourceArgs::bytes(vec![0u8; 900])).unwrap();
         let big = h.msg_create(&SourceArgs::bytes(vec![0u8; 3300])).unwrap();
         for _ in 0..20 {
-            d.send_to(0, &small).unwrap();
-            d.send_to(0, &big).unwrap();
+            d.send(Target::Worker(0), &small).unwrap();
+            d.send(Target::Worker(0), &big).unwrap();
         }
         d.barrier().unwrap();
         assert_eq!(d.total_executed(), 40);
@@ -650,7 +1022,7 @@ mod tests {
         // send_batch must fall back to frame-at-a-time (and stay correct)
         // when a batch cannot be coalesced into one reservation.
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 1, ring_bytes: 4096, ..Default::default() },
+            ClusterConfig::builder().workers(1).ring_bytes(4096).build().unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(CounterIfunc::default()));
             },
@@ -663,7 +1035,7 @@ mod tests {
             .map(|i| h.msg_create(&SourceArgs::bytes(vec![0u8; 400 + i * 100])).unwrap())
             .collect();
         for _ in 0..25 {
-            d.send_batch_to(0, &batch).unwrap();
+            d.send_batch(Target::Worker(0), &batch).unwrap();
         }
         d.barrier().unwrap();
         assert_eq!(d.total_executed(), 200);
@@ -674,7 +1046,7 @@ mod tests {
     fn ring_flow_control_survives_overload() {
         // Tiny rings force constant wrap + credit waits.
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 1, ring_bytes: 4096, ..Default::default() },
+            ClusterConfig::builder().workers(1).ring_bytes(4096).build().unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(CounterIfunc::default()));
             },
@@ -683,9 +1055,9 @@ mod tests {
         cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
         let d = cluster.dispatcher();
         let h = d.register("counter").unwrap();
-        let args = SourceArgs::bytes(vec![0u8; 512]);
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 512])).unwrap();
         for key in 0..500u64 {
-            d.inject_by_key(&h, key, &args).unwrap();
+            d.send(Target::Key(key), &msg).unwrap();
         }
         d.barrier().unwrap();
         assert_eq!(d.total_executed(), 500);

@@ -21,9 +21,18 @@
 //! ([`ClusterConfig::stream_replies`]). [`Dispatcher::invoke_begin`]
 //! pipelines up to [`ClusterConfig::max_inflight`] invocations per worker
 //! and [`PendingReply::wait`] collects `(status, r0, payload)`; batched
-//! fire-and-forget delivery goes through
-//! [`Dispatcher::inject_batch_by_key`]; [`Dispatcher::barrier`] waits on
-//! per-worker consumed-frame counters.
+//! fire-and-forget delivery goes through [`Dispatcher::scatter`];
+//! [`Dispatcher::barrier`] waits on per-worker consumed-frame counters.
+//!
+//! Every entry point routes through one [`Target`] vocabulary —
+//! `Worker(n)` / `Key(u64)` / `Set(&[usize])` / `All` — and the
+//! collective targets realize the paper's **closing motivation** ("data
+//! set so big that it has to be stored on many physical devices"):
+//! [`Dispatcher::invoke_multi`] / [`Dispatcher::invoke_all`] inject one
+//! program, fan the frame out across the worker set with one flush pass
+//! (per-link transfers overlapping), and merge the per-worker replies
+//! through [`MultiPendingReply`] — scatter-gather where the code moves
+//! to every shard of the data and only results travel back.
 
 pub mod apps;
 pub mod dispatcher;
@@ -31,8 +40,8 @@ pub mod store;
 pub mod telemetry;
 pub mod worker;
 
-pub use apps::{DecodeInsertIfunc, GetIfunc, InsertIfunc};
-pub use dispatcher::{route_key, Dispatcher, PendingReply};
+pub use apps::{DecodeInsertIfunc, FilterIfunc, GetIfunc, InsertIfunc};
+pub use dispatcher::{route_key, Dispatcher, MultiPendingReply, MultiReply, PendingReply, Target};
 pub use store::{install_db_symbols, RecordStore};
 pub use telemetry::{ClusterSnapshot, ContextSnapshot};
 pub use worker::{WorkerHandle, WorkerStats, GET_MISSING};
@@ -40,10 +49,12 @@ pub use worker::{WorkerHandle, WorkerStats, GET_MISSING};
 pub use crate::ifunc::TransportKind;
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::fabric::{Fabric, WireConfig};
+use crate::ifunc::REPLY_SLOTS;
 use crate::ucp::{Context, ContextConfig, Worker as UcpWorker};
-use crate::Result;
+use crate::{Error, Result};
 
 /// Cluster-wide configuration.
 #[derive(Clone, Debug)]
@@ -86,6 +97,116 @@ impl Default for ClusterConfig {
             wire: WireConfig::off(),
             ctx: ContextConfig::default(),
         }
+    }
+}
+
+impl ClusterConfig {
+    /// A validating builder seeded from [`ClusterConfig::default`].
+    /// Prefer it over struct literals: `build()` rejects configurations
+    /// the literal form silently accepts (or silently *repairs* — the
+    /// worker spawn clamps `max_inflight` into `1..=REPLY_SLOTS`, which
+    /// the builder surfaces as an error instead).
+    pub fn builder() -> ClusterConfigBuilder {
+        ClusterConfigBuilder { config: ClusterConfig::default() }
+    }
+}
+
+/// Builder for [`ClusterConfig`] — see [`ClusterConfig::builder`].
+#[derive(Clone, Debug)]
+pub struct ClusterConfigBuilder {
+    config: ClusterConfig,
+}
+
+impl ClusterConfigBuilder {
+    /// Number of device-side workers. Zero is rejected by `build()`.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.config.workers = n;
+        self
+    }
+
+    /// ifunc ring bytes per worker (ring/shm transports).
+    pub fn ring_bytes(mut self, bytes: usize) -> Self {
+        self.config.ring_bytes = bytes;
+        self
+    }
+
+    /// How frames travel leader → worker.
+    pub fn transport(mut self, t: TransportKind) -> Self {
+        self.config.transport = t;
+        self
+    }
+
+    /// Max outstanding invocations per worker link. Must stay within
+    /// `1..=REPLY_SLOTS`; out-of-range values are rejected by `build()`
+    /// rather than clamped.
+    pub fn max_inflight(mut self, n: usize) -> Self {
+        self.config.max_inflight = n;
+        self
+    }
+
+    /// Progress timeout for reply/barrier/credit waits. Must be
+    /// non-zero; use [`ClusterConfigBuilder::no_reply_timeout`] to wait
+    /// forever.
+    pub fn reply_timeout(mut self, d: Duration) -> Self {
+        self.config.reply_timeout = Some(d);
+        self
+    }
+
+    /// Wait forever on replies, barriers, and ring credit (no deadline).
+    pub fn no_reply_timeout(mut self) -> Self {
+        self.config.reply_timeout = None;
+        self
+    }
+
+    /// Stream reply payloads larger than one reply frame (default on).
+    pub fn stream_replies(mut self, on: bool) -> Self {
+        self.config.stream_replies = on;
+        self
+    }
+
+    /// Wire-cost model for the emulated fabric.
+    pub fn wire(mut self, wire: WireConfig) -> Self {
+        self.config.wire = wire;
+        self
+    }
+
+    /// Per-context configuration (library dir, icache, caches).
+    pub fn ctx(mut self, ctx: ContextConfig) -> Self {
+        self.config.ctx = ctx;
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<ClusterConfig> {
+        let c = self.config;
+        if c.workers == 0 {
+            return Err(Error::Other(
+                "ClusterConfig: zero workers — a cluster needs at least one device worker"
+                    .into(),
+            ));
+        }
+        if c.max_inflight == 0 {
+            return Err(Error::Other(
+                "ClusterConfig: max_inflight 0 would deadlock every invocation; use 1+"
+                    .into(),
+            ));
+        }
+        if c.max_inflight > REPLY_SLOTS {
+            return Err(Error::Other(format!(
+                "ClusterConfig: max_inflight {} exceeds REPLY_SLOTS {REPLY_SLOTS} — the \
+                 reply ring cannot hold that many uncollected replies (the struct-literal \
+                 path silently clamps; the builder refuses)",
+                c.max_inflight
+            )));
+        }
+        if c.reply_timeout == Some(Duration::ZERO) {
+            return Err(Error::Other(
+                "ClusterConfig: zero reply_timeout would expire every wait immediately; \
+                 use no_reply_timeout() to wait forever"
+                    .into(),
+            ));
+        }
+        Ok(c)
     }
 }
 

@@ -63,9 +63,18 @@ impl RecordStore {
 ///   big to return — with the element count in `r0`, or [`GET_MISSING`]
 ///   when the key is absent. The record the sender reads back is produced
 ///   *by the injected function on the worker*; there is no leader-side
-///   store access and no shared result region.
+///   store access and no shared result region,
+/// * `db_filter(threshold_bits)` — **shard-local analytics** for the
+///   collective invocation path: scan every record this worker owns and,
+///   for each whose first element is ≥ the f32 threshold (passed as its
+///   raw bit pattern), push `[key u64][first f32]` (12 bytes) into the
+///   reply payload, key-ordered; `r0` = match count. Injected on every
+///   worker via `invoke_all`, each shard filters only its own records
+///   and the leader merges the per-worker matches — scatter-gather where
+///   the filter moves to the data.
 pub fn install_db_symbols(symbols: &Symbols, store: Arc<RecordStore>) {
     let s = store.clone();
+    let f = store.clone();
     symbols.install_fn("db_insert", move |ctx, [key, off, n, _]| {
         let off = off as usize;
         let n = n as usize;
@@ -95,6 +104,30 @@ pub fn install_db_symbols(symbols: &Symbols, store: Arc<RecordStore>) {
                 Ok(data.len() as u64)
             }
         }
+    });
+    symbols.install_fn("db_filter", move |ctx, [threshold_bits, _, _, _]| {
+        let threshold = f32::from_bits(threshold_bits as u32);
+        let ta = ctx.user.downcast_mut::<TargetArgs>().ok_or_else(|| {
+            "db_filter: target args are not ifunc TargetArgs".to_string()
+        })?;
+        // Key order makes the shard's match list deterministic, so the
+        // leader-side merge (and the tests) never depend on hash-map
+        // iteration order.
+        let mut keys = f.keys();
+        keys.sort_unstable();
+        let mut matches = 0u64;
+        let mut bytes = Vec::new();
+        for key in keys {
+            let hit = f.with_record(key, |r| r.first().is_some_and(|v| *v >= threshold));
+            if hit == Some(true) {
+                let first = f.with_record(key, |r| r[0]).unwrap_or_default();
+                bytes.extend_from_slice(&key.to_le_bytes());
+                bytes.extend_from_slice(&first.to_le_bytes());
+                matches += 1;
+            }
+        }
+        ta.push_reply(&bytes);
+        Ok(matches)
     });
 }
 

@@ -136,14 +136,14 @@ impl ClusterSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::ClusterConfig;
+    use crate::coordinator::{ClusterConfig, Target};
     use crate::ifunc::builtin::CounterIfunc;
     use crate::ifunc::SourceArgs;
 
     #[test]
     fn snapshot_counts_cluster_activity() {
         let cluster = super::super::Cluster::launch(
-            ClusterConfig { workers: 2, ..Default::default() },
+            ClusterConfig::builder().workers(2).build().unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(CounterIfunc::default()));
             },
@@ -152,8 +152,9 @@ mod tests {
         cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
         let d = cluster.dispatcher();
         let h = d.register("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0; 16])).unwrap();
         for key in 0..20 {
-            d.inject_by_key(&h, key, &SourceArgs::bytes(vec![0; 16])).unwrap();
+            d.send(Target::Key(key), &msg).unwrap();
         }
         d.barrier().unwrap();
 

@@ -34,8 +34,14 @@
 //!   code fills the payload through the `reply_put` / `db_get` host
 //!   symbols — **any size**: payloads past one frame stream as
 //!   `STATUS_MORE` chunk frames that the leader-side `ReplyCollector`
-//!   reassembles — and the sender collects it via `Dispatcher::invoke` /
-//!   `PendingReply::wait`,
+//!   reassembles — and the sender collects it via `Dispatcher::invoke_one`
+//!   / `PendingReply::wait`. Collective invocations compose the same
+//!   parts: `Dispatcher::invoke_all` posts one frame per link through
+//!   [`IfuncTransport::post_frame`], runs one flush pass over the
+//!   fan-out, and merges each worker's reply stream into a
+//!   `MultiReply` with per-worker attribution (the paper's closing
+//!   motivation — moving one query to every shard of data too big for
+//!   one device),
 //! * [`cache`] — §3.4's hash table, extended to cache the *verified
 //!   program* so repeat injections skip the bytecode verifier entirely.
 

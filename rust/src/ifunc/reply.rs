@@ -557,6 +557,14 @@ impl ReplyCollector {
         st.ready.remove(&frame_seq);
     }
 
+    /// Frames currently registered as awaited — the stale-waiter probe
+    /// for the drop-without-wait property tests (a dropped
+    /// `PendingReply` / `MultiPendingReply` must leave this at zero).
+    #[doc(hidden)]
+    pub fn debug_awaited(&self) -> usize {
+        self.state.lock().unwrap().awaited.len()
+    }
+
     /// Consume every reply frame that has fully arrived, without
     /// blocking. Called from the send paths so collection keeps pace with
     /// injection even when no invocation is waiting.

@@ -20,8 +20,12 @@
 //! the ring protocol (fabric and shm alike) coalesces a batch into
 //! **one** credit reservation (instead of one capacity wait per frame)
 //! and one flush, and the AM path posts the whole batch before a single
-//! flush — the seam `Dispatcher`'s `inject_batch_by_key` delivers
-//! per-worker buckets through.
+//! flush — the seam `Dispatcher::scatter` delivers per-worker buckets
+//! through. Collective invocations ride the same seam one frame at a
+//! time: [`IfuncTransport::post_frame`] places a frame without flushing,
+//! so `Dispatcher::invoke_multi` can post every member's frame first and
+//! run one flush pass over the fan-out, letting per-link transfers
+//! overlap.
 //!
 //! Every transport also owns the link's [`ReplyRing`] (the `invoke`
 //! return path) and its [`ConsumedCounter`] (the `barrier` completion
@@ -175,6 +179,17 @@ pub trait IfuncTransport: Send {
             self.send_frame(msg)?;
         }
         Ok(())
+    }
+
+    /// Post one frame without waiting for completion — the single-frame
+    /// form of [`IfuncTransport::post_batch`]. This is the seam the
+    /// dispatcher's collective fan-out (`invoke_multi` / `invoke_all`)
+    /// delivers through: the same frame is posted on every targeted
+    /// link, then one flush pass covers the whole fan-out, so the
+    /// per-link transfers overlap instead of paying one completion
+    /// round-trip per worker.
+    fn post_frame(&mut self, msg: &IfuncMsg) -> Result<()> {
+        self.post_batch(std::slice::from_ref(msg))
     }
 
     /// Deliver a batch of frames with one flush at the end:

@@ -154,7 +154,10 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 /// Convenience re-exports covering the whole public API surface.
 pub mod prelude {
     pub use crate::bench::{BenchConfig, BenchMode};
-    pub use crate::coordinator::{Cluster, ClusterConfig, Dispatcher, PendingReply, RecordStore};
+    pub use crate::coordinator::{
+        Cluster, ClusterConfig, ClusterConfigBuilder, Dispatcher, MultiPendingReply, MultiReply,
+        PendingReply, RecordStore, Target,
+    };
     pub use crate::fabric::{Fabric, MemPerm, WireConfig};
     pub use crate::ifunc::{
         builtin::CounterIfunc, CodeImage, ExecOutcome, IfuncHandle, IfuncMsg, IfuncRing,

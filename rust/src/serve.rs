@@ -31,7 +31,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use two_chains::coordinator::{Cluster, ClusterConfig, GetIfunc, InsertIfunc, GET_MISSING};
+use two_chains::coordinator::{Cluster, ClusterConfig, GetIfunc, InsertIfunc, Target, GET_MISSING};
 use two_chains::ifunc::{IfuncHandle, TransportKind};
 use two_chains::log;
 use two_chains::util::Json;
@@ -47,7 +47,7 @@ pub struct ServeHandles {
 /// entry point and the in-process tests).
 pub fn launch(workers: usize, transport: TransportKind) -> Result<(Arc<Cluster>, ServeHandles)> {
     let cluster = Arc::new(Cluster::launch(
-        ClusterConfig { workers, transport, ..Default::default() },
+        ClusterConfig::builder().workers(workers).transport(transport).build()?,
         |_, _, _| {},
     )?);
     cluster.leader.library_dir().install(Box::new(InsertIfunc));
@@ -125,7 +125,7 @@ pub fn handle_line(cluster: &Cluster, handles: &ServeHandles, line: &str) -> Jso
                 Ok(m) => m,
                 Err(e) => return err_json(&e.to_string()),
             };
-            match d.invoke(worker, &msg) {
+            match d.invoke_one(Target::Worker(worker), &msg) {
                 Ok(reply) if reply.ok() => {
                     Json::obj(vec![("ok", Json::Bool(true)), ("worker", Json::from(worker))])
                 }
@@ -148,7 +148,7 @@ pub fn handle_line(cluster: &Cluster, handles: &ServeHandles, line: &str) -> Jso
             // function on the worker. Concurrent gets each carry their
             // own frame, so nothing can clobber anything, and record
             // size never changes the protocol.
-            match d.invoke_get(worker, &msg) {
+            match d.fetch(Target::Worker(worker), &msg) {
                 Ok((reply, data)) if reply.ok() && reply.r0 != GET_MISSING => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("worker", Json::from(worker)),

@@ -1,11 +1,12 @@
 //! Coordinator integration: failure injection, mixed workloads, placement
-//! invariants, telemetry accounting, reply-path invocation — each traffic
-//! scenario driven over *every* delivery transport (RDMA-PUT ring, AM
-//! send-receive, and intra-node shared memory) through the identical
-//! cluster harness.
+//! invariants, telemetry accounting, reply-path invocation, and collective
+//! scatter-gather invocations — each traffic scenario driven over *every*
+//! delivery transport (RDMA-PUT ring, AM send-receive, and intra-node
+//! shared memory) through the identical cluster harness.
 
 use two_chains::coordinator::{
-    Cluster, ClusterConfig, ClusterSnapshot, GetIfunc, InsertIfunc, TransportKind, GET_MISSING,
+    Cluster, ClusterConfig, ClusterSnapshot, FilterIfunc, GetIfunc, InsertIfunc, Target,
+    TransportKind, GET_MISSING,
 };
 use two_chains::ifunc::builtin::{ChecksumIfunc, CounterIfunc, EchoIfunc, OutOfBoundsIfunc};
 use two_chains::ifunc::SourceArgs;
@@ -21,7 +22,7 @@ fn for_each_transport(scenario: impl Fn(TransportKind)) {
 
 fn counter_cluster(workers: usize, transport: TransportKind) -> Cluster {
     let cluster = Cluster::launch(
-        ClusterConfig { workers, transport, ..Default::default() },
+        ClusterConfig::builder().workers(workers).transport(transport).build().unwrap(),
         |_, ctx, _| {
             ctx.library_dir().install(Box::new(CounterIfunc::default()));
         },
@@ -47,16 +48,18 @@ fn failure_injection_does_not_stall_the_stream() {
         let h_good = d.register("counter").unwrap();
         let h_bad = d.register("oob").unwrap();
         let args = SourceArgs::bytes(vec![0u8; 64]);
+        let msg_good = h_good.msg_create(&args).unwrap();
+        let msg_bad = h_bad.msg_create(&args).unwrap();
 
         let mut good = 0u64;
         let mut bad = 0u64;
         let mut rng = XorShift::new(99);
         for key in 0..200u64 {
             if rng.below(4) == 0 {
-                d.inject_by_key(&h_bad, key, &args).unwrap();
+                d.send(Target::Key(key), &msg_bad).unwrap();
                 bad += 1;
             } else {
-                d.inject_by_key(&h_good, key, &args).unwrap();
+                d.send(Target::Key(key), &msg_good).unwrap();
                 good += 1;
             }
         }
@@ -92,11 +95,17 @@ fn mixed_types_share_a_link() {
         for i in 0..50u64 {
             let payload = vec![1u8; 100 + (i as usize % 32) * 8];
             if i % 2 == 0 {
-                d.send_to(0, &h_counter.msg_create(&SourceArgs::bytes(payload)).unwrap())
-                    .unwrap();
+                d.send(
+                    Target::Worker(0),
+                    &h_counter.msg_create(&SourceArgs::bytes(payload)).unwrap(),
+                )
+                .unwrap();
             } else {
-                d.send_to(0, &h_checksum.msg_create(&SourceArgs::bytes(payload)).unwrap())
-                    .unwrap();
+                d.send(
+                    Target::Worker(0),
+                    &h_checksum.msg_create(&SourceArgs::bytes(payload)).unwrap(),
+                )
+                .unwrap();
             }
         }
         d.barrier().unwrap();
@@ -138,8 +147,9 @@ fn telemetry_matches_ground_truth() {
         let cluster = counter_cluster(3, transport);
         let d = cluster.dispatcher();
         let h = d.register("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![7u8; 48])).unwrap();
         for key in 0..120u64 {
-            d.inject_by_key(&h, key, &SourceArgs::bytes(vec![7u8; 48])).unwrap();
+            d.send(Target::Key(key), &msg).unwrap();
         }
         d.barrier().unwrap();
         let snap = ClusterSnapshot::capture(&cluster);
@@ -154,9 +164,9 @@ fn telemetry_matches_ground_truth() {
     });
 }
 
-/// `Dispatcher::invoke` returns the injected function's `r0` through the
-/// reply ring — and a rejected frame comes back as a failed reply without
-/// desynchronizing later invocations.
+/// `Dispatcher::invoke_one` returns the injected function's `r0` through
+/// the reply ring — and a rejected frame comes back as a failed reply
+/// without desynchronizing later invocations.
 #[test]
 fn invoke_returns_injected_r0() {
     for_each_transport(|transport| {
@@ -166,20 +176,20 @@ fn invoke_returns_injected_r0() {
         let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 16])).unwrap();
 
         // counter_add(1) returns the post-increment counter value in r0.
-        let r1 = d.invoke(0, &msg).unwrap();
+        let r1 = d.invoke_one(Target::Worker(0), &msg).unwrap();
         assert!(r1.ok(), "{transport:?}");
         assert_eq!(r1.r0, 1, "{transport:?}");
-        let r2 = d.invoke(0, &msg).unwrap();
+        let r2 = d.invoke_one(Target::Worker(0), &msg).unwrap();
         assert_eq!(r2.r0, 2, "{transport:?}");
         assert!(r2.seq > r1.seq, "{transport:?}");
 
         // A hostile frame is consumed and answered as failed...
         let h_bad = d.register("oob").unwrap();
         let bad = h_bad.msg_create(&SourceArgs::bytes(vec![0u8; 16])).unwrap();
-        let rf = d.invoke(0, &bad).unwrap();
+        let rf = d.invoke_one(Target::Worker(0), &bad).unwrap();
         assert!(!rf.ok(), "{transport:?}");
         // ...and the link keeps working afterwards.
-        let r3 = d.invoke(0, &msg).unwrap();
+        let r3 = d.invoke_one(Target::Worker(0), &msg).unwrap();
         assert_eq!(r3.r0, 3, "{transport:?}");
         cluster.shutdown().unwrap();
     });
@@ -191,7 +201,7 @@ fn invoke_returns_injected_r0() {
 #[test]
 fn insert_ifunc_ingestion_and_lookup() {
     let cluster = Cluster::launch(
-        ClusterConfig { workers: 3, ..Default::default() },
+        ClusterConfig::builder().workers(3).build().unwrap(),
         |_, _, _| {},
     )
     .unwrap();
@@ -204,7 +214,8 @@ fn insert_ifunc_ingestion_and_lookup() {
     for key in 0..40u64 {
         let len = rng.range(1, 64) as usize;
         let data = rng.f32s(len);
-        d.inject_by_key(&h, key, &InsertIfunc::args(key, &data)).unwrap();
+        let msg = h.msg_create(&InsertIfunc::args(key, &data)).unwrap();
+        d.send(Target::Key(key), &msg).unwrap();
         expect.push((key, data));
     }
     d.barrier().unwrap();
@@ -226,7 +237,7 @@ fn insert_ifunc_ingestion_and_lookup() {
 fn get_ifunc_returns_worker_computed_data() {
     for_each_transport(|transport| {
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 3, transport, ..Default::default() },
+            ClusterConfig::builder().workers(3).transport(transport).build().unwrap(),
             |_, _, _| {},
         )
         .unwrap();
@@ -241,15 +252,15 @@ fn get_ifunc_returns_worker_computed_data() {
         for key in 0..20u64 {
             let len = rng.range(1, 48) as usize;
             let data = rng.f32s(len);
-            d.inject_by_key(&h_ins, key, &InsertIfunc::args(key, &data)).unwrap();
+            let msg = h_ins.msg_create(&InsertIfunc::args(key, &data)).unwrap();
+            d.send(Target::Key(key), &msg).unwrap();
             expect.push((key, data));
         }
         d.barrier().unwrap();
 
         for (key, data) in expect {
-            let w = d.route_key(key);
             let msg = h_get.msg_create(&GetIfunc::args(key)).unwrap();
-            let (reply, fetched) = d.invoke_get(w, &msg).unwrap();
+            let (reply, fetched) = d.fetch(Target::Key(key), &msg).unwrap();
             assert!(reply.ok(), "{transport:?} key {key}");
             assert_eq!(reply.r0 as usize, data.len(), "{transport:?} key {key}");
             assert_eq!(fetched, data, "{transport:?} key {key}");
@@ -257,9 +268,8 @@ fn get_ifunc_returns_worker_computed_data() {
 
         // Absent key: the injected function reports MISSING in r0.
         let absent = 999_999u64;
-        let w = d.route_key(absent);
         let msg = h_get.msg_create(&GetIfunc::args(absent)).unwrap();
-        let (reply, fetched) = d.invoke_get(w, &msg).unwrap();
+        let (reply, fetched) = d.fetch(Target::Key(absent), &msg).unwrap();
         assert!(reply.ok(), "{transport:?}");
         assert_eq!(reply.r0, GET_MISSING, "{transport:?}");
         assert!(fetched.is_empty(), "{transport:?}");
@@ -267,14 +277,19 @@ fn get_ifunc_returns_worker_computed_data() {
     });
 }
 
-/// The tentpole's acceptance scenario: ≥ 4 invocations in flight against
-/// one worker at once (window > 1), each carrying a distinct payload —
-/// replies collected out of order must still match their seq's payload.
+/// ≥ 4 invocations in flight against one worker at once (window > 1),
+/// each carrying a distinct payload — replies collected out of order must
+/// still match their seq's payload.
 #[test]
 fn pipelined_invocations_carry_per_seq_payloads() {
     for_each_transport(|transport| {
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 1, transport, max_inflight: 8, ..Default::default() },
+            ClusterConfig::builder()
+                .workers(1)
+                .transport(transport)
+                .max_inflight(8)
+                .build()
+                .unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(EchoIfunc));
             },
@@ -291,8 +306,11 @@ fn pipelined_invocations_carry_per_seq_payloads() {
         let pending: Vec<_> = payloads
             .iter()
             .map(|p| {
-                d.invoke_begin(0, &h.msg_create(&SourceArgs::bytes(p.clone())).unwrap())
-                    .unwrap()
+                d.invoke_begin(
+                    Target::Worker(0),
+                    &h.msg_create(&SourceArgs::bytes(p.clone())).unwrap(),
+                )
+                .unwrap()
             })
             .collect();
         assert!(pending.len() >= 4, "need ≥ 4 concurrent in-flight invocations");
@@ -318,7 +336,7 @@ fn pipelined_invocations_carry_per_seq_payloads() {
 fn pending_reply_survives_fire_and_forget_flood() {
     for_each_transport(|transport| {
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 1, transport, ..Default::default() },
+            ClusterConfig::builder().workers(1).transport(transport).build().unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(EchoIfunc));
                 ctx.library_dir().install(Box::new(CounterIfunc::default()));
@@ -333,7 +351,10 @@ fn pending_reply_survives_fire_and_forget_flood() {
 
         let body = b"survivor".to_vec();
         let pending = d
-            .invoke_begin(0, &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap())
+            .invoke_begin(
+                Target::Worker(0),
+                &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap(),
+            )
             .unwrap();
         // Collect the reply concurrently; the flood below stalls at the
         // reply-ring lap boundary until this thread has read it.
@@ -341,7 +362,7 @@ fn pending_reply_survives_fire_and_forget_flood() {
         let cnt = h_cnt.msg_create(&SourceArgs::bytes(vec![0u8; 32])).unwrap();
         let flood = 3 * two_chains::ifunc::REPLY_SLOTS;
         for _ in 0..flood {
-            d.send_to(0, &cnt).unwrap();
+            d.send(Target::Worker(0), &cnt).unwrap();
         }
         let reply = collector.join().unwrap();
         assert!(reply.ok(), "{transport:?}");
@@ -362,12 +383,12 @@ fn pending_reply_survives_fire_and_forget_flood() {
 #[test]
 fn lap_guard_errors_instead_of_corrupting_reply() {
     let cluster = Cluster::launch(
-        ClusterConfig {
-            workers: 1,
-            stream_replies: false,
-            reply_timeout: Some(std::time::Duration::from_millis(50)),
-            ..Default::default()
-        },
+        ClusterConfig::builder()
+            .workers(1)
+            .stream_replies(false)
+            .reply_timeout(std::time::Duration::from_millis(50))
+            .build()
+            .unwrap(),
         |_, ctx, _| {
             ctx.library_dir().install(Box::new(EchoIfunc));
             ctx.library_dir().install(Box::new(CounterIfunc::default()));
@@ -382,12 +403,15 @@ fn lap_guard_errors_instead_of_corrupting_reply() {
 
     let body = b"still here".to_vec();
     let pending = d
-        .invoke_begin(0, &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap())
+        .invoke_begin(
+            Target::Worker(0),
+            &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap(),
+        )
         .unwrap();
     let cnt = h_cnt.msg_create(&SourceArgs::bytes(vec![0u8; 32])).unwrap();
     let mut lap_error = None;
     for _ in 0..2 * two_chains::ifunc::REPLY_SLOTS {
-        if let Err(e) = d.send_to(0, &cnt) {
+        if let Err(e) = d.send(Target::Worker(0), &cnt) {
             lap_error = Some(e);
             break;
         }
@@ -409,12 +433,12 @@ fn lap_guard_errors_instead_of_corrupting_reply() {
 #[test]
 fn full_invoke_window_errors_instead_of_deadlocking() {
     let cluster = Cluster::launch(
-        ClusterConfig {
-            workers: 1,
-            max_inflight: 2,
-            reply_timeout: Some(std::time::Duration::from_millis(50)),
-            ..Default::default()
-        },
+        ClusterConfig::builder()
+            .workers(1)
+            .max_inflight(2)
+            .reply_timeout(std::time::Duration::from_millis(50))
+            .build()
+            .unwrap(),
         |_, ctx, _| {
             ctx.library_dir().install(Box::new(EchoIfunc));
         },
@@ -425,26 +449,28 @@ fn full_invoke_window_errors_instead_of_deadlocking() {
     let h = d.register("echo").unwrap();
     let msg = h.msg_create(&SourceArgs::bytes(b"w".to_vec())).unwrap();
 
-    let p1 = d.invoke_begin(0, &msg).unwrap();
-    let p2 = d.invoke_begin(0, &msg).unwrap();
-    let err = d.invoke_begin(0, &msg).expect_err("third begin must error, not hang");
+    let p1 = d.invoke_begin(Target::Worker(0), &msg).unwrap();
+    let p2 = d.invoke_begin(Target::Worker(0), &msg).unwrap();
+    let err = d
+        .invoke_begin(Target::Worker(0), &msg)
+        .expect_err("third begin must error, not hang");
     assert!(err.to_string().contains("window full"), "{err}");
     // Collecting the outstanding replies frees the window.
     assert!(p1.wait().unwrap().ok());
     assert!(p2.wait().unwrap().ok());
-    assert!(d.invoke(0, &msg).unwrap().ok());
+    assert!(d.invoke_one(Target::Worker(0), &msg).unwrap().ok());
     cluster.shutdown().unwrap();
 }
 
-/// The tentpole acceptance scenario: a 1 MiB record — 16× the reply
-/// frame's chunk size — round-trips through `insert` + `invoke_get` on
-/// every transport (ring, AM, and shm). The reply streams as 16 chunk
-/// frames through a 64-slot ring and reassembles bit-exact.
+/// A 1 MiB record — 16× the reply frame's chunk size — round-trips
+/// through `insert` + `fetch` on every transport (ring, AM, and shm). The
+/// reply streams as 16 chunk frames through a 64-slot ring and
+/// reassembles bit-exact.
 #[test]
 fn get_streams_a_1mib_record_over_all_transports() {
     for_each_transport(|transport| {
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 2, transport, ..Default::default() },
+            ClusterConfig::builder().workers(2).transport(transport).build().unwrap(),
             |_, _, _| {},
         )
         .unwrap();
@@ -457,12 +483,12 @@ fn get_streams_a_1mib_record_over_all_transports() {
         let n = (1usize << 20) / 4; // 262144 f32 elements = 1 MiB
         let data: Vec<f32> = (0..n).map(|i| (i % 1009) as f32).collect();
         let key = 0xB16_DA7A;
-        d.inject_by_key(&h_ins, key, &InsertIfunc::args(key, &data)).unwrap();
+        let msg = h_ins.msg_create(&InsertIfunc::args(key, &data)).unwrap();
+        d.send(Target::Key(key), &msg).unwrap();
         d.barrier().unwrap();
 
-        let w = d.route_key(key);
         let msg = h_get.msg_create(&GetIfunc::args(key)).unwrap();
-        let (reply, fetched) = d.invoke_get(w, &msg).unwrap();
+        let (reply, fetched) = d.fetch(Target::Key(key), &msg).unwrap();
         assert!(reply.ok(), "{transport:?}: {:?}", reply.status);
         assert!(!reply.overflowed(), "{transport:?}: streamed links never overflow");
         assert_eq!(reply.r0 as usize, n, "{transport:?}");
@@ -480,7 +506,12 @@ fn get_streams_a_1mib_record_over_all_transports() {
 fn chunked_replies_interleave_with_fire_and_forget_floods() {
     for_each_transport(|transport| {
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 1, transport, max_inflight: 4, ..Default::default() },
+            ClusterConfig::builder()
+                .workers(1)
+                .transport(transport)
+                .max_inflight(4)
+                .build()
+                .unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(EchoIfunc));
                 ctx.library_dir().install(Box::new(CounterIfunc::default()));
@@ -502,10 +533,13 @@ fn chunked_replies_interleave_with_fire_and_forget_floods() {
                 .map(|i| ((i as u64 + round) % 251) as u8)
                 .collect();
             let pending = d
-                .invoke_begin(0, &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap())
+                .invoke_begin(
+                    Target::Worker(0),
+                    &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap(),
+                )
                 .unwrap();
             for _ in 0..flood {
-                d.send_to(0, &cnt).unwrap();
+                d.send(Target::Worker(0), &cnt).unwrap();
             }
             let reply = pending.wait().unwrap();
             assert!(reply.ok(), "{transport:?} round {round}");
@@ -554,7 +588,7 @@ fn inserts_do_not_wait_on_other_workers_consumption() {
         let gate = Arc::new(AtomicBool::new(false));
         let g = gate.clone();
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 2, transport, ..Default::default() },
+            ClusterConfig::builder().workers(2).transport(transport).build().unwrap(),
             move |_, ctx, _| {
                 let g = g.clone();
                 ctx.symbols().install_fn("gate_wait", move |_, _| {
@@ -576,13 +610,20 @@ fn inserts_do_not_wait_on_other_workers_consumption() {
 
         // Park worker 1 inside the gated function (its receive loop is now
         // busy; its consumed counter will not move).
-        d.send_to(1, &h_gate.msg_create(&SourceArgs::bytes(vec![0u8; 8])).unwrap()).unwrap();
+        d.send(
+            Target::Worker(1),
+            &h_gate.msg_create(&SourceArgs::bytes(vec![0u8; 8])).unwrap(),
+        )
+        .unwrap();
 
         // Serve-style insert to worker 0: an invocation on its own link —
         // completes while worker 1 is still parked.
-        let reply =
-            d.invoke(0, &h_ins.msg_create(&InsertIfunc::args(key0, &[1.0, 2.0, 3.0])).unwrap())
-                .unwrap();
+        let reply = d
+            .invoke_one(
+                Target::Worker(0),
+                &h_ins.msg_create(&InsertIfunc::args(key0, &[1.0, 2.0, 3.0])).unwrap(),
+            )
+            .unwrap();
         assert!(reply.ok(), "{transport:?}");
         assert_eq!(
             cluster.workers[0].store.get(key0),
@@ -608,7 +649,12 @@ fn inserts_do_not_wait_on_other_workers_consumption() {
 fn pipelined_invokes_interleave_with_batched_sends() {
     for_each_transport(|transport| {
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 1, transport, max_inflight: 4, ..Default::default() },
+            ClusterConfig::builder()
+                .workers(1)
+                .transport(transport)
+                .max_inflight(4)
+                .build()
+                .unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(EchoIfunc));
                 ctx.library_dir().install(Box::new(CounterIfunc::default()));
@@ -627,9 +673,12 @@ fn pipelined_invokes_interleave_with_batched_sends() {
         for round in 0..10u64 {
             let body = round.to_le_bytes().to_vec();
             let pending = d
-                .invoke_begin(0, &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap())
+                .invoke_begin(
+                    Target::Worker(0),
+                    &h_echo.msg_create(&SourceArgs::bytes(body.clone())).unwrap(),
+                )
                 .unwrap();
-            d.send_batch_to(0, &counters).unwrap();
+            d.send_batch(Target::Worker(0), &counters).unwrap();
             let reply = pending.wait().unwrap();
             assert!(reply.ok(), "{transport:?} round {round}");
             assert_eq!(reply.payload, body, "{transport:?} round {round}");
@@ -638,4 +687,156 @@ fn pipelined_invokes_interleave_with_batched_sends() {
         assert_eq!(d.total_executed(), 10 + 50, "{transport:?}");
         cluster.shutdown().unwrap();
     });
+}
+
+/// The collective acceptance scenario: `invoke_all` injects one program,
+/// fans it out, and merges every worker's reply with correct per-worker
+/// attribution — over ring, AM, and shm. Each worker's store is seeded
+/// with a shard-distinct record, so a crossed wire (reply attributed to
+/// the wrong worker) is detectable, not silent.
+#[test]
+fn invoke_all_merges_attributed_replies() {
+    for_each_transport(|transport| {
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(3).transport(transport).build().unwrap(),
+            |i, _, store| {
+                store.insert(7, vec![i as f32, 100.0 + i as f32]);
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(GetIfunc));
+        let d = cluster.dispatcher();
+        let h = d.register("get").unwrap();
+        let msg = h.msg_create(&GetIfunc::args(7)).unwrap();
+
+        let multi = d.invoke_all(&msg).unwrap();
+        assert_eq!(multi.workers(), vec![0, 1, 2], "{transport:?}");
+        let merged = multi.wait().unwrap();
+        assert!(merged.all_ok(), "{transport:?}");
+        assert_eq!(merged.len(), 3, "{transport:?}");
+        for w in 0..3usize {
+            let reply = merged.reply_for(w).unwrap();
+            assert_eq!(reply.r0, 2, "{transport:?} worker {w}");
+            assert_eq!(
+                reply.payload_f32s(),
+                vec![w as f32, 100.0 + w as f32],
+                "{transport:?} worker {w}: reply attributed to the wrong worker"
+            );
+        }
+
+        // An explicit Set preserves its order and hits only its members.
+        let merged = d.invoke_multi(Target::Set(&[2, 0]), &msg).unwrap().wait().unwrap();
+        let got: Vec<usize> = merged.replies().iter().map(|(w, _)| *w).collect();
+        assert_eq!(got, vec![2, 0], "{transport:?}");
+        assert_eq!(merged.reply_for(1), None, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
+}
+
+/// The scatter-gather demo workload end-to-end: a shard-local filter
+/// (`FilterIfunc` → `db_filter`) injected on every worker with one
+/// `invoke_all`, each shard scanning only its own records, the leader
+/// merging the per-worker match lists.
+#[test]
+fn invoke_all_filter_scans_every_shard() {
+    for_each_transport(|transport| {
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(3).transport(transport).build().unwrap(),
+            |i, _, store| {
+                // Worker i owns records keyed 100i..100i+5 whose first
+                // element is the record index 0..5.
+                for j in 0..5u64 {
+                    store.insert(100 * i as u64 + j, vec![j as f32, -1.0]);
+                }
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(FilterIfunc));
+        let d = cluster.dispatcher();
+        let h = d.register("filter").unwrap();
+        let msg = h.msg_create(&FilterIfunc::args(3.0)).unwrap();
+
+        let merged = d.invoke_all(&msg).unwrap().wait().unwrap();
+        assert!(merged.all_ok(), "{transport:?}");
+        let mut all_matches = Vec::new();
+        for (worker, reply) in merged.replies() {
+            let matches = FilterIfunc::matches(&reply.payload);
+            // Each shard matched exactly its records with first ≥ 3.0
+            // (indices 3 and 4), and r0 agrees with the payload.
+            assert_eq!(reply.r0, 2, "{transport:?} worker {worker}");
+            assert_eq!(matches.len(), 2, "{transport:?} worker {worker}");
+            for (key, v) in &matches {
+                assert_eq!(key / 100, *worker as u64, "{transport:?}: foreign shard key");
+                assert!(*v >= 3.0, "{transport:?}");
+            }
+            all_matches.extend(matches);
+        }
+        assert_eq!(all_matches.len(), 6, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
+}
+
+/// `ClusterConfig::builder()` rejects the configurations the raw struct
+/// literal silently accepts or repairs.
+#[test]
+fn cluster_config_builder_validates() {
+    use two_chains::ifunc::REPLY_SLOTS;
+    assert!(ClusterConfig::builder().workers(0).build().is_err());
+    assert!(ClusterConfig::builder().max_inflight(0).build().is_err());
+    let err = ClusterConfig::builder()
+        .max_inflight(REPLY_SLOTS + 1)
+        .build()
+        .expect_err("over-window max_inflight must be surfaced, not clamped");
+    assert!(err.to_string().contains("REPLY_SLOTS"), "{err}");
+    assert!(ClusterConfig::builder()
+        .reply_timeout(std::time::Duration::ZERO)
+        .build()
+        .is_err());
+
+    let c = ClusterConfig::builder()
+        .workers(4)
+        .ring_bytes(8192)
+        .transport(TransportKind::Shm)
+        .max_inflight(REPLY_SLOTS)
+        .reply_timeout(std::time::Duration::from_secs(1))
+        .stream_replies(false)
+        .build()
+        .unwrap();
+    assert_eq!(c.workers, 4);
+    assert_eq!(c.ring_bytes, 8192);
+    assert_eq!(c.transport, TransportKind::Shm);
+    assert_eq!(c.max_inflight, REPLY_SLOTS);
+    assert!(!c.stream_replies);
+    assert!(ClusterConfig::builder().no_reply_timeout().build().unwrap().reply_timeout.is_none());
+}
+
+/// The deprecated pre-`Target` wrappers still compile and behave exactly
+/// like their replacements (this is the one place they may be used; all
+/// other call sites migrated).
+#[test]
+#[allow(deprecated)]
+fn deprecated_wrappers_match_target_entry_points() {
+    let cluster = counter_cluster(2, TransportKind::Ring);
+    let d = cluster.dispatcher();
+    let h = d.register("counter").unwrap();
+    let args = SourceArgs::bytes(vec![0u8; 32]);
+    let msg = h.msg_create(&args).unwrap();
+
+    d.send_to(0, &msg).unwrap();
+    d.send_batch_to(0, &[msg.clone(), msg.clone()]).unwrap();
+    let placed = d.inject_by_key(&h, 11, &args).unwrap();
+    assert_eq!(placed, d.route_key(11));
+    let placements = d
+        .inject_batch_by_key(&h, &[(1, args.clone()), (2, args.clone())])
+        .unwrap();
+    assert_eq!(placements, vec![d.route_key(1), d.route_key(2)]);
+    d.barrier().unwrap();
+    assert_eq!(d.total_executed(), 6);
+
+    let reply = d.invoke(0, &msg).unwrap();
+    assert!(reply.ok());
+    let (reply, data) = d.invoke_get(0, &msg).unwrap();
+    assert!(reply.ok());
+    assert!(data.is_empty()); // counter pushes no reply payload
+    cluster.shutdown().unwrap();
 }

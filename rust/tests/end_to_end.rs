@@ -9,7 +9,7 @@ use std::path::PathBuf;
 
 use two_chains::coordinator::{
     apps::{DecodeInsertIfunc, DEC_OUT, SIGNAL_N},
-    Cluster, ClusterConfig,
+    Cluster, ClusterConfig, Target,
 };
 use two_chains::fabric::{Fabric, WireConfig};
 use two_chains::ifunc::{HloIfuncLibrary, IfuncRing, SourceArgs, TargetArgs};
@@ -134,8 +134,9 @@ fn hlo_compile_happens_once() {
 #[test]
 fn decode_insert_cluster_end_to_end() {
     let dir = require_artifacts!();
-    let cluster = Cluster::launch(ClusterConfig { workers: 2, ..Default::default() }, |_, _, _| {})
-        .unwrap();
+    let cluster =
+        Cluster::launch(ClusterConfig::builder().workers(2).build().unwrap(), |_, _, _| {})
+            .unwrap();
     cluster
         .leader
         .library_dir()
@@ -147,7 +148,8 @@ fn decode_insert_cluster_end_to_end() {
     let mut records = Vec::new();
     for key in 0..10u64 {
         let record = rng.f32s(SIGNAL_N);
-        d.inject_by_key(&h, key, &DecodeInsertIfunc::args(key, &record)).unwrap();
+        let msg = h.msg_create(&DecodeInsertIfunc::args(key, &record)).unwrap();
+        d.send(Target::Key(key), &msg).unwrap();
         records.push((key, record));
     }
     d.barrier().unwrap();

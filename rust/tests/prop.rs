@@ -429,11 +429,11 @@ fn prop_shm_streamed_replies_roundtrip_random_sizes() {
 /// AM, and shm transports — the scenario matrix's property-test arm.
 #[test]
 fn prop_invoke_echo_roundtrips_on_every_transport() {
-    use two_chains::coordinator::{Cluster, ClusterConfig, TransportKind};
+    use two_chains::coordinator::{Cluster, ClusterConfig, Target, TransportKind};
     use two_chains::ifunc::builtin::EchoIfunc;
     for transport in TransportKind::ALL {
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 1, transport, ..Default::default() },
+            ClusterConfig::builder().workers(1).transport(transport).build().unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(EchoIfunc));
             },
@@ -448,12 +448,149 @@ fn prop_invoke_echo_roundtrips_on_every_transport() {
             let len = *rng.pick(&[0usize, 1, 64, 4096, 70_000, 150_000]);
             let payload = rng.bytes(len);
             let reply = d
-                .invoke(0, &h.msg_create(&SourceArgs::bytes(payload.clone())).unwrap())
+                .invoke_one(
+                    Target::Worker(0),
+                    &h.msg_create(&SourceArgs::bytes(payload.clone())).unwrap(),
+                )
                 .unwrap();
             assert!(reply.ok(), "{transport:?} case {case}");
             assert_eq!(reply.r0 as usize, len, "{transport:?} case {case}");
             assert_eq!(reply.payload, payload, "{transport:?} case {case} (len {len})");
         }
+        cluster.shutdown().unwrap();
+    }
+}
+
+/// Collective merge attribution under interleaved fire-and-forget floods:
+/// random bursts of counter frames share every link with random-subset
+/// `invoke_multi` collectives, and each merged reply must still carry the
+/// record seeded on *its* worker — over ring, AM, and shm. A crossed wire
+/// (reply credited to the wrong worker) shows up as the wrong f32.
+#[test]
+fn prop_multi_reply_attribution_under_interleaved_floods() {
+    use two_chains::coordinator::{Cluster, ClusterConfig, GetIfunc, Target, TransportKind};
+    for transport in TransportKind::ALL {
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(4).transport(transport).build().unwrap(),
+            |i, ctx, store| {
+                ctx.library_dir().install(Box::new(CounterIfunc::default()));
+                store.insert(7, vec![i as f32]);
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+        cluster.leader.library_dir().install(Box::new(GetIfunc));
+        let d = cluster.dispatcher();
+        let h_cnt = d.register("counter").unwrap();
+        let h_get = d.register("get").unwrap();
+        let cnt = h_cnt.msg_create(&SourceArgs::bytes(vec![0u8; 32])).unwrap();
+        let get = h_get.msg_create(&GetIfunc::args(7)).unwrap();
+        let sets: [&[usize]; 4] = [&[0, 1, 2, 3], &[3, 1], &[2], &[1, 0, 3]];
+        let mut rng = XorShift::new(0xFA2);
+        for round in 0..20 {
+            for _ in 0..rng.below(24) {
+                d.send(Target::All, &cnt).unwrap();
+            }
+            let set = sets[rng.below(sets.len() as u64) as usize];
+            let merged =
+                d.invoke_multi(Target::Set(set), &get).unwrap().wait().unwrap();
+            assert_eq!(merged.len(), set.len(), "{transport:?} round {round}");
+            for (worker, reply) in merged.replies() {
+                assert!(reply.ok(), "{transport:?} round {round} worker {worker}");
+                assert_eq!(
+                    reply.payload_f32s(),
+                    vec![*worker as f32],
+                    "{transport:?} round {round}: reply misattributed to worker {worker}"
+                );
+            }
+        }
+        d.barrier().unwrap();
+        cluster.shutdown().unwrap();
+    }
+}
+
+/// Partial collective failure: with one worker killed mid-cluster, a
+/// collective over all workers reports *which* worker failed and that the
+/// live ones replied — and the dispatcher stays usable for the survivors.
+#[test]
+fn prop_collective_partial_failure_names_the_dead_worker() {
+    use two_chains::coordinator::{Cluster, ClusterConfig, Target, TransportKind};
+    use two_chains::ifunc::builtin::EchoIfunc;
+    for transport in TransportKind::ALL {
+        let mut cluster = Cluster::launch(
+            ClusterConfig::builder()
+                .workers(3)
+                .transport(transport)
+                .reply_timeout(std::time::Duration::from_millis(200))
+                .build()
+                .unwrap(),
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(EchoIfunc));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(EchoIfunc));
+        cluster.workers[1].stop().unwrap();
+
+        let d = cluster.dispatcher();
+        let h = d.register("echo").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![9u8; 16])).unwrap();
+        let err = d
+            .invoke_all(&msg)
+            .unwrap()
+            .wait()
+            .expect_err("a dead member must fail the collective");
+        let s = err.to_string();
+        assert!(s.contains("worker 1"), "{transport:?}: {s}");
+        assert!(s.contains("replied"), "{transport:?}: {s}");
+
+        // The survivors' links are unharmed: unicast and a collective over
+        // the live subset both still complete.
+        assert!(d.invoke_one(Target::Worker(0), &msg).unwrap().ok(), "{transport:?}");
+        let merged =
+            d.invoke_multi(Target::Set(&[0, 2]), &msg).unwrap().wait().unwrap();
+        assert!(merged.all_ok(), "{transport:?}");
+        cluster.shutdown().unwrap();
+    }
+}
+
+/// A `MultiPendingReply` dropped without `wait()` must leave no stale
+/// collector waiters and no leaked invoke-window slots behind — repeated
+/// drop cycles neither accumulate state nor break later collectives.
+#[test]
+fn prop_dropped_multi_pending_leaves_no_stale_waiters() {
+    use two_chains::coordinator::{Cluster, ClusterConfig, TransportKind};
+    use two_chains::ifunc::builtin::EchoIfunc;
+    for transport in TransportKind::ALL {
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(3).transport(transport).build().unwrap(),
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(EchoIfunc));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(EchoIfunc));
+        let d = cluster.dispatcher();
+        let h = d.register("echo").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![3u8; 48])).unwrap();
+        for round in 0..10 {
+            let multi = d.invoke_all(&msg).unwrap();
+            assert_eq!(multi.len(), 3, "{transport:?} round {round}");
+            drop(multi);
+            for w in 0..3 {
+                assert_eq!(
+                    d.debug_awaited(w).unwrap(),
+                    0,
+                    "{transport:?} round {round}: stale waiter on worker {w}"
+                );
+            }
+        }
+        // Abandoned collectives released their window slots: a fresh
+        // collective (and its replies) still round-trips.
+        let merged = d.invoke_all(&msg).unwrap().wait().unwrap();
+        assert!(merged.all_ok(), "{transport:?}");
+        assert_eq!(merged.len(), 3, "{transport:?}");
+        d.barrier().unwrap();
         cluster.shutdown().unwrap();
     }
 }

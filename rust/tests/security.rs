@@ -220,7 +220,7 @@ fn corrupt_header_frame_does_not_hang_shutdown() {
     // fabric ring and the intra-node shm ring alike.
     for transport in [TransportKind::Ring, TransportKind::Shm] {
         let cluster = Cluster::launch(
-            ClusterConfig { workers: 1, transport, ..Default::default() },
+            ClusterConfig::builder().workers(1).transport(transport).build().unwrap(),
             |_, _, _| {},
         )
         .unwrap();
@@ -256,17 +256,17 @@ fn corrupt_header_frame_does_not_hang_shutdown() {
 /// on the bounded one.
 #[test]
 fn dead_worker_with_full_ring_errors_instead_of_hanging() {
-    use two_chains::coordinator::{Cluster, ClusterConfig, TransportKind};
+    use two_chains::coordinator::{Cluster, ClusterConfig, Target, TransportKind};
 
     for transport in [TransportKind::Ring, TransportKind::Shm] {
         let mut cluster = Cluster::launch(
-            ClusterConfig {
-                workers: 1,
-                transport,
-                ring_bytes: 4096,
-                reply_timeout: Some(std::time::Duration::from_millis(200)),
-                ..Default::default()
-            },
+            ClusterConfig::builder()
+                .workers(1)
+                .transport(transport)
+                .ring_bytes(4096)
+                .reply_timeout(std::time::Duration::from_millis(200))
+                .build()
+                .unwrap(),
             |_, ctx, _| {
                 ctx.library_dir().install(Box::new(CounterIfunc::default()));
             },
@@ -283,7 +283,7 @@ fn dead_worker_with_full_ring_errors_instead_of_hanging() {
         let h = d.register("counter").unwrap();
         let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 512])).unwrap();
         let err = (0..64)
-            .find_map(|_| d.send_to(0, &msg).err())
+            .find_map(|_| d.send(Target::Worker(0), &msg).err())
             .expect("injecting into a dead worker's full ring must error, not hang");
         assert!(
             err.to_string().contains("no ring credit progress"),
