@@ -33,9 +33,16 @@
 //!   2/4/8 workers on every transport. The speedup column is what
 //!   overlapping the per-link transfers buys — it should grow with the
 //!   worker count.
+//! * **J** — VM execution engine: reference match-loop
+//!   (`vm::run_reference`) vs pre-compiled threaded dispatch
+//!   (`vm::compile_unfused`) vs threaded + superinstruction fusion
+//!   (`vm::compile`, the production path) on the counter / checksum /
+//!   graph-filter bodies; plus AM delivery copy-on-execute vs the
+//!   zero-copy execute-in-place path, in frames/s.
 //!
 //! Run: `cargo bench --bench ablations` (QUICK=1 for a smoke run;
-//! ABL=E,H runs only the named ablations — CI's bench smoke uses ABL=H,I).
+//! ABL=E,H runs only the named ablations — CI's bench smoke uses
+//! ABL=H,I,J).
 
 use std::time::Instant;
 
@@ -481,5 +488,101 @@ fn main() {
                 );
             }
         }
+    }
+
+    // Abl J — VM execution engine. Same verified body through all three
+    // engines: the reference match-loop, threaded dispatch without
+    // fusion, and the production threaded+fusion form — isolating what
+    // pre-resolved handlers vs superinstructions each buy per body.
+    if run('J') {
+        use two_chains::coordinator::FilterIfunc;
+        use two_chains::ifunc::am_transport::{execute_am_frame, execute_am_frame_in_place};
+        use two_chains::ifunc::builtin::ChecksumIfunc;
+        use two_chains::ifunc::message::CodeImage;
+        use two_chains::ifunc::{IfuncLibrary, Symbols, TargetArgs};
+        use two_chains::vm;
+
+        let syms = Symbols::with_builtins();
+        // The filter body's import is a worker-store symbol; stub it with
+        // a pure function so the column prices the VM, not the store.
+        syms.table().install_fn("db_filter", |_, [bits, _, _, _]| Ok(bits));
+
+        println!("\n== Abl J — VM engine per body (ns/op) ==");
+        println!(
+            "{:>14}  {:>6}  {:>12}  {:>12}  {:>16}  {:>10}",
+            "body", "fused", "match-loop", "threaded", "threaded+fusion", "speedup"
+        );
+        let bodies: [(&str, CodeImage, usize, usize); 3] = [
+            ("counter", CounterIfunc::default().code(), 64, if quick { 2_000 } else { 100_000 }),
+            ("checksum", ChecksumIfunc.code(), 8192, if quick { 50 } else { 1_000 }),
+            ("graph-filter", FilterIfunc.code(), 8, if quick { 2_000 } else { 100_000 }),
+        ];
+        for (name, image, paysize, iters) in bodies {
+            let prog = vm::verify(&image.vm_code, image.imports.len()).expect("verify");
+            let got = syms.table().resolve(&image.imports).expect("resolve");
+            let unfused = vm::compile_unfused(prog.clone());
+            let compiled = vm::compile(prog.clone());
+            let cfg = vm::VmConfig::default();
+            let mut payload = vec![1u8; paysize];
+
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(
+                    vm::run_reference(&prog, &got, &mut payload, &mut (), &cfg).unwrap(),
+                );
+            }
+            let matchloop = t0.elapsed().as_nanos() as f64 / iters as f64;
+
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(unfused.run(&got, &mut payload, &mut (), &cfg).unwrap());
+            }
+            let threaded = t0.elapsed().as_nanos() as f64 / iters as f64;
+
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(compiled.run(&got, &mut payload, &mut (), &cfg).unwrap());
+            }
+            let fusion = t0.elapsed().as_nanos() as f64 / iters as f64;
+
+            println!(
+                "{name:>14}  {:>6}  {matchloop:>12.0}  {threaded:>12.0}  {fusion:>16.0}  {:>9.2}x",
+                compiled.fused_pairs(),
+                matchloop / fusion
+            );
+        }
+
+        // AM delivery: copy-on-execute (one to_vec per frame, the old
+        // receive path) vs execute-in-place on the persistent delivery
+        // buffer (the path `set_am_handler_mut` now gives the adapter).
+        use two_chains::fabric::{Fabric, WireConfig};
+        use two_chains::ucp::{Context, ContextConfig};
+        let f = Fabric::new(1, WireConfig::off());
+        let ctx = Context::new(f.node(0), ContextConfig::default()).expect("ctx");
+        ctx.library_dir().install(Box::new(CounterIfunc::default()));
+        let h = ctx.register_ifunc("counter").expect("register");
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 64])).expect("msg");
+        let ta = std::sync::Arc::new(std::sync::Mutex::new(TargetArgs::none()));
+        let iters = if quick { 2_000 } else { 100_000 };
+
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            execute_am_frame(&ctx, msg.frame(), &ta).expect("copy execute");
+        }
+        let copy_fps = iters as f64 / t0.elapsed().as_secs_f64();
+
+        let mut frame = msg.frame().to_vec();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            execute_am_frame_in_place(&ctx, &mut frame, &ta).expect("in-place execute");
+        }
+        let zc_fps = iters as f64 / t0.elapsed().as_secs_f64();
+
+        println!("\n== Abl J — AM execute: copy-on-execute vs in-place (64B counter frames/s) ==");
+        println!(
+            "{:>14}  {:>14}  {:>10}",
+            "copy", "zero-copy", "speedup"
+        );
+        println!("{copy_fps:>14.0}  {zc_fps:>14.0}  {:>9.2}x", zc_fps / copy_fps);
     }
 }

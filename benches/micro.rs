@@ -102,9 +102,20 @@ fn main() {
 
     let cfg = vm::VmConfig::default();
     let mut payload = vec![0u8; 256];
+    // Reference match-loop row (name predates the compiler — kept stable
+    // so the committed baseline still matches).
     t.bench("VM run (counter body)", 30, 20000, || {
         std::hint::black_box(
-            vm::run(&prog, &got, &mut payload, &mut (), &cfg).unwrap(),
+            vm::run_reference(&prog, &got, &mut payload, &mut (), &cfg).unwrap(),
+        );
+    });
+
+    // The production path: the same verified body, pre-compiled to
+    // threaded handlers once (as the code cache stores it).
+    let compiled = vm::compile(prog.clone());
+    t.bench("VM run (counter body, compiled)", 30, 20000, || {
+        std::hint::black_box(
+            compiled.run(&got, &mut payload, &mut (), &cfg).unwrap(),
         );
     });
 
@@ -192,6 +203,22 @@ fn main() {
             wd.progress();
         }
     });
+
+    // Zero-copy ifunc-over-AM delivery: the frame executes in place in
+    // the eager ring slot — no per-frame `to_vec` on the receive path.
+    {
+        use std::sync::Mutex;
+        use two_chains::ifunc::am_transport::{ifunc_msg_send_am, install_am_ifunc};
+        install_am_ifunc(&wd, Arc::new(Mutex::new(TargetArgs::none())));
+        t.bench("AM send+flush+progress (64B eager, zero-copy)", 20, 2000, || {
+            let before = dst.symbols().counter_value();
+            ifunc_msg_send_am(&ep, &m).unwrap();
+            ep.flush().unwrap();
+            while dst.symbols().counter_value() == before {
+                wd.progress();
+            }
+        });
+    }
 
     // Pipelined invocation throughput: a one-worker cluster driven through
     // invoke_begin/PendingReply with a sliding window of outstanding

@@ -192,6 +192,70 @@ class TestThresholdExit:
         assert rc == 2
 
 
+class TestRequireBaselineRows:
+    def test_gone_row_without_flag_stays_advisory(
+        self, bench_compare, tmp_path, monkeypatch, capsys
+    ):
+        base = write_report(
+            tmp_path / "base.json", [row("decode", 100.0), row("dropped-stage", 50.0)]
+        )
+        cur = write_report(tmp_path / "cur.json", [row("decode", 100.0)])
+        rc = run_main(bench_compare, monkeypatch, [str(cur), "--baseline", str(base)])
+        assert rc == 0
+        assert "gone" in capsys.readouterr().out
+
+    def test_gone_row_with_flag_exits_3(self, bench_compare, tmp_path, monkeypatch, capsys):
+        # The CI guard: a row present in the committed baseline but absent
+        # from the fresh report (renamed or silently dropped bench) fails.
+        base = write_report(
+            tmp_path / "base.json",
+            [row("decode", 100.0), row("VM run (counter body, compiled)", 40.0)],
+        )
+        cur = write_report(tmp_path / "cur.json", [row("decode", 100.0)])
+        rc = run_main(
+            bench_compare,
+            monkeypatch,
+            [str(cur), "--baseline", str(base), "--require-baseline-rows"],
+        )
+        assert rc == 3
+        err = capsys.readouterr().err
+        assert "missing from the current report" in err
+        assert "VM run (counter body, compiled)" in err
+
+    def test_new_rows_do_not_trip_the_flag(self, bench_compare, tmp_path, monkeypatch):
+        # Extra rows in the current report are fine — the flag only guards
+        # against *losing* coverage the baseline already tracks.
+        base = write_report(tmp_path / "base.json", [row("decode", 100.0)])
+        cur = write_report(
+            tmp_path / "cur.json",
+            [row("decode", 100.0), row("AM send+flush+progress (64B eager, zero-copy)", 900.0)],
+        )
+        rc = run_main(
+            bench_compare,
+            monkeypatch,
+            [str(cur), "--baseline", str(base), "--require-baseline-rows"],
+        )
+        assert rc == 0
+
+    def test_absent_baseline_with_flag_still_skips(
+        self, bench_compare, tmp_path, monkeypatch, capsys
+    ):
+        # No baseline committed yet: nothing to require rows against.
+        cur = write_report(tmp_path / "cur.json", [row("decode", 100.0)])
+        rc = run_main(
+            bench_compare,
+            monkeypatch,
+            [
+                str(cur),
+                "--baseline",
+                str(tmp_path / "nope.json"),
+                "--require-baseline-rows",
+            ],
+        )
+        assert rc == 0
+        assert "skipping comparison" in capsys.readouterr().out
+
+
 class TestMalformedInput:
     def test_malformed_current_exits_1(self, bench_compare, tmp_path, monkeypatch, capsys):
         base = write_report(tmp_path / "base.json", [row("decode", 100.0)])

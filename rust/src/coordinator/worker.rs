@@ -29,7 +29,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::ifunc::am_transport::{execute_am_frame, IFUNC_AM_ID};
+use crate::ifunc::am_transport::{execute_am_frame_in_place, IFUNC_AM_ID};
 use crate::ifunc::transport::PutSink;
 use crate::ifunc::{
     AmTransport, ConsumedCounter, IfuncRing, IfuncTransport, PollResult, ReplyCollector,
@@ -352,12 +352,12 @@ impl WorkerHandle {
                 let (ctx2, stats2) = (ctx.clone(), stats.clone());
                 let rw = reply_writer.clone();
                 let (frames2, ep_back3) = (frames.clone(), ep_back.clone());
-                ucp_worker.set_am_handler(IFUNC_AM_ID, move |_, frame| {
+                ucp_worker.set_am_handler_mut(IFUNC_AM_ID, move |_, frame| {
                     // Ingress frame seq: handlers run serially on the
                     // progress thread, so this matches delivery order.
                     let frame_seq = frames2.fetch_add(1, Ordering::Relaxed) + 1;
                     let (ok, r0, payload) =
-                        match execute_am_frame(&ctx2, frame, &target_args) {
+                        match execute_am_frame_in_place(&ctx2, frame, &target_args) {
                             Ok(out) => {
                                 stats2.executed.fetch_add(1, Ordering::Relaxed);
                                 (true, out.ret, out.reply)

@@ -10,17 +10,22 @@
 //!
 //! Here an ifunc frame travels as the payload of a reserved active
 //! message; the target's normal [`crate::ucp::Worker::progress`] invokes
-//! it — no ring, no rkey consensus, no special polling call. The trade-off
-//! the paper predicts is visible in the ablation benches: AM delivery
-//! buffers are not executable-in-place, so the frame pays a
-//! **copy-on-execute** before [`crate::ucp::Context::execute_frame`] can
-//! patch the GOT slot and mutate the payload (the cost the PUT transport's
-//! in-place frames avoid).
+//! it — no ring, no rkey consensus, no special polling call. The
+//! trade-off the paper predicts (§5.1) used to show up here as a
+//! **copy-on-execute** per delivery; that cost is now gone on the default
+//! path. The AM adapter registers a *mutable* handler
+//! ([`crate::ucp::Worker::set_am_handler_mut`]), so eager frames execute
+//! in place in the ring slot (exclusively owned between signal acquire
+//! and release) and rendezvous frames execute in the owned fetch buffer —
+//! the same in-place contract the RDMA-PUT transport's frames have always
+//! had. The copying wrapper survives as [`execute_am_frame`] for callers
+//! that only hold an immutable view (and as the "copy" column of Abl J).
 
 use std::sync::{Arc, Mutex};
 
 use crate::log;
 use crate::ucp::{Context, Endpoint, Worker};
+use crate::util::sync::lock_recover;
 use crate::{Error, Result};
 
 use super::engine::ExecOutcome;
@@ -31,11 +36,12 @@ use super::TargetArgs;
 pub const IFUNC_AM_ID: u16 = 0x1FC0;
 
 /// Install the ifunc-over-AM receive path on `worker`. All ifuncs arriving
-/// on [`IFUNC_AM_ID`] execute against `target_args`.
+/// on [`IFUNC_AM_ID`] execute against `target_args`, in place in the
+/// delivery buffer (no per-frame copy).
 pub fn install_am_ifunc(worker: &Arc<Worker>, target_args: Arc<Mutex<TargetArgs>>) {
     let ctx = worker.context().clone();
-    worker.set_am_handler(IFUNC_AM_ID, move |_, frame| {
-        if let Err(e) = execute_am_frame(&ctx, frame, &target_args) {
+    worker.set_am_handler_mut(IFUNC_AM_ID, move |_, frame| {
+        if let Err(e) = execute_am_frame_in_place(&ctx, frame, &target_args) {
             log::error!("am-transport ifunc failed: {e}");
         }
     });
@@ -47,12 +53,13 @@ pub fn ifunc_msg_send_am(ep: &Endpoint, msg: &IfuncMsg) -> Result<()> {
     ep.am_send(IFUNC_AM_ID, msg.frame())
 }
 
-/// Execute a frame delivered in an AM buffer: decode + integrity-check the
-/// header, copy the frame out of the UCX-owned immutable buffer, then run
-/// the shared engine pipeline on the copy.
-pub fn execute_am_frame(
+/// Execute a frame delivered in a mutable AM buffer: decode +
+/// integrity-check the header, then run the shared engine pipeline
+/// directly on the buffer — the engine patches the GOT slot and the
+/// injected code mutates the payload where it landed.
+pub fn execute_am_frame_in_place(
     ctx: &Context,
-    frame: &[u8],
+    frame: &mut [u8],
     target_args: &Arc<Mutex<TargetArgs>>,
 ) -> Result<ExecOutcome> {
     let header = Header::decode(frame)?
@@ -60,12 +67,22 @@ pub fn execute_am_frame(
     if header.frame_len as usize != frame.len() {
         return Err(Error::InvalidMessage("frame length mismatch over AM".into()));
     }
-    // Copy-on-execute: the engine patches the GOT slot and the injected
-    // code mutates the payload in place, neither of which the AM delivery
-    // buffer permits.
+    // Poison-tolerant like every other dispatch-path lock (PR 5): an
+    // earlier panicked invocation must not wedge the AM progress loop.
+    let mut ta = lock_recover(target_args);
+    ctx.execute_frame(&header, frame, &mut ta)
+}
+
+/// Copying fallback for callers that only hold an immutable view of the
+/// frame: pays one `to_vec` and delegates to
+/// [`execute_am_frame_in_place`]. Not used on the default receive path.
+pub fn execute_am_frame(
+    ctx: &Context,
+    frame: &[u8],
+    target_args: &Arc<Mutex<TargetArgs>>,
+) -> Result<ExecOutcome> {
     let mut owned = frame.to_vec();
-    let mut ta = target_args.lock().unwrap();
-    ctx.execute_frame(&header, &mut owned, &mut ta)
+    execute_am_frame_in_place(ctx, &mut owned, target_args)
 }
 
 #[cfg(test)]
@@ -123,5 +140,31 @@ mod tests {
         ep.flush().unwrap();
         t.join().unwrap();
         assert_eq!(dst.symbols().last_result(), 100_000);
+    }
+
+    /// The copying wrapper and the in-place path must agree — and the
+    /// in-place path must have patched the frame's GOT slot (proof it
+    /// really executed in the caller's buffer, not a hidden copy).
+    #[test]
+    fn in_place_execute_mutates_callers_frame() {
+        let f = Fabric::new(1, WireConfig::off());
+        let ctx = crate::ucp::Context::new(f.node(0), ContextConfig::default()).unwrap();
+        ctx.library_dir().install(Box::new(CounterIfunc::default()));
+        let h = ctx.register_ifunc("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 16])).unwrap();
+        let ta = Arc::new(Mutex::new(TargetArgs::none()));
+
+        let mut frame = msg.frame().to_vec();
+        let before = frame.clone();
+        let out = execute_am_frame_in_place(&ctx, &mut frame, &ta).unwrap();
+        assert_eq!(out.ret, 1);
+        assert_ne!(frame, before, "GOT patch must land in the caller's buffer");
+
+        // The copying wrapper leaves the original untouched but executes
+        // the same pipeline.
+        let frame2 = msg.frame().to_vec();
+        let out2 = execute_am_frame(&ctx, &frame2, &ta).unwrap();
+        assert_eq!(out2.ret, 2);
+        assert_eq!(frame2, msg.frame().to_vec());
     }
 }

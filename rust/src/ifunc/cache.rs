@@ -8,18 +8,19 @@
 //! same type."
 //!
 //! A cache entry holds the reconstructed GOT (name-resolved bindings in
-//! slot order), the import list it was resolved for, the **verified
-//! program** decoded from the code section (so repeat injections skip the
-//! bytecode verifier entirely), a fingerprint of the code bytes the
-//! program was verified from, and whether the ifunc's HLO artifact has
-//! been handed to the PJRT runtime. The entry id is what gets *patched
-//! into the message's GOT slot* before invocation.
+//! slot order), the import list it was resolved for, the **compiled
+//! program** lowered from the verified code section (so repeat injections
+//! skip the bytecode verifier *and* the threaded-dispatch compiler), a
+//! fingerprint of the code bytes the program was verified from, and
+//! whether the ifunc's HLO artifact has been handed to the PJRT runtime.
+//! The entry id is what gets *patched into the message's GOT slot* before
+//! invocation.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use crate::vm::{GotTable, Instr};
+use crate::vm::{CompiledProgram, GotTable};
 
 use super::message::CodeImageRef;
 
@@ -31,10 +32,11 @@ pub struct LinkedIfunc {
     /// Import names the GOT was resolved against, in slot order.
     pub imports: Vec<String>,
     pub got: GotTable,
-    /// The verified program decoded from the code section this entry was
-    /// linked against. Frames whose image matches execute it directly —
-    /// the verify stage runs once per (name, code) instead of per arrival.
-    pub prog: Vec<Instr>,
+    /// The compiled program lowered from the verified code section this
+    /// entry was linked against. Frames whose image matches execute it
+    /// directly — verify *and* compile run once per (name, code) instead
+    /// of per arrival.
+    pub prog: CompiledProgram,
     /// Fingerprint of the code bytes `prog` was verified from. "The code
     /// can be modified anytime under the same ifunc name" (§3.4): a frame
     /// shipping different code or imports relinks and replaces this entry.
@@ -53,7 +55,8 @@ impl LinkedIfunc {
 }
 
 /// The §3.4 hash table, keyed by ifunc name. (Historically `IfuncCache`;
-/// renamed when it started caching the verified program, not just links.)
+/// renamed when it started caching the executable program, not just
+/// links — today that is the *compiled* threaded form.)
 #[derive(Default)]
 pub struct CodeCache {
     map: RwLock<HashMap<String, Arc<LinkedIfunc>>>,
@@ -103,7 +106,7 @@ impl CodeCache {
         name: &str,
         imports: Vec<String>,
         got: GotTable,
-        prog: Vec<Instr>,
+        prog: CompiledProgram,
         code_fp: u64,
         has_hlo: bool,
     ) -> Arc<LinkedIfunc> {
@@ -148,7 +151,7 @@ mod tests {
 
     fn insert_for(c: &CodeCache, name: &str, image_bytes: &[u8]) -> Arc<LinkedIfunc> {
         let (_, r) = CodeImage::decode_ref(image_bytes).unwrap();
-        c.insert(name, vec![], GotTable::empty(), Vec::new(), r.fingerprint(), false)
+        c.insert(name, vec![], GotTable::empty(), crate::vm::compile(Vec::new()), r.fingerprint(), false)
     }
 
     #[test]
@@ -208,7 +211,7 @@ mod tests {
             "f",
             image.imports.clone(),
             GotTable::empty(),
-            Vec::new(),
+            crate::vm::compile(Vec::new()),
             r.fingerprint(),
             false,
         );
@@ -236,7 +239,7 @@ mod tests {
         let (_, r) = CodeImage::decode_ref(&bytes).unwrap();
         let c = CodeCache::new();
         // fingerprint 0 ≠ r.fingerprint(): a stale entry under the name.
-        c.insert("f", vec![], GotTable::empty(), Vec::new(), 0, false);
+        c.insert("f", vec![], GotTable::empty(), crate::vm::compile(Vec::new()), 0, false);
         assert!(c.lookup_matching("f", &r).is_none());
         assert_eq!(c.hits.load(Ordering::Relaxed), 0);
         assert_eq!(c.misses.load(Ordering::Relaxed), 1);

@@ -9,9 +9,11 @@
 //! 2. **code-cache lookup** ([`super::cache::CodeCache::lookup_matching`]:
 //!    name + import table + code fingerprint),
 //! 3. on a miss, **GOT link** (resolve imports against the local symbol
-//!    table) and **verify** the bytecode; the verified program is cached
-//!    alongside the GOT so repeat injections skip the verifier entirely
-//!    — this is the crate's only verifier call site,
+//!    table), **verify** the bytecode, and **compile** the verified
+//!    program into its threaded form ([`crate::vm::compile`]); the
+//!    compiled program is cached alongside the GOT so repeat injections
+//!    skip decode-side work entirely — this is the crate's only verifier
+//!    and compiler call site,
 //! 4. **HLO ensure**: hand the shipped artifact to this thread's PJRT
 //!    runtime (memoized per thread — a cache entry created on another
 //!    thread still compiles here on first use),
@@ -19,13 +21,14 @@
 //! 6. `clear_cache` over the code section (§4.3's non-coherent I-cache),
 //! 7. **invoke** `main(payload, payload_size, target_args)`.
 //!
-//! The frame is either *in-place-mutable* (a ring slot: the TCVM mutates
-//! the payload where it landed) or *copy-on-execute* (an AM delivery
-//! buffer copied out by the adapter before this call). Either way the
-//! engine sees one mutable frame and returns a structured [`ExecOutcome`]
-//! — and because the engine owns the error path, callers can consume a
-//! rejected frame (decode/link/verify failure) exactly like an executed
-//! one instead of spinning on it.
+//! The frame is *in-place-mutable* on every default path: a ring slot
+//! (the TCVM mutates the payload where it landed), an AM eager slot
+//! (executed in place between signal acquire and release), or an AM
+//! rendezvous fetch buffer (owned by the receiver). The engine sees one
+//! mutable frame and returns a structured [`ExecOutcome`] — and because
+//! the engine owns the error path, callers can consume a rejected frame
+//! (decode/link/verify failure) exactly like an executed one instead of
+//! spinning on it.
 
 use crate::ucp::Context;
 use crate::vm;
@@ -43,8 +46,8 @@ pub struct ExecOutcome {
     pub ret: u64,
     /// Instructions retired by the TCVM.
     pub steps: u64,
-    /// Whether the verified-program cache satisfied this frame (link and
-    /// verify both skipped).
+    /// Whether the compiled-program cache satisfied this frame (link,
+    /// verify, and compile all skipped).
     pub cache_hit: bool,
     /// Bytes the injected function queued for the reply through the
     /// `reply_put` / `db_get` host symbols (empty when it pushed
@@ -55,8 +58,8 @@ pub struct ExecOutcome {
 }
 
 impl Context {
-    /// Run the decode → cache → link → verify → HLO-ensure → invoke
-    /// pipeline over one fully-arrived frame. `frame` spans header through
+    /// Run the decode → cache → link → verify → compile → HLO-ensure →
+    /// invoke pipeline over one fully-arrived frame. `frame` spans header through
     /// trailer and must match `header` (which the caller has already
     /// integrity-checked via [`Header::decode`]).
     pub fn execute_frame(
@@ -75,8 +78,8 @@ impl Context {
         let code_start = header.code_offset as usize;
         let code_end = code_start + header.code_len as usize;
 
-        // Stages 1-4: decode, cache lookup, (re)link + verify on miss,
-        // per-thread HLO ensure.
+        // Stages 1-4: decode, cache lookup, (re)link + verify + compile
+        // on miss, per-thread HLO ensure.
         let (linked, cache_hit) = {
             let (_slot, image) = CodeImage::decode_ref(&frame[code_start..code_end])?;
             let (entry, cache_hit) = match self.cache.lookup_matching(&header.name, &image) {
@@ -84,10 +87,11 @@ impl Context {
                 None => {
                     // First-seen type (or changed code/imports under the
                     // name): reconstruct the GOT from the local symbol
-                    // table and verify the shipped bytecode once.
+                    // table, then verify + compile the shipped bytecode
+                    // once.
                     let got =
                         self.symbols().table().resolve_iter(image.imports.iter().copied())?;
-                    let prog = vm::verify(image.vm_code, image.imports.len())?;
+                    let prog = vm::compile(vm::verify(image.vm_code, image.imports.len())?);
                     let owned: Vec<String> =
                         image.imports.iter().map(|s| s.to_string()).collect();
                     let entry = self.cache.insert(
@@ -131,8 +135,7 @@ impl Context {
         let pay_end = pay_start + header.payload_len as usize;
         target_args.hlo_name = linked.has_hlo.then(|| header.name.clone());
         target_args.reply.clear();
-        let outcome = vm::run(
-            &linked.prog,
+        let outcome = linked.prog.run(
             &linked.got,
             &mut frame[pay_start..pay_end],
             target_args,

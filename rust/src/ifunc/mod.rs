@@ -17,9 +17,9 @@
 //! Beyond Listing 1.1, the execution path is split the way §5.1 points:
 //!
 //! * [`engine`] — the *transport-independent* target half of
-//!   `ucp_poll_ifunc` (decode → cache → link → verify → HLO ensure →
-//!   invoke), shared by every delivery path and returning a structured
-//!   [`ExecOutcome`],
+//!   `ucp_poll_ifunc` (decode → cache → link → verify → compile → HLO
+//!   ensure → invoke), shared by every delivery path and returning a
+//!   structured [`ExecOutcome`],
 //! * [`transport`] — the sender half behind [`IfuncTransport`]:
 //!   [`RingTransport`] is the paper's §3.3 RDMA-PUT ring,
 //!   [`AmTransport`] is the §5.1 send-receive successor, and
@@ -42,8 +42,10 @@
 //!   `MultiReply` with per-worker attribution (the paper's closing
 //!   motivation — moving one query to every shard of data too big for
 //!   one device),
-//! * [`cache`] — §3.4's hash table, extended to cache the *verified
-//!   program* so repeat injections skip the bytecode verifier entirely.
+//! * [`cache`] — §3.4's hash table, extended to cache the *compiled
+//!   program* (threaded-dispatch form, see [`crate::vm::compile`]) so
+//!   repeat injections skip the bytecode verifier *and* the compiler
+//!   entirely.
 
 pub mod am_transport;
 pub mod builtin;

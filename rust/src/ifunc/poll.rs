@@ -10,7 +10,7 @@
 //! 3. `wait_mem` on the trailer signal (the `WFE` busy-wait of §3.2),
 //! 4. hand the frame — **in place in the ring** — to
 //!    [`crate::ucp::Context::execute_frame`] (decode → cache → link →
-//!    verify → HLO ensure → invoke; see `ifunc::engine`),
+//!    verify → compile → HLO ensure → invoke; see `ifunc::engine`),
 //! 5. consume: zero header + trailer words, advance the cursor — whether
 //!    the frame executed *or was rejected*. Any frame that passes header
 //!    validation is consumed even when it fails before invoke

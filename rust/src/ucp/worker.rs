@@ -24,6 +24,21 @@ use super::endpoint::Endpoint;
 /// An active-message handler. Receives `(am_id, payload)`.
 pub type AmHandler = Arc<dyn Fn(u16, &[u8]) + Send + Sync>;
 
+/// An active-message handler that takes the delivery buffer *mutably* —
+/// the zero-copy execute-in-place path. Eager deliveries hand the ring
+/// slot itself (exclusively owned between signal acquire and slot
+/// release); rendezvous deliveries hand the owned fetch buffer. Either
+/// way the handler runs without a per-frame copy.
+pub type AmHandlerMut = Arc<dyn Fn(u16, &mut [u8]) + Send + Sync>;
+
+/// Registered callback: shared (immutable payload view) or exclusive
+/// (mutable, in-place).
+#[derive(Clone)]
+enum AmCallback {
+    Shared(AmHandler),
+    Exclusive(AmHandlerMut),
+}
+
 static WORKER_IDS: AtomicU64 = AtomicU64::new(0);
 
 /// Receive-side state for one inbound endpoint.
@@ -43,7 +58,7 @@ struct AmRx {
 pub struct Worker {
     ctx: Arc<Context>,
     id: u64,
-    handlers: RwLock<HashMap<u16, AmHandler>>,
+    handlers: RwLock<HashMap<u16, AmCallback>>,
     rx: Mutex<Vec<AmRx>>,
     /// Messages processed over the worker lifetime (telemetry).
     pub am_processed: AtomicU64,
@@ -75,7 +90,19 @@ impl Worker {
     where
         F: Fn(u16, &[u8]) + Send + Sync + 'static,
     {
-        self.handlers.write().unwrap().insert(id, Arc::new(f));
+        self.handlers.write().unwrap().insert(id, AmCallback::Shared(Arc::new(f)));
+    }
+
+    /// Register a *mutable* AM handler for `id` — the zero-copy variant:
+    /// eager frames execute in place in the ring slot, rendezvous frames
+    /// in the owned fetch buffer. This is what the ifunc AM adapter uses
+    /// so the TCVM can mutate the payload where it landed (the same
+    /// in-place contract the RDMA-PUT ring path has always had).
+    pub fn set_am_handler_mut<F>(&self, id: u16, f: F)
+    where
+        F: Fn(u16, &mut [u8]) + Send + Sync + 'static,
+    {
+        self.handlers.write().unwrap().insert(id, AmCallback::Exclusive(Arc::new(f)));
     }
 
     /// Connect this worker to `peer`, returning the endpoint. Wireup
@@ -142,32 +169,43 @@ impl Worker {
             }
             let data_off = sig_off - len;
             let handler = self.handlers.read().unwrap().get(&am_id).cloned();
-            {
-                let slot_bytes = rx.ring.local_slice();
-                let data = &slot_bytes[data_off..sig_off];
-                match proto {
-                    AmProto::EagerShort | AmProto::EagerBcopy => {
-                        if let Some(h) = &handler {
-                            h(am_id, data);
-                        }
+            match proto {
+                // Eager: the slot is exclusively this receiver's between
+                // the signal acquire above and the release store below,
+                // so an Exclusive handler executes *in place* in the ring
+                // slot — no per-frame copy on the default ifunc path.
+                AmProto::EagerShort | AmProto::EagerBcopy => match &handler {
+                    Some(AmCallback::Shared(h)) => {
+                        h(am_id, &rx.ring.local_slice()[data_off..sig_off]);
                     }
-                    AmProto::Rndv => {
-                        // Pull the payload from the sender's registered
-                        // buffer in `rndv_frag` pieces (UCX rndv pipeline),
-                        // then ack so the sender can release it.
-                        match self.rndv_fetch(rx, data) {
-                            Ok(buf) => {
-                                if let Some(h) = &handler {
-                                    h(am_id, &buf);
-                                }
-                                let _ = rx.back_qp.atomic_add_nbi(
-                                    rx.credit_rkey,
-                                    CREDIT_RNDV_ACK_OFF,
-                                    1,
-                                );
+                    Some(AmCallback::Exclusive(h)) => {
+                        h(am_id, &mut rx.ring.local_slice_mut()[data_off..sig_off]);
+                    }
+                    None => {}
+                },
+                AmProto::Rndv => {
+                    // Pull the payload from the sender's registered
+                    // buffer in `rndv_frag` pieces (UCX rndv pipeline),
+                    // then ack so the sender can release it. The fetch
+                    // buffer is owned, so the mutable path is free.
+                    let fetched = {
+                        let desc = &rx.ring.local_slice()[data_off..sig_off];
+                        self.rndv_fetch(rx, desc)
+                    };
+                    match fetched {
+                        Ok(mut buf) => {
+                            match &handler {
+                                Some(AmCallback::Shared(h)) => h(am_id, &buf),
+                                Some(AmCallback::Exclusive(h)) => h(am_id, &mut buf),
+                                None => {}
                             }
-                            Err(e) => log::error!("am rndv fetch failed: {e}"),
+                            let _ = rx.back_qp.atomic_add_nbi(
+                                rx.credit_rkey,
+                                CREDIT_RNDV_ACK_OFF,
+                                1,
+                            );
                         }
+                        Err(e) => log::error!("am rndv fetch failed: {e}"),
                     }
                 }
             }

@@ -1,0 +1,972 @@
+//! Pre-compiled TCVM programs — direct-threaded dispatch for the hot path.
+//!
+//! The reference interpreter ([`super::interp`]) pays, per retired
+//! instruction: a fuel check, a bounds-checked fetch, an opcode `match`,
+//! and `as usize` casts on every operand. On the cache-hit invoke path
+//! (the steady state since the §3.4 code cache) those cycles dominate
+//! small-frame latency. This module lowers a *verified* program once —
+//! at the same point the verifier runs, so the result is cached in
+//! [`crate::ifunc::cache::CodeCache`] alongside the GOT — into a
+//! [`CompiledProgram`] whose ops carry:
+//!
+//! * a **pre-resolved handler function pointer** (direct-threaded-style
+//!   dispatch: no opcode decode per step, and memory ops are specialized
+//!   per space so the payload/scratch branch is gone too),
+//! * **pre-cast operand indices** and pre-extended/pre-shifted
+//!   immediates (jump targets are remapped to compiled-op indices),
+//! * **superinstruction fusion** over the hot pairs of the existing
+//!   workloads: `sltu+jz` → compare-branch, `ldb+add` → load-accumulate,
+//!   `addi+jmp` → loop tail, `ldi+ldih` (same register) → a
+//!   constant-folded 64-bit load. A pair fuses only when the second half
+//!   is not a jump target — a branch landing between the halves must see
+//!   unfused semantics,
+//! * **block-level fuel**: basic-block costs are computed at compile
+//!   time and charged once at block entry instead of per instruction.
+//!   Because a block either fully retires or faults, the retired-step
+//!   count at `HALT` is identical to the reference. When the remaining
+//!   fuel cannot cover a block, execution delegates to the reference
+//!   stepper ([`super::interp::run_from`]) from the block's source pc,
+//!   so fuel faults report the exact instruction — a block never
+//!   over-runs the budget,
+//! * a precomputed `uses_scratch` flag (the reference re-scans the whole
+//!   program for scratch-space memory ops on **every** invocation).
+//!
+//! This is the rbpf pattern: one verifier, a fast engine and a reference
+//! interpreter behind it, kept conformant by differential testing
+//! (`rust/tests/prop.rs`) — fault *messages* included, byte for byte.
+
+use std::any::Any;
+
+use super::got::{GotTable, HostCtx};
+use super::interp::{self, VmConfig, VmOutcome};
+use super::isa::{Instr, Op, NUM_REGS, SPACE_PAYLOAD};
+use crate::{Error, Result};
+
+/// Sentinel "next ip" returned by the `HALT` handler.
+const HALT: usize = usize::MAX;
+
+/// Live machine state threaded through the op handlers.
+struct Machine<'a> {
+    regs: [u64; NUM_REGS],
+    fuel: u64,
+    payload: &'a mut [u8],
+    scratch: &'a mut [u8],
+    user: &'a mut dyn Any,
+    got: &'a GotTable,
+}
+
+/// An op handler: executes one compiled op and returns the next op index
+/// ([`HALT`] to stop). Faults carry the *source* pc via
+/// [`CompiledOp::orig_pc`], so messages match the reference exactly.
+type Handler = fn(&CompiledOp, usize, &mut Machine<'_>) -> Result<usize>;
+
+/// One pre-decoded op: handler pointer plus pre-cast operands. `d`/`e`/
+/// `f` and `imm2` carry the second half of a fused pair.
+#[derive(Clone, Copy)]
+pub struct CompiledOp {
+    handler: Handler,
+    a: usize,
+    b: usize,
+    c: usize,
+    d: usize,
+    e: usize,
+    f: usize,
+    /// Pre-extended immediate: value, memory offset, GOT slot, or (for
+    /// jumps) the *compiled-op index* of the target.
+    imm: u64,
+    /// Fused-pair secondary immediate (always the branch target).
+    imm2: u64,
+    /// Source pc of the (first) original instruction — fault attribution.
+    orig_pc: u32,
+    /// Fuel for the whole basic block; nonzero only on block leaders.
+    block_cost: u32,
+    /// Original instructions this op retires (2 for fused pairs).
+    retire: u32,
+}
+
+impl CompiledOp {
+    fn new(handler: Handler, orig_pc: u32, retire: u32) -> CompiledOp {
+        CompiledOp {
+            handler,
+            a: 0,
+            b: 0,
+            c: 0,
+            d: 0,
+            e: 0,
+            f: 0,
+            imm: 0,
+            imm2: 0,
+            orig_pc,
+            block_cost: 0,
+            retire,
+        }
+    }
+}
+
+/// A verified program lowered to threaded ops. Built once per
+/// (name, code) by [`compile`] and cached; [`CompiledProgram::run`] is
+/// the production execute path.
+#[derive(Clone)]
+pub struct CompiledProgram {
+    /// Threaded ops, terminated by a trap op that raises the
+    /// fell-off-code-end / fuel-exhausted fault exactly like the
+    /// reference does at `pc == len`.
+    ops: Vec<CompiledOp>,
+    /// The verified source, kept for the precise-fuel fallback (and for
+    /// differential runs against the reference interpreter).
+    src: Vec<Instr>,
+    uses_scratch: bool,
+    fused: usize,
+    blocks: usize,
+}
+
+/// Lower a verified program with superinstruction fusion enabled (the
+/// production configuration).
+pub fn compile(src: Vec<Instr>) -> CompiledProgram {
+    compile_with(src, true)
+}
+
+/// Lower without the fusion pass — the "threaded, no fusion" column of
+/// Abl J, isolating what dispatch vs fusion each buy.
+pub fn compile_unfused(src: Vec<Instr>) -> CompiledProgram {
+    compile_with(src, false)
+}
+
+fn compile_with(src: Vec<Instr>, fuse: bool) -> CompiledProgram {
+    let n = src.len();
+
+    // Basic-block leaders: entry, every jump target, and the successor
+    // of every control-flow instruction.
+    let mut leader = vec![false; n];
+    if n > 0 {
+        leader[0] = true;
+    }
+    for (pc, i) in src.iter().enumerate() {
+        match i.op {
+            Op::Jmp | Op::Jz | Op::Jnz => {
+                let t = i.imm as usize;
+                if t < n {
+                    leader[t] = true;
+                }
+                if pc + 1 < n {
+                    leader[pc + 1] = true;
+                }
+            }
+            Op::Halt => {
+                if pc + 1 < n {
+                    leader[pc + 1] = true;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // Fusion pass: greedy left-to-right over adjacent pairs inside a
+    // block. The second half must not be a leader — a jump landing
+    // between the halves has to execute it alone.
+    let mut fused_with_next = vec![false; n];
+    let mut fused = 0usize;
+    if fuse {
+        let mut pc = 0;
+        while pc + 1 < n {
+            if !leader[pc + 1] && fusible(&src[pc], &src[pc + 1]) {
+                fused_with_next[pc] = true;
+                fused += 1;
+                pc += 2;
+            } else {
+                pc += 1;
+            }
+        }
+    }
+
+    // Source pc → compiled-op index (fusion shifts indices). `map[n]` is
+    // the trailing trap op, where a fall off the code end lands.
+    let mut map = vec![0u32; n + 1];
+    let mut idx = 0u32;
+    let mut pc = 0;
+    while pc < n {
+        map[pc] = idx;
+        if fused_with_next[pc] {
+            map[pc + 1] = idx;
+            pc += 2;
+        } else {
+            pc += 1;
+        }
+        idx += 1;
+    }
+    map[n] = idx;
+
+    // Emit.
+    let mut ops = Vec::with_capacity(idx as usize + 1);
+    let mut pc = 0;
+    while pc < n {
+        if fused_with_next[pc] {
+            ops.push(emit_fused(&src[pc], &src[pc + 1], pc as u32, &map, n));
+            pc += 2;
+        } else {
+            ops.push(emit_one(&src[pc], pc as u32, &map, n));
+            pc += 1;
+        }
+    }
+    ops.push(CompiledOp::new(op_trap, n as u32, 0));
+
+    // Block fuel: each leader op carries the retired-instruction count of
+    // its whole block (the trap op is unreachable fall-through, cost 0).
+    let last = ops.len() - 1;
+    let mut blocks = 0usize;
+    let mut k = 0;
+    while k < last {
+        let start = k;
+        let mut cost = 0u32;
+        loop {
+            cost += ops[k].retire;
+            k += 1;
+            if k >= last || leader[ops[k].orig_pc as usize] {
+                break;
+            }
+        }
+        ops[start].block_cost = cost;
+        blocks += 1;
+    }
+
+    let uses_scratch = src.iter().any(Instr::touches_scratch);
+    CompiledProgram { ops, src, uses_scratch, fused, blocks }
+}
+
+fn fusible(first: &Instr, second: &Instr) -> bool {
+    match (first.op, second.op) {
+        (Op::Sltu, Op::Jz) | (Op::Ldb, Op::Add) | (Op::Addi, Op::Jmp) => true,
+        // ldi64: only when both halves write the same register — the
+        // pair constant-folds to one 64-bit load.
+        (Op::Ldi, Op::Ldih) => first.a == second.a,
+        _ => false,
+    }
+}
+
+/// Remap a source jump target to its compiled-op index. Verified targets
+/// are `< n`; the clamp keeps `compile` total on unverified input (a
+/// clamped jump lands on the trap op — the same fell-off-end fault the
+/// reference raises at `pc == len`).
+fn target(imm: u32, map: &[u32], n: usize) -> u64 {
+    map[(imm as usize).min(n)] as u64
+}
+
+fn emit_one(i: &Instr, pc: u32, map: &[u32], n: usize) -> CompiledOp {
+    let (a, b, c) = (i.a as usize, i.b as usize, i.c as usize);
+    let imm = i.imm as u64;
+    let base = |h: Handler| CompiledOp::new(h, pc, 1);
+    match i.op {
+        Op::Halt => base(op_halt),
+        Op::Nop => base(op_nop),
+        Op::Ldi => CompiledOp { a, imm, ..base(op_ldi) },
+        Op::Ldih => CompiledOp { a, imm: imm << 32, ..base(op_ldih) },
+        Op::Mov => CompiledOp { a, b, ..base(op_mov) },
+        Op::Add => CompiledOp { a, b, c, ..base(op_add) },
+        Op::Sub => CompiledOp { a, b, c, ..base(op_sub) },
+        Op::Mul => CompiledOp { a, b, c, ..base(op_mul) },
+        Op::Divu => CompiledOp { a, b, c, ..base(op_divu) },
+        Op::And => CompiledOp { a, b, c, ..base(op_and) },
+        Op::Or => CompiledOp { a, b, c, ..base(op_or) },
+        Op::Xor => CompiledOp { a, b, c, ..base(op_xor) },
+        Op::Shl => CompiledOp { a, b, c, ..base(op_shl) },
+        Op::Shr => CompiledOp { a, b, c, ..base(op_shr) },
+        Op::Addi => CompiledOp { a, b, imm, ..base(op_addi) },
+        Op::Sltu => CompiledOp { a, b, c, ..base(op_sltu) },
+        Op::Eq => CompiledOp { a, b, c, ..base(op_eq) },
+        Op::Jmp => CompiledOp { imm: target(i.imm, map, n), ..base(op_jmp) },
+        Op::Jz => CompiledOp { a, imm: target(i.imm, map, n), ..base(op_jz) },
+        Op::Jnz => CompiledOp { a, imm: target(i.imm, map, n), ..base(op_jnz) },
+        Op::Call => CompiledOp { imm, ..base(op_call) },
+        Op::Ldb => CompiledOp {
+            a,
+            b,
+            c,
+            imm,
+            ..base(if i.c == SPACE_PAYLOAD { op_ldb_pay } else { op_ldb_scr })
+        },
+        Op::Ldw => CompiledOp {
+            a,
+            b,
+            c,
+            imm,
+            ..base(if i.c == SPACE_PAYLOAD { op_ldw_pay } else { op_ldw_scr })
+        },
+        Op::Stb => CompiledOp {
+            a,
+            b,
+            c,
+            imm,
+            ..base(if i.c == SPACE_PAYLOAD { op_stb_pay } else { op_stb_scr })
+        },
+        Op::Stw => CompiledOp {
+            a,
+            b,
+            c,
+            imm,
+            ..base(if i.c == SPACE_PAYLOAD { op_stw_pay } else { op_stw_scr })
+        },
+        Op::Paylen => CompiledOp { a, ..base(op_paylen) },
+    }
+}
+
+fn emit_fused(first: &Instr, second: &Instr, pc: u32, map: &[u32], n: usize) -> CompiledOp {
+    let base = |h: Handler| CompiledOp::new(h, pc, 2);
+    match (first.op, second.op) {
+        (Op::Sltu, Op::Jz) => CompiledOp {
+            a: first.a as usize,
+            b: first.b as usize,
+            c: first.c as usize,
+            d: second.a as usize,
+            imm2: target(second.imm, map, n),
+            ..base(op_sltu_jz)
+        },
+        (Op::Ldb, Op::Add) => CompiledOp {
+            a: first.a as usize,
+            b: first.b as usize,
+            c: first.c as usize,
+            imm: first.imm as u64,
+            d: second.a as usize,
+            e: second.b as usize,
+            f: second.c as usize,
+            ..base(if first.c == SPACE_PAYLOAD { op_ldb_add_pay } else { op_ldb_add_scr })
+        },
+        (Op::Addi, Op::Jmp) => CompiledOp {
+            a: first.a as usize,
+            b: first.b as usize,
+            imm: first.imm as u64,
+            imm2: target(second.imm, map, n),
+            ..base(op_addi_jmp)
+        },
+        // Constant-folded ldi64 — reuses the plain ldi handler.
+        (Op::Ldi, Op::Ldih) => CompiledOp {
+            a: first.a as usize,
+            imm: ((second.imm as u64) << 32) | first.imm as u64,
+            ..base(op_ldi)
+        },
+        _ => unreachable!("fusible() admitted a non-fusible pair"),
+    }
+}
+
+impl CompiledProgram {
+    /// Execute against `payload` in place — the drop-in replacement for
+    /// the reference interpreter's `run`, with identical outcomes
+    /// (return value, retired-step count, fault kind *and* message).
+    pub fn run(
+        &self,
+        got: &GotTable,
+        payload: &mut [u8],
+        user: &mut dyn Any,
+        cfg: &VmConfig,
+    ) -> Result<VmOutcome> {
+        let mut scratch =
+            if self.uses_scratch { vec![0u8; cfg.scratch_bytes] } else { Vec::new() };
+        let mut m = Machine {
+            regs: [0u64; NUM_REGS],
+            fuel: cfg.fuel,
+            payload,
+            scratch: &mut scratch,
+            user,
+            got,
+        };
+        // Entry convention: r1 = payload length (see interp).
+        m.regs[1] = m.payload.len() as u64;
+        let mut ip = 0usize;
+        loop {
+            let op = &self.ops[ip];
+            if op.block_cost != 0 {
+                let cost = op.block_cost as u64;
+                if m.fuel < cost {
+                    // Fuel runs dry inside this block: delegate to the
+                    // reference stepper from the block's source pc so
+                    // the fault carries the exact per-instruction pc.
+                    // The machine state at a block boundary is identical
+                    // to the reference's (charged == retired so far).
+                    let done = cfg.fuel - m.fuel;
+                    let (ret, steps) = interp::run_from(
+                        &self.src,
+                        m.got,
+                        &mut *m.payload,
+                        &mut *m.scratch,
+                        &mut *m.user,
+                        &mut m.regs,
+                        op.orig_pc as usize,
+                        m.fuel,
+                    )?;
+                    return Ok(VmOutcome { ret, steps: done + steps });
+                }
+                m.fuel -= cost;
+            }
+            ip = (op.handler)(op, ip, &mut m)?;
+            if ip == HALT {
+                // Every entered block fully retired, so charged == steps.
+                return Ok(VmOutcome { ret: m.regs[0], steps: cfg.fuel - m.fuel });
+            }
+        }
+    }
+
+    /// The verified source program this was compiled from.
+    pub fn src(&self) -> &[Instr] {
+        &self.src
+    }
+
+    /// Superinstruction pairs the fusion pass formed.
+    pub fn fused_pairs(&self) -> usize {
+        self.fused
+    }
+
+    /// Basic blocks (fuel-charge points).
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+
+    /// Whether any op touches the scratch space (precomputed at compile
+    /// time; decides the per-invocation scratch allocation).
+    pub fn uses_scratch(&self) -> bool {
+        self.uses_scratch
+    }
+
+    /// Compiled ops, excluding the trailing trap.
+    pub fn op_count(&self) -> usize {
+        self.ops.len() - 1
+    }
+}
+
+// ---- op handlers ---------------------------------------------------------
+
+fn op_halt(_o: &CompiledOp, _ip: usize, _m: &mut Machine<'_>) -> Result<usize> {
+    Ok(HALT)
+}
+
+fn op_nop(_o: &CompiledOp, ip: usize, _m: &mut Machine<'_>) -> Result<usize> {
+    Ok(ip + 1)
+}
+
+fn op_ldi(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = o.imm;
+    Ok(ip + 1)
+}
+
+fn op_ldih(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = o.imm | (m.regs[o.a] & 0xFFFF_FFFF);
+    Ok(ip + 1)
+}
+
+fn op_mov(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.regs[o.b];
+    Ok(ip + 1)
+}
+
+fn op_add(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.regs[o.b].wrapping_add(m.regs[o.c]);
+    Ok(ip + 1)
+}
+
+fn op_sub(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.regs[o.b].wrapping_sub(m.regs[o.c]);
+    Ok(ip + 1)
+}
+
+fn op_mul(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.regs[o.b].wrapping_mul(m.regs[o.c]);
+    Ok(ip + 1)
+}
+
+fn op_divu(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let d = m.regs[o.c];
+    if d == 0 {
+        return Err(Error::VmFault(format!("divide by zero at pc {}", o.orig_pc)));
+    }
+    m.regs[o.a] = m.regs[o.b] / d;
+    Ok(ip + 1)
+}
+
+fn op_and(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.regs[o.b] & m.regs[o.c];
+    Ok(ip + 1)
+}
+
+fn op_or(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.regs[o.b] | m.regs[o.c];
+    Ok(ip + 1)
+}
+
+fn op_xor(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.regs[o.b] ^ m.regs[o.c];
+    Ok(ip + 1)
+}
+
+fn op_shl(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.regs[o.b] << (m.regs[o.c] & 63);
+    Ok(ip + 1)
+}
+
+fn op_shr(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.regs[o.b] >> (m.regs[o.c] & 63);
+    Ok(ip + 1)
+}
+
+fn op_addi(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.regs[o.b].wrapping_add(o.imm);
+    Ok(ip + 1)
+}
+
+fn op_sltu(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = (m.regs[o.b] < m.regs[o.c]) as u64;
+    Ok(ip + 1)
+}
+
+fn op_eq(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = (m.regs[o.b] == m.regs[o.c]) as u64;
+    Ok(ip + 1)
+}
+
+fn op_jmp(o: &CompiledOp, _ip: usize, _m: &mut Machine<'_>) -> Result<usize> {
+    Ok(o.imm as usize)
+}
+
+fn op_jz(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    Ok(if m.regs[o.a] == 0 { o.imm as usize } else { ip + 1 })
+}
+
+fn op_jnz(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    Ok(if m.regs[o.a] != 0 { o.imm as usize } else { ip + 1 })
+}
+
+fn op_call(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let got = m.got;
+    let f = got
+        .slot(o.imm as usize)
+        .ok_or_else(|| Error::VmFault(format!("GOT slot {} not linked", o.imm)))?;
+    let args = [m.regs[1], m.regs[2], m.regs[3], m.regs[4]];
+    let mut ctx =
+        HostCtx { payload: &mut *m.payload, scratch: &mut *m.scratch, user: &mut *m.user };
+    m.regs[0] = f(&mut ctx, args).map_err(Error::VmFault)?;
+    Ok(ip + 1)
+}
+
+fn op_paylen(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.payload.len() as u64;
+    Ok(ip + 1)
+}
+
+/// Fall-off-the-code-end landing pad. Fuel is checked first, matching the
+/// reference's loop-top order at `pc == len`.
+fn op_trap(o: &CompiledOp, _ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    Err(Error::VmFault(if m.fuel == 0 {
+        format!("fuel exhausted at pc {}", o.orig_pc)
+    } else {
+        format!("execution fell off code end at pc {}", o.orig_pc)
+    }))
+}
+
+// Memory ops, specialized per space. Fault messages mirror the reference
+// byte for byte (`o.c` keeps the original space selector, `o.orig_pc` the
+// faulting instruction's source pc).
+
+fn mem_fault(store: bool, addr: usize, width: usize, space: usize, len: usize, pc: u32) -> Error {
+    Error::VmFault(format!(
+        "oob {} access at {addr}+{width} (space {space} of {len} bytes, pc {pc})",
+        if store { "store" } else { "load" },
+    ))
+}
+
+#[inline(always)]
+fn load_b(mem: &[u8], addr: usize, space: usize, pc: u32) -> Result<u64> {
+    match mem.get(addr) {
+        Some(&v) => Ok(v as u64),
+        None => Err(mem_fault(false, addr, 1, space, mem.len(), pc)),
+    }
+}
+
+#[inline(always)]
+fn load_w(mem: &[u8], addr: usize, space: usize, pc: u32) -> Result<u64> {
+    match addr.checked_add(8).and_then(|end| mem.get(addr..end)) {
+        Some(bytes) => Ok(u64::from_le_bytes(bytes.try_into().unwrap())),
+        None => Err(mem_fault(false, addr, 8, space, mem.len(), pc)),
+    }
+}
+
+#[inline(always)]
+fn store_b(mem: &mut [u8], addr: usize, v: u64, space: usize, pc: u32) -> Result<()> {
+    let len = mem.len();
+    match mem.get_mut(addr) {
+        Some(slot) => {
+            *slot = v as u8;
+            Ok(())
+        }
+        None => Err(mem_fault(true, addr, 1, space, len, pc)),
+    }
+}
+
+#[inline(always)]
+fn store_w(mem: &mut [u8], addr: usize, v: u64, space: usize, pc: u32) -> Result<()> {
+    let len = mem.len();
+    match addr.checked_add(8).and_then(|end| mem.get_mut(addr..end)) {
+        Some(bytes) => {
+            bytes.copy_from_slice(&v.to_le_bytes());
+            Ok(())
+        }
+        None => Err(mem_fault(true, addr, 8, space, len, pc)),
+    }
+}
+
+fn op_ldb_pay(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = load_b(m.payload, addr, o.c, o.orig_pc)?;
+    Ok(ip + 1)
+}
+
+fn op_ldb_scr(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = load_b(m.scratch, addr, o.c, o.orig_pc)?;
+    Ok(ip + 1)
+}
+
+fn op_ldw_pay(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = load_w(m.payload, addr, o.c, o.orig_pc)?;
+    Ok(ip + 1)
+}
+
+fn op_ldw_scr(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = load_w(m.scratch, addr, o.c, o.orig_pc)?;
+    Ok(ip + 1)
+}
+
+fn op_stb_pay(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    store_b(m.payload, addr, m.regs[o.a], o.c, o.orig_pc)?;
+    Ok(ip + 1)
+}
+
+fn op_stb_scr(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    store_b(m.scratch, addr, m.regs[o.a], o.c, o.orig_pc)?;
+    Ok(ip + 1)
+}
+
+fn op_stw_pay(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    store_w(m.payload, addr, m.regs[o.a], o.c, o.orig_pc)?;
+    Ok(ip + 1)
+}
+
+fn op_stw_scr(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    store_w(m.scratch, addr, m.regs[o.a], o.c, o.orig_pc)?;
+    Ok(ip + 1)
+}
+
+// Superinstruction handlers.
+
+fn op_sltu_jz(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = (m.regs[o.b] < m.regs[o.c]) as u64;
+    Ok(if m.regs[o.d] == 0 { o.imm2 as usize } else { ip + 1 })
+}
+
+fn op_ldb_add_pay(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = load_b(m.payload, addr, o.c, o.orig_pc)?;
+    m.regs[o.d] = m.regs[o.e].wrapping_add(m.regs[o.f]);
+    Ok(ip + 1)
+}
+
+fn op_ldb_add_scr(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = load_b(m.scratch, addr, o.c, o.orig_pc)?;
+    m.regs[o.d] = m.regs[o.e].wrapping_add(m.regs[o.f]);
+    Ok(ip + 1)
+}
+
+fn op_addi_jmp(o: &CompiledOp, _ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    m.regs[o.a] = m.regs[o.b].wrapping_add(o.imm);
+    Ok(o.imm2 as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::got::SymbolTable;
+    use crate::vm::interp::run_reference;
+    use crate::vm::verify::verify;
+    use crate::vm::Assembler;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    fn ins(op: Op, a: u8, b: u8, c: u8, imm: u32) -> Instr {
+        Instr { op, a, b, c, imm }
+    }
+
+    /// Encode raw instructions and push them through the verifier, so the
+    /// tests exercise exactly what production compiles.
+    fn verified(instrs: &[Instr], n_imports: usize) -> Vec<Instr> {
+        let bytes: Vec<u8> = instrs.iter().flat_map(|i| i.encode()).collect();
+        verify(&bytes, n_imports).expect("test program must verify")
+    }
+
+    /// Run both engines on copies of `payload` and assert bit-identical
+    /// results: outcome or full fault message, plus final payload bytes.
+    fn assert_conformant(
+        prog: &[Instr],
+        got: &GotTable,
+        payload: &[u8],
+        cfg: &VmConfig,
+    ) -> Option<VmOutcome> {
+        let compiled = compile(prog.to_vec());
+        let mut p_ref = payload.to_vec();
+        let mut p_cmp = payload.to_vec();
+        let r = run_reference(prog, got, &mut p_ref, &mut (), cfg);
+        let c = compiled.run(got, &mut p_cmp, &mut (), cfg);
+        assert_eq!(p_ref, p_cmp, "payload mutation diverged");
+        match (r, c) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a, b, "outcome diverged");
+                Some(a)
+            }
+            (Err(a), Err(b)) => {
+                assert_eq!(a.to_string(), b.to_string(), "fault diverged");
+                None
+            }
+            (a, b) => panic!("engines disagree: reference {a:?} vs compiled {b:?}"),
+        }
+    }
+
+    /// The checksum loop body (same shape as ChecksumIfunc / the interp
+    /// loop test): all three control-flow fusion patterns in one block.
+    fn checksum_prog() -> Vec<Instr> {
+        verified(
+            &[
+                ins(Op::Paylen, 3, 0, 0, 0),
+                ins(Op::Ldi, 2, 0, 0, 0),
+                ins(Op::Ldi, 0, 0, 0, 0),
+                ins(Op::Sltu, 5, 2, 3, 0), // top
+                ins(Op::Jz, 5, 0, 0, 9),
+                ins(Op::Ldb, 6, 2, 0, 0),
+                ins(Op::Add, 0, 0, 6, 0),
+                ins(Op::Addi, 2, 2, 0, 1),
+                ins(Op::Jmp, 0, 0, 0, 3),
+                ins(Op::Halt, 0, 0, 0, 0), // done
+            ],
+            0,
+        )
+    }
+
+    #[test]
+    fn checksum_loop_fuses_all_three_pairs() {
+        let prog = checksum_prog();
+        let compiled = compile(prog.clone());
+        // sltu+jz, ldb+add, addi+jmp — and nothing else.
+        assert_eq!(compiled.fused_pairs(), 3);
+        assert_eq!(compiled.op_count(), 10 - 3);
+        // Blocks: [0..3), [3..5) fused, [5..9) fused×2, [9].
+        assert_eq!(compiled.blocks(), 4);
+        let got = GotTable::empty();
+        let out =
+            assert_conformant(&prog, &got, &[1, 2, 3, 4, 5], &VmConfig::default()).unwrap();
+        assert_eq!(out.ret, 15);
+        assert_eq!(out.steps, 36, "3 entry + 5 iters of 6 + final test of 2 + halt");
+    }
+
+    #[test]
+    fn unfused_compile_matches_too() {
+        let prog = checksum_prog();
+        let unfused = compile_unfused(prog.clone());
+        assert_eq!(unfused.fused_pairs(), 0);
+        assert_eq!(unfused.op_count(), 10);
+        let got = GotTable::empty();
+        let out = unfused
+            .run(&got, &mut [9u8, 9, 9], &mut (), &VmConfig::default())
+            .unwrap();
+        assert_eq!(out.ret, 27);
+        assert_eq!(out.steps, 3 + 3 * 6 + 2 + 1);
+    }
+
+    #[test]
+    fn branch_target_between_pair_halves_blocks_fusion() {
+        // pc 0 jumps straight to pc 3 — the second half of the would-be
+        // ldb+add pair at (2,3). Fusion must not form, and entry at the
+        // add must see r6 untouched by the ldb.
+        let prog = verified(
+            &[
+                ins(Op::Jz, 1, 0, 0, 3), // r1 = paylen: empty payload jumps
+                ins(Op::Ldi, 6, 0, 0, 5),
+                ins(Op::Ldb, 6, 0, 0, 0), // r6 = payload[r0]
+                ins(Op::Add, 0, 6, 6, 0), // r0 = 2 * r6
+                ins(Op::Halt, 0, 0, 0, 0),
+            ],
+            0,
+        );
+        let compiled = compile(prog.clone());
+        assert_eq!(compiled.fused_pairs(), 0, "pc 3 is a jump target");
+        let got = GotTable::empty();
+        // Fall-through path: r6 = payload[0] = 21 → r0 = 42.
+        let out = assert_conformant(&prog, &got, &[21], &VmConfig::default()).unwrap();
+        assert_eq!(out.ret, 42);
+        // Jump path (empty payload): lands on the bare add, r6 = 0.
+        let out = assert_conformant(&prog, &got, &[], &VmConfig::default()).unwrap();
+        assert_eq!(out.ret, 0);
+
+        // Control: the same body without the entry branch does fuse.
+        let control = verified(
+            &[
+                ins(Op::Ldi, 6, 0, 0, 5),
+                ins(Op::Ldb, 6, 0, 0, 0),
+                ins(Op::Add, 0, 6, 6, 0),
+                ins(Op::Halt, 0, 0, 0, 0),
+            ],
+            0,
+        );
+        assert_eq!(compile(control.clone()).fused_pairs(), 1);
+        let out = assert_conformant(&control, &got, &[21], &VmConfig::default()).unwrap();
+        assert_eq!(out.ret, 42);
+    }
+
+    #[test]
+    fn ldi64_fuses_only_on_same_register() {
+        // Assembler ldi64 = ldi + ldih on one register: constant-folds.
+        let mut a = Assembler::new();
+        a.ldi64(2, 0x1111_2222_3333_4444);
+        a.mov(0, 2);
+        a.halt();
+        let (code, imports) = a.assemble();
+        let prog = verify(&code, imports.len()).unwrap();
+        let compiled = compile(prog.clone());
+        assert_eq!(compiled.fused_pairs(), 1);
+        let got = GotTable::empty();
+        let out = assert_conformant(&prog, &got, &[], &VmConfig::default()).unwrap();
+        assert_eq!(out.ret, 0x1111_2222_3333_4444);
+
+        // Different destination registers: NOT a ldi64, must not fuse.
+        let split = verified(
+            &[
+                ins(Op::Ldi, 1, 0, 0, 0xAAAA),
+                ins(Op::Ldih, 2, 0, 0, 0xBBBB),
+                ins(Op::Mov, 0, 2, 0, 0),
+                ins(Op::Halt, 0, 0, 0, 0),
+            ],
+            0,
+        );
+        assert_eq!(compile(split.clone()).fused_pairs(), 0);
+        let out = assert_conformant(&split, &got, &[], &VmConfig::default()).unwrap();
+        assert_eq!(out.ret, 0xBBBB_u64 << 32);
+    }
+
+    /// Block-fuel boundary sweep: for every fuel value through the whole
+    /// run of the checksum loop, the compiled engine must return the
+    /// *identical* result — same outcome, or a fuel fault with the same
+    /// per-instruction pc the reference reports (this is what the
+    /// precise-fallback delegation guarantees).
+    #[test]
+    fn fuel_exhaustion_mid_block_reports_reference_pc() {
+        let prog = checksum_prog();
+        let got = GotTable::empty();
+        let payload = [1u8, 2, 3, 4, 5];
+        let full = assert_conformant(&prog, &got, &payload, &VmConfig::default())
+            .unwrap()
+            .steps;
+        assert_eq!(full, 36);
+        for fuel in 0..=full + 2 {
+            let cfg = VmConfig { fuel, scratch_bytes: 0 };
+            let out = assert_conformant(&prog, &got, &payload, &cfg);
+            // Exactly the runs with the full budget (or more) succeed —
+            // a block never over-runs the budget.
+            assert_eq!(out.is_some(), fuel >= full, "fuel {fuel}");
+        }
+    }
+
+    /// Side-effect accounting under partial fuel: a GOT call inside the
+    /// loop body must have fired exactly as many times under the
+    /// compiled engine as under the reference, for every budget. Blocks
+    /// are charged up front, but effects only happen for instructions
+    /// that actually retire.
+    #[test]
+    fn partial_fuel_retires_identical_side_effects() {
+        let syms = SymbolTable::new();
+        let n_ref = Arc::new(AtomicU64::new(0));
+        let n_cmp = Arc::new(AtomicU64::new(0));
+        let (a1, a2) = (n_ref.clone(), n_cmp.clone());
+        syms.install_fn("tick_ref", move |_, _| Ok(a1.fetch_add(1, Ordering::Relaxed)));
+        syms.install_fn("tick_cmp", move |_, _| Ok(a2.fetch_add(1, Ordering::Relaxed)));
+        // top: call slot0 ; jmp top — a 2-instruction block, forever.
+        let prog = verified(
+            &[ins(Op::Call, 0, 0, 0, 0), ins(Op::Jmp, 0, 0, 0, 0)],
+            1,
+        );
+        let compiled = compile(prog.clone());
+        for fuel in 0..16u64 {
+            let cfg = VmConfig { fuel, scratch_bytes: 0 };
+            n_ref.store(0, Ordering::Relaxed);
+            n_cmp.store(0, Ordering::Relaxed);
+            let got_ref = syms.resolve(&["tick_ref".into()]).unwrap();
+            let got_cmp = syms.resolve(&["tick_cmp".into()]).unwrap();
+            let e1 = run_reference(&prog, &got_ref, &mut [], &mut (), &cfg).unwrap_err();
+            let e2 = compiled.run(&got_cmp, &mut [], &mut (), &cfg).unwrap_err();
+            assert_eq!(e1.to_string(), e2.to_string(), "fuel {fuel}");
+            assert_eq!(
+                n_ref.load(Ordering::Relaxed),
+                n_cmp.load(Ordering::Relaxed),
+                "fuel {fuel}: call count diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn uses_scratch_is_precomputed() {
+        let scratchy = verified(
+            &[
+                ins(Op::Ldi, 1, 0, 0, 0xAB),
+                ins(Op::Ldi, 2, 0, 0, 128),
+                ins(Op::Stb, 1, 2, 1, 0),
+                ins(Op::Ldb, 0, 2, 1, 0),
+                ins(Op::Halt, 0, 0, 0, 0),
+            ],
+            0,
+        );
+        let compiled = compile(scratchy.clone());
+        assert!(compiled.uses_scratch());
+        let got = GotTable::empty();
+        let out = assert_conformant(&scratchy, &got, &[], &VmConfig::default()).unwrap();
+        assert_eq!(out.ret, 0xAB, "scratch is zeroed and writable");
+
+        let plain = verified(&[ins(Op::Halt, 0, 0, 0, 0)], 0);
+        assert!(!compile(plain).uses_scratch());
+    }
+
+    #[test]
+    fn empty_and_fall_off_end_match_reference() {
+        let got = GotTable::empty();
+        // Empty program (compile() must stay total for the cache tests).
+        let empty = compile(Vec::new());
+        let err = empty.run(&got, &mut [], &mut (), &VmConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("fell off code end at pc 0"), "{err}");
+        // Straight-line code without a terminator runs off the end.
+        let prog = verified(&[ins(Op::Ldi, 1, 0, 0, 7)], 0);
+        assert_conformant(&prog, &got, &[], &VmConfig::default());
+        // ... and with fuel exactly 1, the trap reports exhaustion.
+        assert_conformant(&prog, &got, &[], &VmConfig { fuel: 1, scratch_bytes: 0 });
+    }
+
+    #[test]
+    fn oob_and_div0_faults_match_reference_messages() {
+        let got = GotTable::empty();
+        let oob = verified(
+            &[
+                ins(Op::Ldi, 2, 0, 0, 100),
+                ins(Op::Ldb, 0, 2, 0, 0),
+                ins(Op::Halt, 0, 0, 0, 0),
+            ],
+            0,
+        );
+        assert_conformant(&oob, &got, &[0u8; 4], &VmConfig::default());
+        let div0 = verified(
+            &[
+                ins(Op::Ldi, 1, 0, 0, 10),
+                ins(Op::Divu, 0, 1, 2, 0),
+                ins(Op::Halt, 0, 0, 0, 0),
+            ],
+            0,
+        );
+        assert_conformant(&div0, &got, &[], &VmConfig::default());
+    }
+}

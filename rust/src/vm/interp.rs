@@ -1,4 +1,4 @@
-//! TCVM interpreter — target-side execution of injected code.
+//! TCVM reference interpreter — the per-step match loop.
 //!
 //! Executes a verified program against the message payload *in place in
 //! the ring buffer* (matching the paper: the main function receives a
@@ -6,6 +6,17 @@
 //! scratch space, and a patched GOT. Runtime enforcement: payload /
 //! scratch bounds on every access, divide-by-zero, and an instruction
 //! budget ("fuel") so a hostile or buggy ifunc cannot wedge the poll loop.
+//!
+//! The hot path no longer runs this loop: [`super::compile`] lowers the
+//! verified program into pre-resolved handler ops once, and the engine
+//! executes those. This module stays as:
+//!
+//! * [`run_reference`] — the semantic ground truth the compiled form is
+//!   differentially tested against (`rust/tests/prop.rs`) and the
+//!   match-loop column of Abl J,
+//! * [`run_from`] — the resumable per-instruction stepper the compiled
+//!   form delegates to when fuel will exhaust mid-block, so fuel faults
+//!   keep the exact per-instruction pc attribution of the reference.
 
 use super::got::{GotTable, HostCtx};
 use super::isa::{Instr, Op, NUM_REGS, SPACE_PAYLOAD};
@@ -36,9 +47,15 @@ pub struct VmOutcome {
     pub steps: u64,
 }
 
-/// Run a verified program. `payload` is the message payload *in place*;
-/// `user` is the type-erased `target_args` of `ucp_poll_ifunc`.
-pub fn run(
+/// Run a verified program through the reference match loop. `payload` is
+/// the message payload *in place*; `user` is the type-erased
+/// `target_args` of `ucp_poll_ifunc`.
+///
+/// Public only so benches and the differential property tests can pit the
+/// compiled form against it — production callers go through
+/// [`super::compile::CompiledProgram::run`].
+#[doc(hidden)]
+pub fn run_reference(
     prog: &[Instr],
     got: &GotTable,
     payload: &mut [u8],
@@ -50,16 +67,33 @@ pub fn run(
     // it: zeroing 64 KiB per invocation costs ~1.7 µs, which dominated
     // the counter-ifunc hot path (§Perf). Host bindings see an empty
     // scratch when the program has no scratch-space memory ops.
-    let uses_scratch = prog
-        .iter()
-        .any(|i| matches!(i.op, Op::Ldb | Op::Ldw | Op::Stb | Op::Stw) && i.c != SPACE_PAYLOAD);
+    let uses_scratch = prog.iter().any(Instr::touches_scratch);
     let mut scratch = if uses_scratch { vec![0u8; cfg.scratch_bytes] } else { Vec::new() };
-    let mut pc: usize = 0;
-    let mut fuel = cfg.fuel;
     // Entry convention (mirrors `[name]_main(payload, payload_size, args)`):
     // r1 = payload length; r2..r4 = 0.
     regs[1] = payload.len() as u64;
+    let (ret, steps) = run_from(prog, got, payload, &mut scratch, user, &mut regs, 0, cfg.fuel)?;
+    Ok(VmOutcome { ret, steps })
+}
 
+/// The per-instruction stepper behind [`run_reference`], resumable from an
+/// arbitrary `(regs, pc, fuel)` machine state. Returns `(r0, steps)` at
+/// `HALT`. The compiled form calls this from a basic-block boundary when
+/// the remaining fuel cannot cover the block's precomputed cost, so fuel
+/// exhaustion faults at the exact instruction the reference would fault
+/// at.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_from(
+    prog: &[Instr],
+    got: &GotTable,
+    payload: &mut [u8],
+    scratch: &mut [u8],
+    user: &mut dyn std::any::Any,
+    regs: &mut [u64; NUM_REGS],
+    mut pc: usize,
+    mut fuel: u64,
+) -> Result<(u64, u64)> {
+    let fuel0 = fuel;
     loop {
         if fuel == 0 {
             return Err(Error::VmFault(format!("fuel exhausted at pc {pc}")));
@@ -71,7 +105,7 @@ pub fn run(
         pc += 1;
         match i.op {
             Op::Halt => {
-                return Ok(VmOutcome { ret: regs[0], steps: cfg.fuel - fuel });
+                return Ok((regs[0], fuel0 - fuel));
             }
             Op::Nop => {}
             Op::Ldi => regs[i.a as usize] = i.imm as u64,
@@ -134,14 +168,14 @@ pub fn run(
                 // Explicit reborrows: a struct literal would *move* the
                 // `&mut` params out of the loop on the first CALL.
                 let mut ctx =
-                    HostCtx { payload: &mut *payload, scratch: &mut scratch, user: &mut *user };
+                    HostCtx { payload: &mut *payload, scratch: &mut *scratch, user: &mut *user };
                 regs[0] = f(&mut ctx, args).map_err(Error::VmFault)?;
             }
             Op::Ldb | Op::Ldw | Op::Stb | Op::Stw => {
                 let width = if matches!(i.op, Op::Ldw | Op::Stw) { 8 } else { 1 };
                 let addr = regs[i.b as usize].wrapping_add(i.imm as u64) as usize;
                 let mem: &mut [u8] =
-                    if i.c == SPACE_PAYLOAD { &mut *payload } else { &mut scratch };
+                    if i.c == SPACE_PAYLOAD { &mut *payload } else { &mut *scratch };
                 if addr.checked_add(width).is_none_or(|end| end > mem.len()) {
                     return Err(Error::VmFault(format!(
                         "oob {} access at {addr}+{width} (space {} of {} bytes, pc {})",
@@ -183,7 +217,7 @@ mod tests {
         let (code, imports) = a.assemble();
         let prog = verify(&code, imports.len())?;
         let got = syms.resolve(&imports)?;
-        run(&prog, &got, payload, &mut (), &VmConfig::default())
+        run_reference(&prog, &got, payload, &mut (), &VmConfig::default())
     }
 
     #[test]
@@ -292,7 +326,7 @@ mod tests {
         a.jmp(top);
         let (code, imports) = a.assemble();
         let prog = verify(&code, imports.len()).unwrap();
-        let err = run(
+        let err = run_reference(
             &prog,
             &crate::vm::got::GotTable::empty(),
             &mut [],

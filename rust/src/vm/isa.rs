@@ -137,6 +137,14 @@ pub struct Instr {
 }
 
 impl Instr {
+    /// Does this instruction address the scratch space? (Any load/store
+    /// whose space selector is not the payload.) Both the reference
+    /// interpreter and the compiler use this to decide whether an
+    /// invocation needs a zeroed scratch allocation at all.
+    pub fn touches_scratch(&self) -> bool {
+        matches!(self.op, Op::Ldb | Op::Ldw | Op::Stb | Op::Stw) && self.c != SPACE_PAYLOAD
+    }
+
     pub fn encode(&self) -> [u8; INSTR_BYTES] {
         let mut out = [0u8; INSTR_BYTES];
         out[0] = self.op as u8;

@@ -1,15 +1,23 @@
 //! TCVM — the portable injected-code substrate.
 //!
 //! Stands in for the paper's native `.text` + GOT-rewriting toolchain
-//! (DESIGN.md §2, row 2). Four pieces:
+//! (DESIGN.md §2, row 2). Five pieces:
 //!
 //! * [`isa`] — fixed-width register ISA the code sections are encoded in,
 //! * [`asm`] — source-side assembler (the "toolchain"),
 //! * [`verify`] — target-side static verifier (§3.5 security),
+//! * [`compile`] — target-side lowering of the verified program into a
+//!   threaded [`CompiledProgram`] (pre-resolved handlers, fused
+//!   superinstructions, block-level fuel). This is what the §3.4
+//!   hash-table cache stores, so repeat injections skip decode, verify
+//!   *and* compile,
 //! * [`got`] + [`interp`] — target-side linking (symbol resolution into a
-//!   GOT table) and execution.
+//!   GOT table) and execution. [`interp`] keeps the original match-loop
+//!   as [`run_reference`], the semantic ground truth the compiled engine
+//!   is differentially tested against (`rust/tests/prop.rs`).
 
 pub mod asm;
+pub mod compile;
 pub mod disasm;
 pub mod got;
 pub mod interp;
@@ -17,8 +25,12 @@ pub mod isa;
 pub mod verify;
 
 pub use asm::{Assembler, Label};
+pub use compile::{compile, compile_unfused, CompiledProgram};
 pub use disasm::{disasm, disasm_instr};
 pub use got::{GotTable, HostCtx, HostFn, SymbolTable};
-pub use interp::{run, VmConfig, VmOutcome, DEFAULT_FUEL};
+pub use interp::{VmConfig, VmOutcome, DEFAULT_FUEL};
 pub use isa::{decode_all, Instr, Op, INSTR_BYTES, MAX_INSTRS, NUM_REGS};
 pub use verify::verify;
+
+#[doc(hidden)]
+pub use interp::run_reference;

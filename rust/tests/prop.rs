@@ -97,13 +97,256 @@ fn prop_verifier_total_on_garbage() {
         if let Ok(prog) = vm::verify(&code, 0) {
             accepted += 1;
             let mut payload = rng.bytes(64);
-            // Must not panic; faults are fine.
-            let _ = vm::run(&prog, &got, &mut payload, &mut (), &cfg);
+            // Must not panic; faults are fine. Both engines get a go —
+            // compile() must be total on anything verify() accepts.
+            let _ = vm::run_reference(&prog, &got, &mut payload, &mut (), &cfg);
+            let mut payload2 = rng.bytes(64);
+            let _ = vm::compile(prog).run(&got, &mut payload2, &mut (), &cfg);
         }
     }
     // Sanity: random bytes occasionally verify (opcode space is dense
     // enough), otherwise this test proves nothing.
     assert!(accepted > 0, "no random program ever verified");
+}
+
+/// Differential conformance: the compiled engine (fused and unfused) is
+/// equivalent to the reference interpreter on random *verified* programs
+/// — same return value, same retired-step count, same payload bytes on
+/// success; same fault kind (fuel / fell-off-end / div0 / oob / GOT /
+/// host) and same payload bytes on failure — across tiny fuel budgets
+/// (mid-block exhaustion) and moderate ones (loops that halt).
+#[test]
+fn prop_compiled_engine_matches_reference() {
+    use two_chains::vm::{Instr, Op, SymbolTable, VmConfig};
+
+    fn reg(rng: &mut XorShift) -> u8 {
+        rng.below(16) as u8
+    }
+    fn space(rng: &mut XorShift) -> u8 {
+        rng.below(2) as u8
+    }
+    /// Mem offsets straddling the bounds of a ≤64-byte payload and a
+    /// 256-byte scratch, so in-bounds and oob paths both occur.
+    fn off(rng: &mut XorShift) -> u32 {
+        if rng.bool() { rng.below(48) as u32 } else { rng.below(300) as u32 }
+    }
+    /// Collapse a fault to its kind; host faults keep their (deterministic)
+    /// message. Exact pc equality is pinned by the compile.rs unit tests.
+    fn fault_kind(e: &two_chains::Error) -> String {
+        let s = e.to_string();
+        for k in
+            ["fuel exhausted", "fell off code end", "divide by zero", "oob load", "oob store",
+             "GOT slot"]
+        {
+            if s.contains(k) {
+                return (*k).to_string();
+            }
+        }
+        s
+    }
+    fn single(rng: &mut XorShift, n: usize, n_imports: u64) -> Instr {
+        let (a, b) = (reg(rng), reg(rng));
+        let mut c = reg(rng);
+        let mut imm = rng.below(64) as u32;
+        let op = match rng.below(26) {
+            0 => Op::Halt,
+            1 => {
+                imm = rng.next_u64() as u32;
+                Op::Ldi
+            }
+            2 => {
+                imm = rng.next_u64() as u32;
+                Op::Ldih
+            }
+            3 => Op::Mov,
+            4 => Op::Add,
+            5 => Op::Sub,
+            6 => Op::Mul,
+            7 => Op::Divu,
+            8 => Op::And,
+            9 => Op::Or,
+            10 => Op::Xor,
+            11 => Op::Shl,
+            12 => Op::Shr,
+            13 => Op::Addi,
+            14 => Op::Sltu,
+            15 => Op::Eq,
+            16 => {
+                imm = rng.below(n as u64) as u32;
+                Op::Jmp
+            }
+            17 => {
+                imm = rng.below(n as u64) as u32;
+                Op::Jz
+            }
+            18 => {
+                imm = rng.below(n as u64) as u32;
+                Op::Jnz
+            }
+            19 => {
+                imm = rng.below(n_imports) as u32;
+                Op::Call
+            }
+            20 => {
+                c = space(rng);
+                imm = off(rng);
+                Op::Ldb
+            }
+            21 => {
+                c = space(rng);
+                imm = off(rng);
+                Op::Ldw
+            }
+            22 => {
+                c = space(rng);
+                imm = off(rng);
+                Op::Stb
+            }
+            23 => {
+                c = space(rng);
+                imm = off(rng);
+                Op::Stw
+            }
+            24 => Op::Paylen,
+            _ => Op::Nop,
+        };
+        Instr { op, a, b, c, imm }
+    }
+
+    // Three deterministic pure host imports so Call is exercised end to
+    // end, including the host-fault path (h2 rejects odd arguments).
+    let syms = SymbolTable::new();
+    syms.install_fn("h0", |_, [a, _, _, _]| Ok(a.wrapping_add(1)));
+    syms.install_fn("h1", |_, [a, b, c, d]| {
+        Ok(a.wrapping_add(b).wrapping_add(c).wrapping_add(d))
+    });
+    syms.install_fn("h2", |_, [a, _, _, _]| {
+        if a % 2 == 1 { Err("odd argument rejected".into()) } else { Ok(a / 2) }
+    });
+    let imports = ["h0".to_string(), "h1".to_string(), "h2".to_string()];
+    let got = syms.resolve(&imports).unwrap();
+
+    let mut rng = XorShift::new(0xD1FF);
+    let mut halted = 0u64;
+    for case in 0..1200u64 {
+        // Structurally valid by construction: every reg < 16, every space
+        // in {payload, scratch}, every jump target < n, every Call slot
+        // < n_imports — so verify() must accept it (asserted below).
+        let n = rng.range(4, 40) as usize;
+        let mut prog: Vec<Instr> = Vec::with_capacity(n);
+        while prog.len() < n {
+            let room = n - prog.len();
+            if room >= 2 && rng.below(100) < 30 {
+                // Seed a fusible pair so every superinstruction gets
+                // differential coverage (sltu+jz, ldb+add, addi+jmp,
+                // ldi+ldih-same-reg).
+                match rng.below(4) {
+                    0 => {
+                        prog.push(Instr {
+                            op: Op::Sltu,
+                            a: reg(&mut rng),
+                            b: reg(&mut rng),
+                            c: reg(&mut rng),
+                            imm: 0,
+                        });
+                        prog.push(Instr {
+                            op: Op::Jz,
+                            a: reg(&mut rng),
+                            b: 0,
+                            c: 0,
+                            imm: rng.below(n as u64) as u32,
+                        });
+                    }
+                    1 => {
+                        prog.push(Instr {
+                            op: Op::Ldb,
+                            a: reg(&mut rng),
+                            b: reg(&mut rng),
+                            c: space(&mut rng),
+                            imm: off(&mut rng),
+                        });
+                        prog.push(Instr {
+                            op: Op::Add,
+                            a: reg(&mut rng),
+                            b: reg(&mut rng),
+                            c: reg(&mut rng),
+                            imm: 0,
+                        });
+                    }
+                    2 => {
+                        prog.push(Instr {
+                            op: Op::Addi,
+                            a: reg(&mut rng),
+                            b: reg(&mut rng),
+                            c: 0,
+                            imm: rng.below(16) as u32,
+                        });
+                        prog.push(Instr {
+                            op: Op::Jmp,
+                            a: 0,
+                            b: 0,
+                            c: 0,
+                            imm: rng.below(n as u64) as u32,
+                        });
+                    }
+                    _ => {
+                        let a = reg(&mut rng);
+                        prog.push(Instr { op: Op::Ldi, a, b: 0, c: 0, imm: rng.next_u64() as u32 });
+                        prog.push(Instr {
+                            op: Op::Ldih,
+                            a,
+                            b: 0,
+                            c: 0,
+                            imm: rng.next_u64() as u32,
+                        });
+                    }
+                }
+            } else {
+                let i = single(&mut rng, n, imports.len() as u64);
+                prog.push(i);
+            }
+        }
+        let bytes: Vec<u8> = prog.iter().flat_map(|i| i.encode()).collect();
+        let decoded = vm::verify(&bytes, imports.len()).unwrap_or_else(|e| {
+            panic!("case {case}: generator produced an unverifiable program: {e}")
+        });
+        let fused = vm::compile(decoded.clone());
+        let unfused = vm::compile_unfused(decoded.clone());
+        let base_payload = rng.bytes(rng.below(64) as usize);
+
+        for fuel in [rng.below(64), rng.range(1_000, 5_000)] {
+            let cfg = VmConfig { fuel, scratch_bytes: 256 };
+            let mut p_ref = base_payload.clone();
+            let mut p_fus = base_payload.clone();
+            let mut p_unf = base_payload.clone();
+            let r_ref = vm::run_reference(&decoded, &got, &mut p_ref, &mut (), &cfg);
+            let r_fus = fused.run(&got, &mut p_fus, &mut (), &cfg);
+            let r_unf = unfused.run(&got, &mut p_unf, &mut (), &cfg);
+            for (label, r_cmp, p_cmp) in
+                [("fused", &r_fus, &p_fus), ("unfused", &r_unf, &p_unf)]
+            {
+                match (&r_ref, r_cmp) {
+                    (Ok(a), Ok(b)) => {
+                        assert_eq!(a, b, "case {case} fuel {fuel}: {label} outcome diverged");
+                        halted += 1;
+                    }
+                    (Err(ea), Err(eb)) => assert_eq!(
+                        fault_kind(ea),
+                        fault_kind(eb),
+                        "case {case} fuel {fuel}: {label} fault diverged: `{ea}` vs `{eb}`"
+                    ),
+                    _ => panic!(
+                        "case {case} fuel {fuel}: {label} ok/err divergence: \
+                         {r_ref:?} vs {r_cmp:?}"
+                    ),
+                }
+                assert_eq!(&p_ref, p_cmp, "case {case} fuel {fuel}: {label} payload diverged");
+            }
+        }
+    }
+    // Sanity: a healthy share of runs must actually halt cleanly, or the
+    // generator degenerated into fault-only coverage.
+    assert!(halted > 100, "only {halted} runs halted cleanly — generator too fault-heavy");
 }
 
 /// XOR ifunc: applying the injected transform twice restores any payload

@@ -8,12 +8,15 @@ baseline so perf regressions are visible in PRs.
 
 Usage:
     python scripts/bench_compare.py CURRENT.json [--baseline PATH]
-                                    [--threshold PCT]
+                                    [--threshold PCT] [--require-baseline-rows]
 
 Exit codes: 0 on success or when the baseline is absent (the comparison is
 advisory — CI runs it as a non-blocking step); 1 on malformed input; 2 when
 ``--threshold`` is given and some metric regressed beyond it (for local,
-opt-in strict runs).
+opt-in strict runs); 3 when ``--require-baseline-rows`` is given and a row
+present in the committed baseline is missing from the current report (a
+renamed or silently dropped benchmark — CI runs this as a blocking guard so
+the perf history can't lose coverage unnoticed).
 
 To (re)seed the baseline, download ``micro-report.json`` from a trusted CI
 run's artifacts and commit it at the default baseline path.
@@ -51,6 +54,11 @@ def main() -> int:
         metavar="PCT",
         help="exit 2 if any median regresses more than PCT percent",
     )
+    ap.add_argument(
+        "--require-baseline-rows",
+        action="store_true",
+        help="exit 3 if any baseline row is missing from the current report",
+    )
     args = ap.parse_args()
 
     if not args.baseline.exists():
@@ -87,16 +95,28 @@ def main() -> int:
             f"{name:<{width}}  {fmt_ns(b['median_ns']):>12}  "
             f"{fmt_ns(row['median_ns']):>12}  {delta:>+7.1f}%"
         )
+    gone_rows = []
     for name in base:
         if name not in cur:
             print(f"{name:<{width}}  {fmt_ns(base[name]['median_ns']):>12}  "
                   f"{'—':>12}  {'gone':>8}")
+            gone_rows.append(name)
     if new_rows:
         print(
             f"\nbench_compare: {len(new_rows)} new metric(s) with no baseline row "
             "(informational, not a failure) — refresh the baseline from a trusted "
             "CI run to start tracking them."
         )
+
+    if args.require_baseline_rows and gone_rows:
+        print(
+            f"\nbench_compare: {len(gone_rows)} baseline row(s) missing from the "
+            f"current report: {', '.join(sorted(gone_rows))}.\n"
+            "  A benchmark was renamed or dropped — restore the row or refresh "
+            "the committed baseline deliberately.",
+            file=sys.stderr,
+        )
+        return 3
 
     if args.threshold is not None and worst > args.threshold:
         print(f"\nbench_compare: worst regression {worst:+.1f}% exceeds "
