@@ -39,12 +39,19 @@
 //!   (`vm::compile`, the production path) on the counter / checksum /
 //!   graph-filter bodies; plus AM delivery copy-on-execute vs the
 //!   zero-copy execute-in-place path, in frames/s.
+//! * **K** — concurrent serve front-end: 1/16/256 pipelined client
+//!   sessions pushing inserts through one `Frontend`, cross-client
+//!   coalescing on (same-worker ops merged into `try_invoke_batch`
+//!   windows) vs off (each op an `invoke_one` round trip on its
+//!   client's thread), per transport. The speedup column is what
+//!   coalescing buys once clients contend for the same worker links —
+//!   it should cross 1x somewhere between 1 and 16 clients.
 //!
 //! Run: `cargo bench --bench ablations` (QUICK=1 for a smoke run;
 //! ABL=E,H runs only the named ablations — CI's bench smoke uses
-//! ABL=H,I,J).
+//! ABL=H,I,J,K).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use two_chains::bench::harness::{BenchConfig, BenchPair};
 use two_chains::bench::{latency, report, throughput};
@@ -259,6 +266,92 @@ fn collective_throughput(
     assert_eq!(d.total_executed(), (rounds * workers) as u64);
     cluster.shutdown().expect("shutdown");
     (rounds * workers) as f64 / dt
+}
+
+/// Abl K workload: `clients` concurrent sessions, each keeping a
+/// self-regulated window of pipelined inserts in flight against a
+/// 4-worker cluster through one serve front-end. `coalesce: true` is the
+/// production path (per-worker queues drained into `try_invoke_batch`
+/// windows, one credit reservation + one flush per batch across
+/// clients); `coalesce: false` dispatches each op as a blocking
+/// `invoke_one` on the submitting client's thread. Returns requests/s.
+fn serve_throughput(
+    base: &BenchConfig,
+    transport: TransportKind,
+    clients: usize,
+    coalesce: bool,
+    ops_per_client: usize,
+) -> f64 {
+    use std::sync::Arc;
+    use two_chains::coordinator::{Frontend, FrontendConfig};
+    use two_chains::util::Json;
+
+    let cluster = Arc::new(
+        Cluster::launch(
+            ClusterConfig::builder()
+                .workers(4)
+                .transport(transport)
+                .wire(base.wire)
+                .build()
+                .expect("config"),
+            |_, _, _| {},
+        )
+        .expect("cluster"),
+    );
+    let frontend = Arc::new(
+        Frontend::launch(
+            cluster.clone(),
+            FrontendConfig {
+                max_clients: clients.max(64),
+                // Headroom so admission control never sheds: the table
+                // prices the dispatch path, not overload behaviour.
+                queue_high_water: 1 << 20,
+                coalesce,
+                ..FrontendConfig::default()
+            },
+        )
+        .expect("frontend"),
+    );
+
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let fe = frontend.clone();
+            std::thread::spawn(move || {
+                let (session, responses) = fe.session().expect("session");
+                let mut sent = 0usize;
+                let mut got = 0usize;
+                let pump = |responses: &two_chains::coordinator::SessionReceiver,
+                            got: &mut usize| {
+                    let r = responses.recv_timeout(Duration::from_secs(60)).expect("reply");
+                    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+                    *got += 1;
+                };
+                for i in 0..ops_per_client {
+                    while sent - got >= 8 {
+                        pump(&responses, &mut got);
+                    }
+                    // Keys stride across all four workers.
+                    let key = (c * ops_per_client + i) as u64;
+                    session.submit(&format!(
+                        "{{\"cmd\":\"insert\",\"key\":{key},\"data\":[1.0,2.0,3.0,4.0]}}"
+                    ));
+                    sent += 1;
+                }
+                while got < sent {
+                    pump(&responses, &mut got);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("client thread");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+
+    Arc::try_unwrap(frontend).ok().expect("sessions closed").shutdown();
+    Arc::try_unwrap(cluster).ok().expect("frontend gone").shutdown().expect("shutdown");
+    (clients * ops_per_client) as f64 / dt
 }
 
 fn main() {
@@ -584,5 +677,33 @@ fn main() {
             "copy", "zero-copy", "speedup"
         );
         println!("{copy_fps:>14.0}  {zc_fps:>14.0}  {:>9.2}x", zc_fps / copy_fps);
+    }
+
+    // Abl K — the concurrent serve front-end. Same insert workload per
+    // row; only the dispatch strategy changes. At 1 client, coalescing
+    // is pure overhead (an extra queue hop and thread handoff per op);
+    // as clients contend for the same four links, batching amortizes
+    // credit reservations and flushes across clients and the speedup
+    // column should cross 1x.
+    if run('K') {
+        let client_counts: &[usize] = if quick { &[1, 16] } else { &[1, 16, 256] };
+        let total_ops = if quick { 2_000 } else { 20_000 };
+        println!("\n== Abl K — serve front-end insert throughput (4 workers, req/s) ==");
+        println!(
+            "{:>10}  {:>8}  {:>12}  {:>12}  {:>10}",
+            "transport", "clients", "coalesced", "direct", "speedup"
+        );
+        for transport in TransportKind::ALL {
+            for &clients in client_counts {
+                let ops = (total_ops / clients).max(8);
+                let on = serve_throughput(&base, transport, clients, true, ops);
+                let off = serve_throughput(&base, transport, clients, false, ops);
+                println!(
+                    "{:>10}  {clients:>8}  {on:>12.0}  {off:>12.0}  {:>9.2}x",
+                    transport.label(),
+                    on / off
+                );
+            }
+        }
     }
 }

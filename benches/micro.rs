@@ -375,6 +375,72 @@ fn main() {
         }
     }
 
+    // The concurrent serve front-end: 16 pipelined client sessions
+    // pushing inserts through the cross-client coalescer on the default
+    // ring transport — the per-request cost of the full serve path
+    // (session window + per-worker queue + try_invoke_batch + reap).
+    {
+        use two_chains::coordinator::{Cluster, ClusterConfig, Frontend, FrontendConfig};
+        use two_chains::util::Json;
+        let cluster = Arc::new(
+            Cluster::launch(
+                ClusterConfig::builder().workers(4).build().expect("config"),
+                |_, _, _| {},
+            )
+            .expect("cluster"),
+        );
+        let frontend = Arc::new(
+            Frontend::launch(
+                cluster.clone(),
+                FrontendConfig { queue_high_water: 1 << 20, ..FrontendConfig::default() },
+            )
+            .expect("frontend"),
+        );
+        let clients = 16usize;
+        let ops = if quick { 50 } else { 500 };
+        let t0 = Instant::now();
+        let threads: Vec<_> = (0..clients)
+            .map(|c| {
+                let fe = frontend.clone();
+                std::thread::spawn(move || {
+                    let (session, responses) = fe.session().expect("session");
+                    let mut sent = 0usize;
+                    let mut got = 0usize;
+                    for i in 0..ops {
+                        while sent - got >= 8 {
+                            let r = responses
+                                .recv_timeout(std::time::Duration::from_secs(60))
+                                .expect("reply");
+                            assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+                            got += 1;
+                        }
+                        let key = (c * ops + i) as u64;
+                        session.submit(&format!(
+                            "{{\"cmd\":\"insert\",\"key\":{key},\"data\":[1.0,2.0]}}"
+                        ));
+                        sent += 1;
+                    }
+                    while got < sent {
+                        let r = responses
+                            .recv_timeout(std::time::Duration::from_secs(60))
+                            .expect("reply");
+                        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+                        got += 1;
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().expect("client thread");
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / (clients * ops) as f64;
+        let name = "serve insert (coalesced, 16 clients)".to_string();
+        println!("{name:<44} {ns:>12.0} ns/op");
+        t.rows.push(MicroRow { name, median_ns: ns, best_ns: ns });
+        Arc::try_unwrap(frontend).ok().expect("sessions closed").shutdown();
+        Arc::try_unwrap(cluster).ok().expect("frontend gone").shutdown().expect("shutdown");
+    }
+
     if let Some(path) = json_path() {
         let report = micro_json(&t.rows);
         std::fs::write(&path, &report).expect("write micro JSON report");

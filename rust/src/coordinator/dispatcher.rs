@@ -182,6 +182,22 @@ impl InvokeWindow {
         }
     }
 
+    /// Claim up to `want` invocation slots without blocking: takes
+    /// `min(want, max - inflight)` and returns how many were claimed
+    /// (possibly zero). The shed-before-block primitive for the serve
+    /// front-end's coalescer — admission control decides *before* any
+    /// wait whether work can go out now.
+    fn try_acquire_many(&self, want: usize) -> usize {
+        if want == 0 {
+            return 0;
+        }
+        let mut st = lock_recover(&self.state);
+        let free = self.max.saturating_sub(st.inflight);
+        let take = want.min(free);
+        st.inflight += take;
+        take
+    }
+
     /// Record a begun invocation's reply seq (after its frame was sent).
     fn track(&self, seq: u64) {
         let mut st = lock_recover(&self.state);
@@ -629,6 +645,132 @@ impl<'c> Dispatcher<'c> {
         self.invoke_begin(target, msg)?.wait()
     }
 
+    /// Non-blocking [`Dispatcher::invoke_begin`]: returns `Ok(None)` —
+    /// immediately, without parking — when the worker's invocation
+    /// window is full. The admission-control primitive for the serve
+    /// front-end: a caller holding live traffic sheds (or requeues)
+    /// instead of timing out inside the window, so a saturated worker
+    /// surfaces as back-pressure, not as a stalled thread.
+    pub fn try_invoke_begin(
+        &self,
+        target: Target<'_>,
+        msg: &IfuncMsg,
+    ) -> Result<Option<PendingReply>> {
+        let worker = self.resolve_one(target)?;
+        let w = self.worker(worker)?;
+        if w.window.try_acquire_many(1) == 0 {
+            return Ok(None);
+        }
+        match self.post_invoke_locked(w, worker, msg, true) {
+            Ok((seq, how)) => Ok(Some(PendingReply {
+                how,
+                seq,
+                worker,
+                window: w.window.clone(),
+                released: false,
+            })),
+            Err(e) => {
+                w.window.release(None);
+                Err(e)
+            }
+        }
+    }
+
+    /// Non-blocking **batched** invocation begin: claim as many window
+    /// slots as are free right now (up to `msgs.len()`), post that
+    /// admitted prefix through the link's coalesced
+    /// [`crate::ifunc::IfuncTransport::post_batch`] path — one credit
+    /// reservation, one flush — and return a [`PendingReply`] per
+    /// admitted frame, in order. An empty vec means the window was
+    /// saturated; the call never blocks on window capacity. The serve
+    /// front-end's cross-client coalescer drains its per-worker queue
+    /// through this: whatever is queued when the link frees ships as one
+    /// batch, amortizing flush + credit across clients.
+    pub fn try_invoke_batch(
+        &self,
+        target: Target<'_>,
+        msgs: &[IfuncMsg],
+    ) -> Result<Vec<PendingReply>> {
+        if msgs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let worker = self.resolve_one(target)?;
+        let w = self.worker(worker)?;
+        let admitted = w.window.try_acquire_many(msgs.len());
+        if admitted == 0 {
+            return Ok(Vec::new());
+        }
+        match self.post_invoke_batch_locked(w, worker, &msgs[..admitted]) {
+            Ok(pending) => Ok(pending),
+            Err(e) => {
+                for _ in 0..admitted {
+                    w.window.release(None);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Post `msgs` as one coalesced batch on `worker`'s link and wire up
+    /// per-frame reply collection. Window slots (`msgs.len()` of them)
+    /// must already be claimed; on error the *caller* releases them —
+    /// this function only unwinds its collector registrations. Batch
+    /// analogue of [`Dispatcher::post_invoke_locked`].
+    fn post_invoke_batch_locked(
+        &self,
+        w: &super::WorkerHandle,
+        worker: usize,
+        msgs: &[IfuncMsg],
+    ) -> Result<Vec<PendingReply>> {
+        let mut link = lock_recover(&w.link);
+        let first = link.frames_sent() + 1;
+        let end = link.frames_sent() + msgs.len() as u64;
+        self.admit_or_drain(w, worker, end)?;
+        let mut pending = Vec::with_capacity(msgs.len());
+        match &w.collector {
+            Some(c) => {
+                // Register every frame before any goes out (same ordering
+                // contract as the unicast path: a concurrent drain may
+                // meet a reply the instant its frame lands).
+                for seq in first..=end {
+                    c.register(seq);
+                }
+                let posted = link.post_batch(msgs).and_then(|()| link.flush());
+                if let Err(e) = posted {
+                    for seq in first..=end {
+                        c.unregister(seq);
+                    }
+                    return Err(tag_worker(worker, e));
+                }
+                debug_assert_eq!(link.frames_sent(), end);
+                for seq in first..=end {
+                    pending.push(PendingReply {
+                        how: Collect::Stream(c.clone()),
+                        seq,
+                        worker,
+                        window: w.window.clone(),
+                        released: false,
+                    });
+                }
+            }
+            None => {
+                link.post_batch(msgs).map_err(|e| tag_worker(worker, e))?;
+                link.flush().map_err(|e| tag_worker(worker, e))?;
+                for seq in first..=end {
+                    w.window.track(seq);
+                    pending.push(PendingReply {
+                        how: Collect::Slot(w.replies.clone()),
+                        seq,
+                        worker,
+                        window: w.window.clone(),
+                        released: false,
+                    });
+                }
+            }
+        }
+        Ok(pending)
+    }
+
     /// Begin a **collective** invocation: inject the same program on
     /// every worker the target resolves to. Frames are posted per link
     /// without waiting, then one flush pass covers the whole fan-out, so
@@ -833,7 +975,7 @@ impl<'c> Dispatcher<'c> {
 mod tests {
     use super::super::{Cluster, ClusterConfig};
     use super::{route_key, Target};
-    use crate::ifunc::builtin::CounterIfunc;
+    use crate::ifunc::builtin::{CounterIfunc, EchoIfunc};
     use crate::ifunc::SourceArgs;
 
     #[test]
@@ -1039,6 +1181,42 @@ mod tests {
         }
         d.barrier().unwrap();
         assert_eq!(d.total_executed(), 200);
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn try_invoke_batch_admits_only_free_window_slots() {
+        // Window slots are held until a PendingReply is waited or
+        // dropped, so admission arithmetic is deterministic regardless of
+        // how fast the worker executes.
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(1).max_inflight(2).build().unwrap(),
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(EchoIfunc));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(EchoIfunc));
+        let d = cluster.dispatcher();
+        let h = d.register("echo").unwrap();
+        let msgs: Vec<_> = (0..4)
+            .map(|_| h.msg_create(&SourceArgs::bytes(b"x".to_vec())).unwrap())
+            .collect();
+        // Free window: a 4-frame batch admits exactly max_inflight = 2.
+        let pending = d.try_invoke_batch(Target::Worker(0), &msgs).unwrap();
+        assert_eq!(pending.len(), 2);
+        // Saturated: both try variants return empty/None without blocking.
+        assert!(d.try_invoke_batch(Target::Worker(0), &msgs).unwrap().is_empty());
+        assert!(d.try_invoke_begin(Target::Worker(0), &msgs[0]).unwrap().is_none());
+        // Collecting the admitted replies frees the window again.
+        for p in pending {
+            assert!(p.wait().unwrap().ok());
+        }
+        let p = d
+            .try_invoke_begin(Target::Worker(0), &msgs[0])
+            .unwrap()
+            .expect("freed window must admit");
+        assert!(p.wait().unwrap().ok());
         cluster.shutdown().unwrap();
     }
 

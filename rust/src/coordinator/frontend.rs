@@ -1,0 +1,799 @@
+//! Concurrent serve front-end: pipelined sessions, cross-client
+//! coalescing, admission control.
+//!
+//! The paper's §3.2 database scenario under **production-shaped load**:
+//! many coordinating clients hitting a store "so big that it has to be
+//! stored on many physical devices" — concurrently. The TCP glue in
+//! `serve.rs` is one thread per socket; everything between the socket
+//! and the [`Dispatcher`] lives here, so in-process tests and benches
+//! drive the identical pipeline without a socket:
+//!
+//! * **Sessions** ([`Frontend::session`]): each client gets a
+//!   [`Session`] (submit side) and a [`SessionReceiver`] (response
+//!   side). A session keeps up to `session_window` requests in flight —
+//!   the reader parses and submits while a responder drains replies —
+//!   so one connection pipelines instead of strict request/reply
+//!   lockstep. Responses carry the client-assigned `id` echoed back;
+//!   completion is out-of-order by design and the `id` makes that
+//!   observable and correct.
+//! * **Cross-client coalescing**: submitted operations land in a
+//!   bounded per-worker queue; a per-worker drainer ships whatever is
+//!   queued the moment the link frees (no fixed timer) as **one**
+//!   coalesced batch through [`Dispatcher::try_invoke_batch`] — one
+//!   ring-credit reservation + one flush amortized across every client
+//!   whose keys hash to that worker.
+//! * **Admission control and fairness**: past `queue_high_water` the
+//!   submit path sheds immediately with
+//!   `{"ok":false,"error":"overloaded","retry":true}` — before any
+//!   blocking wait, via the dispatcher's non-blocking window admission —
+//!   and the queue drains round-robin across clients, so one firehose
+//!   client cannot starve the others.
+//!
+//! Per-key ordering is preserved end to end: a key always routes to one
+//! worker ([`route_key`]), a client's ops for that worker stay in one
+//! FIFO lane, the drainer pops lanes in order, and frames post in seq
+//! order on one link — so a client's `get` after its own `insert`
+//! observes the insert (or a later one), never an earlier state.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::ifunc::{IfuncHandle, IfuncMsg, Reply};
+use crate::util::sync::{lock_recover, wait_timeout_recover};
+use crate::util::Json;
+use crate::{Error, Result};
+
+use super::apps::{GetIfunc, InsertIfunc};
+use super::dispatcher::{route_key, PendingReply, Target};
+use super::telemetry::FrontendSnapshot;
+use super::worker::GET_MISSING;
+use super::Cluster;
+
+/// Tuning knobs for the concurrent front-end. All limits must be >= 1
+/// ([`Frontend::launch`] validates).
+#[derive(Clone, Debug)]
+pub struct FrontendConfig {
+    /// Concurrent session cap: [`Frontend::session`] refuses past it.
+    pub max_clients: usize,
+    /// Per-session in-flight request window ([`Session::submit`] blocks
+    /// past it — per-client backpressure, distinct from shedding).
+    pub session_window: usize,
+    /// Per-worker submission-queue high-water mark: submits shed with
+    /// the overload response once a queue holds this many ops.
+    pub queue_high_water: usize,
+    /// Most frames one coalesced batch carries.
+    pub batch_max: usize,
+    /// Coalesce across clients (default). Off = every submit is a
+    /// synchronous `invoke_one`, the pre-pipeline behavior — kept so
+    /// Abl K can price exactly this delta.
+    pub coalesce: bool,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            max_clients: 64,
+            session_window: 16,
+            queue_high_water: 256,
+            batch_max: 16,
+            coalesce: true,
+        }
+    }
+}
+
+/// Live counters (all relaxed — monotone telemetry, not synchronization).
+#[derive(Default)]
+pub struct FrontendStats {
+    pub submitted: AtomicU64,
+    pub responded: AtomicU64,
+    pub shed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_ops: AtomicU64,
+    /// Batch-size buckets: [1, 2–3, 4–7, 8–15, 16+].
+    pub batch_hist: [AtomicU64; 5],
+}
+
+impl FrontendStats {
+    fn record_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_ops.fetch_add(n as u64, Ordering::Relaxed);
+        let bucket = match n {
+            0 | 1 => 0,
+            2..=3 => 1,
+            4..=7 => 2,
+            8..=15 => 3,
+            _ => 4,
+        };
+        self.batch_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Per-session in-flight window: bounds how far one client's reader can
+/// run ahead of its responder.
+struct SessionWindow {
+    inflight: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl SessionWindow {
+    fn new() -> Self {
+        SessionWindow { inflight: Mutex::new(0), freed: Condvar::new() }
+    }
+
+    /// Claim a slot; blocks while `max` responses are outstanding.
+    /// Returns `false` (without claiming) once `stop` is set, so a
+    /// shutdown never strands a submitting reader.
+    fn acquire(&self, max: usize, stop: &AtomicBool) -> bool {
+        let mut n = lock_recover(&self.inflight);
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return false;
+            }
+            if *n < max {
+                *n += 1;
+                return true;
+            }
+            n = wait_timeout_recover(&self.freed, n, Duration::from_millis(1));
+        }
+    }
+
+    fn release(&self) {
+        let mut n = lock_recover(&self.inflight);
+        *n = n.saturating_sub(1);
+        drop(n);
+        self.freed.notify_all();
+    }
+}
+
+/// What a queued operation needs to produce its response.
+enum OpKind {
+    Insert,
+    Get,
+}
+
+/// Response-routing context carried with every queued op: where the
+/// response goes, which `id` to echo, and which session window slot to
+/// free.
+struct OpCtx {
+    kind: OpKind,
+    worker: usize,
+    id: Option<Json>,
+    resp: mpsc::Sender<Json>,
+    window: Arc<SessionWindow>,
+}
+
+struct QueuedOp {
+    ctx: OpCtx,
+    msg: IfuncMsg,
+}
+
+/// One drained-and-shipped batch: each op paired with its in-flight
+/// reply, handed from the drainer to the reaper.
+type ReapBatch = Vec<(OpCtx, PendingReply)>;
+
+/// Per-client FIFO lanes + a round-robin cursor.
+#[derive(Default)]
+struct Lanes {
+    lanes: Vec<(u64, VecDeque<QueuedOp>)>,
+    rr: usize,
+}
+
+/// Bounded per-worker submission queue: per-client lanes drained
+/// round-robin (fairness), depth mirrored in an atomic for the lock-free
+/// shed check.
+struct WorkerQueue {
+    depth: AtomicUsize,
+    state: Mutex<Lanes>,
+    ready: Condvar,
+}
+
+impl WorkerQueue {
+    fn new() -> Self {
+        WorkerQueue {
+            depth: AtomicUsize::new(0),
+            state: Mutex::new(Lanes::default()),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    fn push(&self, client: u64, op: QueuedOp) {
+        // Increment before the op becomes visible so a concurrent
+        // pop_batch's decrement can never underflow the mirror.
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        let mut st = lock_recover(&self.state);
+        match st.lanes.iter_mut().find(|(c, _)| *c == client) {
+            Some((_, lane)) => lane.push_back(op),
+            None => st.lanes.push((client, VecDeque::from([op]))),
+        }
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    /// Pop up to `max` ops, one per lane per rotation — a firehose
+    /// client's lane yields between every other client's, so fairness
+    /// is structural, not scheduled. Emptied lanes are removed (a
+    /// returning client starts a fresh lane at the back).
+    fn pop_batch(&self, max: usize) -> Vec<QueuedOp> {
+        let mut st = lock_recover(&self.state);
+        let mut out = Vec::new();
+        while out.len() < max && !st.lanes.is_empty() {
+            if st.rr >= st.lanes.len() {
+                st.rr = 0;
+            }
+            let i = st.rr;
+            if let Some(op) = st.lanes[i].1.pop_front() {
+                out.push(op);
+            }
+            if st.lanes[i].1.is_empty() {
+                st.lanes.remove(i);
+            } else {
+                st.rr = i + 1;
+            }
+        }
+        self.depth.fetch_sub(out.len(), Ordering::Relaxed);
+        out
+    }
+
+    /// Park until a push signals (or `timeout`), if currently empty.
+    fn wait_ready(&self, timeout: Duration) {
+        let st = lock_recover(&self.state);
+        if st.lanes.is_empty() {
+            let _ = wait_timeout_recover(&self.ready, st, timeout);
+        }
+    }
+}
+
+/// Everything the session/drainer/reaper threads share.
+struct Shared {
+    cluster: Arc<Cluster>,
+    insert: IfuncHandle,
+    get: IfuncHandle,
+    config: FrontendConfig,
+    queues: Vec<WorkerQueue>,
+    stats: FrontendStats,
+    stop: AtomicBool,
+    active: AtomicUsize,
+    next_client: AtomicU64,
+}
+
+/// The running front-end: owns the per-worker drainer + reaper threads
+/// and hands out sessions. Shut down (or drop) the `Frontend` *before*
+/// the cluster — its threads hold `Arc<Cluster>` and need live workers
+/// to collect outstanding replies.
+pub struct Frontend {
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Frontend {
+    /// Install + register the serve ifuncs and start the per-worker
+    /// coalescing pipeline (`coalesce: false` skips the threads — every
+    /// submit then invokes synchronously).
+    pub fn launch(cluster: Arc<Cluster>, config: FrontendConfig) -> Result<Frontend> {
+        if config.max_clients == 0
+            || config.session_window == 0
+            || config.queue_high_water == 0
+            || config.batch_max == 0
+        {
+            return Err(Error::Other(
+                "FrontendConfig: max_clients / session_window / queue_high_water / \
+                 batch_max must all be >= 1"
+                    .into(),
+            ));
+        }
+        cluster.leader.library_dir().install(Box::new(InsertIfunc));
+        cluster.leader.library_dir().install(Box::new(GetIfunc));
+        let shared = Arc::new(Shared {
+            insert: cluster.leader.register_ifunc("insert")?,
+            get: cluster.leader.register_ifunc("get")?,
+            queues: (0..cluster.workers.len()).map(|_| WorkerQueue::new()).collect(),
+            config,
+            cluster,
+            stats: FrontendStats::default(),
+            stop: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            next_client: AtomicU64::new(0),
+        });
+        let mut threads = Vec::new();
+        if shared.config.coalesce {
+            for w in 0..shared.cluster.workers.len() {
+                let (tx, rx) = mpsc::channel::<ReapBatch>();
+                let s = shared.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("serve-drain-{w}"))
+                        .spawn(move || drain_loop(&s, w, &tx))
+                        .map_err(|e| Error::Other(format!("spawn drainer: {e}")))?,
+                );
+                let s = shared.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("serve-reap-{w}"))
+                        .spawn(move || reap_loop(&s, rx))
+                        .map_err(|e| Error::Other(format!("spawn reaper: {e}")))?,
+                );
+            }
+        }
+        Ok(Frontend { shared, threads })
+    }
+
+    /// Open a session: the [`Session`] submits (give it to the reader),
+    /// the [`SessionReceiver`] yields responses (give it to the
+    /// responder). Refuses with [`Error::NoResource`] past
+    /// `max_clients`.
+    pub fn session(&self) -> Result<(Session, SessionReceiver)> {
+        let prev = self.shared.active.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.shared.config.max_clients {
+            self.shared.active.fetch_sub(1, Ordering::AcqRel);
+            return Err(Error::NoResource(format!(
+                "server at capacity ({} clients); retry later",
+                self.shared.config.max_clients
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        let session = Session {
+            shared: self.shared.clone(),
+            client: self.shared.next_client.fetch_add(1, Ordering::Relaxed),
+            resp: tx,
+            window: Arc::new(SessionWindow::new()),
+        };
+        Ok((session, SessionReceiver { rx }))
+    }
+
+    /// Point-in-time front-end counters (also inside the `stats`
+    /// command's response, under `"frontend"`).
+    pub fn snapshot(&self) -> FrontendSnapshot {
+        snapshot_of(&self.shared)
+    }
+
+    /// Stop the drainer/reaper threads and join them. Ops still queued
+    /// are answered with a shutdown error, never silently dropped.
+    pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        for q in &self.shared.queues {
+            // Lock-then-notify: a drainer between its empty-check and its
+            // wait must observe the flag or the wakeup, never neither.
+            drop(lock_recover(&q.state));
+            q.ready.notify_all();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Frontend {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+/// The submit half of one client connection. Not `Sync` (single reader
+/// thread per client); moving it to that thread is the intended use.
+pub struct Session {
+    shared: Arc<Shared>,
+    client: u64,
+    resp: mpsc::Sender<Json>,
+    window: Arc<SessionWindow>,
+}
+
+impl Session {
+    /// Submit one protocol line. Every non-blank line produces exactly
+    /// one response on the paired [`SessionReceiver`] — possibly out of
+    /// order with other submissions (match on `id`). Returns `false`
+    /// only for blank lines (no response owed). Blocks only when this
+    /// session already has `session_window` responses outstanding.
+    pub fn submit(&self, line: &str) -> bool {
+        if line.trim().is_empty() {
+            return false;
+        }
+        let req = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                self.push(err_json(&format!("bad request: {e}")), &None);
+                return true;
+            }
+        };
+        let id = req.get("id").cloned();
+        match req.get("cmd").and_then(|c| c.as_str()) {
+            Some("insert") => {
+                let Some(key) = req.get("key").and_then(|k| k.as_u64()) else {
+                    self.push(err_json("insert needs numeric key"), &id);
+                    return true;
+                };
+                let Some(data) = req.get("data").and_then(|v| v.as_f32_vec()) else {
+                    self.push(err_json("insert needs data array"), &id);
+                    return true;
+                };
+                match self.shared.insert.msg_create(&InsertIfunc::args(key, &data)) {
+                    Ok(msg) => self.dispatch(OpKind::Insert, key, msg, id),
+                    Err(e) => self.push(err_json(&e.to_string()), &id),
+                }
+            }
+            Some("get") => {
+                let Some(key) = req.get("key").and_then(|k| k.as_u64()) else {
+                    self.push(err_json("get needs numeric key"), &id);
+                    return true;
+                };
+                match self.shared.get.msg_create(&GetIfunc::args(key)) {
+                    Ok(msg) => self.dispatch(OpKind::Get, key, msg, id),
+                    Err(e) => self.push(err_json(&e.to_string()), &id),
+                }
+            }
+            Some("stats") => self.push(stats_json(&self.shared), &id),
+            _ => self.push(err_json("unknown cmd (insert/get/stats)"), &id),
+        }
+        true
+    }
+
+    /// Route one store op. Coalescing on: shed-or-queue (admission
+    /// control happens *here*, before any blocking wait). Coalescing
+    /// off: the pre-pipeline synchronous path, one blocking invocation.
+    fn dispatch(&self, kind: OpKind, key: u64, msg: IfuncMsg, id: Option<Json>) {
+        let shared = &self.shared;
+        let worker = route_key(key, shared.cluster.workers.len());
+        if !shared.config.coalesce {
+            shared.stats.submitted.fetch_add(1, Ordering::Relaxed);
+            let d = shared.cluster.dispatcher();
+            let resp = response_for(&kind, worker, d.invoke_one(Target::Worker(worker), &msg));
+            shared.stats.responded.fetch_add(1, Ordering::Relaxed);
+            self.push(resp, &id);
+            return;
+        }
+        if shared.queues[worker].depth() >= shared.config.queue_high_water {
+            shared.stats.shed.fetch_add(1, Ordering::Relaxed);
+            self.push(overloaded_json(), &id);
+            return;
+        }
+        if !self.window.acquire(shared.config.session_window, &shared.stop) {
+            self.push(err_json("server shutting down"), &id);
+            return;
+        }
+        shared.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        shared.queues[worker].push(
+            self.client,
+            QueuedOp {
+                ctx: OpCtx {
+                    kind,
+                    worker,
+                    id,
+                    resp: self.resp.clone(),
+                    window: self.window.clone(),
+                },
+                msg,
+            },
+        );
+    }
+
+    fn push(&self, resp: Json, id: &Option<Json>) {
+        // A gone receiver just discards the response; the session-level
+        // error surfaces at the socket, not here.
+        let _ = self.resp.send(attach_id(resp, id));
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.shared.active.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// The response half of one client connection: yields responses in
+/// completion order (match them to requests by `id`).
+pub struct SessionReceiver {
+    rx: mpsc::Receiver<Json>,
+}
+
+impl SessionReceiver {
+    /// Next response, waiting up to `timeout`. `None` on timeout or a
+    /// closed session.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Json> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// Next already-arrived response, if any.
+    pub fn try_recv(&self) -> Option<Json> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Per-worker drainer: pop whatever is queued the moment the invoke
+/// window has room, ship it as one coalesced batch. When the window is
+/// saturated the drainer *polls* (the ops are already admitted — they
+/// must not be shed, and blocking inside the window would serialize the
+/// queue behind the slowest reply).
+fn drain_loop(shared: &Shared, worker: usize, reaped: &mpsc::Sender<ReapBatch>) {
+    let d = shared.cluster.dispatcher();
+    loop {
+        let ops = shared.queues[worker].pop_batch(shared.config.batch_max);
+        if ops.is_empty() {
+            if shared.stop.load(Ordering::Acquire) {
+                return;
+            }
+            shared.queues[worker].wait_ready(Duration::from_millis(5));
+            continue;
+        }
+        let mut ctxs: VecDeque<OpCtx> = VecDeque::with_capacity(ops.len());
+        let mut msgs: Vec<IfuncMsg> = Vec::with_capacity(ops.len());
+        for op in ops {
+            ctxs.push_back(op.ctx);
+            msgs.push(op.msg);
+        }
+        let mut idx = 0;
+        while idx < msgs.len() {
+            match d.try_invoke_batch(Target::Worker(worker), &msgs[idx..]) {
+                Ok(pending) if pending.is_empty() => {
+                    if shared.stop.load(Ordering::Acquire) {
+                        fail_all(shared, ctxs, "server shutting down");
+                        return;
+                    }
+                    // Window full: slots free as the reaper collects.
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Ok(pending) => {
+                    let n = pending.len();
+                    shared.stats.record_batch(n);
+                    let batch: ReapBatch = pending
+                        .into_iter()
+                        .map(|p| (ctxs.pop_front().expect("ctx per pending"), p))
+                        .collect();
+                    if reaped.send(batch).is_err() {
+                        // Reaper gone (shutdown torn the channel down).
+                        fail_all(shared, ctxs, "server shutting down");
+                        return;
+                    }
+                    idx += n;
+                }
+                Err(e) => {
+                    // Delivery failure: answer every op of this popped
+                    // batch that has not shipped, keep serving the queue.
+                    fail_all(shared, std::mem::take(&mut ctxs), &e.to_string());
+                    idx = msgs.len();
+                }
+            }
+        }
+    }
+}
+
+/// Reaper: waits each shipped op's reply (off the link lock — the
+/// drainer keeps posting meanwhile) and writes the response back.
+fn reap_loop(shared: &Shared, rx: mpsc::Receiver<ReapBatch>) {
+    for batch in rx {
+        for (ctx, p) in batch {
+            let resp = response_for(&ctx.kind, ctx.worker, p.wait());
+            respond(shared, ctx, resp);
+        }
+    }
+}
+
+fn fail_all(shared: &Shared, ctxs: impl IntoIterator<Item = OpCtx>, msg: &str) {
+    for ctx in ctxs {
+        respond(shared, ctx, err_json(msg));
+    }
+}
+
+/// Deliver a response for a queued op: echo the `id`, free the session
+/// window slot, count it.
+fn respond(shared: &Shared, ctx: OpCtx, resp: Json) {
+    // Count before sending: a client that reads its response and
+    // immediately asks for `stats` must see this op as responded.
+    shared.stats.responded.fetch_add(1, Ordering::Relaxed);
+    let _ = ctx.resp.send(attach_id(resp, &ctx.id));
+    ctx.window.release();
+}
+
+/// Build the JSON response for a completed invocation — the single
+/// source of truth for the insert/get reply shapes, shared by the
+/// coalesced and synchronous paths.
+fn response_for(kind: &OpKind, worker: usize, result: Result<Reply>) -> Json {
+    match kind {
+        OpKind::Insert => match result {
+            Ok(r) if r.ok() => {
+                Json::obj(vec![("ok", Json::Bool(true)), ("worker", Json::from(worker))])
+            }
+            Ok(_) => err_json("insert ifunc rejected on worker"),
+            Err(e) => err_json(&e.to_string()),
+        },
+        OpKind::Get => match result {
+            Ok(r) if r.ok() && r.r0 != GET_MISSING => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("worker", Json::from(worker)),
+                ("data", Json::arr_f32(&r.payload_f32s())),
+            ]),
+            Ok(r) if r.overflowed() => {
+                // Only reachable on a stream_replies: false cluster
+                // (serve always streams); kept for wire compat.
+                err_json("record too large for this link (reply streaming disabled)")
+            }
+            Ok(r) if r.ok() => err_json("not found"),
+            Ok(_) => err_json("get ifunc rejected on worker"),
+            Err(e) => err_json(&e.to_string()),
+        },
+    }
+}
+
+pub(crate) fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::from(msg))])
+}
+
+/// The load-shed response: `retry: true` tells a well-behaved client to
+/// back off and resubmit — the request was refused *before* consuming
+/// any worker resources.
+fn overloaded_json() -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::from("overloaded")),
+        ("retry", Json::Bool(true)),
+    ])
+}
+
+/// Echo the client-assigned request `id` (any JSON value) into a
+/// response object.
+fn attach_id(mut resp: Json, id: &Option<Json>) -> Json {
+    if let (Json::Obj(map), Some(id)) = (&mut resp, id) {
+        map.insert("id".to_string(), id.clone());
+    }
+    resp
+}
+
+fn snapshot_of(shared: &Shared) -> FrontendSnapshot {
+    let s = &shared.stats;
+    FrontendSnapshot {
+        submitted: s.submitted.load(Ordering::Relaxed),
+        responded: s.responded.load(Ordering::Relaxed),
+        shed: s.shed.load(Ordering::Relaxed),
+        batches: s.batches.load(Ordering::Relaxed),
+        batched_ops: s.batched_ops.load(Ordering::Relaxed),
+        batch_hist: [
+            s.batch_hist[0].load(Ordering::Relaxed),
+            s.batch_hist[1].load(Ordering::Relaxed),
+            s.batch_hist[2].load(Ordering::Relaxed),
+            s.batch_hist[3].load(Ordering::Relaxed),
+            s.batch_hist[4].load(Ordering::Relaxed),
+        ],
+        queue_depth: shared.queues.iter().map(|q| q.depth()).collect(),
+        clients: shared.active.load(Ordering::Relaxed),
+    }
+}
+
+/// The `stats` command's response: cluster execution counters plus the
+/// front-end's own admission/coalescing telemetry.
+fn stats_json(shared: &Shared) -> Json {
+    let d = shared.cluster.dispatcher();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("executed", Json::from(d.total_executed())),
+        (
+            "per_worker",
+            Json::Arr(shared.cluster.workers.iter().map(|w| Json::from(w.executed())).collect()),
+        ),
+        (
+            "records",
+            Json::from(shared.cluster.workers.iter().map(|w| w.store.len()).sum::<usize>()),
+        ),
+        ("frontend", snapshot_of(shared).to_json()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ClusterConfig, TransportKind};
+    use super::*;
+
+    fn frontend_on(
+        workers: usize,
+        transport: TransportKind,
+        config: FrontendConfig,
+    ) -> (Arc<Cluster>, Frontend) {
+        let cluster = Arc::new(
+            Cluster::launch(
+                ClusterConfig::builder().workers(workers).transport(transport).build().unwrap(),
+                |_, _, _| {},
+            )
+            .unwrap(),
+        );
+        let fe = Frontend::launch(cluster.clone(), config).unwrap();
+        (cluster, fe)
+    }
+
+    /// The full JSON protocol through a pipelined session (no socket): a
+    /// record well past one reply frame (80 KB > 64 KiB) inserts to its
+    /// owning worker and streams back intact through `get` — over every
+    /// serve transport, with `id`s echoed back on each response.
+    #[test]
+    fn session_roundtrips_a_big_record_with_ids() {
+        for transport in TransportKind::ALL {
+            let (_cluster, fe) = frontend_on(2, transport, FrontendConfig::default());
+            let (session, responses) = fe.session().unwrap();
+            let n = 20_000usize; // 80 KB of f32s — past the old inline cap
+            let data: String =
+                (0..n).map(|i| format!("{}", i % 17)).collect::<Vec<_>>().join(",");
+            assert!(session
+                .submit(&format!("{{\"id\":1,\"cmd\":\"insert\",\"key\":7,\"data\":[{data}]}}")));
+            let resp = responses.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{transport:?}: {resp}");
+            assert_eq!(resp.get("id"), Some(&Json::Num(1.0)), "{transport:?}");
+
+            assert!(session.submit("{\"id\":\"g\",\"cmd\":\"get\",\"key\":7}"));
+            let resp = responses.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{transport:?}: {resp}");
+            assert_eq!(resp.get("id").and_then(|i| i.as_str()), Some("g"), "{transport:?}");
+            let got = resp.get("data").unwrap().as_f32_vec().unwrap();
+            let want: Vec<f32> = (0..n).map(|i| (i % 17) as f32).collect();
+            assert_eq!(got, want, "{transport:?}");
+
+            assert!(session.submit("{\"cmd\":\"get\",\"key\":999}"));
+            let resp = responses.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{transport:?}: {resp}");
+            drop(session);
+            fe.shutdown();
+        }
+    }
+
+    /// `max_clients` is a hard cap: the refusal is immediate and names
+    /// the limit, and closing a session frees its slot.
+    #[test]
+    fn session_cap_refuses_then_recovers() {
+        let (_cluster, fe) =
+            frontend_on(1, TransportKind::Ring, FrontendConfig { max_clients: 1, ..Default::default() });
+        let first = fe.session().unwrap();
+        let err = fe.session().expect_err("second session must be refused");
+        assert!(err.to_string().contains("capacity"), "{err}");
+        drop(first);
+        let _ok = fe.session().expect("freed slot must admit");
+        fe.shutdown();
+    }
+
+    /// `stats` surfaces the front-end counters alongside the cluster's.
+    #[test]
+    fn stats_reports_frontend_counters() {
+        let (_cluster, fe) = frontend_on(2, TransportKind::Shm, FrontendConfig::default());
+        let (session, responses) = fe.session().unwrap();
+        assert!(session.submit("{\"cmd\":\"insert\",\"key\":3,\"data\":[1.5]}"));
+        let resp = responses.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert!(session.submit("{\"cmd\":\"stats\"}"));
+        let stats = responses.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(stats.get("ok"), Some(&Json::Bool(true)), "{stats}");
+        let fe_stats = stats.get("frontend").expect("frontend block");
+        assert_eq!(fe_stats.get("submitted").and_then(|v| v.as_u64()), Some(1), "{stats}");
+        assert_eq!(fe_stats.get("responded").and_then(|v| v.as_u64()), Some(1), "{stats}");
+        assert_eq!(fe_stats.get("shed").and_then(|v| v.as_u64()), Some(0), "{stats}");
+        assert!(fe_stats.get("batch_hist").is_some(), "{stats}");
+        assert_eq!(fe.snapshot().submitted, 1);
+        drop(session);
+        fe.shutdown();
+    }
+
+    /// Blank lines owe no response; malformed and unknown requests owe
+    /// exactly one error each, with the `id` echoed when parseable.
+    #[test]
+    fn error_paths_echo_ids_and_owe_one_response() {
+        let (_cluster, fe) = frontend_on(1, TransportKind::Ring, FrontendConfig::default());
+        let (session, responses) = fe.session().unwrap();
+        assert!(!session.submit("   "));
+        assert!(session.submit("{not json"));
+        let resp = responses.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(session.submit("{\"id\":9,\"cmd\":\"frobnicate\"}"));
+        let resp = responses.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp}");
+        assert_eq!(resp.get("id"), Some(&Json::Num(9.0)), "{resp}");
+        assert!(session.submit("{\"id\":10,\"cmd\":\"insert\",\"key\":1}"));
+        let resp = responses.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.get("error").and_then(|e| e.as_str()), Some("insert needs data array"));
+        assert_eq!(resp.get("id"), Some(&Json::Num(10.0)), "{resp}");
+        drop(session);
+        fe.shutdown();
+    }
+}

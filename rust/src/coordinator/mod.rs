@@ -33,17 +33,29 @@
 //! (per-link transfers overlapping), and merge the per-worker replies
 //! through [`MultiPendingReply`] — scatter-gather where the code moves
 //! to every shard of the data and only results travel back.
+//!
+//! On top of the dispatcher sits the concurrent serve front-end
+//! ([`frontend::Frontend`]) — the §3.2 database scenario under
+//! concurrent multi-client load: pipelined per-client sessions (bounded
+//! in-flight windows, out-of-order completion keyed by a client `id`),
+//! cross-client coalescing of same-worker operations into
+//! [`Dispatcher::try_invoke_batch`] batches (one credit reservation +
+//! one flush amortized across clients), and admission control that
+//! sheds with a `retry: true` overload response *before* any blocking
+//! wait, with round-robin draining so no client starves another.
 
 pub mod apps;
 pub mod dispatcher;
+pub mod frontend;
 pub mod store;
 pub mod telemetry;
 pub mod worker;
 
 pub use apps::{DecodeInsertIfunc, FilterIfunc, GetIfunc, InsertIfunc};
 pub use dispatcher::{route_key, Dispatcher, MultiPendingReply, MultiReply, PendingReply, Target};
+pub use frontend::{Frontend, FrontendConfig, FrontendStats, Session, SessionReceiver};
 pub use store::{install_db_symbols, RecordStore};
-pub use telemetry::{ClusterSnapshot, ContextSnapshot};
+pub use telemetry::{ClusterSnapshot, ContextSnapshot, FrontendSnapshot};
 pub use worker::{WorkerHandle, WorkerStats, GET_MISSING};
 
 pub use crate::ifunc::TransportKind;

@@ -63,6 +63,52 @@ impl ContextSnapshot {
     }
 }
 
+/// Counters for the concurrent serve front-end (`coordinator::frontend`):
+/// admission, shedding, and coalescing effectiveness under live
+/// multi-client load. Captured by `Frontend::snapshot` and surfaced
+/// through the serve `stats` command.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FrontendSnapshot {
+    /// Requests admitted into a per-worker submission queue.
+    pub submitted: u64,
+    /// Responses written back to clients (excludes sheds).
+    pub responded: u64,
+    /// Requests refused with the overload response before queueing.
+    pub shed: u64,
+    /// Coalesced batches shipped through `try_invoke_batch`.
+    pub batches: u64,
+    /// Total operations those batches carried (`batched_ops / batches`
+    /// is the mean coalescing factor).
+    pub batched_ops: u64,
+    /// Batch-size histogram: [1, 2–3, 4–7, 8–15, 16+] frames per batch.
+    pub batch_hist: [u64; 5],
+    /// Current submission-queue depth per worker.
+    pub queue_depth: Vec<usize>,
+    /// Currently connected sessions.
+    pub clients: usize,
+}
+
+impl FrontendSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::from(self.submitted)),
+            ("responded", Json::from(self.responded)),
+            ("shed", Json::from(self.shed)),
+            ("batches", Json::from(self.batches)),
+            ("batched_ops", Json::from(self.batched_ops)),
+            (
+                "batch_hist",
+                Json::Arr(self.batch_hist.iter().map(|&n| Json::from(n)).collect()),
+            ),
+            (
+                "queue_depth",
+                Json::Arr(self.queue_depth.iter().map(|&n| Json::from(n)).collect()),
+            ),
+            ("clients", Json::from(self.clients)),
+        ])
+    }
+}
+
 /// Cluster-wide snapshot: leader + every worker + execution counters.
 pub struct ClusterSnapshot {
     pub leader: ContextSnapshot,

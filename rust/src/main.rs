@@ -49,6 +49,16 @@ SERVE OPTIONS:
   --listen <addr>         TCP listen address (default 127.0.0.1:7100)
   --transport <ring|am|shm>  frame delivery transport (default ring; shm =
                           colocated workers over intra-node shared memory)
+  --max-clients <n>       concurrent connection cap (default 64; over-cap
+                          connections get one JSON error line, then close)
+  --session-window <n>    per-client pipelined requests in flight (default 16)
+  --queue-depth <n>       per-worker submission high-water mark; past it
+                          requests shed with {\"error\":\"overloaded\",
+                          \"retry\":true} (default 256)
+  --batch-max <n>         max frames per coalesced cross-client batch
+                          (default 16)
+  --no-coalesce           synchronous one-invocation-per-request dispatch
+                          (the pre-pipeline behavior; for comparison)
 ";
 
 #[derive(Default, Clone)]
@@ -64,6 +74,11 @@ struct Opts {
     workers: usize,
     listen: String,
     transport: two_chains::ifunc::TransportKind,
+    max_clients: Option<usize>,
+    session_window: Option<usize>,
+    queue_depth: Option<usize>,
+    batch_max: Option<usize>,
+    no_coalesce: bool,
 }
 
 fn parse_opts(args: &[String]) -> Result<Opts, String> {
@@ -90,6 +105,11 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             "--iters" => o.iters = Some(parse_num(take(&mut i)?)?),
             "--workers" => o.workers = parse_num(take(&mut i)?)?,
             "--listen" => o.listen = take(&mut i)?.clone(),
+            "--max-clients" => o.max_clients = Some(parse_num(take(&mut i)?)?),
+            "--session-window" => o.session_window = Some(parse_num(take(&mut i)?)?),
+            "--queue-depth" => o.queue_depth = Some(parse_num(take(&mut i)?)?),
+            "--batch-max" => o.batch_max = Some(parse_num(take(&mut i)?)?),
+            "--no-coalesce" => o.no_coalesce = true,
             "--transport" => {
                 o.transport = take(&mut i)?.parse().map_err(|e| format!("{e}"))?
             }
@@ -311,7 +331,24 @@ fn main() -> Result<()> {
         "demo" => demo()?,
         "serve" => {
             let opts = parse_opts(rest).map_err(Error::Other)?;
-            serve::serve(opts.workers, &opts.listen, opts.transport)?;
+            let mut frontend = two_chains::coordinator::FrontendConfig::default();
+            if let Some(n) = opts.max_clients {
+                frontend.max_clients = n;
+            }
+            if let Some(n) = opts.session_window {
+                frontend.session_window = n;
+            }
+            if let Some(n) = opts.queue_depth {
+                frontend.queue_high_water = n;
+            }
+            if let Some(n) = opts.batch_max {
+                frontend.batch_max = n;
+            }
+            frontend.coalesce = !opts.no_coalesce;
+            serve::serve(
+                &serve::ServeOpts { workers: opts.workers, transport: opts.transport, frontend },
+                &opts.listen,
+            )?;
         }
         "info" => info(),
         "help" | "--help" | "-h" => print!("{USAGE}"),

@@ -2,218 +2,377 @@
 //!
 //! A host (leader) process accepts line-delimited JSON over TCP and turns
 //! each request into an ifunc injection to the worker pool — the paper's
-//! §3.2 database scenario as a running service. One OS thread per client
-//! (the offline environment has no tokio; the request path itself is the
-//! fabric's, not the socket's).
+//! §3.2 database scenario as a running service **under concurrent
+//! multi-client load**. This file is only the socket glue: sessions,
+//! pipelining, cross-client coalescing, and admission control live in
+//! `two_chains::coordinator::frontend`, so the in-process tests and
+//! benches drive the identical pipeline without a socket.
 //!
-//! Protocol (one JSON object per line):
+//! Protocol (one JSON object per line; `id` is any client-chosen JSON
+//! value, echoed back on the matching response):
 //! ```json
-//! {"cmd":"insert","key":7,"data":[0.1,0.2]}  -> {"ok":true,"worker":1}
-//! {"cmd":"get","key":7}                      -> {"ok":true,"data":[...]}
-//! {"cmd":"stats"}                            -> {"ok":true,"executed":N}
+//! {"id":1,"cmd":"insert","key":7,"data":[0.1]} -> {"ok":true,"worker":1,"id":1}
+//! {"id":2,"cmd":"get","key":7}                 -> {"ok":true,"data":[...],"id":2}
+//! {"cmd":"stats"}                              -> {"ok":true,"executed":N,"frontend":{...}}
 //! ```
 //!
-//! Both commands are **invocations on the record's owning worker** —
-//! nothing touches any other link, so concurrent clients hitting
-//! different shards never serialize on each other:
-//!
-//! * `insert` injects an `InsertIfunc` frame to the key's owner and waits
-//!   for *that worker's* reply (not a full-cluster barrier — one slow or
-//!   busy worker cannot stall inserts bound elsewhere),
-//! * `get` injects a `GetIfunc` frame; the injected code calls `db_get`,
-//!   which pushes the record into the invocation's reply payload, and the
-//!   reply carries the record back — chunk-streamed when it exceeds one
-//!   reply frame, so records of any size round-trip. The data in the
-//!   response is computed by the injected function on the worker, not
-//!   read from the store by the leader.
+//! A connection is **pipelined**: the client may write many requests
+//! before reading any response, and responses complete out of order
+//! (match them by `id`). Per connection, one OS thread reads + submits
+//! while a second drains responses back to the socket (the offline
+//! environment has no tokio; the request path itself is the fabric's,
+//! not the socket's). Under overload, requests are refused *before* any
+//! blocking wait with `{"ok":false,"error":"overloaded","retry":true}`;
+//! past `--max-clients`, new connections get one JSON error line and are
+//! closed.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use two_chains::coordinator::{Cluster, ClusterConfig, GetIfunc, InsertIfunc, Target, GET_MISSING};
-use two_chains::ifunc::{IfuncHandle, TransportKind};
+use two_chains::coordinator::{
+    Cluster, ClusterConfig, Frontend, FrontendConfig, Session, SessionReceiver,
+};
+use two_chains::ifunc::TransportKind;
 use two_chains::log;
 use two_chains::util::Json;
 use two_chains::Result;
 
-/// The leader-side handles a serve deployment works with.
-pub struct ServeHandles {
-    pub insert: IfuncHandle,
-    pub get: IfuncHandle,
+/// Everything `repro serve` needs beyond the listen address.
+pub struct ServeOpts {
+    pub workers: usize,
+    pub transport: TransportKind,
+    pub frontend: FrontendConfig,
 }
 
-/// Boot the worker pool and register the serve ifuncs (shared by the TCP
-/// entry point and the in-process tests).
-pub fn launch(workers: usize, transport: TransportKind) -> Result<(Arc<Cluster>, ServeHandles)> {
-    let cluster = Arc::new(Cluster::launch(
-        ClusterConfig::builder().workers(workers).transport(transport).build()?,
-        |_, _, _| {},
-    )?);
-    cluster.leader.library_dir().install(Box::new(InsertIfunc));
-    cluster.leader.library_dir().install(Box::new(GetIfunc));
-    let handles = ServeHandles {
-        insert: cluster.leader.register_ifunc("insert")?,
-        get: cluster.leader.register_ifunc("get")?,
-    };
-    Ok((cluster, handles))
+fn err_line(msg: &str) -> String {
+    let mut s = Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::from(msg))])
+        .to_string();
+    s.push('\n');
+    s
 }
 
-pub fn serve(workers: usize, listen: &str, transport: TransportKind) -> Result<()> {
-    let (cluster, handles) = launch(workers, transport)?;
-    let handles = Arc::new(handles);
-
+/// Bind and serve until the process dies (the CLI entry point).
+pub fn serve(opts: &ServeOpts, listen: &str) -> Result<()> {
     let listener = TcpListener::bind(listen)?;
     println!(
-        "listening on {listen} ({workers} workers, {} transport); JSON lines: insert/get/stats",
-        transport.label()
+        "listening on {listen} ({} workers, {} transport); JSON lines: insert/get/stats \
+         (pipelined; echo field: id)",
+        opts.workers,
+        opts.transport.label()
     );
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let cluster = cluster.clone();
-        let handles = handles.clone();
+    run(listener, opts, &Arc::new(AtomicBool::new(false)))
+}
+
+/// Accept loop over an already-bound listener, honoring a shutdown
+/// signal (`stop`) so in-process tests can tear the server down. Accept
+/// errors are logged and survived — one bad handshake must not kill the
+/// service — and connections past `max_clients` are refused with a JSON
+/// error line instead of an unbounded thread.
+pub fn run(listener: TcpListener, opts: &ServeOpts, stop: &Arc<AtomicBool>) -> Result<()> {
+    let cluster = Arc::new(Cluster::launch(
+        ClusterConfig::builder()
+            .workers(opts.workers)
+            .transport(opts.transport)
+            .build()?,
+        |_, _, _| {},
+    )?);
+    let frontend = Frontend::launch(cluster.clone(), opts.frontend.clone())?;
+
+    listener.set_nonblocking(true)?;
+    let mut clients: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                clients.retain(|h| !h.is_finished());
+                match frontend.session() {
+                    Ok((session, responses)) => {
+                        let stop = stop.clone();
+                        clients.push(std::thread::spawn(move || {
+                            if let Err(e) = client_loop(stream, session, responses, &stop) {
+                                log::warn!("client {peer}: {e}");
+                            }
+                        }));
+                    }
+                    Err(e) => {
+                        // At capacity: one JSON error line, then close —
+                        // never an unbounded client thread.
+                        let mut stream = stream;
+                        let _ = stream.write_all(err_line(&e.to_string()).as_bytes());
+                        log::warn!("client {peer} refused: {e}");
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                // Log-and-continue: a single failed accept (refused
+                // handshake, transient resource exhaustion) must not
+                // bring the whole server down.
+                log::warn!("accept: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+    for h in clients {
+        let _ = h.join();
+    }
+    frontend.shutdown();
+    Ok(())
+}
+
+/// One connection: this thread reads + submits; a paired writer thread
+/// drains session responses back to the socket. The writer owes exactly
+/// one response line per submitted request and exits once the reader
+/// hit EOF and every owed response has been written.
+fn client_loop(
+    stream: TcpStream,
+    session: Session,
+    responses: SessionReceiver,
+    stop: &Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    // Bounded reads so a connected-but-idle client cannot pin this
+    // thread past a server shutdown.
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let writer_stream = stream.try_clone()?;
+    let expected = Arc::new(AtomicUsize::new(0));
+    let done = Arc::new(AtomicBool::new(false));
+
+    let writer = {
+        let expected = expected.clone();
+        let done = done.clone();
+        let stop = stop.clone();
         std::thread::spawn(move || {
-            let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-            if let Err(e) = client_loop(stream, &cluster, &handles) {
-                log::warn!("client {peer}: {e}");
+            let mut out = writer_stream;
+            let mut written = 0usize;
+            loop {
+                match responses.recv_timeout(Duration::from_millis(50)) {
+                    Some(resp) => {
+                        let mut line = resp.to_string();
+                        line.push('\n');
+                        if out.write_all(line.as_bytes()).is_err() {
+                            return; // client gone; reader will see EOF
+                        }
+                        written += 1;
+                    }
+                    None => {
+                        let finished =
+                            done.load(Ordering::Acquire) && written >= expected.load(Ordering::Acquire);
+                        if finished || stop.load(Ordering::Acquire) {
+                            // Best-effort drain of responses that raced in.
+                            while let Some(resp) = responses.try_recv() {
+                                let mut line = resp.to_string();
+                                line.push('\n');
+                                let _ = out.write_all(line.as_bytes());
+                            }
+                            return;
+                        }
+                    }
+                }
             }
-        });
-    }
-    Ok(())
-}
-
-fn client_loop(stream: TcpStream, cluster: &Cluster, handles: &ServeHandles) -> Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp = handle_line(cluster, handles, &line);
-        writer.write_all(resp.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-    }
-    Ok(())
-}
-
-fn err_json(msg: &str) -> Json {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::from(msg))])
-}
-
-pub fn handle_line(cluster: &Cluster, handles: &ServeHandles, line: &str) -> Json {
-    let req = match Json::parse(line) {
-        Ok(j) => j,
-        Err(e) => return err_json(&format!("bad request: {e}")),
+        })
     };
-    let d = cluster.dispatcher();
-    match req.get("cmd").and_then(|c| c.as_str()) {
-        Some("insert") => {
-            let Some(key) = req.get("key").and_then(|k| k.as_u64()) else {
-                return err_json("insert needs numeric key");
-            };
-            let Some(data) = req.get("data").and_then(|v| v.as_f32_vec()) else {
-                return err_json("insert needs data array");
-            };
-            // An invocation on the owning worker alone: wait for *its*
-            // reply, not a full-cluster barrier — a barrier here would
-            // flush and wait on every link, so one client inserting to
-            // worker 0 would serialize behind unrelated traffic (or a
-            // parked frame) on worker N.
-            let worker = d.route_key(key);
-            let msg = match handles.insert.msg_create(&InsertIfunc::args(key, &data)) {
-                Ok(m) => m,
-                Err(e) => return err_json(&e.to_string()),
-            };
-            match d.invoke_one(Target::Worker(worker), &msg) {
-                Ok(reply) if reply.ok() => {
-                    Json::obj(vec![("ok", Json::Bool(true)), ("worker", Json::from(worker))])
+
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF — client closed its write side
+            Ok(_) => {
+                if session.submit(line.trim_end()) {
+                    expected.fetch_add(1, Ordering::Release);
                 }
-                Ok(_) => err_json("insert ifunc rejected on worker"),
-                Err(e) => err_json(&e.to_string()),
+                line.clear();
             }
-        }
-        Some("get") => {
-            let Some(key) = req.get("key").and_then(|k| k.as_u64()) else {
-                return err_json("get needs numeric key");
-            };
-            let worker = d.route_key(key);
-            let msg = match handles.get.msg_create(&GetIfunc::args(key)) {
-                Ok(m) => m,
-                Err(e) => return err_json(&e.to_string()),
-            };
-            // Inject the lookup and wait for the reply: the record bytes
-            // ride in the reply payload — streamed across chunk frames
-            // when the record exceeds one — pushed by the injected
-            // function on the worker. Concurrent gets each carry their
-            // own frame, so nothing can clobber anything, and record
-            // size never changes the protocol.
-            match d.fetch(Target::Worker(worker), &msg) {
-                Ok((reply, data)) if reply.ok() && reply.r0 != GET_MISSING => Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("worker", Json::from(worker)),
-                    ("data", Json::arr_f32(&data)),
-                ]),
-                Ok((reply, _)) if reply.overflowed() => {
-                    // Only reachable on a stream_replies: false cluster
-                    // (serve always streams); kept for wire compat.
-                    err_json("record too large for this link (reply streaming disabled)")
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                // Idle poll tick (a partial line, if any, stays
+                // accumulated in `line`); only a shutdown ends the
+                // connection early.
+                if stop.load(Ordering::Acquire) {
+                    break;
                 }
-                Ok((reply, _)) if reply.ok() => err_json("not found"),
-                Ok(_) => err_json("get ifunc rejected on worker"),
-                Err(e) => err_json(&e.to_string()),
             }
+            Err(_) => break,
         }
-        Some("stats") => Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("executed", Json::from(d.total_executed())),
-            (
-                "per_worker",
-                Json::Arr(cluster.workers.iter().map(|w| Json::from(w.executed())).collect()),
-            ),
-            (
-                "records",
-                Json::from(cluster.workers.iter().map(|w| w.store.len()).sum::<usize>()),
-            ),
-        ]),
-        _ => err_json("unknown cmd (insert/get/stats)"),
     }
+    done.store(true, Ordering::Release);
+    drop(session); // frees the client slot; in-flight responses still drain
+    let _ = writer.join();
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::net::SocketAddr;
 
-    /// The full JSON protocol in-process (no socket): a record well past
-    /// one reply frame (80 KB > 64 KiB) inserts to its owning worker and
-    /// streams back intact through `get` — over every serve transport,
-    /// including the colocated shm pool.
-    #[test]
-    fn json_insert_then_get_streams_a_big_record() {
-        for transport in TransportKind::ALL {
-            json_roundtrip_on(transport);
-        }
+    fn start_server(
+        workers: usize,
+        transport: TransportKind,
+        frontend: FrontendConfig,
+    ) -> (SocketAddr, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let opts = ServeOpts { workers, transport, frontend };
+        let server = {
+            let stop = stop.clone();
+            std::thread::spawn(move || run(listener, &opts, &stop).unwrap())
+        };
+        (addr, stop, server)
     }
 
-    fn json_roundtrip_on(transport: TransportKind) {
-        let (cluster, handles) = launch(2, transport).unwrap();
-        let n = 20_000usize; // 80 KB of f32s — past the old inline cap
-        let data: String = (0..n).map(|i| format!("{}", i % 17)).collect::<Vec<_>>().join(",");
-        let resp = handle_line(
-            &cluster,
-            &handles,
-            &format!("{{\"cmd\":\"insert\",\"key\":7,\"data\":[{data}]}}"),
+    fn read_json_line(reader: &mut BufReader<TcpStream>) -> Json {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim_end()).unwrap()
+    }
+
+    /// Two concurrent TCP clients each write a pipelined burst (no
+    /// interleaved reads), then collect their responses and match them
+    /// by `id`: out-of-order completion is allowed, lost or duplicated
+    /// responses are not.
+    #[test]
+    fn tcp_pipelined_burst_matches_ids() {
+        let (addr, stop, server) =
+            start_server(2, TransportKind::Ring, FrontendConfig::default());
+        let n = 10usize;
+        let clients: Vec<_> = (0..2u64)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut conn = TcpStream::connect(addr).unwrap();
+                    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                    let mut reader = BufReader::new(conn.try_clone().unwrap());
+                    for i in 0..n {
+                        let key = c * 1000 + i as u64;
+                        writeln!(
+                            conn,
+                            "{{\"id\":{i},\"cmd\":\"insert\",\"key\":{key},\"data\":[{c}.0,{i}.0]}}"
+                        )
+                        .unwrap();
+                    }
+                    let mut seen = vec![false; n];
+                    for _ in 0..n {
+                        let resp = read_json_line(&mut reader);
+                        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+                        let id = resp.get("id").and_then(|i| i.as_u64()).unwrap() as usize;
+                        assert!(!seen[id], "duplicate response for id {id}");
+                        seen[id] = true;
+                    }
+                    assert!(seen.iter().all(|&s| s), "client {c} missing responses");
+                    // Read-back through the same pipe: every inserted key
+                    // is visible with its exact record.
+                    for i in 0..n {
+                        let key = c * 1000 + i as u64;
+                        writeln!(conn, "{{\"id\":{i},\"cmd\":\"get\",\"key\":{key}}}").unwrap();
+                    }
+                    let mut got = vec![None; n];
+                    for _ in 0..n {
+                        let resp = read_json_line(&mut reader);
+                        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+                        let id = resp.get("id").and_then(|i| i.as_u64()).unwrap() as usize;
+                        got[id] = resp.get("data").and_then(|d| d.as_f32_vec());
+                    }
+                    for (i, data) in got.into_iter().enumerate() {
+                        assert_eq!(data.unwrap(), vec![c as f32, i as f32]);
+                    }
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        stop.store(true, Ordering::Release);
+        server.join().unwrap();
+    }
+
+    /// `stats` over the socket includes the front-end telemetry block.
+    #[test]
+    fn tcp_stats_exposes_frontend_block() {
+        let (addr, stop, server) =
+            start_server(1, TransportKind::Shm, FrontendConfig::default());
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        writeln!(conn, "{{\"cmd\":\"insert\",\"key\":1,\"data\":[4.0]}}").unwrap();
+        let resp = read_json_line(&mut reader);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        writeln!(conn, "{{\"cmd\":\"stats\"}}").unwrap();
+        let stats = read_json_line(&mut reader);
+        assert_eq!(stats.get("ok"), Some(&Json::Bool(true)), "{stats}");
+        let fe = stats.get("frontend").expect("frontend telemetry block");
+        assert_eq!(fe.get("submitted").and_then(|v| v.as_u64()), Some(1), "{stats}");
+        assert_eq!(fe.get("clients").and_then(|v| v.as_u64()), Some(1), "{stats}");
+        drop(conn);
+        stop.store(true, Ordering::Release);
+        server.join().unwrap();
+    }
+
+    /// Past `max_clients`, a new connection gets one JSON error line and
+    /// is closed; once a slot frees, new connections serve normally.
+    #[test]
+    fn tcp_refuses_past_max_clients_then_recovers() {
+        let (addr, stop, server) = start_server(
+            1,
+            TransportKind::Ring,
+            FrontendConfig { max_clients: 1, ..Default::default() },
         );
+        let mut first = TcpStream::connect(addr).unwrap();
+        first.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut first_reader = BufReader::new(first.try_clone().unwrap());
+        // A served round-trip proves `first` holds the one client slot
+        // before any refusal is asserted.
+        writeln!(first, "{{\"cmd\":\"insert\",\"key\":1,\"data\":[1.0]}}").unwrap();
+        let resp = read_json_line(&mut first_reader);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
-
-        let resp = handle_line(&cluster, &handles, "{\"cmd\":\"get\",\"key\":7}");
-        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
-        let got = resp.get("data").unwrap().as_f32_vec().unwrap();
-        assert_eq!(got.len(), n);
-        let want: Vec<f32> = (0..n).map(|i| (i % 17) as f32).collect();
-        assert_eq!(got, want);
-
-        let resp = handle_line(&cluster, &handles, "{\"cmd\":\"get\",\"key\":999}");
-        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp}");
+        let mut refused_reader = loop {
+            let conn = TcpStream::connect(addr).unwrap();
+            conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+            let mut reader = BufReader::new(conn);
+            let mut line = String::new();
+            if reader.read_line(&mut line).unwrap_or(0) > 0 {
+                let resp = Json::parse(line.trim_end()).unwrap();
+                if resp.get("error").and_then(|e| e.as_str()).is_some_and(|e| e.contains("capacity"))
+                {
+                    break reader;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        // The refused connection was closed server-side: EOF, not a hang.
+        let mut rest = String::new();
+        assert_eq!(refused_reader.read_line(&mut rest).unwrap_or(0), 0);
+        // Freeing the slot readmits: the server notices the first
+        // client's EOF within its read-poll tick.
+        drop(first_reader);
+        drop(first);
+        let mut served = false;
+        for _ in 0..100 {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            writeln!(conn, "{{\"cmd\":\"insert\",\"key\":9,\"data\":[1.0]}}").unwrap();
+            let mut line = String::new();
+            if reader.read_line(&mut line).unwrap_or(0) > 0 {
+                let resp = Json::parse(line.trim_end()).unwrap();
+                if resp.get("ok") == Some(&Json::Bool(true)) {
+                    served = true;
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(served, "freed client slot never readmitted");
+        stop.store(true, Ordering::Release);
+        server.join().unwrap();
     }
 }
