@@ -1,4 +1,4 @@
-//! Ablations (DESIGN.md experiment index, Abl A–E):
+//! Ablations (DESIGN.md experiment index, Abl A–L):
 //!
 //! * **A** — coherent vs non-coherent I-cache: the paper blames
 //!   `clear_cache` for the small-payload loss and lists a coherent-I-cache
@@ -46,10 +46,17 @@
 //!   client's thread), per transport. The speedup column is what
 //!   coalescing buys once clients contend for the same worker links —
 //!   it should cross 1x somewhere between 1 and 16 clients.
+//! * **L** — mesh forwarding: a two-stage pipeline driven either by
+//!   leader relay (invoke stage 1, collect its result at the leader,
+//!   reassemble a frame around it, invoke stage 2 — two full leader
+//!   round trips per pipeline) or by one `forward`-chaining invocation
+//!   whose intermediate result hops worker→worker over the mesh and
+//!   never touches the leader. 2/4/8 workers on every transport; the
+//!   speedup column is what cutting the leader out of the datapath buys.
 //!
 //! Run: `cargo bench --bench ablations` (QUICK=1 for a smoke run;
 //! ABL=E,H runs only the named ablations — CI's bench smoke uses
-//! ABL=H,I,J,K).
+//! ABL=H,I,J,K,L).
 
 use std::time::{Duration, Instant};
 
@@ -352,6 +359,82 @@ fn serve_throughput(
     Arc::try_unwrap(frontend).ok().expect("sessions closed").shutdown();
     Arc::try_unwrap(cluster).ok().expect("frontend gone").shutdown().expect("shutdown");
     (clients * ops_per_client) as f64 / dt
+}
+
+/// Abl L workload: `rounds` two-stage pipelines — stage 1 on worker `w`,
+/// stage 2 on worker `(w + 1) % workers`, rotating `w` each round.
+/// `mesh: false` is leader relay: invoke stage 1, wait for its result at
+/// the leader, reassemble a frame around it, invoke stage 2 — two full
+/// leader round trips plus a reassembly per pipeline. `mesh: true` ships
+/// one `HopIfunc` invocation whose first stage `forward`s the frame to
+/// the peer over the worker mesh, so the intermediate result never
+/// touches the leader and only the final hop replies. Returns
+/// pipelines/second.
+fn pipeline_throughput(
+    base: &BenchConfig,
+    transport: TransportKind,
+    workers: usize,
+    mesh: bool,
+    rounds: usize,
+) -> f64 {
+    use two_chains::ifunc::builtin::HopIfunc;
+    let cluster = Cluster::launch(
+        ClusterConfig::builder()
+            .workers(workers)
+            .transport(transport)
+            .mesh(mesh)
+            // Keep the 8-worker mesh (n·(n−1) peer rings) cheap to map.
+            .ring_bytes(1 << 20)
+            .wire(base.wire)
+            .build()
+            .expect("config"),
+        |_, ctx, _| {
+            ctx.library_dir().install(Box::new(HopIfunc));
+        },
+    )
+    .expect("cluster");
+    cluster.leader.library_dir().install(Box::new(HopIfunc));
+    let d = cluster.dispatcher();
+    let h = d.register("hop").expect("register");
+    let data = vec![0x5Au8; 64];
+    // Mesh arm: one pre-assembled frame per start worker, each naming its
+    // ring neighbour as the chain's second stage.
+    let mesh_msgs: Vec<_> = (0..workers)
+        .map(|w| {
+            h.msg_create(&SourceArgs::bytes(HopIfunc::payload(&[(w + 1) % workers], &data)))
+                .expect("msg")
+        })
+        .collect();
+    // Relay arm, stage 1: a chain-of-one that just replies with its data.
+    let stage1 =
+        h.msg_create(&SourceArgs::bytes(HopIfunc::payload(&[], &data))).expect("msg");
+    let t0 = Instant::now();
+    for round in 0..rounds {
+        let w = round % workers;
+        if mesh {
+            let reply = d
+                .invoke_begin(Target::Worker(w), &mesh_msgs[w])
+                .expect("invoke")
+                .wait()
+                .expect("wait");
+            assert!(reply.ok());
+        } else {
+            let r1 = d.invoke_one(Target::Worker(w), &stage1).expect("stage 1");
+            assert!(r1.ok());
+            // The leader reassembles stage 1's output into the stage 2
+            // frame — the relay cost the mesh arm never pays.
+            let stage2 = h
+                .msg_create(&SourceArgs::bytes(HopIfunc::payload(&[], &r1.payload)))
+                .expect("msg");
+            let r2 =
+                d.invoke_one(Target::Worker((w + 1) % workers), &stage2).expect("stage 2");
+            assert!(r2.ok());
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(d.total_executed(), (rounds * 2) as u64);
+    cluster.shutdown().expect("shutdown");
+    rounds as f64 / dt
 }
 
 fn main() {
@@ -702,6 +785,31 @@ fn main() {
                     "{:>10}  {clients:>8}  {on:>12.0}  {off:>12.0}  {:>9.2}x",
                     transport.label(),
                     on / off
+                );
+            }
+        }
+    }
+
+    // Abl L — mesh forwarding vs leader relay on the same two-stage
+    // pipeline. The relay arm pays two full leader round trips plus a
+    // frame reassembly per pipeline; the mesh arm pays one round trip,
+    // with the intermediate result hopping worker→worker. The speedup
+    // prices cutting the leader out of the inter-stage datapath.
+    if run('L') {
+        let rounds = if quick { 50 } else { 400 };
+        println!("\n== Abl L — two-stage pipeline throughput (64B, pipelines/s) ==");
+        println!(
+            "{:>10}  {:>8}  {:>14}  {:>14}  {:>10}",
+            "transport", "workers", "mesh forward", "leader relay", "speedup"
+        );
+        for transport in TransportKind::ALL {
+            for workers in [2usize, 4, 8] {
+                let fwd = pipeline_throughput(&base, transport, workers, true, rounds);
+                let relay = pipeline_throughput(&base, transport, workers, false, rounds);
+                println!(
+                    "{:>10}  {workers:>8}  {fwd:>14.0}  {relay:>14.0}  {:>9.2}x",
+                    transport.label(),
+                    fwd / relay
                 );
             }
         }

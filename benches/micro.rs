@@ -278,6 +278,39 @@ fn main() {
         }
     }
 
+    // Mesh forward hop: a two-worker mesh cluster where every invocation
+    // chains one `forward` (leader → w0 → w1, the final hop relaying its
+    // reply straight back to the leader's collector) — the per-hop price
+    // of re-injecting a frame over the worker mesh, against the plain
+    // window-1 pipelined invoke row above.
+    {
+        use two_chains::coordinator::{Cluster, ClusterConfig, Target};
+        use two_chains::ifunc::builtin::HopIfunc;
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(2).mesh(true).build().expect("config"),
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(HopIfunc));
+            },
+        )
+        .expect("cluster");
+        cluster.leader.library_dir().install(Box::new(HopIfunc));
+        let d = cluster.dispatcher();
+        let h = d.register("hop").expect("register");
+        let m = h
+            .msg_create(&SourceArgs::bytes(HopIfunc::payload(&[1], &[0x5Au8; 64])))
+            .expect("msg");
+        let iters = if quick { 300 } else { 3000 };
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            assert!(d.invoke_one(Target::Worker(0), &m).expect("invoke").ok());
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let name = "forward hop (64B, mesh)".to_string();
+        println!("{name:<44} {ns:>12.0} ns/op");
+        t.rows.push(MicroRow { name, median_ns: ns, best_ns: ns });
+        cluster.shutdown().expect("shutdown");
+    }
+
     // Collective invocation: one `invoke_all` fan-out + merged wait per
     // iteration against a 4-worker pool — the per-round cost of a full
     // scatter-gather (inject once, every link posted before the flush

@@ -148,8 +148,43 @@ fn scatter_gather_demo() -> two_chains::Result<()> {
     cluster.shutdown()
 }
 
+/// The mesh-forwarding demo (needs no PJRT backend): the multi-hop
+/// pipeline shape the paper's compute-to-data motivation ends at — a
+/// stage chain (think shard-local filter → owner-side join → reduce)
+/// where each stage `forward`s the frame straight to the next worker
+/// over the worker↔worker mesh. The leader injects once into the head
+/// and collects the final stage's reply; the intermediate results never
+/// bounce through it.
+fn mesh_pipeline_demo() -> two_chains::Result<()> {
+    use two_chains::ifunc::builtin::HopIfunc;
+    println!("== mesh forwarding: w0 -> w1 -> w2 stage chain, no leader relay ==");
+    let cluster = Cluster::launch(
+        ClusterConfig::builder().workers(WORKERS).mesh(true).build()?,
+        |_, ctx, _| {
+            ctx.library_dir().install(Box::new(HopIfunc));
+        },
+    )?;
+    cluster.leader.library_dir().install(Box::new(HopIfunc));
+    let d = cluster.dispatcher();
+    let h = d.register("hop")?;
+    let data: Vec<u8> = (0..64u8).collect();
+    // Visit workers 1 and 2 after the injection target (worker 0).
+    let msg = h.msg_create(&SourceArgs::bytes(HopIfunc::payload(&[1, 2], &data)))?;
+    let t0 = Instant::now();
+    let reply = d.invoke_begin(Target::Worker(0), &msg)?.wait()?;
+    let us = t0.elapsed().as_secs_f64() * 1e6;
+    assert!(reply.ok() && reply.payload == data);
+    let frames: u64 = (0..WORKERS).map(|w| d.debug_frames_sent(w).unwrap()).sum();
+    let hops: u64 = cluster.workers.iter().map(|w| w.forwarded()).sum();
+    println!(
+        "  3-stage chain in {us:.0} us: {frames} leader frame(s), {hops} mesh hop(s)\n"
+    );
+    cluster.shutdown()
+}
+
 fn main() -> two_chains::Result<()> {
     scatter_gather_demo()?;
+    mesh_pipeline_demo()?;
     if !two_chains::runtime::pjrt_available() {
         eprintln!("graph_analysis needs a real PJRT backend (stubbed; see rust/src/xla.rs)");
         return Ok(());

@@ -175,6 +175,30 @@ class TestDeltaMath:
         assert "1 new metric(s)" in out
         assert "serve insert (coalesced, 16 clients)" in out
 
+    def test_forward_hop_row_is_new_not_a_regression(
+        self, bench_compare, tmp_path, monkeypatch, capsys
+    ):
+        # The mesh forward-hop micro row (PR 9) postdates any committed
+        # baseline: it must report as "new" and never feed the threshold,
+        # exactly like the PR 5 shm, PR 6 collective, and PR 8 serve rows.
+        base = write_report(tmp_path / "base.json", [row("decode", 100.0)])
+        cur = write_report(
+            tmp_path / "cur.json",
+            [
+                row("decode", 100.0),
+                row("forward hop (64B, mesh)", 9_999_999.0),
+            ],
+        )
+        rc = run_main(
+            bench_compare,
+            monkeypatch,
+            [str(cur), "--baseline", str(base), "--threshold", "5"],
+        )
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "1 new metric(s)" in out
+        assert "forward hop (64B, mesh)" in out
+
 
 class TestThresholdExit:
     def test_regression_beyond_threshold_exits_2(

@@ -29,37 +29,24 @@
 //!   owner worker, post each bucket coalesced, flush every touched link
 //!   once.
 //!
-//! Delivery is transport-generic: each worker link is an
-//! [`crate::ifunc::IfuncTransport`] chosen by `ClusterConfig::transport`
-//! (RDMA-PUT ring, AM send-receive, or intra-node shared memory), and
-//! every link carries a reply frame ring. Invocations pipeline up to
-//! `ClusterConfig::max_inflight` per worker; [`PendingReply::wait`]
-//! collects `(status, r0, payload)` — the payload pushed by the injected
-//! function through `reply_put` / `db_get`, of **any size**: one reply
-//! frame when it fits, a reassembled chunk stream when it does not.
+//! The dispatcher is a pure routing/collective **facade**: every
+//! per-worker mechanism — transport, reply ring, collector, invocation
+//! window — lives behind [`super::link::PeerLink`], the peer-generic
+//! link layer that the worker↔worker mesh reuses verbatim. The
+//! dispatcher resolves `Target`s to worker indices and calls link
+//! methods; it never touches a transport, window, or collector directly.
+//! Invocations pipeline up to `ClusterConfig::max_inflight` per worker;
+//! [`PendingReply::wait`] collects `(status, r0, payload)` — the payload
+//! pushed by the injected function through `reply_put` / `db_get`, of
+//! **any size**: one reply frame when it fits, a reassembled chunk
+//! stream when it does not.
 
-use std::collections::BTreeSet;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
-
-use crate::ifunc::{
-    IfuncHandle, IfuncMsg, Reply, ReplyCollector, ReplyRing, SourceArgs, REPLY_SLOTS,
-};
-use crate::util::sync::{lock_recover, wait_timeout_recover};
+use crate::ifunc::{IfuncHandle, IfuncMsg, Reply, SourceArgs};
 use crate::{Error, Result};
 
+use super::link::{PeerLink, PendingReply};
 use super::worker::GET_MISSING;
 use super::Cluster;
-
-/// Prefix a transport error with the worker it came from — delivery
-/// errors (a dead worker's full ring, a lapped reply) surface from deep
-/// inside the link, which has no idea which worker index it is.
-fn tag_worker(worker: usize, e: Error) -> Error {
-    match e {
-        Error::Transport(m) => Error::Transport(format!("worker {worker}: {m}")),
-        other => other,
-    }
-}
 
 /// Deterministic key → worker placement (the locality map), as a free
 /// function so it can be tested — and reasoned about — without standing up
@@ -96,237 +83,6 @@ pub enum Target<'a> {
     Set(&'a [usize]),
     /// Every worker in the cluster.
     All,
-}
-
-/// Per-worker-link invocation window.
-///
-/// On every link it enforces the **count** window: at most `max`
-/// invocations outstanding ([`InvokeWindow::acquire`] blocks past it,
-/// bounded by `ClusterConfig::reply_timeout`).
-///
-/// On a **legacy** (non-streamed) link it additionally runs the
-/// **seq-distance** admission check on every frame sent — invoke or
-/// fire-and-forget — ([`InvokeWindow::admit`]): with one reply frame per
-/// ingress frame, reply `T` laps reply `S`'s slot iff `T >= S +
-/// REPLY_SLOTS`, so delivery stalls while any uncollected invocation's
-/// reply slot would be overwritten. Pure fire-and-forget traffic pays
-/// only one relaxed atomic load per send (the `admit` fast path).
-///
-/// On a **streamed** link that static arithmetic is meaningless — a
-/// k-chunk reply occupies k reply seqs, with k data-dependent — so lap
-/// protection moves to the reply layer itself: the `ReplyCollector`
-/// consumes reply frames in order (sends drive it via drain) and the
-/// worker's writer only recycles slots the collector has consumed. An
-/// uncollected invocation reply is parked in leader memory, never
-/// overwritten in the ring.
-pub(crate) struct InvokeWindow {
-    max: usize,
-    /// `awaiting.len()` mirror for the lock-free admit fast path. Reads
-    /// under the link lock are exact: `track` runs before the link lock
-    /// is released, so the lock's synchronizes-with edge publishes it.
-    awaiting_count: std::sync::atomic::AtomicUsize,
-    state: Mutex<WindowState>,
-    freed: Condvar,
-}
-
-#[derive(Default)]
-struct WindowState {
-    /// Invocations begun but not yet collected (count window).
-    inflight: usize,
-    /// Total releases ever — progress evidence for starved `acquire`
-    /// waiters (under contention `inflight` can read as pinned at `max`
-    /// at every wakeup even while slots turn over continuously).
-    releases: u64,
-    /// Reply seqs of sent-but-uncollected invocations (lap guard).
-    awaiting: BTreeSet<u64>,
-}
-
-impl InvokeWindow {
-    pub(crate) fn new(max: usize) -> Self {
-        InvokeWindow {
-            max,
-            awaiting_count: std::sync::atomic::AtomicUsize::new(0),
-            state: Mutex::new(WindowState::default()),
-            freed: Condvar::new(),
-        }
-    }
-
-    /// Claim an invocation slot; blocks while `max` are outstanding and
-    /// errors after `timeout` without progress. Progress is the release
-    /// *generation*, not the observed count — under contention the count
-    /// can read as pinned at `max` at every wakeup even while slots turn
-    /// over, and churn must not be mistaken for a stuck window.
-    fn acquire(&self, timeout: Option<Duration>) -> std::result::Result<(), String> {
-        let mut st = lock_recover(&self.state);
-        let mut deadline = timeout.map(|d| Instant::now() + d);
-        let mut last_releases = st.releases;
-        loop {
-            if st.inflight < self.max {
-                st.inflight += 1;
-                return Ok(());
-            }
-            if last_releases != st.releases {
-                last_releases = st.releases;
-                deadline = timeout.map(|d| Instant::now() + d);
-            }
-            if let Some(d) = deadline {
-                if Instant::now() > d {
-                    return Err(format!(
-                        "invocation window full ({} outstanding, max_inflight {}); \
-                         wait on or drop a PendingReply",
-                        st.inflight, self.max
-                    ));
-                }
-            }
-            st = wait_timeout_recover(&self.freed, st, Duration::from_millis(1));
-        }
-    }
-
-    /// Claim up to `want` invocation slots without blocking: takes
-    /// `min(want, max - inflight)` and returns how many were claimed
-    /// (possibly zero). The shed-before-block primitive for the serve
-    /// front-end's coalescer — admission control decides *before* any
-    /// wait whether work can go out now.
-    fn try_acquire_many(&self, want: usize) -> usize {
-        if want == 0 {
-            return 0;
-        }
-        let mut st = lock_recover(&self.state);
-        let free = self.max.saturating_sub(st.inflight);
-        let take = want.min(free);
-        st.inflight += take;
-        take
-    }
-
-    /// Record a begun invocation's reply seq (after its frame was sent).
-    fn track(&self, seq: u64) {
-        let mut st = lock_recover(&self.state);
-        st.awaiting.insert(seq);
-        self.awaiting_count.store(st.awaiting.len(), std::sync::atomic::Ordering::Relaxed);
-    }
-
-    /// Release one invocation slot; `seq` is its tracked reply seq (None
-    /// when the frame never went out).
-    fn release(&self, seq: Option<u64>) {
-        let mut st = lock_recover(&self.state);
-        st.inflight -= 1;
-        st.releases += 1;
-        if let Some(s) = seq {
-            st.awaiting.remove(&s);
-            self.awaiting_count.store(st.awaiting.len(), std::sync::atomic::Ordering::Relaxed);
-        }
-        drop(st);
-        self.freed.notify_all();
-    }
-
-    /// Sent-but-uncollected invocation count (legacy lap-guard set size) —
-    /// the stale-waiter probe for tests.
-    pub(crate) fn awaiting_len(&self) -> usize {
-        self.awaiting_count.load(std::sync::atomic::Ordering::Relaxed)
-    }
-
-    /// Block until frames through `end_seq` can be delivered without
-    /// lapping any awaited reply (reply `T` overwrites reply `S`'s slot
-    /// iff `T >= S + REPLY_SLOTS`). The deadline resets whenever the
-    /// oldest awaited seq changes (progress), and expires with a message
-    /// naming the blocking invocation. With nothing awaited — all
-    /// fire-and-forget traffic — this is one relaxed load, no lock.
-    fn admit(&self, end_seq: u64, timeout: Option<Duration>) -> std::result::Result<(), String> {
-        if self.awaiting_count.load(std::sync::atomic::Ordering::Relaxed) == 0 {
-            return Ok(());
-        }
-        let mut st = lock_recover(&self.state);
-        let mut deadline = timeout.map(|d| Instant::now() + d);
-        let mut last_oldest = None;
-        loop {
-            let Some(&oldest) = st.awaiting.iter().next() else { return Ok(()) };
-            if end_seq.saturating_sub(oldest) < REPLY_SLOTS as u64 {
-                return Ok(());
-            }
-            if last_oldest != Some(oldest) {
-                last_oldest = Some(oldest);
-                deadline = timeout.map(|d| Instant::now() + d);
-            }
-            if let Some(d) = deadline {
-                if Instant::now() > d {
-                    return Err(format!(
-                        "delivering frame seq {end_seq} would lap the unread reply for \
-                         invocation seq {oldest}; wait on or drop its PendingReply"
-                    ));
-                }
-            }
-            st = wait_timeout_recover(&self.freed, st, Duration::from_millis(1));
-        }
-    }
-}
-
-/// How a [`PendingReply`] collects its reply: directly off its seq's slot
-/// (legacy one-frame-per-reply links) or through the link's shared
-/// [`ReplyCollector`] (streamed links, where a reply may span several
-/// chunk frames at unpredictable reply seqs).
-enum Collect {
-    Slot(ReplyRing),
-    Stream(Arc<ReplyCollector>),
-}
-
-/// A not-yet-collected invocation: records the ingress frame seq at send
-/// time and waits for its reply without the link lock, so other
-/// invocations (and fire-and-forget sends) proceed concurrently on the
-/// same worker. Dropping the handle without waiting releases its window
-/// slot (the reply, when it arrives, is simply discarded).
-pub struct PendingReply {
-    how: Collect,
-    seq: u64,
-    worker: usize,
-    window: Arc<InvokeWindow>,
-    released: bool,
-}
-
-impl PendingReply {
-    /// The frame sequence number this handle waits for (1-based, per link).
-    pub fn seq(&self) -> u64 {
-        self.seq
-    }
-
-    /// The worker index the invocation targeted.
-    pub fn worker(&self) -> usize {
-        self.worker
-    }
-
-    /// Block for the reply — reassembled across chunk frames when the
-    /// injected function pushed more than one frame's worth of payload.
-    /// A worker that died mid-invoke surfaces as [`Error::Transport`]
-    /// naming this worker once `ClusterConfig::reply_timeout` expires
-    /// without progress.
-    pub fn wait(mut self) -> Result<Reply> {
-        let out = match &self.how {
-            Collect::Slot(ring) => ring.wait(self.seq),
-            Collect::Stream(c) => c.collect(self.seq),
-        }
-        .map_err(|e| tag_worker(self.worker, e));
-        if out.is_err() {
-            // A successful collect deregisters; a failed one must not
-            // leave the frame awaited forever (its reply — if it ever
-            // lands — would be parked with no one to claim it).
-            if let Collect::Stream(c) = &self.how {
-                c.unregister(self.seq);
-            }
-        }
-        self.released = true;
-        self.window.release(Some(self.seq));
-        out
-    }
-}
-
-impl Drop for PendingReply {
-    fn drop(&mut self) {
-        if !self.released {
-            if let Collect::Stream(c) = &self.how {
-                c.unregister(self.seq);
-            }
-            self.window.release(Some(self.seq));
-        }
-    }
 }
 
 /// The merged result of a collective invocation: every targeted worker's
@@ -443,10 +199,13 @@ impl<'c> Dispatcher<'c> {
         self.cluster.leader.register_ifunc(name)
     }
 
-    fn worker(&self, worker: usize) -> Result<&super::WorkerHandle> {
+    /// The leader's outbound link to `worker` — everything per-worker
+    /// goes through this.
+    fn link(&self, worker: usize) -> Result<&PeerLink> {
         self.cluster
             .workers
             .get(worker)
+            .map(|w| w.link.as_ref())
             .ok_or_else(|| Error::Other(format!("no worker {worker}")))
     }
 
@@ -455,7 +214,7 @@ impl<'c> Dispatcher<'c> {
     fn resolve_one(&self, target: Target<'_>) -> Result<usize> {
         match target {
             Target::Worker(w) => {
-                self.worker(w)?;
+                self.link(w)?;
                 Ok(w)
             }
             Target::Key(k) => Ok(self.route_key(k)),
@@ -473,7 +232,7 @@ impl<'c> Dispatcher<'c> {
         let n = self.cluster.workers.len();
         match target {
             Target::Worker(w) => {
-                self.worker(w)?;
+                self.link(w)?;
                 Ok(vec![w])
             }
             Target::Key(k) => Ok(vec![self.route_key(k)]),
@@ -489,7 +248,7 @@ impl<'c> Dispatcher<'c> {
                 let mut seen = vec![false; n];
                 let mut out = Vec::with_capacity(set.len());
                 for &w in set {
-                    self.worker(w)?;
+                    self.link(w)?;
                     if !seen[w] {
                         seen[w] = true;
                         out.push(w);
@@ -500,23 +259,6 @@ impl<'c> Dispatcher<'c> {
         }
     }
 
-    /// Per-send reply bookkeeping (runs under the link lock). On a
-    /// streamed link, drive the reply collector: consuming arrived reply
-    /// frames (discarding fire-and-forget ones) is what advances the
-    /// worker's slot-recycling credit, so a flood of sends can never
-    /// strand an uncollected invocation reply — a k-chunk reply holds
-    /// exactly its k slots until the collector has moved it into leader
-    /// memory. On a legacy link, run the seq-distance lap guard instead.
-    fn admit_or_drain(&self, w: &super::WorkerHandle, worker: usize, end_seq: u64) -> Result<()> {
-        match &w.collector {
-            Some(c) => c.drain().map_err(|e| tag_worker(worker, e)),
-            None => w
-                .window
-                .admit(end_seq, w.reply_timeout)
-                .map_err(|m| Error::Transport(format!("worker {worker}: {m}"))),
-        }
-    }
-
     /// Inject a prebuilt message to every worker the target resolves to
     /// (flow-controlled, non-blocking delivery; completion via
     /// [`Dispatcher::flush`]). For a collective target the same frame is
@@ -524,10 +266,7 @@ impl<'c> Dispatcher<'c> {
     /// fanned out, not re-created per destination.
     pub fn send(&self, target: Target<'_>, msg: &IfuncMsg) -> Result<()> {
         for worker in self.resolve_set(target)? {
-            let w = self.worker(worker)?;
-            let mut link = lock_recover(&w.link);
-            self.admit_or_drain(w, worker, link.frames_sent() + 1)?;
-            link.send_frame(msg).map_err(|e| tag_worker(worker, e))?;
+            self.link(worker)?.send(msg)?;
         }
         Ok(())
     }
@@ -543,87 +282,12 @@ impl<'c> Dispatcher<'c> {
         }
         let workers = self.resolve_set(target)?;
         for &worker in &workers {
-            let w = self.worker(worker)?;
-            let mut link = lock_recover(&w.link);
-            self.admit_or_drain(w, worker, link.frames_sent() + msgs.len() as u64)?;
-            link.post_batch(msgs).map_err(|e| tag_worker(worker, e))?;
+            self.link(worker)?.post_batch(msgs)?;
         }
         for &worker in &workers {
-            lock_recover(&self.worker(worker)?.link)
-                .flush()
-                .map_err(|e| tag_worker(worker, e))?;
+            self.link(worker)?.flush()?;
         }
         Ok(())
-    }
-
-    /// Post one invocation frame on `worker`'s link and wire up its reply
-    /// collection. Runs under the link lock, which covers only delivery —
-    /// it is released before any reply wait, which is what lets
-    /// invocations pipeline. With `flush_now` the frame's completion is
-    /// awaited before returning (the unicast path); the collective path
-    /// passes `false` and runs one flush pass after the whole fan-out has
-    /// been posted, so the per-link transfers overlap.
-    fn post_invoke_locked(
-        &self,
-        w: &super::WorkerHandle,
-        worker: usize,
-        msg: &IfuncMsg,
-        flush_now: bool,
-    ) -> Result<(u64, Collect)> {
-        let mut link = lock_recover(&w.link);
-        let seq = link.frames_sent() + 1;
-        self.admit_or_drain(w, worker, seq)?;
-        match &w.collector {
-            Some(c) => {
-                // Register *before* the frame goes out: once it is on
-                // the wire a concurrent drain may meet the reply, and
-                // only registered replies are parked rather than
-                // dropped.
-                c.register(seq);
-                let posted = link
-                    .post_frame(msg)
-                    .and_then(|()| if flush_now { link.flush() } else { Ok(()) });
-                if let Err(e) = posted {
-                    c.unregister(seq);
-                    return Err(tag_worker(worker, e));
-                }
-                debug_assert_eq!(link.frames_sent(), seq);
-                Ok((seq, Collect::Stream(c.clone())))
-            }
-            None => {
-                link.post_frame(msg).map_err(|e| tag_worker(worker, e))?;
-                if flush_now {
-                    link.flush().map_err(|e| tag_worker(worker, e))?;
-                }
-                let seq = link.frames_sent();
-                // Legacy lap guard: remember the awaited reply slot.
-                w.window.track(seq);
-                Ok((seq, Collect::Slot(w.replies.clone())))
-            }
-        }
-    }
-
-    /// Claim a window slot on `worker` and post one invocation frame;
-    /// the slot is released on any error so a failed begin never leaks
-    /// window capacity.
-    fn begin_on(&self, worker: usize, msg: &IfuncMsg, flush_now: bool) -> Result<PendingReply> {
-        let w = self.worker(worker)?;
-        w.window
-            .acquire(w.reply_timeout)
-            .map_err(|m| Error::Transport(format!("worker {worker}: {m}")))?;
-        match self.post_invoke_locked(w, worker, msg, flush_now) {
-            Ok((seq, how)) => Ok(PendingReply {
-                how,
-                seq,
-                worker,
-                window: w.window.clone(),
-                released: false,
-            }),
-            Err(e) => {
-                w.window.release(None);
-                Err(e)
-            }
-        }
     }
 
     /// Begin a unicast invocation: inject `msg` at the resolved worker,
@@ -634,7 +298,7 @@ impl<'c> Dispatcher<'c> {
     /// (the call blocks while the window is full). Collective targets
     /// are rejected; use [`Dispatcher::invoke_multi`].
     pub fn invoke_begin(&self, target: Target<'_>, msg: &IfuncMsg) -> Result<PendingReply> {
-        self.begin_on(self.resolve_one(target)?, msg, true)
+        self.link(self.resolve_one(target)?)?.invoke_begin(msg, true)
     }
 
     /// Inject a message and block for the injected function's reply frame
@@ -656,24 +320,7 @@ impl<'c> Dispatcher<'c> {
         target: Target<'_>,
         msg: &IfuncMsg,
     ) -> Result<Option<PendingReply>> {
-        let worker = self.resolve_one(target)?;
-        let w = self.worker(worker)?;
-        if w.window.try_acquire_many(1) == 0 {
-            return Ok(None);
-        }
-        match self.post_invoke_locked(w, worker, msg, true) {
-            Ok((seq, how)) => Ok(Some(PendingReply {
-                how,
-                seq,
-                worker,
-                window: w.window.clone(),
-                released: false,
-            })),
-            Err(e) => {
-                w.window.release(None);
-                Err(e)
-            }
-        }
+        self.link(self.resolve_one(target)?)?.try_invoke_begin(msg)
     }
 
     /// Non-blocking **batched** invocation begin: claim as many window
@@ -691,84 +338,7 @@ impl<'c> Dispatcher<'c> {
         target: Target<'_>,
         msgs: &[IfuncMsg],
     ) -> Result<Vec<PendingReply>> {
-        if msgs.is_empty() {
-            return Ok(Vec::new());
-        }
-        let worker = self.resolve_one(target)?;
-        let w = self.worker(worker)?;
-        let admitted = w.window.try_acquire_many(msgs.len());
-        if admitted == 0 {
-            return Ok(Vec::new());
-        }
-        match self.post_invoke_batch_locked(w, worker, &msgs[..admitted]) {
-            Ok(pending) => Ok(pending),
-            Err(e) => {
-                for _ in 0..admitted {
-                    w.window.release(None);
-                }
-                Err(e)
-            }
-        }
-    }
-
-    /// Post `msgs` as one coalesced batch on `worker`'s link and wire up
-    /// per-frame reply collection. Window slots (`msgs.len()` of them)
-    /// must already be claimed; on error the *caller* releases them —
-    /// this function only unwinds its collector registrations. Batch
-    /// analogue of [`Dispatcher::post_invoke_locked`].
-    fn post_invoke_batch_locked(
-        &self,
-        w: &super::WorkerHandle,
-        worker: usize,
-        msgs: &[IfuncMsg],
-    ) -> Result<Vec<PendingReply>> {
-        let mut link = lock_recover(&w.link);
-        let first = link.frames_sent() + 1;
-        let end = link.frames_sent() + msgs.len() as u64;
-        self.admit_or_drain(w, worker, end)?;
-        let mut pending = Vec::with_capacity(msgs.len());
-        match &w.collector {
-            Some(c) => {
-                // Register every frame before any goes out (same ordering
-                // contract as the unicast path: a concurrent drain may
-                // meet a reply the instant its frame lands).
-                for seq in first..=end {
-                    c.register(seq);
-                }
-                let posted = link.post_batch(msgs).and_then(|()| link.flush());
-                if let Err(e) = posted {
-                    for seq in first..=end {
-                        c.unregister(seq);
-                    }
-                    return Err(tag_worker(worker, e));
-                }
-                debug_assert_eq!(link.frames_sent(), end);
-                for seq in first..=end {
-                    pending.push(PendingReply {
-                        how: Collect::Stream(c.clone()),
-                        seq,
-                        worker,
-                        window: w.window.clone(),
-                        released: false,
-                    });
-                }
-            }
-            None => {
-                link.post_batch(msgs).map_err(|e| tag_worker(worker, e))?;
-                link.flush().map_err(|e| tag_worker(worker, e))?;
-                for seq in first..=end {
-                    w.window.track(seq);
-                    pending.push(PendingReply {
-                        how: Collect::Slot(w.replies.clone()),
-                        seq,
-                        worker,
-                        window: w.window.clone(),
-                        released: false,
-                    });
-                }
-            }
-        }
-        Ok(pending)
+        self.link(self.resolve_one(target)?)?.try_invoke_batch(msgs)
     }
 
     /// Begin a **collective** invocation: inject the same program on
@@ -787,14 +357,12 @@ impl<'c> Dispatcher<'c> {
         let workers = self.resolve_set(target)?;
         let mut pending = Vec::with_capacity(workers.len());
         for &worker in &workers {
-            pending.push(self.begin_on(worker, msg, false)?);
+            pending.push(self.link(worker)?.invoke_begin(msg, false)?);
         }
         // One flush pass for the whole fan-out: every link's transfer is
         // already posted, so the completions overlap.
         for &worker in &workers {
-            lock_recover(&self.worker(worker)?.link)
-                .flush()
-                .map_err(|e| tag_worker(worker, e))?;
+            self.link(worker)?.flush()?;
         }
         Ok(MultiPendingReply { pending })
     }
@@ -843,84 +411,22 @@ impl<'c> Dispatcher<'c> {
             placed.push(worker);
         }
         for (worker, msgs) in buckets.iter().enumerate() {
-            if msgs.is_empty() {
-                continue;
+            if !msgs.is_empty() {
+                self.link(worker)?.post_batch(msgs)?;
             }
-            let w = self.worker(worker)?;
-            let mut link = lock_recover(&w.link);
-            self.admit_or_drain(w, worker, link.frames_sent() + msgs.len() as u64)?;
-            link.post_batch(msgs).map_err(|e| tag_worker(worker, e))?;
         }
         for (worker, msgs) in buckets.iter().enumerate() {
             if !msgs.is_empty() {
-                lock_recover(&self.worker(worker)?.link)
-                    .flush()
-                    .map_err(|e| tag_worker(worker, e))?;
+                self.link(worker)?.flush()?;
             }
         }
         Ok(placed)
     }
 
-    // ------------------------------------------------------------------
-    // Legacy per-shape entry points, kept as thin wrappers so existing
-    // callers keep compiling. Each names its `Target`-based replacement;
-    // the migration table lives in CHANGES.md.
-    // ------------------------------------------------------------------
-
-    /// Inject a prebuilt message to a specific worker.
-    #[deprecated(note = "use `send(Target::Worker(worker), msg)`")]
-    pub fn send_to(&self, worker: usize, msg: &IfuncMsg) -> Result<()> {
-        self.send(Target::Worker(worker), msg)
-    }
-
-    /// Deliver a batch of frames to one worker.
-    #[deprecated(note = "use `send_batch(Target::Worker(worker), msgs)`")]
-    pub fn send_batch_to(&self, worker: usize, msgs: &[IfuncMsg]) -> Result<()> {
-        self.send_batch(Target::Worker(worker), msgs)
-    }
-
-    /// Inject a message and block for its reply.
-    #[deprecated(note = "use `invoke_one(Target::Worker(worker), msg)`")]
-    pub fn invoke(&self, worker: usize, msg: &IfuncMsg) -> Result<Reply> {
-        self.invoke_one(Target::Worker(worker), msg)
-    }
-
-    /// Invoke a record-returning ifunc and decode its payload.
-    #[deprecated(note = "use `fetch(Target::Worker(worker), msg)`")]
-    pub fn invoke_get(&self, worker: usize, msg: &IfuncMsg) -> Result<(Reply, Vec<f32>)> {
-        self.fetch(Target::Worker(worker), msg)
-    }
-
-    /// Create + route + send in one call: the payload goes to the worker
-    /// owning `key`.
-    #[deprecated(note = "use `send(Target::Key(key), &handle.msg_create(args)?)` \
-                         (placement via `route_key`)")]
-    pub fn inject_by_key(
-        &self,
-        handle: &IfuncHandle,
-        key: u64,
-        args: &SourceArgs,
-    ) -> Result<usize> {
-        let worker = self.route_key(key);
-        let msg = handle.msg_create(args)?;
-        self.send(Target::Worker(worker), &msg)?;
-        Ok(worker)
-    }
-
-    /// Batched keyed injection.
-    #[deprecated(note = "use `scatter(handle, reqs)`")]
-    pub fn inject_batch_by_key(
-        &self,
-        handle: &IfuncHandle,
-        reqs: &[(u64, SourceArgs)],
-    ) -> Result<Vec<usize>> {
-        self.scatter(handle, reqs)
-    }
-
     /// Flush delivery to every worker.
     pub fn flush(&self) -> Result<()> {
-        for (i, w) in self.cluster.workers.iter().enumerate() {
-            lock_recover(&w.link).flush().map_err(|e| tag_worker(i, e))?;
+        for w in &self.cluster.workers {
+            w.link.flush()?;
         }
         Ok(())
     }
@@ -932,14 +438,8 @@ impl<'c> Dispatcher<'c> {
     /// credit keeps flowing while the barrier spins.
     pub fn barrier(&self) -> Result<()> {
         self.flush()?;
-        for (i, w) in self.cluster.workers.iter().enumerate() {
-            let sent = lock_recover(&w.link).frames_sent();
-            w.consumed
-                .wait(sent, || match &w.collector {
-                    Some(c) => c.drain(),
-                    None => Ok(()),
-                })
-                .map_err(|e| tag_worker(i, e))?;
+        for w in &self.cluster.workers {
+            w.link.wait_consumed()?;
         }
         Ok(())
     }
@@ -949,23 +449,26 @@ impl<'c> Dispatcher<'c> {
     /// simulation). Ring-protocol transports only (fabric ring and shm).
     #[doc(hidden)]
     pub fn debug_corrupt_ring(&self, worker: usize, offset: usize, data: &[u8]) -> Result<()> {
-        lock_recover(&self.worker(worker)?.link).debug_put_raw(offset, data)
+        self.link(worker)?.debug_put_raw(offset, data)
     }
 
     /// Outstanding reply registrations on a worker's link — the
-    /// stale-waiter probe for the drop-without-wait property tests:
-    /// collector-awaited seqs on a streamed link, the window's lap-guard
-    /// set size on a legacy one.
+    /// stale-waiter probe for the drop-without-wait property tests.
     #[doc(hidden)]
     pub fn debug_awaited(&self, worker: usize) -> Result<usize> {
-        let w = self.worker(worker)?;
-        Ok(match &w.collector {
-            Some(c) => c.debug_awaited(),
-            None => w.window.awaiting_len(),
-        })
+        Ok(self.link(worker)?.debug_awaited())
     }
 
-    /// Total messages executed across workers.
+    /// Frames the leader has sent to `worker` over its own link so far.
+    /// The mesh tests' zero-leader-relay probe: a forward chain raises
+    /// workers' `forwarded` counters while this number stays put.
+    #[doc(hidden)]
+    pub fn debug_frames_sent(&self, worker: usize) -> Result<u64> {
+        Ok(self.link(worker)?.frames_sent())
+    }
+
+    /// Total messages executed across workers — every hop of a forwarded
+    /// chain counts where it ran.
     pub fn total_executed(&self) -> u64 {
         self.cluster.workers.iter().map(|w| w.executed()).sum()
     }

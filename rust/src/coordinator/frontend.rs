@@ -681,6 +681,29 @@ fn stats_json(shared: &Shared) -> Json {
             "records",
             Json::from(shared.cluster.workers.iter().map(|w| w.store.len()).sum::<usize>()),
         ),
+        (
+            "mesh",
+            Json::obj(vec![
+                ("enabled", Json::from(shared.cluster.mesh)),
+                (
+                    "forwarded",
+                    Json::from(
+                        shared.cluster.workers.iter().map(|w| w.forwarded()).sum::<u64>(),
+                    ),
+                ),
+                (
+                    "forward_failed",
+                    Json::from(
+                        shared
+                            .cluster
+                            .workers
+                            .iter()
+                            .map(|w| w.forward_failed())
+                            .sum::<u64>(),
+                    ),
+                ),
+            ]),
+        ),
         ("frontend", snapshot_of(shared).to_json()),
     ])
 }
@@ -770,6 +793,12 @@ mod tests {
         assert_eq!(fe_stats.get("responded").and_then(|v| v.as_u64()), Some(1), "{stats}");
         assert_eq!(fe_stats.get("shed").and_then(|v| v.as_u64()), Some(0), "{stats}");
         assert!(fe_stats.get("batch_hist").is_some(), "{stats}");
+        // The mesh block is always present; on a mesh-less serve cluster
+        // it reports disabled with zeroed forward counters.
+        let mesh = stats.get("mesh").expect("mesh block");
+        assert_eq!(mesh.get("enabled"), Some(&Json::Bool(false)), "{stats}");
+        assert_eq!(mesh.get("forwarded").and_then(|v| v.as_u64()), Some(0), "{stats}");
+        assert_eq!(mesh.get("forward_failed").and_then(|v| v.as_u64()), Some(0), "{stats}");
         assert_eq!(fe.snapshot().submitted, 1);
         drop(session);
         fe.shutdown();

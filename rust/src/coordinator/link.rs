@@ -1,0 +1,646 @@
+//! Peer-generic outbound link layer.
+//!
+//! A [`PeerLink`] is the complete sender half of one ifunc channel to one
+//! peer: the transport (`Box<dyn IfuncTransport>` — ring, AM, or shm),
+//! the reply ring + streamed-reply collector, the consumed-frame counter,
+//! and the invocation window. Everything here used to be hard-wired into
+//! the leader's `Dispatcher`; it is a separate layer because the paper's
+//! closing vision — "dynamically choose where code runs as the
+//! application progresses" — needs *workers* that can send too. The
+//! leader owns one `PeerLink` per worker (the dispatch star), and with
+//! `ClusterConfig::mesh` every worker owns a [`LinkSet`] of links to its
+//! peers (the forwarding mesh the `forward` host symbol ships over).
+//!
+//! The dispatcher is a pure routing/collective facade on top: it resolves
+//! `Target`s to worker indices and calls link methods — it never touches
+//! a transport, window, or collector directly.
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::ifunc::{
+    ConsumedCounter, IfuncMsg, IfuncTransport, Reply, ReplyCollector, ReplyRing, REPLY_SLOTS,
+};
+use crate::util::sync::{lock_recover, wait_timeout_recover};
+use crate::{Error, Result};
+
+/// Prefix a transport error with the worker it came from — delivery
+/// errors (a dead worker's full ring, a lapped reply) surface from deep
+/// inside the link, which has no idea which worker index it is.
+pub(crate) fn tag_worker(worker: usize, e: Error) -> Error {
+    match e {
+        Error::Transport(m) => Error::Transport(format!("worker {worker}: {m}")),
+        other => other,
+    }
+}
+
+/// Pack the failure site of a broken forward chain into the failure
+/// reply's `r0`: upper 32 bits = the worker where the chain died, low 8
+/// bits = hops completed when it died. The leader's `PendingReply` gets a
+/// `STATUS_FAILED` reply carrying this instead of hanging — a TTL-cut
+/// loop or an unreachable peer names where it stopped.
+pub fn encode_forward_failure(worker: usize, hops: u8) -> u64 {
+    ((worker as u64) << 32) | hops as u64
+}
+
+/// Inverse of [`encode_forward_failure`]: `(failing_worker, hops)`.
+pub fn decode_forward_failure(r0: u64) -> (usize, u8) {
+    ((r0 >> 32) as usize, (r0 & 0xFF) as u8)
+}
+
+/// Per-link invocation window.
+///
+/// On every link it enforces the **count** window: at most `max`
+/// invocations outstanding ([`InvokeWindow::acquire`] blocks past it,
+/// bounded by `ClusterConfig::reply_timeout`).
+///
+/// On a **legacy** (non-streamed) link it additionally runs the
+/// **seq-distance** admission check on every frame sent — invoke or
+/// fire-and-forget — ([`InvokeWindow::admit`]): with one reply frame per
+/// ingress frame, reply `T` laps reply `S`'s slot iff `T >= S +
+/// REPLY_SLOTS`, so delivery stalls while any uncollected invocation's
+/// reply slot would be overwritten. Pure fire-and-forget traffic pays
+/// only one relaxed atomic load per send (the `admit` fast path).
+///
+/// On a **streamed** link that static arithmetic is meaningless — a
+/// k-chunk reply occupies k reply seqs, with k data-dependent — so lap
+/// protection moves to the reply layer itself: the `ReplyCollector`
+/// consumes reply frames in order (sends drive it via drain) and the
+/// worker's writer only recycles slots the collector has consumed. An
+/// uncollected invocation reply is parked in leader memory, never
+/// overwritten in the ring.
+pub(crate) struct InvokeWindow {
+    max: usize,
+    /// `awaiting.len()` mirror for the lock-free admit fast path. Reads
+    /// under the link lock are exact: `track` runs before the link lock
+    /// is released, so the lock's synchronizes-with edge publishes it.
+    awaiting_count: std::sync::atomic::AtomicUsize,
+    state: Mutex<WindowState>,
+    freed: Condvar,
+}
+
+#[derive(Default)]
+struct WindowState {
+    /// Invocations begun but not yet collected (count window).
+    inflight: usize,
+    /// Total releases ever — progress evidence for starved `acquire`
+    /// waiters (under contention `inflight` can read as pinned at `max`
+    /// at every wakeup even while slots turn over continuously).
+    releases: u64,
+    /// Reply seqs of sent-but-uncollected invocations (lap guard).
+    awaiting: BTreeSet<u64>,
+}
+
+impl InvokeWindow {
+    pub(crate) fn new(max: usize) -> Self {
+        InvokeWindow {
+            max,
+            awaiting_count: std::sync::atomic::AtomicUsize::new(0),
+            state: Mutex::new(WindowState::default()),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// Claim an invocation slot; blocks while `max` are outstanding and
+    /// errors after `timeout` without progress. Progress is the release
+    /// *generation*, not the observed count — under contention the count
+    /// can read as pinned at `max` at every wakeup even while slots turn
+    /// over, and churn must not be mistaken for a stuck window.
+    fn acquire(&self, timeout: Option<Duration>) -> std::result::Result<(), String> {
+        let mut st = lock_recover(&self.state);
+        let mut deadline = timeout.map(|d| Instant::now() + d);
+        let mut last_releases = st.releases;
+        loop {
+            if st.inflight < self.max {
+                st.inflight += 1;
+                return Ok(());
+            }
+            if last_releases != st.releases {
+                last_releases = st.releases;
+                deadline = timeout.map(|d| Instant::now() + d);
+            }
+            if let Some(d) = deadline {
+                if Instant::now() > d {
+                    return Err(format!(
+                        "invocation window full ({} outstanding, max_inflight {}); \
+                         wait on or drop a PendingReply",
+                        st.inflight, self.max
+                    ));
+                }
+            }
+            st = wait_timeout_recover(&self.freed, st, Duration::from_millis(1));
+        }
+    }
+
+    /// Claim up to `want` invocation slots without blocking: takes
+    /// `min(want, max - inflight)` and returns how many were claimed
+    /// (possibly zero). The shed-before-block primitive for the serve
+    /// front-end's coalescer — admission control decides *before* any
+    /// wait whether work can go out now.
+    fn try_acquire_many(&self, want: usize) -> usize {
+        if want == 0 {
+            return 0;
+        }
+        let mut st = lock_recover(&self.state);
+        let free = self.max.saturating_sub(st.inflight);
+        let take = want.min(free);
+        st.inflight += take;
+        take
+    }
+
+    /// Record a begun invocation's reply seq (after its frame was sent).
+    fn track(&self, seq: u64) {
+        let mut st = lock_recover(&self.state);
+        st.awaiting.insert(seq);
+        self.awaiting_count.store(st.awaiting.len(), std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Release one invocation slot; `seq` is its tracked reply seq (None
+    /// when the frame never went out).
+    fn release(&self, seq: Option<u64>) {
+        let mut st = lock_recover(&self.state);
+        st.inflight -= 1;
+        st.releases += 1;
+        if let Some(s) = seq {
+            st.awaiting.remove(&s);
+            self.awaiting_count.store(st.awaiting.len(), std::sync::atomic::Ordering::Relaxed);
+        }
+        drop(st);
+        self.freed.notify_all();
+    }
+
+    /// Sent-but-uncollected invocation count (legacy lap-guard set size) —
+    /// the stale-waiter probe for tests.
+    pub(crate) fn awaiting_len(&self) -> usize {
+        self.awaiting_count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Block until frames through `end_seq` can be delivered without
+    /// lapping any awaited reply (reply `T` overwrites reply `S`'s slot
+    /// iff `T >= S + REPLY_SLOTS`). The deadline resets whenever the
+    /// oldest awaited seq changes (progress), and expires with a message
+    /// naming the blocking invocation. With nothing awaited — all
+    /// fire-and-forget traffic — this is one relaxed load, no lock.
+    fn admit(&self, end_seq: u64, timeout: Option<Duration>) -> std::result::Result<(), String> {
+        if self.awaiting_count.load(std::sync::atomic::Ordering::Relaxed) == 0 {
+            return Ok(());
+        }
+        let mut st = lock_recover(&self.state);
+        let mut deadline = timeout.map(|d| Instant::now() + d);
+        let mut last_oldest = None;
+        loop {
+            let Some(&oldest) = st.awaiting.iter().next() else { return Ok(()) };
+            if end_seq.saturating_sub(oldest) < REPLY_SLOTS as u64 {
+                return Ok(());
+            }
+            if last_oldest != Some(oldest) {
+                last_oldest = Some(oldest);
+                deadline = timeout.map(|d| Instant::now() + d);
+            }
+            if let Some(d) = deadline {
+                if Instant::now() > d {
+                    return Err(format!(
+                        "delivering frame seq {end_seq} would lap the unread reply for \
+                         invocation seq {oldest}; wait on or drop its PendingReply"
+                    ));
+                }
+            }
+            st = wait_timeout_recover(&self.freed, st, Duration::from_millis(1));
+        }
+    }
+}
+
+/// How a [`PendingReply`] collects its reply: directly off its seq's slot
+/// (legacy one-frame-per-reply links) or through the link's shared
+/// [`ReplyCollector`] (streamed links, where a reply may span several
+/// chunk frames at unpredictable reply seqs).
+enum Collect {
+    Slot(ReplyRing),
+    Stream(Arc<ReplyCollector>),
+}
+
+/// A not-yet-collected invocation: records the ingress frame seq at send
+/// time and waits for its reply without the link lock, so other
+/// invocations (and fire-and-forget sends) proceed concurrently on the
+/// same worker. Dropping the handle without waiting releases its window
+/// slot (the reply, when it arrives, is simply discarded).
+pub struct PendingReply {
+    how: Collect,
+    seq: u64,
+    worker: usize,
+    window: Arc<InvokeWindow>,
+    released: bool,
+}
+
+impl PendingReply {
+    /// The frame sequence number this handle waits for (1-based, per link).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// The worker index the invocation targeted.
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Block for the reply — reassembled across chunk frames when the
+    /// injected function pushed more than one frame's worth of payload.
+    /// A worker that died mid-invoke surfaces as [`Error::Transport`]
+    /// naming this worker once `ClusterConfig::reply_timeout` expires
+    /// without progress.
+    pub fn wait(mut self) -> Result<Reply> {
+        let out = match &self.how {
+            Collect::Slot(ring) => ring.wait(self.seq),
+            Collect::Stream(c) => c.collect(self.seq),
+        }
+        .map_err(|e| tag_worker(self.worker, e));
+        if out.is_err() {
+            // A successful collect deregisters; a failed one must not
+            // leave the frame awaited forever (its reply — if it ever
+            // lands — would be parked with no one to claim it).
+            if let Collect::Stream(c) = &self.how {
+                c.unregister(self.seq);
+            }
+        }
+        self.released = true;
+        self.window.release(Some(self.seq));
+        out
+    }
+}
+
+impl Drop for PendingReply {
+    fn drop(&mut self) {
+        if !self.released {
+            if let Collect::Stream(c) = &self.how {
+                c.unregister(self.seq);
+            }
+            self.window.release(Some(self.seq));
+        }
+    }
+}
+
+/// The full sender half of one ifunc channel to one peer, ownable by any
+/// node — the leader's dispatch star and the worker↔worker mesh are both
+/// sets of these. Bundles the transport with its reply ring, streamed
+/// reply collector, consumed-frame counter, and invocation window; every
+/// method pre-tags errors with the peer index.
+pub struct PeerLink {
+    peer: usize,
+    transport: Mutex<Box<dyn IfuncTransport>>,
+    /// Sender-side view of the link's reply ring, shared with the
+    /// transport so `PendingReply::wait` runs without the link lock.
+    replies: ReplyRing,
+    /// Sender-side view of the link's consumed-frame counter — the
+    /// barrier credit (one tick per ingress frame, however many reply
+    /// frames it produced).
+    consumed: ConsumedCounter,
+    /// Streamed-reply reassembler (`None` when `stream_replies` is off
+    /// and the legacy one-frame-per-reply slot protocol runs instead —
+    /// and on mesh links, which carry only fire-and-forget traffic).
+    collector: Option<Arc<ReplyCollector>>,
+    /// Caps outstanding invocations (`max_inflight`) and — in legacy
+    /// mode — guards every send against lapping an uncollected reply.
+    window: Arc<InvokeWindow>,
+    /// `ClusterConfig::reply_timeout`, for the window's admission check.
+    reply_timeout: Option<Duration>,
+}
+
+impl PeerLink {
+    pub(crate) fn new(
+        peer: usize,
+        transport: Box<dyn IfuncTransport>,
+        replies: ReplyRing,
+        consumed: ConsumedCounter,
+        collector: Option<Arc<ReplyCollector>>,
+        max_inflight: usize,
+        reply_timeout: Option<Duration>,
+    ) -> Self {
+        PeerLink {
+            peer,
+            transport: Mutex::new(transport),
+            replies,
+            consumed,
+            collector,
+            window: Arc::new(InvokeWindow::new(max_inflight.clamp(1, REPLY_SLOTS))),
+            reply_timeout,
+        }
+    }
+
+    /// The peer (worker index) this link delivers to.
+    pub fn peer(&self) -> usize {
+        self.peer
+    }
+
+    /// Per-send reply bookkeeping (runs under the link lock). On a
+    /// streamed link, drive the reply collector: consuming arrived reply
+    /// frames (discarding fire-and-forget ones) is what advances the
+    /// worker's slot-recycling credit, so a flood of sends can never
+    /// strand an uncollected invocation reply. On a legacy link, run the
+    /// seq-distance lap guard instead.
+    fn admit_or_drain(&self, end_seq: u64) -> Result<()> {
+        match &self.collector {
+            Some(c) => c.drain().map_err(|e| tag_worker(self.peer, e)),
+            None => self
+                .window
+                .admit(end_seq, self.reply_timeout)
+                .map_err(|m| Error::Transport(format!("worker {}: {m}", self.peer))),
+        }
+    }
+
+    /// Fire-and-forget delivery of one frame (flow-controlled,
+    /// non-blocking; completion via [`PeerLink::flush`]).
+    pub fn send(&self, msg: &IfuncMsg) -> Result<()> {
+        let mut link = lock_recover(&self.transport);
+        self.admit_or_drain(link.frames_sent() + 1)?;
+        link.send_frame(msg).map_err(|e| tag_worker(self.peer, e))
+    }
+
+    /// Post a batch of frames through the transport's coalesced path (one
+    /// credit reservation on the ring; back-to-back posts over AM)
+    /// without flushing — so batches to different links can overlap
+    /// before one flush pass covers them all.
+    pub fn post_batch(&self, msgs: &[IfuncMsg]) -> Result<()> {
+        if msgs.is_empty() {
+            return Ok(());
+        }
+        let mut link = lock_recover(&self.transport);
+        self.admit_or_drain(link.frames_sent() + msgs.len() as u64)?;
+        link.post_batch(msgs).map_err(|e| tag_worker(self.peer, e))
+    }
+
+    /// Deliver a batch with one flush at the end.
+    pub fn send_batch(&self, msgs: &[IfuncMsg]) -> Result<()> {
+        self.post_batch(msgs)?;
+        self.flush()
+    }
+
+    /// Wait for completion of every posted send on this link.
+    pub fn flush(&self) -> Result<()> {
+        lock_recover(&self.transport).flush().map_err(|e| tag_worker(self.peer, e))
+    }
+
+    /// Frames sent over this link so far (the seq of the last frame).
+    pub fn frames_sent(&self) -> u64 {
+        lock_recover(&self.transport).frames_sent()
+    }
+
+    /// Post one invocation frame and wire up its reply collection. Runs
+    /// under the link lock, which covers only delivery — it is released
+    /// before any reply wait, which is what lets invocations pipeline.
+    /// With `flush_now` the frame's completion is awaited before
+    /// returning (the unicast path); the collective path passes `false`
+    /// and runs one flush pass after the whole fan-out has been posted,
+    /// so the per-link transfers overlap.
+    fn post_invoke_locked(&self, msg: &IfuncMsg, flush_now: bool) -> Result<(u64, Collect)> {
+        let mut link = lock_recover(&self.transport);
+        let seq = link.frames_sent() + 1;
+        self.admit_or_drain(seq)?;
+        match &self.collector {
+            Some(c) => {
+                // Register *before* the frame goes out: once it is on
+                // the wire a concurrent drain may meet the reply, and
+                // only registered replies are parked rather than
+                // dropped.
+                c.register(seq);
+                let posted = link
+                    .post_frame(msg)
+                    .and_then(|()| if flush_now { link.flush() } else { Ok(()) });
+                if let Err(e) = posted {
+                    c.unregister(seq);
+                    return Err(tag_worker(self.peer, e));
+                }
+                debug_assert_eq!(link.frames_sent(), seq);
+                Ok((seq, Collect::Stream(c.clone())))
+            }
+            None => {
+                link.post_frame(msg).map_err(|e| tag_worker(self.peer, e))?;
+                if flush_now {
+                    link.flush().map_err(|e| tag_worker(self.peer, e))?;
+                }
+                let seq = link.frames_sent();
+                // Legacy lap guard: remember the awaited reply slot.
+                self.window.track(seq);
+                Ok((seq, Collect::Slot(self.replies.clone())))
+            }
+        }
+    }
+
+    fn pending(&self, seq: u64, how: Collect) -> PendingReply {
+        PendingReply {
+            how,
+            seq,
+            worker: self.peer,
+            window: self.window.clone(),
+            released: false,
+        }
+    }
+
+    /// Claim a window slot and post one invocation frame; the slot is
+    /// released on any error so a failed begin never leaks window
+    /// capacity. The returned [`PendingReply`] waits for the reply
+    /// without the link lock, so up to `max_inflight` invocations
+    /// pipeline per peer.
+    pub fn invoke_begin(&self, msg: &IfuncMsg, flush_now: bool) -> Result<PendingReply> {
+        self.window
+            .acquire(self.reply_timeout)
+            .map_err(|m| Error::Transport(format!("worker {}: {m}", self.peer)))?;
+        match self.post_invoke_locked(msg, flush_now) {
+            Ok((seq, how)) => Ok(self.pending(seq, how)),
+            Err(e) => {
+                self.window.release(None);
+                Err(e)
+            }
+        }
+    }
+
+    /// Non-blocking [`PeerLink::invoke_begin`]: returns `Ok(None)` —
+    /// immediately, without parking — when the invocation window is full.
+    pub fn try_invoke_begin(&self, msg: &IfuncMsg) -> Result<Option<PendingReply>> {
+        if self.window.try_acquire_many(1) == 0 {
+            return Ok(None);
+        }
+        match self.post_invoke_locked(msg, true) {
+            Ok((seq, how)) => Ok(Some(self.pending(seq, how))),
+            Err(e) => {
+                self.window.release(None);
+                Err(e)
+            }
+        }
+    }
+
+    /// Non-blocking **batched** invocation begin: claim as many window
+    /// slots as are free right now (up to `msgs.len()`), post that
+    /// admitted prefix through the transport's coalesced batch path —
+    /// one credit reservation, one flush — and return a [`PendingReply`]
+    /// per admitted frame, in order. An empty vec means the window was
+    /// saturated; the call never blocks on window capacity.
+    pub fn try_invoke_batch(&self, msgs: &[IfuncMsg]) -> Result<Vec<PendingReply>> {
+        if msgs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let admitted = self.window.try_acquire_many(msgs.len());
+        if admitted == 0 {
+            return Ok(Vec::new());
+        }
+        match self.post_invoke_batch_locked(&msgs[..admitted]) {
+            Ok(pending) => Ok(pending),
+            Err(e) => {
+                for _ in 0..admitted {
+                    self.window.release(None);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Post `msgs` as one coalesced batch and wire up per-frame reply
+    /// collection. Window slots (`msgs.len()` of them) must already be
+    /// claimed; on error the *caller* releases them — this function only
+    /// unwinds its collector registrations.
+    fn post_invoke_batch_locked(&self, msgs: &[IfuncMsg]) -> Result<Vec<PendingReply>> {
+        let mut link = lock_recover(&self.transport);
+        let first = link.frames_sent() + 1;
+        let end = link.frames_sent() + msgs.len() as u64;
+        self.admit_or_drain(end)?;
+        let mut pending = Vec::with_capacity(msgs.len());
+        match &self.collector {
+            Some(c) => {
+                // Register every frame before any goes out (same ordering
+                // contract as the unicast path: a concurrent drain may
+                // meet a reply the instant its frame lands).
+                for seq in first..=end {
+                    c.register(seq);
+                }
+                let posted = link.post_batch(msgs).and_then(|()| link.flush());
+                if let Err(e) = posted {
+                    for seq in first..=end {
+                        c.unregister(seq);
+                    }
+                    return Err(tag_worker(self.peer, e));
+                }
+                debug_assert_eq!(link.frames_sent(), end);
+                for seq in first..=end {
+                    pending.push(self.pending(seq, Collect::Stream(c.clone())));
+                }
+            }
+            None => {
+                link.post_batch(msgs).map_err(|e| tag_worker(self.peer, e))?;
+                link.flush().map_err(|e| tag_worker(self.peer, e))?;
+                for seq in first..=end {
+                    self.window.track(seq);
+                    pending.push(self.pending(seq, Collect::Slot(self.replies.clone())));
+                }
+            }
+        }
+        Ok(pending)
+    }
+
+    /// Block until the peer has consumed everything sent on this link so
+    /// far (one consumed-counter tick per ingress frame), draining the
+    /// reply collector meanwhile so reply-slot credit keeps flowing while
+    /// the wait spins. The barrier primitive.
+    pub fn wait_consumed(&self) -> Result<()> {
+        let sent = lock_recover(&self.transport).frames_sent();
+        self.consumed
+            .wait(sent, || match &self.collector {
+                Some(c) => c.drain(),
+                None => Ok(()),
+            })
+            .map_err(|e| tag_worker(self.peer, e))
+    }
+
+    /// Fault-injection hook for the security suite: write raw bytes into
+    /// the peer's delivery ring, bypassing all framing (hostile-sender
+    /// simulation). Ring-protocol transports only (fabric ring and shm).
+    #[doc(hidden)]
+    pub fn debug_put_raw(&self, offset: usize, data: &[u8]) -> Result<()> {
+        lock_recover(&self.transport).debug_put_raw(offset, data)
+    }
+
+    /// Outstanding reply registrations on this link — the stale-waiter
+    /// probe for the drop-without-wait property tests: collector-awaited
+    /// seqs on a streamed link, the window's lap-guard set size on a
+    /// legacy one.
+    #[doc(hidden)]
+    pub fn debug_awaited(&self) -> usize {
+        match &self.collector {
+            Some(c) => c.debug_awaited(),
+            None => self.window.awaiting_len(),
+        }
+    }
+}
+
+/// A node's outbound links, indexed by peer worker. `None` marks peers
+/// with no channel (a worker has no mesh link to itself).
+pub struct LinkSet {
+    links: Vec<Option<Arc<PeerLink>>>,
+}
+
+impl LinkSet {
+    pub(crate) fn new(links: Vec<Option<Arc<PeerLink>>>) -> Self {
+        LinkSet { links }
+    }
+
+    /// The link to `peer`, or an error naming the hole (unknown index,
+    /// or a peer this node holds no channel to).
+    pub fn get(&self, peer: usize) -> Result<&Arc<PeerLink>> {
+        self.links
+            .get(peer)
+            .and_then(|l| l.as_ref())
+            .ok_or_else(|| Error::Other(format!("no outbound link to worker {peer}")))
+    }
+
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_failure_encoding_roundtrips() {
+        for (worker, hops) in [(0usize, 0u8), (3, 7), (1500, 255)] {
+            let r0 = encode_forward_failure(worker, hops);
+            assert_eq!(decode_forward_failure(r0), (worker, hops));
+        }
+    }
+
+    #[test]
+    fn window_blocks_at_capacity_and_releases() {
+        let w = InvokeWindow::new(2);
+        w.acquire(None).unwrap();
+        w.acquire(None).unwrap();
+        assert!(w.acquire(Some(Duration::from_millis(20))).is_err());
+        w.release(None);
+        w.acquire(Some(Duration::from_millis(20))).unwrap();
+    }
+
+    #[test]
+    fn window_try_acquire_takes_only_free_slots() {
+        let w = InvokeWindow::new(3);
+        assert_eq!(w.try_acquire_many(2), 2);
+        assert_eq!(w.try_acquire_many(5), 1);
+        assert_eq!(w.try_acquire_many(1), 0);
+        w.release(None);
+        assert_eq!(w.try_acquire_many(1), 1);
+    }
+
+    #[test]
+    fn window_admit_guards_lap_distance() {
+        let w = InvokeWindow::new(4);
+        w.acquire(None).unwrap();
+        w.track(1);
+        // Within a lap: fine. One full lap past seq 1: must stall.
+        w.admit(REPLY_SLOTS as u64, None).unwrap();
+        assert!(w.admit(1 + REPLY_SLOTS as u64, Some(Duration::from_millis(20))).is_err());
+        w.release(Some(1));
+        w.admit(1 + REPLY_SLOTS as u64, None).unwrap();
+    }
+}

@@ -34,6 +34,24 @@
 //! through [`MultiPendingReply`] — scatter-gather where the code moves
 //! to every shard of the data and only results travel back.
 //!
+//! The per-worker outbound machinery — transport, invocation window,
+//! reply ring/collector, consumed counter — lives in the peer-generic
+//! [`link`] layer: a [`PeerLink`] is *one node's sending half of a
+//! channel to one peer*, and the [`Dispatcher`] is only a routing and
+//! collective facade over the leader's links. The same [`PeerLink`] type
+//! wires the optional worker↔worker **mesh** ([`ClusterConfig::mesh`]):
+//! every worker owns outbound links to its peers, and the `forward`
+//! host symbol lets a running invocation continue on another worker —
+//! the paper's "dynamically choose where code runs as the application
+//! progresses" realized *device-side*, without bouncing intermediate
+//! results through the host. Hop metadata in the frame header (origin
+//! seq/worker, hop count, TTL) routes the chain's final reply back to
+//! the origin's leader-facing reply stream under the seq the leader
+//! registered at injection, so a multi-hop chain collects like a local
+//! invocation; a broken chain (TTL out, dead peer) degrades to a FAILED
+//! reply whose `r0` names the failure site
+//! ([`link::decode_forward_failure`]) instead of a hang.
+//!
 //! On top of the dispatcher sits the concurrent serve front-end
 //! ([`frontend::Frontend`]) — the §3.2 database scenario under
 //! concurrent multi-client load: pipelined per-client sessions (bounded
@@ -47,15 +65,17 @@
 pub mod apps;
 pub mod dispatcher;
 pub mod frontend;
+pub mod link;
 pub mod store;
 pub mod telemetry;
 pub mod worker;
 
 pub use apps::{DecodeInsertIfunc, FilterIfunc, GetIfunc, InsertIfunc};
-pub use dispatcher::{route_key, Dispatcher, MultiPendingReply, MultiReply, PendingReply, Target};
+pub use dispatcher::{route_key, Dispatcher, MultiPendingReply, MultiReply, Target};
+pub use link::{decode_forward_failure, encode_forward_failure, PeerLink, PendingReply};
 pub use frontend::{Frontend, FrontendConfig, FrontendStats, Session, SessionReceiver};
 pub use store::{install_db_symbols, RecordStore};
-pub use telemetry::{ClusterSnapshot, ContextSnapshot, FrontendSnapshot};
+pub use telemetry::{ClusterSnapshot, ContextSnapshot, FrontendSnapshot, WorkerSnapshot};
 pub use worker::{WorkerHandle, WorkerStats, GET_MISSING};
 
 pub use crate::ifunc::TransportKind;
@@ -93,6 +113,13 @@ pub struct ClusterConfig {
     /// against uncollected replies — kept so the ablation benches can
     /// measure old vs new.
     pub stream_replies: bool,
+    /// Wire a worker↔worker mesh (one [`PeerLink`] per ordered worker
+    /// pair over the cluster's transport kind) and start a mesh receive
+    /// thread per worker, enabling the `forward` host symbol. Requires
+    /// `stream_replies`: relayed chain replies land in the origin's
+    /// leader-facing stream out of order, which only the streamed
+    /// collector protocol reassembles.
+    pub mesh: bool,
     pub wire: WireConfig,
     pub ctx: ContextConfig,
 }
@@ -106,6 +133,7 @@ impl Default for ClusterConfig {
             max_inflight: 16,
             reply_timeout: Some(std::time::Duration::from_secs(10)),
             stream_replies: true,
+            mesh: false,
             wire: WireConfig::off(),
             ctx: ContextConfig::default(),
         }
@@ -176,6 +204,14 @@ impl ClusterConfigBuilder {
         self
     }
 
+    /// Wire the worker↔worker mesh and enable the `forward` host symbol
+    /// (default off). Requires streamed replies; `build()` rejects
+    /// `mesh(true)` + `stream_replies(false)`.
+    pub fn mesh(mut self, on: bool) -> Self {
+        self.config.mesh = on;
+        self
+    }
+
     /// Wire-cost model for the emulated fabric.
     pub fn wire(mut self, wire: WireConfig) -> Self {
         self.config.wire = wire;
@@ -211,6 +247,13 @@ impl ClusterConfigBuilder {
                 c.max_inflight
             )));
         }
+        if c.mesh && !c.stream_replies {
+            return Err(Error::Other(
+                "ClusterConfig: mesh requires stream_replies — relayed chain replies \
+                 arrive out of order and only the streamed collector reassembles them"
+                    .into(),
+            ));
+        }
         if c.reply_timeout == Some(Duration::ZERO) {
             return Err(Error::Other(
                 "ClusterConfig: zero reply_timeout would expire every wait immediately; \
@@ -228,6 +271,8 @@ pub struct Cluster {
     pub leader: Arc<Context>,
     pub leader_worker: Arc<UcpWorker>,
     pub workers: Vec<WorkerHandle>,
+    /// Whether the worker↔worker mesh is wired ([`ClusterConfig::mesh`]).
+    pub mesh: bool,
 }
 
 impl Cluster {
@@ -239,17 +284,25 @@ impl Cluster {
         config: ClusterConfig,
         setup: impl Fn(usize, &Arc<Context>, &Arc<RecordStore>),
     ) -> Result<Cluster> {
+        if config.mesh && !config.stream_replies {
+            return Err(Error::Other(
+                "ClusterConfig: mesh requires stream_replies (see ClusterConfig::builder)"
+                    .into(),
+            ));
+        }
         // Node 0 = leader/host; nodes 1..=N = device workers.
         let fabric = Fabric::new(config.workers + 1, config.wire);
         let leader = Context::new(fabric.node(0), config.ctx.clone())?;
         let leader_worker = UcpWorker::new(&leader);
-        let mut workers = Vec::with_capacity(config.workers);
+        // Phase 1: build every worker's context + leader link (no threads
+        // yet — the receive loops must know their mesh links first).
+        let mut boots = Vec::with_capacity(config.workers);
         for i in 0..config.workers {
             let ctx = Context::new(fabric.node(i + 1), config.ctx.clone())?;
             let store = RecordStore::new();
             install_db_symbols(ctx.symbols(), store.clone());
             setup(i, &ctx, &store);
-            workers.push(WorkerHandle::spawn(
+            boots.push(worker::WorkerBoot::build(
                 i,
                 ctx,
                 store,
@@ -258,7 +311,19 @@ impl Cluster {
                 &config,
             )?);
         }
-        Ok(Cluster { fabric, leader, leader_worker, workers })
+        // Phase 2: with all contexts alive, wire the worker↔worker mesh
+        // pairwise (the same PeerLink/channel shape as the leader links).
+        let mut mesh = if config.mesh {
+            worker::build_mesh(&boots, &config)?.into_iter().map(Some).collect()
+        } else {
+            (0..config.workers).map(|_| None).collect::<Vec<_>>()
+        };
+        // Phase 3: start receive threads, each holding its mesh half.
+        let mut workers = Vec::with_capacity(config.workers);
+        for (i, boot) in boots.into_iter().enumerate() {
+            workers.push(boot.start(mesh[i].take())?);
+        }
+        Ok(Cluster { fabric, leader, leader_worker, workers, mesh: config.mesh })
     }
 
     /// Create a dispatcher bound to this cluster's workers.

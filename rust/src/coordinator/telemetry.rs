@@ -109,10 +109,26 @@ impl FrontendSnapshot {
     }
 }
 
+/// Per-worker execution counters in a [`ClusterSnapshot`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerSnapshot {
+    pub ctx: ContextSnapshot,
+    pub executed: u64,
+    pub failed: u64,
+    /// Frames this worker forwarded onward over the worker↔worker mesh.
+    pub forwarded: u64,
+    /// Forward attempts that died at this worker (TTL out, mesh
+    /// disabled, dead peer).
+    pub forward_failed: u64,
+    pub records: usize,
+}
+
 /// Cluster-wide snapshot: leader + every worker + execution counters.
 pub struct ClusterSnapshot {
     pub leader: ContextSnapshot,
-    pub workers: Vec<(ContextSnapshot, u64, u64, usize)>, // (ctx, executed, failed, records)
+    pub workers: Vec<WorkerSnapshot>,
+    /// Whether the worker↔worker mesh is wired (`ClusterConfig::mesh`).
+    pub mesh: bool,
 }
 
 impl ClusterSnapshot {
@@ -122,15 +138,16 @@ impl ClusterSnapshot {
             workers: cluster
                 .workers
                 .iter()
-                .map(|w| {
-                    (
-                        ContextSnapshot::capture(&w.ctx),
-                        w.executed(),
-                        w.stats.failed.load(Ordering::Relaxed),
-                        w.store.len(),
-                    )
+                .map(|w| WorkerSnapshot {
+                    ctx: ContextSnapshot::capture(&w.ctx),
+                    executed: w.executed(),
+                    failed: w.stats.failed.load(Ordering::Relaxed),
+                    forwarded: w.forwarded(),
+                    forward_failed: w.forward_failed(),
+                    records: w.store.len(),
                 })
                 .collect(),
+            mesh: cluster.mesh,
         }
     }
 
@@ -142,16 +159,34 @@ impl ClusterSnapshot {
                 Json::Arr(
                     self.workers
                         .iter()
-                        .map(|(c, executed, failed, records)| {
+                        .map(|w| {
                             Json::obj(vec![
-                                ("ctx", c.to_json()),
-                                ("executed", Json::from(*executed)),
-                                ("failed", Json::from(*failed)),
-                                ("records", Json::from(*records)),
+                                ("ctx", w.ctx.to_json()),
+                                ("executed", Json::from(w.executed)),
+                                ("failed", Json::from(w.failed)),
+                                ("forwarded", Json::from(w.forwarded)),
+                                ("forward_failed", Json::from(w.forward_failed)),
+                                ("records", Json::from(w.records)),
                             ])
                         })
                         .collect(),
                 ),
+            ),
+            (
+                "mesh",
+                Json::obj(vec![
+                    ("enabled", Json::from(self.mesh)),
+                    (
+                        "forwarded",
+                        Json::from(self.workers.iter().map(|w| w.forwarded).sum::<u64>()),
+                    ),
+                    (
+                        "forward_failed",
+                        Json::from(
+                            self.workers.iter().map(|w| w.forward_failed).sum::<u64>(),
+                        ),
+                    ),
+                ]),
             ),
         ])
     }
@@ -159,20 +194,23 @@ impl ClusterSnapshot {
     /// Operator-facing summary table.
     pub fn render(&self) -> String {
         let mut out = String::from(
-            "worker  executed  failed  records  puts-in  rejected  cache h/m  iflush\n",
+            "worker  executed  failed  fwd  fwd-fail  records  puts-in  rejected  \
+             cache h/m  iflush\n",
         );
-        for (c, executed, failed, records) in &self.workers {
+        for w in &self.workers {
             out.push_str(&format!(
-                "{:>6}  {:>8}  {:>6}  {:>7}  {:>7}  {:>8}  {:>5}/{:<4} {:>6}\n",
-                c.node,
-                executed,
-                failed,
-                records,
-                c.fabric_puts,
-                c.fabric_rejected,
-                c.cache_hits,
-                c.cache_misses,
-                c.icache_flushes,
+                "{:>6}  {:>8}  {:>6}  {:>3}  {:>8}  {:>7}  {:>7}  {:>8}  {:>5}/{:<4} {:>6}\n",
+                w.ctx.node,
+                w.executed,
+                w.failed,
+                w.forwarded,
+                w.forward_failed,
+                w.records,
+                w.ctx.fabric_puts,
+                w.ctx.fabric_rejected,
+                w.ctx.cache_hits,
+                w.ctx.cache_misses,
+                w.ctx.icache_flushes,
             ));
         }
         out
@@ -205,17 +243,47 @@ mod tests {
         d.barrier().unwrap();
 
         let snap = ClusterSnapshot::capture(&cluster);
-        let executed: u64 = snap.workers.iter().map(|(_, e, _, _)| e).sum();
+        let executed: u64 = snap.workers.iter().map(|w| w.executed).sum();
         assert_eq!(executed, 20);
-        let flushes: u64 = snap.workers.iter().map(|(c, ..)| c.icache_flushes).sum();
+        let flushes: u64 = snap.workers.iter().map(|w| w.ctx.icache_flushes).sum();
         assert_eq!(flushes, 20, "every arrival pays clear_cache");
         // Each worker auto-registered 'counter' exactly once.
-        for (c, ..) in &snap.workers {
-            assert_eq!(c.cache_misses, 1);
+        for w in &snap.workers {
+            assert_eq!(w.ctx.cache_misses, 1);
         }
         let json = snap.to_json().to_string();
         assert!(json.contains("\"workers\""));
         assert!(!snap.render().is_empty());
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn snapshot_reports_mesh_forwarding() {
+        use crate::ifunc::builtin::HopIfunc;
+        let cluster = super::super::Cluster::launch(
+            ClusterConfig::builder().workers(2).mesh(true).build().unwrap(),
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(HopIfunc));
+            },
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(HopIfunc));
+        let d = cluster.dispatcher();
+        let h = d.register("hop").unwrap();
+        let msg = h
+            .msg_create(&SourceArgs::bytes(HopIfunc::payload(&[1], b"x")))
+            .unwrap();
+        assert!(d.invoke_one(Target::Worker(0), &msg).unwrap().ok());
+
+        let snap = ClusterSnapshot::capture(&cluster);
+        assert!(snap.mesh);
+        assert_eq!(snap.workers[0].forwarded, 1);
+        assert_eq!(snap.workers[1].forwarded, 0);
+        assert_eq!(snap.workers.iter().map(|w| w.forward_failed).sum::<u64>(), 0);
+        let json = snap.to_json().to_string();
+        assert!(json.contains("\"mesh\""), "{json}");
+        assert!(json.contains("\"enabled\":true"), "{json}");
+        assert!(json.contains("\"forwarded\":1"), "{json}");
         cluster.shutdown().unwrap();
     }
 }

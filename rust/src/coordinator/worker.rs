@@ -25,63 +25,326 @@
 //! advances once per frame (a chunked reply occupies several reply seqs,
 //! so reply seqs are no longer a frame count). There is no leader-side
 //! result region: invocation results are messages, not shared memory.
+//!
+//! With [`ClusterConfig::mesh`] each worker additionally owns a
+//! [`super::link::LinkSet`] of outbound [`super::link::PeerLink`]s to its
+//! peers — the same link type the leader dispatches over — plus a mesh
+//! receive thread. An invocation that calls the `forward` host symbol
+//! does **not** reply: its rebuilt frame continues on the named peer over
+//! the mesh (the leader-ingress hop stamps the origin seq/worker into the
+//! hop header first), each hop decrements the TTL, and the *final* hop's
+//! reply travels back to the origin worker as a relay frame, from where
+//! it is pushed into the origin's leader-facing reply stream under the
+//! seq the leader registered at injection — so `PendingReply::wait`
+//! collects a multi-hop chain's result exactly like a local one. A chain
+//! that dies (TTL out, unreachable peer, failed hop) produces a FAILED
+//! reply whose `r0` encodes the failure site
+//! ([`super::link::encode_forward_failure`]) instead of a hang. Heavily
+//! *cyclic* forwarding can transiently exhaust mesh ring credit in both
+//! directions at once; the per-link credit waits are bounded by
+//! `ClusterConfig::reply_timeout`, so the worst case degrades to a
+//! failure relay naming the wedged hop, never a silent deadlock.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::fabric::{MemPerm, RKey};
 use crate::ifunc::am_transport::{execute_am_frame_in_place, IFUNC_AM_ID};
+use crate::ifunc::message::{Header, HEADER_BYTES, HOP_KIND_RELAY};
 use crate::ifunc::transport::PutSink;
 use crate::ifunc::{
-    AmTransport, ConsumedCounter, IfuncRing, IfuncTransport, PollResult, ReplyCollector,
-    ReplyRing, ReplyWriter, RingTransport, ShmTransport, TargetArgs, TransportKind,
-    REPLY_SLOTS,
+    AmTransport, ConsumedCounter, ExecOutcome, ForwardOutcome, Hop, IfuncMsg, IfuncRing,
+    IfuncTransport, MeshPollResult, PollResult, ReplyCollector, ReplyRing, ReplyWriter,
+    RingTransport, ShmTransport, TargetArgs, TransportKind, NO_ORIGIN_WORKER,
 };
 use crate::log;
-use crate::ucp::{Context, Worker as UcpWorker};
+use crate::ucp::{Context, Endpoint, Worker as UcpWorker};
 use crate::util::sync::lock_recover;
 use crate::{Error, Result};
 
-use super::dispatcher::InvokeWindow;
+use super::link::{encode_forward_failure, LinkSet, PeerLink};
 use super::store::RecordStore;
 use super::ClusterConfig;
 
 /// `db_get`'s r0 when the key is absent.
 pub const GET_MISSING: u64 = u64::MAX;
 
+/// Mesh delivery rings are capped well below the leader-link ring:
+/// forwards are single invocation continuations, not bulk scatter
+/// traffic, and an N-worker mesh holds N·(N−1) of these.
+const MESH_RING_BYTES_MAX: usize = 256 << 10;
+
 /// Worker-side execution counters.
 #[derive(Default)]
 pub struct WorkerStats {
     pub executed: AtomicU64,
     pub failed: AtomicU64,
+    /// Frames this worker forwarded onward over the mesh (each successful
+    /// `forward` hop counts once, at the hop that sent it).
+    pub forwarded: AtomicU64,
+    /// Forward attempts that died here: TTL exhausted, mesh disabled, or
+    /// an unreachable/failed peer link.
+    pub forward_failed: AtomicU64,
 }
 
-/// A spawned worker: context + store + receive thread + leader link.
+/// A spawned worker: context + store + receive thread(s) + leader link.
 pub struct WorkerHandle {
     pub index: usize,
     pub ctx: Arc<Context>,
     pub store: Arc<RecordStore>,
     pub stats: Arc<WorkerStats>,
-    /// Leader-side delivery channel (transport-generic).
-    pub(crate) link: Mutex<Box<dyn IfuncTransport>>,
-    /// Leader-side view of the link's reply ring, shared with the
-    /// transport so `PendingReply::wait` runs without the link lock.
-    pub(crate) replies: ReplyRing,
-    /// Leader-side view of the link's consumed-frame counter — the
-    /// barrier credit (one tick per ingress frame, however many reply
-    /// frames it produced).
-    pub(crate) consumed: ConsumedCounter,
-    /// Streamed-reply reassembler (`None` when
-    /// `ClusterConfig::stream_replies` is off and the legacy
-    /// one-frame-per-reply slot protocol runs instead).
-    pub(crate) collector: Option<Arc<ReplyCollector>>,
-    /// Caps outstanding invocations on this link (`max_inflight`) and —
-    /// in legacy mode — guards every send against lapping an uncollected
-    /// reply.
-    pub(crate) window: Arc<InvokeWindow>,
-    /// `ClusterConfig::reply_timeout`, for the window's admission check.
-    pub(crate) reply_timeout: Option<std::time::Duration>,
+    /// The leader's outbound link to this worker — transport, reply ring,
+    /// collector, and invocation window, bundled peer-generically (the
+    /// same [`PeerLink`] type mesh links use).
+    pub(crate) link: Arc<PeerLink>,
     shutdown: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<Result<()>>>,
+    mesh_thread: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+/// What a leader-ingress frame owes the leader after execution.
+enum LeaderReplyAction {
+    /// Push a reply stream under the frame's seq, as always.
+    Reply { ok: bool, r0: u64, payload: Vec<u8> },
+    /// The invocation continued over the mesh: this hop replies nothing —
+    /// the chain's final hop relays the reply back under the origin seq.
+    Deferred,
+}
+
+/// Route an executed leader-ingress frame's outcome: no forward → reply
+/// locally; forward requested → stamp the origin (seq + this worker) into
+/// the hop header if unset and ship the rebuilt frame over the mesh. A
+/// forward that cannot go out — mesh disabled, TTL exhausted, dead peer —
+/// degrades to a FAILED reply whose `r0` names the failure site, so the
+/// leader's `PendingReply` errors instead of hanging.
+fn route_leader_outcome(
+    index: usize,
+    mesh: Option<&MeshNode>,
+    stats: &WorkerStats,
+    frame_seq: u64,
+    out: ExecOutcome,
+) -> LeaderReplyAction {
+    let Some(fwd) = out.forward else {
+        return LeaderReplyAction::Reply { ok: true, r0: out.ret, payload: out.reply };
+    };
+    let fail = |hops: u8| {
+        stats.forward_failed.fetch_add(1, Ordering::Relaxed);
+        LeaderReplyAction::Reply {
+            ok: false,
+            r0: encode_forward_failure(index, hops),
+            payload: Vec::new(),
+        }
+    };
+    let Some(mesh) = mesh else {
+        log::error!(
+            "worker {index}: forward requested but the worker mesh is disabled \
+             (ClusterConfig::mesh)"
+        );
+        return fail(0);
+    };
+    match fwd {
+        ForwardOutcome::TtlExhausted { worker } => {
+            log::error!("worker {index}: forward to worker {worker} rejected: TTL exhausted");
+            fail(0)
+        }
+        ForwardOutcome::Forward { worker, mut msg } => {
+            let mut hop = msg.hop();
+            if hop.origin_worker == NO_ORIGIN_WORKER {
+                // First hop of the chain: the reply must come back to
+                // *this* worker's leader stream under *this* frame's seq.
+                hop.origin_seq = frame_seq;
+                hop.origin_worker = index as u16;
+                msg.set_hop(hop);
+            }
+            match mesh.send_to(worker, &msg) {
+                Ok(()) => {
+                    stats.forwarded.fetch_add(1, Ordering::Relaxed);
+                    LeaderReplyAction::Deferred
+                }
+                Err(e) => {
+                    log::error!("worker {index}: forward to worker {worker} failed: {e}");
+                    fail(hop.hops.saturating_sub(1))
+                }
+            }
+        }
+    }
+}
+
+/// A worker's half of the worker↔worker mesh: outbound links to every
+/// peer plus the plumbing to route chain replies back to the leader.
+pub(crate) struct MeshNode {
+    self_index: usize,
+    links: LinkSet,
+    /// This worker's leader-facing reply writer, shared with the leader
+    /// receive path: a chain that originated here pushes its finished
+    /// reply into it under the origin seq, and the leader's collector
+    /// picks it up like any other (possibly out-of-order) reply.
+    leader_writer: Arc<Mutex<ReplyWriter>>,
+    stats: Arc<WorkerStats>,
+}
+
+impl MeshNode {
+    /// Ship one frame to `peer` over the mesh. Self-forwarding is an
+    /// error by contract (there is no loopback link; an ifunc that wants
+    /// to continue locally simply computes on).
+    fn send_to(&self, peer: usize, msg: &IfuncMsg) -> Result<()> {
+        if peer == self.self_index {
+            return Err(Error::Other(format!("forward targets self (worker {peer})")));
+        }
+        let link = self.links.get(peer)?;
+        link.send(msg)?;
+        link.flush()
+    }
+
+    /// Deliver a finished chain's reply to its origin: push straight into
+    /// our own leader-facing stream when we are the origin, else ship a
+    /// relay frame over the mesh. A relay that cannot go out is logged —
+    /// the leader's `PendingReply` then times out naming the worker,
+    /// which is the best a wedged relay path can offer.
+    fn deliver_reply(&self, hop: Hop, ok: bool, r0: u64, reply: &[u8]) {
+        let origin = hop.origin_worker as usize;
+        let delivered = if origin == self.self_index {
+            lock_recover(&self.leader_writer).push(hop.origin_seq, ok, r0, reply).map(|_| ())
+        } else {
+            IfuncMsg::relay(ok, r0, reply, hop).and_then(|m| self.send_to(origin, &m))
+        };
+        if let Err(e) = delivered {
+            log::error!(
+                "worker {}: reply relay to origin worker {origin} failed: {e}",
+                self.self_index
+            );
+        }
+    }
+
+    /// One invoke-kind mesh frame was consumed (and executed, or died
+    /// trying): continue the chain, or deliver its reply to the origin.
+    fn handle_executed(&self, hop: Hop, outcome: Result<ExecOutcome>) {
+        let me = self.self_index;
+        let out = match outcome {
+            Ok(out) => {
+                self.stats.executed.fetch_add(1, Ordering::Relaxed);
+                out
+            }
+            Err(e) => {
+                self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                log::error!("worker {me}: mesh ifunc failed: {e}");
+                self.deliver_reply(hop, false, encode_forward_failure(me, hop.hops), &[]);
+                return;
+            }
+        };
+        match out.forward {
+            None => self.deliver_reply(hop, true, out.ret, &out.reply),
+            Some(ForwardOutcome::Forward { worker, msg }) => match self.send_to(worker, &msg) {
+                Ok(()) => {
+                    self.stats.forwarded.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    self.stats.forward_failed.fetch_add(1, Ordering::Relaxed);
+                    log::error!("worker {me}: forward to worker {worker} failed: {e}");
+                    self.deliver_reply(hop, false, encode_forward_failure(me, hop.hops), &[]);
+                }
+            },
+            Some(ForwardOutcome::TtlExhausted { worker }) => {
+                self.stats.forward_failed.fetch_add(1, Ordering::Relaxed);
+                log::error!(
+                    "worker {me}: forward to worker {worker} rejected: TTL exhausted \
+                     after {} hops",
+                    hop.hops
+                );
+                self.deliver_reply(hop, false, encode_forward_failure(me, hop.hops), &[]);
+            }
+        }
+    }
+
+    /// A relay-kind frame arrived: we should be the chain's origin —
+    /// unwrap the carried reply and push it into our leader-facing stream
+    /// under the origin seq the leader registered at injection time.
+    fn handle_relay(&self, hop: Hop, payload: &[u8]) {
+        let me = self.self_index;
+        if hop.origin_worker as usize != me {
+            self.stats.failed.fetch_add(1, Ordering::Relaxed);
+            log::error!(
+                "worker {me}: relay for origin worker {} landed here",
+                hop.origin_worker
+            );
+            return;
+        }
+        match IfuncMsg::decode_relay_payload(payload) {
+            Ok((ok, r0, reply)) => {
+                if let Err(e) = lock_recover(&self.leader_writer).push(hop.origin_seq, ok, r0, reply)
+                {
+                    log::error!("worker {me}: relayed reply push failed: {e}");
+                }
+            }
+            Err(e) => {
+                self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                log::error!("worker {me}: bad relay payload: {e}");
+            }
+        }
+    }
+}
+
+/// One peer's inbound mesh ring (ring/shm transports): the delivery ring
+/// this node polls plus the byte-credit sink pointing back at the
+/// sender's flow-control word.
+pub(crate) struct MeshIngressRing {
+    peer: usize,
+    ring: IfuncRing,
+    credit: PutSink,
+    last_credit: u64,
+    stuck_reported_at: Option<u64>,
+}
+
+/// How mesh frames reach this worker: polled delivery rings (ring/shm) or
+/// a dedicated AM ucp worker the mesh thread progresses.
+pub(crate) enum MeshIngress {
+    Rings(Vec<MeshIngressRing>),
+    Am(Arc<UcpWorker>),
+}
+
+/// A worker's fully-wired mesh half, handed to [`WorkerBoot::start`].
+pub(crate) struct MeshParts {
+    node: Arc<MeshNode>,
+    ingress: MeshIngress,
+}
+
+/// Build one ring-protocol delivery channel sender → receiver: the
+/// receiver-side delivery ring, the sender-side transport writing into
+/// it, and the byte-credit return sink targeting the sender's credit
+/// word. `eps` carries the fabric endpoint pair `(sender→receiver,
+/// receiver→sender)`; `None` selects the colocated shm wiring (shared
+/// mappings, no endpoints). Shared by the leader links and every mesh
+/// pair — the channel shape is identical, only who owns each end moves.
+fn ring_channel(
+    sender: &Arc<Context>,
+    receiver: &Arc<Context>,
+    ring_bytes: usize,
+    replies: ReplyRing,
+    consumed: ConsumedCounter,
+    eps: Option<(Arc<Endpoint>, Arc<Endpoint>)>,
+) -> Result<(Box<dyn IfuncTransport>, IfuncRing, PutSink)> {
+    let ring = IfuncRing::new(receiver, ring_bytes)?;
+    // Sender-side credit word; the receiver puts consumed-bytes into it.
+    let credit = sender.mem_map(64, MemPerm::RW);
+    Ok(match eps {
+        Some((fwd, back)) => (
+            Box::new(RingTransport::new(
+                fwd,
+                ring.rkey(),
+                ring_bytes,
+                credit.clone(),
+                replies,
+                consumed,
+            )),
+            ring,
+            PutSink::Fabric { ep: back, rkey: credit.rkey() },
+        ),
+        None => (
+            Box::new(ShmTransport::new(ring.region(), credit.clone(), replies, consumed)),
+            ring,
+            PutSink::Shm(credit),
+        ),
+    })
 }
 
 /// The ring-delivery receive loop, shared verbatim by the fabric ring and
@@ -89,19 +352,22 @@ pub struct WorkerHandle {
 /// and `consumed` sinks; the reply writer carries its own sink). Per
 /// iteration: poll the ring, push byte credit on any consumption
 /// (including wrap rewinds), answer each consumed frame with a reply
-/// stream plus a consumed-counter tick, and pump reply chunks parked on
-/// collector credit.
+/// stream plus a consumed-counter tick — unless the invocation forwarded
+/// itself over the mesh, in which case the reply is deferred to the
+/// chain's final hop and only the credit/consumed signals fire — and
+/// pump reply chunks parked on collector credit.
 #[allow(clippy::too_many_arguments)]
 fn ring_receive_loop(
     index: usize,
     ctx: Arc<Context>,
     mut ring: IfuncRing,
     store: Arc<RecordStore>,
-    mut replies: ReplyWriter,
+    replies: Arc<Mutex<ReplyWriter>>,
     credit: PutSink,
     consumed: PutSink,
     stats: Arc<WorkerStats>,
     stop: Arc<AtomicBool>,
+    mesh: Option<Arc<MeshNode>>,
 ) -> Result<()> {
     let mut args = TargetArgs::new(Box::new(store));
     let mut idle = 0u32;
@@ -155,38 +421,46 @@ fn ring_receive_loop(
             last_credit = ring.consumed_bytes;
         }
         // One reply stream per consumed *frame* (not markers), whether it
-        // executed or was rejected; executed frames carry the bytes the
-        // injected function pushed, chunked when they exceed one reply
-        // slot. A reply-path error is logged and counted — never fatal to
-        // the worker thread (the leader sees it as a reply timeout, not a
+        // executed or was rejected — except frames whose invocation
+        // continued over the mesh: those reply from the chain's last hop
+        // instead, but still tick the credit/consumed signals here so
+        // flow control and barriers never depend on the chain's fate. A
+        // reply-path error is logged and counted — never fatal to the
+        // worker thread (the leader sees it as a reply timeout, not a
         // dead link).
         if consumed_frame {
-            let pushed = match polled {
+            let frame_seq = ring.consumed;
+            let action = match polled {
                 Ok(PollResult::Executed(out)) => {
-                    replies.push(ring.consumed, true, out.ret, &out.reply)
+                    route_leader_outcome(index, mesh.as_deref(), &stats, frame_seq, out)
                 }
-                _ => replies.push(ring.consumed, false, 0, &[]),
+                _ => LeaderReplyAction::Reply { ok: false, r0: 0, payload: Vec::new() },
             };
-            if let Err(e) = pushed {
-                stats.failed.fetch_add(1, Ordering::Relaxed);
-                log::error!("worker {index}: reply push failed: {e}");
+            if let LeaderReplyAction::Reply { ok, r0, payload } = action {
+                if let Err(e) = lock_recover(&replies).push(frame_seq, ok, r0, &payload) {
+                    stats.failed.fetch_add(1, Ordering::Relaxed);
+                    log::error!("worker {index}: reply push failed: {e}");
+                }
             }
             // Barrier credit: one tick per ingress frame, independent of
             // how many reply frames the stream needed. Like every
             // reply-path error: log, never die — a failed put degrades to
             // a barrier timeout, not a dead link.
-            if let Err(e) = consumed.signal(0, ring.consumed) {
+            if let Err(e) = consumed.signal(0, frame_seq) {
                 log::error!("worker {index}: consumed-credit put failed: {e}");
             }
         }
-        // Drain reply chunks parked on collector credit.
-        if let Err(e) = replies.pump() {
+        // Drain reply chunks parked on collector credit (including
+        // relayed chain replies the mesh thread queued concurrently).
+        if let Err(e) = lock_recover(&replies).pump() {
             log::error!("worker {index}: reply pump failed: {e}");
         }
         if no_message || stuck {
             if stop.load(Ordering::Acquire) {
-                let _ = replies.pump();
-                replies.flush()?;
+                let mut w = lock_recover(&replies);
+                let _ = w.pump();
+                w.flush()?;
+                drop(w);
                 credit.flush()?;
                 consumed.flush()?;
                 return Ok(());
@@ -197,7 +471,72 @@ fn ring_receive_loop(
     }
 }
 
-/// Fabric-link streamed-reply wiring, shared by the ring and AM spawn
+/// The mesh receive loop (ring/shm transports): round-robin poll every
+/// peer's inbound ring, execute invoke frames / unwrap relay frames, and
+/// push byte credit back to each sender. One thread per worker serves all
+/// its inbound mesh channels.
+fn mesh_receive_loop(
+    index: usize,
+    ctx: Arc<Context>,
+    mut rings: Vec<MeshIngressRing>,
+    node: Arc<MeshNode>,
+    store: Arc<RecordStore>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut args = TargetArgs::new(Box::new(store));
+    let mut idle = 0u32;
+    loop {
+        let mut progressed = false;
+        for ing in &mut rings {
+            match ctx.poll_ifunc_mesh(&mut ing.ring, &mut args) {
+                Ok(MeshPollResult::NoMessage) => {}
+                Ok(MeshPollResult::Executed { hop, outcome }) => {
+                    node.handle_executed(hop, outcome);
+                    progressed = true;
+                }
+                Ok(MeshPollResult::Relay { hop, payload }) => {
+                    node.handle_relay(hop, &payload);
+                    progressed = true;
+                }
+                Err(e) => {
+                    // Header-integrity failure: parks at the cursor
+                    // (length untrusted, cannot skip) and repeats every
+                    // poll — report once per cursor position, keep
+                    // serving the other peers' rings.
+                    if ing.stuck_reported_at != Some(ing.ring.consumed_bytes) {
+                        ing.stuck_reported_at = Some(ing.ring.consumed_bytes);
+                        node.stats.failed.fetch_add(1, Ordering::Relaxed);
+                        log::error!(
+                            "worker {index}: unconsumable mesh frame from worker {} \
+                             parked at the ring cursor: {e}",
+                            ing.peer
+                        );
+                    }
+                }
+            }
+            // Byte credit back to the sending peer on any consumption
+            // (frames and wrap rewinds both advance the sender's window).
+            if ing.ring.consumed_bytes != ing.last_credit {
+                ing.credit.signal(0, ing.ring.consumed_bytes)?;
+                ing.last_credit = ing.ring.consumed_bytes;
+            }
+        }
+        if !progressed {
+            if stop.load(Ordering::Acquire) {
+                for ing in &rings {
+                    ing.credit.flush()?;
+                }
+                return Ok(());
+            }
+            crate::fabric::wire::backoff(idle);
+            idle += 1;
+        } else {
+            idle = 0;
+        }
+    }
+}
+
+/// Fabric-link streamed-reply wiring, shared by the ring and AM build
 /// paths: a worker-local watermark word the leader-side collector
 /// advances as it consumes reply frames (the writer's slot-recycling
 /// gate), plus the collector itself on a dedicated leader → worker
@@ -214,77 +553,96 @@ fn fabric_reply_collector(
     if !stream {
         return Ok((None, None));
     }
-    let credit_mr = ctx.mem_map(64, crate::fabric::MemPerm::RW);
+    let credit_mr = ctx.mem_map(64, MemPerm::RW);
     let credit_ep = leader_worker.connect(ucp_worker)?;
     let collector = Arc::new(ReplyCollector::new(replies.clone(), credit_ep, credit_mr.rkey()));
     Ok((Some(collector), Some(credit_mr)))
 }
 
-impl WorkerHandle {
-    pub(crate) fn spawn(
+/// How leader-injected frames reach this worker's receive thread.
+enum LeaderIngress {
+    /// Poll a delivery ring (fabric ring and shm transports — the same
+    /// loop, different signal sinks).
+    Ring { ring: IfuncRing, credit: PutSink, consumed: PutSink },
+    /// Progress a UCP worker whose AM handler executes frames in place.
+    Am { ucp_worker: Arc<UcpWorker>, ep_back: Arc<Endpoint>, consumed_rkey: RKey },
+}
+
+/// A fully-wired worker that has not started its receive threads yet.
+///
+/// `Cluster::launch` is multi-phase: every worker's leader link is built
+/// first ([`WorkerBoot::build`]), then — with all contexts alive — the
+/// worker↔worker mesh is wired pairwise ([`build_mesh`]), and only then
+/// do threads start ([`WorkerBoot::start`]), each holding its mesh node.
+/// Threads cannot start earlier: a receive loop must know its mesh links
+/// before the first frame can ask to forward.
+pub(crate) struct WorkerBoot {
+    index: usize,
+    ctx: Arc<Context>,
+    store: Arc<RecordStore>,
+    stats: Arc<WorkerStats>,
+    shutdown: Arc<AtomicBool>,
+    link: Arc<PeerLink>,
+    /// The worker's leader-facing reply writer. Shared (mutex-wrapped)
+    /// between the leader receive path and the mesh node: chain replies
+    /// relayed back to this origin push into the same stream.
+    leader_writer: Arc<Mutex<ReplyWriter>>,
+    ingress: LeaderIngress,
+}
+
+impl WorkerBoot {
+    /// Build the worker's context-side state and its leader link —
+    /// transport, reply ring, collector, consumed counter — without
+    /// spawning anything.
+    pub(crate) fn build(
         index: usize,
         ctx: Arc<Context>,
         store: Arc<RecordStore>,
         leader: &Arc<Context>,
         leader_worker: &Arc<UcpWorker>,
         config: &ClusterConfig,
-    ) -> Result<WorkerHandle> {
+    ) -> Result<WorkerBoot> {
         // Leader-side reply region + consumed counter (transport-shared).
         let replies = ReplyRing::new(leader, config.reply_timeout);
         let reply_rkey = replies.rkey();
         let consumed = ConsumedCounter::new(leader, config.reply_timeout);
         let consumed_rkey = consumed.rkey();
-        let window = Arc::new(InvokeWindow::new(config.max_inflight.clamp(1, REPLY_SLOTS)));
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(WorkerStats::default());
         let stream = config.stream_replies;
 
-        type Spawned = (
+        type Built = (
             Box<dyn IfuncTransport>,
             Option<Arc<ReplyCollector>>,
-            std::thread::JoinHandle<Result<()>>,
+            Arc<Mutex<ReplyWriter>>,
+            LeaderIngress,
         );
-        let (transport, collector, thread): Spawned = match config.transport {
+        let (transport, collector, leader_writer, ingress): Built = match config.transport {
             TransportKind::Ring => {
                 let ucp_worker = UcpWorker::new(&ctx);
                 let ep = leader_worker.connect(&ucp_worker)?;
                 let ep_back = ucp_worker.connect(leader_worker)?;
                 let (collector, reply_credit) =
                     fabric_reply_collector(&ctx, leader_worker, &ucp_worker, &replies, stream)?;
-                let ring = IfuncRing::new(&ctx, config.ring_bytes)?;
-                // Leader-side credit word; worker puts consumed-bytes into it.
-                let credit = leader.mem_map(64, crate::fabric::MemPerm::RW);
-                let transport = Box::new(RingTransport::new(
-                    ep,
-                    ring.rkey(),
+                let (transport, ring, credit_sink) = ring_channel(
+                    leader,
+                    &ctx,
                     config.ring_bytes,
-                    credit.clone(),
                     replies.clone(),
                     consumed.clone(),
-                ));
-                let writer =
-                    ReplyWriter::with_mode(ep_back.clone(), reply_rkey, stream, reply_credit);
-                let credit_sink = PutSink::Fabric { ep: ep_back.clone(), rkey: credit.rkey() };
+                    Some((ep, ep_back.clone())),
+                )?;
+                let writer = Arc::new(Mutex::new(ReplyWriter::with_mode(
+                    ep_back.clone(),
+                    reply_rkey,
+                    stream,
+                    reply_credit,
+                )));
                 let consumed_sink = PutSink::Fabric { ep: ep_back, rkey: consumed_rkey };
-                let (ctx2, store2, stop2, stats2) =
-                    (ctx.clone(), store.clone(), shutdown.clone(), stats.clone());
-                let thread = std::thread::Builder::new()
-                    .name(format!("ifunc-worker-{index}"))
-                    .spawn(move || {
-                        ring_receive_loop(
-                            index,
-                            ctx2,
-                            ring,
-                            store2,
-                            writer,
-                            credit_sink,
-                            consumed_sink,
-                            stats2,
-                            stop2,
-                        )
-                    })
-                    .expect("spawn worker thread");
-                (transport, collector, thread)
+                (
+                    transport,
+                    collector,
+                    writer,
+                    LeaderIngress::Ring { ring, credit: credit_sink, consumed: consumed_sink },
+                )
             }
             TransportKind::Shm => {
                 // Colocated worker: no UCP worker, no endpoints — every
@@ -292,43 +650,29 @@ impl WorkerHandle {
                 // ring keeps its RWX grant (it holds code); all the
                 // counter/reply words are plain RW.
                 let (collector, reply_credit) = if stream {
-                    let credit_mr = ctx.mem_map(64, crate::fabric::MemPerm::RW);
+                    let credit_mr = ctx.mem_map(64, MemPerm::RW);
                     let collector =
                         Arc::new(ReplyCollector::shm(replies.clone(), credit_mr.clone()));
                     (Some(collector), Some(credit_mr))
                 } else {
                     (None, None)
                 };
-                let ring = IfuncRing::new(&ctx, config.ring_bytes)?;
-                let credit = leader.mem_map(64, crate::fabric::MemPerm::RW);
-                let transport = Box::new(ShmTransport::new(
-                    ring.region(),
-                    credit.clone(),
+                let (transport, ring, credit_sink) = ring_channel(
+                    leader,
+                    &ctx,
+                    config.ring_bytes,
                     replies.clone(),
                     consumed.clone(),
-                ));
-                let writer = ReplyWriter::shm(&replies, stream, reply_credit);
-                let credit_sink = PutSink::Shm(credit);
+                    None,
+                )?;
+                let writer = Arc::new(Mutex::new(ReplyWriter::shm(&replies, stream, reply_credit)));
                 let consumed_sink = PutSink::Shm(consumed.region());
-                let (ctx2, store2, stop2, stats2) =
-                    (ctx.clone(), store.clone(), shutdown.clone(), stats.clone());
-                let thread = std::thread::Builder::new()
-                    .name(format!("ifunc-worker-{index}"))
-                    .spawn(move || {
-                        ring_receive_loop(
-                            index,
-                            ctx2,
-                            ring,
-                            store2,
-                            writer,
-                            credit_sink,
-                            consumed_sink,
-                            stats2,
-                            stop2,
-                        )
-                    })
-                    .expect("spawn worker thread");
-                (transport, collector, thread)
+                (
+                    transport,
+                    collector,
+                    writer,
+                    LeaderIngress::Ring { ring, credit: credit_sink, consumed: consumed_sink },
+                )
             }
             TransportKind::Am => {
                 let ucp_worker = UcpWorker::new(&ctx);
@@ -336,49 +680,106 @@ impl WorkerHandle {
                 let ep_back = ucp_worker.connect(leader_worker)?;
                 let (collector, reply_credit) =
                     fabric_reply_collector(&ctx, leader_worker, &ucp_worker, &replies, stream)?;
-                let transport =
+                let transport: Box<dyn IfuncTransport> =
                     Box::new(AmTransport::new(ep, replies.clone(), consumed.clone()));
-                // The AM handler owns the reply writer and target args;
-                // it runs on the progress thread below.
-                let target_args =
-                    Arc::new(Mutex::new(TargetArgs::new(Box::new(store.clone()))));
-                let reply_writer = Arc::new(Mutex::new(ReplyWriter::with_mode(
+                let writer = Arc::new(Mutex::new(ReplyWriter::with_mode(
                     ep_back.clone(),
                     reply_rkey,
                     stream,
                     reply_credit,
                 )));
+                (
+                    transport,
+                    collector,
+                    writer,
+                    LeaderIngress::Am { ucp_worker, ep_back, consumed_rkey },
+                )
+            }
+        };
+
+        let link = Arc::new(PeerLink::new(
+            index,
+            transport,
+            replies,
+            consumed,
+            collector,
+            config.max_inflight,
+            config.reply_timeout,
+        ));
+        Ok(WorkerBoot {
+            index,
+            ctx,
+            store,
+            stats: Arc::new(WorkerStats::default()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            link,
+            leader_writer,
+            ingress,
+        })
+    }
+
+    /// Start the receive thread(s) — the single spawn site for the
+    /// ring-protocol loop (fabric ring and shm both land here) and, with
+    /// a mesh, the per-worker mesh thread.
+    pub(crate) fn start(self, mesh: Option<MeshParts>) -> Result<WorkerHandle> {
+        let WorkerBoot { index, ctx, store, stats, shutdown, link, leader_writer, ingress } = self;
+        let (node, mesh_ingress) = match mesh {
+            Some(p) => (Some(p.node), Some(p.ingress)),
+            None => (None, None),
+        };
+
+        let thread = match ingress {
+            LeaderIngress::Ring { ring, credit, consumed } => {
+                let (ctx2, store2, stop2, stats2) =
+                    (ctx.clone(), store.clone(), shutdown.clone(), stats.clone());
+                let (writer2, node2) = (leader_writer.clone(), node.clone());
+                std::thread::Builder::new()
+                    .name(format!("ifunc-worker-{index}"))
+                    .spawn(move || {
+                        ring_receive_loop(
+                            index, ctx2, ring, store2, writer2, credit, consumed, stats2,
+                            stop2, node2,
+                        )
+                    })
+                    .expect("spawn worker thread")
+            }
+            LeaderIngress::Am { ucp_worker, ep_back, consumed_rkey } => {
+                // The AM handler owns the target args; it runs on the
+                // progress thread below.
+                let target_args =
+                    Arc::new(Mutex::new(TargetArgs::new(Box::new(store.clone()))));
                 let frames = Arc::new(AtomicU64::new(0));
-                let (ctx2, stats2) = (ctx.clone(), stats.clone());
-                let rw = reply_writer.clone();
-                let (frames2, ep_back3) = (frames.clone(), ep_back.clone());
+                let (ctx2, stats2, node2) = (ctx.clone(), stats.clone(), node.clone());
+                let rw = leader_writer.clone();
+                let ep_back3 = ep_back.clone();
                 ucp_worker.set_am_handler_mut(IFUNC_AM_ID, move |_, frame| {
                     // Ingress frame seq: handlers run serially on the
                     // progress thread, so this matches delivery order.
-                    let frame_seq = frames2.fetch_add(1, Ordering::Relaxed) + 1;
-                    let (ok, r0, payload) =
-                        match execute_am_frame_in_place(&ctx2, frame, &target_args) {
-                            Ok(out) => {
-                                stats2.executed.fetch_add(1, Ordering::Relaxed);
-                                (true, out.ret, out.reply)
-                            }
-                            Err(e) => {
-                                stats2.failed.fetch_add(1, Ordering::Relaxed);
-                                log::error!("worker {index}: ifunc failed: {e}");
-                                (false, 0, Vec::new())
-                            }
-                        };
-                    if let Err(e) = lock_recover(&rw).push(frame_seq, ok, r0, &payload) {
-                        log::error!("worker {index}: reply push failed: {e}");
+                    let frame_seq = frames.fetch_add(1, Ordering::Relaxed) + 1;
+                    let action = match execute_am_frame_in_place(&ctx2, frame, &target_args) {
+                        Ok(out) => {
+                            stats2.executed.fetch_add(1, Ordering::Relaxed);
+                            route_leader_outcome(index, node2.as_deref(), &stats2, frame_seq, out)
+                        }
+                        Err(e) => {
+                            stats2.failed.fetch_add(1, Ordering::Relaxed);
+                            log::error!("worker {index}: ifunc failed: {e}");
+                            LeaderReplyAction::Reply { ok: false, r0: 0, payload: Vec::new() }
+                        }
+                    };
+                    if let LeaderReplyAction::Reply { ok, r0, payload } = action {
+                        if let Err(e) = lock_recover(&rw).push(frame_seq, ok, r0, &payload) {
+                            log::error!("worker {index}: reply push failed: {e}");
+                        }
                     }
                     if let Err(e) = ep_back3.qp().put_signal(consumed_rkey, 0, frame_seq) {
                         log::error!("worker {index}: consumed-credit put failed: {e}");
                     }
                 });
-                let (stop2, ep_back2) = (shutdown.clone(), ep_back.clone());
-                let rw2 = reply_writer.clone();
-                let uw = ucp_worker.clone();
-                let thread = std::thread::Builder::new()
+                let (stop2, ep_back2) = (shutdown.clone(), ep_back);
+                let rw2 = leader_writer.clone();
+                let uw = ucp_worker;
+                std::thread::Builder::new()
                     .name(format!("ifunc-worker-{index}"))
                     .spawn(move || -> Result<()> {
                         let mut idle = 0u32;
@@ -404,8 +805,79 @@ impl WorkerHandle {
                             }
                         }
                     })
-                    .expect("spawn worker thread");
-                (transport, collector, thread)
+                    .expect("spawn worker thread")
+            }
+        };
+
+        let mesh_thread = match mesh_ingress {
+            None => None,
+            Some(MeshIngress::Rings(rings)) => {
+                let node = node.expect("mesh ingress without mesh node");
+                let (ctx2, store2, stop2) = (ctx.clone(), store.clone(), shutdown.clone());
+                Some(
+                    std::thread::Builder::new()
+                        .name(format!("ifunc-mesh-{index}"))
+                        .spawn(move || mesh_receive_loop(index, ctx2, rings, node, store2, stop2))
+                        .expect("spawn mesh thread"),
+                )
+            }
+            Some(MeshIngress::Am(uw)) => {
+                let node = node.expect("mesh ingress without mesh node");
+                // Mesh frames execute with their own target args — the
+                // leader-link handler owns the other set, on a different
+                // ucp worker/thread.
+                let target_args =
+                    Arc::new(Mutex::new(TargetArgs::new(Box::new(store.clone()))));
+                let (ctx2, node2) = (ctx.clone(), node);
+                uw.set_am_handler_mut(IFUNC_AM_ID, move |_, frame| {
+                    if frame.len() < HEADER_BYTES {
+                        node2.stats.failed.fetch_add(1, Ordering::Relaxed);
+                        log::error!("worker {index}: runt mesh frame ({} bytes)", frame.len());
+                        return;
+                    }
+                    let header = match Header::decode(&frame[..HEADER_BYTES]) {
+                        Ok(Some(h)) => h,
+                        _ => {
+                            node2.stats.failed.fetch_add(1, Ordering::Relaxed);
+                            log::error!("worker {index}: bad mesh frame header");
+                            return;
+                        }
+                    };
+                    let hop = header.hop;
+                    if hop.kind == HOP_KIND_RELAY {
+                        let s = header.payload_offset as usize;
+                        match frame.get(s..s + header.payload_len as usize) {
+                            Some(pay) => node2.handle_relay(hop, pay),
+                            None => {
+                                node2.stats.failed.fetch_add(1, Ordering::Relaxed);
+                                log::error!("worker {index}: truncated relay frame");
+                            }
+                        }
+                    } else {
+                        let outcome = execute_am_frame_in_place(&ctx2, frame, &target_args);
+                        node2.handle_executed(hop, outcome);
+                    }
+                });
+                let stop2 = shutdown.clone();
+                Some(
+                    std::thread::Builder::new()
+                        .name(format!("ifunc-mesh-{index}"))
+                        .spawn(move || -> Result<()> {
+                            let mut idle = 0u32;
+                            loop {
+                                if uw.progress() == 0 {
+                                    if stop2.load(Ordering::Acquire) {
+                                        return Ok(());
+                                    }
+                                    crate::fabric::wire::backoff(idle);
+                                    idle += 1;
+                                } else {
+                                    idle = 0;
+                                }
+                            }
+                        })
+                        .expect("spawn mesh thread"),
+                )
             }
         };
 
@@ -414,27 +886,130 @@ impl WorkerHandle {
             ctx,
             store,
             stats,
-            link: Mutex::new(transport),
-            replies,
-            consumed,
-            collector,
-            window,
-            reply_timeout: config.reply_timeout,
+            link,
             shutdown,
             thread: Some(thread),
+            mesh_thread,
         })
     }
+}
 
-    /// Executed-message count (leader-visible).
+/// Wire the worker↔worker mesh: one [`PeerLink`] per ordered pair (i, j),
+/// i ≠ j, over the cluster's transport kind — the exact channel shape the
+/// leader links use ([`ring_channel`] / [`AmTransport`]), just owned by a
+/// worker instead of the leader. Returns each worker's [`MeshParts`] for
+/// [`WorkerBoot::start`].
+pub(crate) fn build_mesh(boots: &[WorkerBoot], config: &ClusterConfig) -> Result<Vec<MeshParts>> {
+    let n = boots.len();
+    let mesh_ring_bytes = config.ring_bytes.min(MESH_RING_BYTES_MAX);
+    // Fabric transports get a dedicated per-worker UCP worker for the
+    // mesh (the leader-link ucp workers belong to their receive paths).
+    let mesh_uws: Vec<Option<Arc<UcpWorker>>> = boots
+        .iter()
+        .map(|b| match config.transport {
+            TransportKind::Shm => None,
+            _ => Some(UcpWorker::new(&b.ctx)),
+        })
+        .collect();
+    // One idle reply ring + consumed counter per *sender*, shared by all
+    // its mesh links: the transport contract wires both, but mesh
+    // traffic is fire-and-forget (replies travel as relay frames and
+    // barriers do not span the mesh), so nothing ever writes them —
+    // per-pair regions would be pure waste.
+    let mut links: Vec<Vec<Option<Arc<PeerLink>>>> =
+        (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+    let mut ring_ingress: Vec<Vec<MeshIngressRing>> = (0..n).map(|_| Vec::new()).collect();
+    for i in 0..n {
+        let replies = ReplyRing::new(&boots[i].ctx, config.reply_timeout);
+        let consumed = ConsumedCounter::new(&boots[i].ctx, config.reply_timeout);
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let transport: Box<dyn IfuncTransport> = match config.transport {
+                TransportKind::Ring | TransportKind::Shm => {
+                    let eps = match (&mesh_uws[i], &mesh_uws[j]) {
+                        (Some(wi), Some(wj)) => Some((wi.connect(wj)?, wj.connect(wi)?)),
+                        _ => None,
+                    };
+                    let (transport, ring, credit) = ring_channel(
+                        &boots[i].ctx,
+                        &boots[j].ctx,
+                        mesh_ring_bytes,
+                        replies.clone(),
+                        consumed.clone(),
+                        eps,
+                    )?;
+                    ring_ingress[j].push(MeshIngressRing {
+                        peer: i,
+                        ring,
+                        credit,
+                        last_credit: 0,
+                        stuck_reported_at: None,
+                    });
+                    transport
+                }
+                TransportKind::Am => {
+                    let wi = mesh_uws[i].as_ref().expect("am mesh has ucp workers");
+                    let wj = mesh_uws[j].as_ref().expect("am mesh has ucp workers");
+                    Box::new(AmTransport::new(wi.connect(wj)?, replies.clone(), consumed.clone()))
+                }
+            };
+            links[i][j] = Some(Arc::new(PeerLink::new(
+                j,
+                transport,
+                replies.clone(),
+                consumed.clone(),
+                None,
+                config.max_inflight,
+                config.reply_timeout,
+            )));
+        }
+    }
+    let mut parts = Vec::with_capacity(n);
+    for (i, boot) in boots.iter().enumerate() {
+        let node = Arc::new(MeshNode {
+            self_index: i,
+            links: LinkSet::new(std::mem::take(&mut links[i])),
+            leader_writer: boot.leader_writer.clone(),
+            stats: boot.stats.clone(),
+        });
+        let ingress = match config.transport {
+            TransportKind::Am => {
+                MeshIngress::Am(mesh_uws[i].clone().expect("am mesh has ucp workers"))
+            }
+            _ => MeshIngress::Rings(std::mem::take(&mut ring_ingress[i])),
+        };
+        parts.push(MeshParts { node, ingress });
+    }
+    Ok(parts)
+}
+
+impl WorkerHandle {
+    /// Executed-message count (leader-visible). Every hop of a forwarded
+    /// chain counts at the worker where it ran.
     pub fn executed(&self) -> u64 {
         self.stats.executed.load(Ordering::Acquire)
     }
 
-    /// Signal shutdown and join the receive thread.
+    /// Frames this worker forwarded onward over the mesh.
+    pub fn forwarded(&self) -> u64 {
+        self.stats.forwarded.load(Ordering::Acquire)
+    }
+
+    /// Forward attempts that died at this worker.
+    pub fn forward_failed(&self) -> u64 {
+        self.stats.forward_failed.load(Ordering::Acquire)
+    }
+
+    /// Signal shutdown and join the receive thread(s).
     pub fn stop(&mut self) -> Result<()> {
         self.shutdown.store(true, Ordering::Release);
         if let Some(t) = self.thread.take() {
             t.join().map_err(|_| Error::Other("worker thread panicked".into()))??;
+        }
+        if let Some(t) = self.mesh_thread.take() {
+            t.join().map_err(|_| Error::Other("mesh thread panicked".into()))??;
         }
         Ok(())
     }

@@ -10,6 +10,8 @@
 //!   result through a GOT call (`record_result`).
 //! * [`EchoIfunc`] — pushes its payload into the reply frame via
 //!   `reply_put`: the smallest payload-returning invocation.
+//! * [`HopIfunc`] — follows a payload-embedded itinerary through the
+//!   worker↔worker mesh via `forward`, replying only at the last hop.
 
 use crate::vm::Assembler;
 use crate::Result;
@@ -176,6 +178,79 @@ impl IfuncLibrary for EchoIfunc {
         a.ldi(1, 0); // r1 = payload offset
         a.paylen(2); // r2 = length
         a.call("reply_put"); // r0 = accumulated reply bytes
+        a.halt();
+        let (vm_code, imports) = a.assemble();
+        CodeImage { imports, vm_code, hlo: vec![] }
+    }
+}
+
+/// Multi-hop pipeline ifunc: the payload opens with an itinerary
+/// (`[idx u64][n u64][peer u64; n]`) followed by opaque data. While
+/// `idx < n` the invocation advances `idx` in place and calls
+/// `forward(peers[idx], 0, payload_len)` — the whole (updated) payload
+/// continues on the next worker over the mesh. At the end of the
+/// itinerary it calls `reply_put` over the data region instead, so the
+/// *final* hop's reply (just the data, no itinerary) relays back to the
+/// leader. The canonical mesh-forwarding test/bench body.
+#[derive(Default)]
+pub struct HopIfunc;
+
+impl HopIfunc {
+    /// Assemble the payload for a chain visiting `peers` in order (after
+    /// the leader's initial injection target), carrying `data`.
+    pub fn payload(peers: &[usize], data: &[u8]) -> Vec<u8> {
+        let mut p = Vec::with_capacity(16 + 8 * peers.len() + data.len());
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&(peers.len() as u64).to_le_bytes());
+        for &peer in peers {
+            p.extend_from_slice(&(peer as u64).to_le_bytes());
+        }
+        p.extend_from_slice(data);
+        p
+    }
+}
+
+impl IfuncLibrary for HopIfunc {
+    fn name(&self) -> &str {
+        "hop"
+    }
+
+    fn payload_get_max_size(&self, source_args: &SourceArgs) -> usize {
+        source_args.len()
+    }
+
+    fn payload_init(&self, payload: &mut [u8], source_args: &SourceArgs) -> Result<usize> {
+        copy_payload(payload, source_args)
+    }
+
+    fn code(&self) -> CodeImage {
+        let mut a = Assembler::new();
+        let reply = a.label();
+        a.paylen(7); // r7 = payload len
+        a.ldi(6, 0); // r6 = 0 (base register for itinerary loads)
+        a.ldw(2, 6, 0, 0); // r2 = idx
+        a.ldw(3, 6, 0, 8); // r3 = n
+        a.sltu(5, 2, 3);
+        a.jz(5, reply);
+        // Forward leg: r4 = byte offset of peers[idx].
+        a.ldi(4, 8);
+        a.mul(4, 2, 4);
+        a.addi(4, 4, 16);
+        a.ldw(1, 4, 0, 0); // r1 = next worker
+        a.addi(2, 2, 1); // idx += 1, persisted for the next hop
+        a.stw(2, 6, 0, 0);
+        a.ldi(2, 0); // forward(worker, off=0, len=payload_len)
+        a.mov(3, 7);
+        a.call("forward");
+        a.halt();
+        // Reply leg: data starts at 16 + 8n.
+        a.bind(reply);
+        a.ldi(4, 8);
+        a.mul(4, 3, 4);
+        a.addi(4, 4, 16);
+        a.mov(1, 4); // reply_put(off = data start, len = rest)
+        a.sub(2, 7, 4);
+        a.call("reply_put");
         a.halt();
         let (vm_code, imports) = a.assemble();
         CodeImage { imports, vm_code, hlo: vec![] }

@@ -35,8 +35,23 @@ use crate::vm;
 use crate::{Error, Result};
 
 use super::icache;
-use super::message::{CodeImage, Header};
+use super::message::{CodeImage, Header, Hop, IfuncMsg, HOP_KIND_INVOKE};
 use super::TargetArgs;
+
+/// What the `forward(worker, off, len)` host symbol produced: the engine
+/// consumed the frame (the poll loop reclaims its ring bytes), so the
+/// *rebuilt* next-hop message rides the outcome and the caller's mesh
+/// link ships it. Only present on successful execution — a faulting
+/// invocation's failure reply wins over any forward it requested.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ForwardOutcome {
+    /// Re-inject `msg` (code copied verbatim, GOT unpatched, payload =
+    /// the requested slice, hop count +1 / TTL −1) to `worker`.
+    Forward { worker: usize, msg: IfuncMsg },
+    /// The frame arrived with TTL 0 and asked to forward again: the
+    /// caller must fail the invocation back to the origin instead.
+    TtlExhausted { worker: usize },
+}
 
 /// Structured result of executing one ifunc frame.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -55,6 +70,10 @@ pub struct ExecOutcome {
     /// sender — one reply frame when they fit, a chunked stream when
     /// they do not; there is no size cap here.
     pub reply: Vec<u8>,
+    /// Set when the invocation called the `forward` host symbol: the
+    /// execution *continues* on another worker and no reply is due yet
+    /// from this hop (the final hop relays one back to the origin).
+    pub forward: Option<ForwardOutcome>,
 }
 
 impl Context {
@@ -135,6 +154,7 @@ impl Context {
         let pay_end = pay_start + header.payload_len as usize;
         target_args.hlo_name = linked.has_hlo.then(|| header.name.clone());
         target_args.reply.clear();
+        target_args.forward = None;
         let outcome = linked.prog.run(
             &linked.got,
             &mut frame[pay_start..pay_end],
@@ -144,8 +164,33 @@ impl Context {
         target_args.hlo_name = None;
         target_args.last_return = outcome.as_ref().map(|o| o.ret).ok();
         let reply = std::mem::take(&mut target_args.reply);
+        let fwd_spec = target_args.forward.take();
+        // `outcome?` before the forward build: a faulting invocation
+        // drops any forward it requested — the failure reply wins.
         let o = outcome?;
-        Ok(ExecOutcome { ret: o.ret, steps: o.steps, cache_hit, reply })
+        let forward = match fwd_spec {
+            None => None,
+            Some(spec) if header.hop.ttl == 0 => {
+                Some(ForwardOutcome::TtlExhausted { worker: spec.worker })
+            }
+            Some(spec) => {
+                let data = frame
+                    .get(pay_start + spec.off..pay_start + spec.off + spec.len)
+                    .ok_or_else(|| {
+                        Error::InvalidMessage("forward slice out of payload range".into())
+                    })?;
+                let hop = Hop {
+                    origin_seq: header.hop.origin_seq,
+                    origin_worker: header.hop.origin_worker,
+                    hops: header.hop.hops + 1,
+                    ttl: header.hop.ttl - 1,
+                    kind: HOP_KIND_INVOKE,
+                };
+                let msg = IfuncMsg::reframe(header, frame, data, hop)?;
+                Some(ForwardOutcome::Forward { worker: spec.worker, msg })
+            }
+        };
+        Ok(ExecOutcome { ret: o.ret, steps: o.steps, cache_hit, reply, forward })
     }
 }
 
@@ -219,6 +264,52 @@ mod tests {
         let (h2, mut f2) = frame_for(&CounterIfunc::default().code(), &[0u8; 8]);
         let out2 = c.execute_frame(&h2, &mut f2, &mut args).unwrap();
         assert!(out2.reply.is_empty());
+    }
+
+    #[test]
+    fn forward_symbol_produces_next_hop_message() {
+        use crate::ifunc::builtin::HopIfunc;
+        let c = ctx();
+        let code = HopIfunc.code();
+        let payload = HopIfunc::payload(&[2], b"carried-data");
+        let (h, mut frame) = frame_for(&code, &payload);
+        let mut args = TargetArgs::none();
+        let out = c.execute_frame(&h, &mut frame, &mut args).unwrap();
+        assert!(out.reply.is_empty(), "forwarding hop replies nothing");
+        let Some(ForwardOutcome::Forward { worker, msg }) = out.forward else {
+            panic!("expected a forward outcome, got {:?}", out.forward);
+        };
+        assert_eq!(worker, 2);
+        let hop = msg.hop();
+        assert_eq!(hop.hops, 1);
+        assert_eq!(hop.ttl, crate::ifunc::DEFAULT_TTL - 1);
+        // The itinerary index advanced in place before the reframe.
+        assert_eq!(&msg.payload()[0..8], &1u64.to_le_bytes());
+        assert_eq!(&msg.payload()[16 + 8..], b"carried-data");
+        // The rebuilt frame executes at the "next worker": end of the
+        // itinerary, so it replies with the data and forwards nothing.
+        let h2 = Header::decode(msg.frame()).unwrap().unwrap();
+        let mut f2 = msg.frame().to_vec();
+        let out2 = c.execute_frame(&h2, &mut f2, &mut args).unwrap();
+        assert!(out2.forward.is_none());
+        assert_eq!(out2.reply, b"carried-data");
+    }
+
+    #[test]
+    fn forward_with_exhausted_ttl_reports_not_builds() {
+        use crate::ifunc::builtin::HopIfunc;
+        use crate::ifunc::message::Hop;
+        let c = ctx();
+        let code = HopIfunc.code();
+        let payload = HopIfunc::payload(&[1], b"x");
+        let mut msg =
+            crate::ifunc::IfuncMsg::assemble("hop", &code, &payload, Default::default()).unwrap();
+        msg.set_hop(Hop { origin_seq: 5, origin_worker: 0, hops: 8, ttl: 0, kind: 0 });
+        let h = Header::decode(msg.frame()).unwrap().unwrap();
+        let mut frame = msg.frame().to_vec();
+        let mut args = TargetArgs::none();
+        let out = c.execute_frame(&h, &mut frame, &mut args).unwrap();
+        assert_eq!(out.forward, Some(ForwardOutcome::TtlExhausted { worker: 1 }));
     }
 
     #[test]

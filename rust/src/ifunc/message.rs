@@ -1,7 +1,9 @@
 //! ifunc message frames — Fig. 1 of the paper, realized.
 //!
 //! ```text
-//!  | HEADER (incl. header check + trailer sig)  | 56 B
+//!  | HEADER (incl. header check + trailer sig   | 72 B
+//!  |         + hop metadata: origin seq/worker, |
+//!  |         hop count, TTL, frame kind)        |
 //!  | CODE  (GOT slot, import table, TCVM code,  | code_len
 //!  |        optional HLO artifact blob)         |
 //!  | PAYLOAD (aligned per IfuncMsgParams)       | payload_len
@@ -27,9 +29,24 @@ use crate::{Error, Result};
 pub const MAGIC: u32 = 0x1FC0_DE01;
 /// First word of a wrap marker: "frame stream continues at ring offset 0".
 pub const WRAP_MAGIC: u32 = 0x1FC0_DEFF;
-pub const HEADER_BYTES: usize = 56;
+pub const HEADER_BYTES: usize = 72;
 pub const TRAILER_BYTES: usize = 8;
 pub const NAME_BYTES: usize = 16;
+/// Default hop budget for mesh-forwarded frames (`forward` host symbol):
+/// each hop decrements it, and a frame arriving with TTL 0 may not be
+/// forwarded again — a 2-cycle forward loop dies after at most 8 hops.
+pub const DEFAULT_TTL: u8 = 8;
+/// `Hop::origin_worker` sentinel: the frame came straight from the leader
+/// and has never been forwarded.
+pub const NO_ORIGIN_WORKER: u16 = 0xFFFF;
+/// `Hop::kind`: a normal invocation frame (execute on arrival).
+pub const HOP_KIND_INVOKE: u8 = 0;
+/// `Hop::kind`: a mesh relay frame carrying a finished reply back to the
+/// forwarding chain's origin worker — never executed.
+pub const HOP_KIND_RELAY: u8 = 1;
+/// Reserved name of relay frames (kind is authoritative; the name makes
+/// relay frames self-describing in ring dumps).
+pub const RELAY_NAME: &str = "__relay";
 /// Value of the GOT slot before target-side patching.
 pub const GOT_UNPATCHED: u32 = 0xFFFF_FFFF;
 /// Reject frames bigger than this even if the ring could hold them
@@ -46,6 +63,38 @@ fn fresh_trailer_sig() -> u64 {
     TRAILER_SALT.fetch_add(0x6C62_272E_07BB_0142, Ordering::Relaxed) | 1
 }
 
+/// Per-frame hop metadata — the mesh-forwarding extension. A frame fresh
+/// off the leader carries the defaults; the first `forward` hop stamps the
+/// origin (leader-ingress seq + worker index) so the *final* hop's reply
+/// can route back to the leader's `ReplyCollector` under the seq the
+/// leader registered, however many workers the frame visited in between.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hop {
+    /// Leader-ingress frame seq at the origin worker (reply attribution).
+    pub origin_seq: u64,
+    /// Worker the leader originally injected into ([`NO_ORIGIN_WORKER`]
+    /// until the first forward hop stamps it).
+    pub origin_worker: u16,
+    /// Hops taken so far (0 = straight from the leader).
+    pub hops: u8,
+    /// Remaining hop budget; a frame with TTL 0 may not forward again.
+    pub ttl: u8,
+    /// [`HOP_KIND_INVOKE`] or [`HOP_KIND_RELAY`].
+    pub kind: u8,
+}
+
+impl Default for Hop {
+    fn default() -> Self {
+        Hop {
+            origin_seq: 0,
+            origin_worker: NO_ORIGIN_WORKER,
+            hops: 0,
+            ttl: DEFAULT_TTL,
+            kind: HOP_KIND_INVOKE,
+        }
+    }
+}
+
 /// Parsed frame header.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Header {
@@ -56,6 +105,7 @@ pub struct Header {
     pub payload_offset: u32,
     pub payload_len: u32,
     pub got_offset: u32,
+    pub hop: Hop,
     pub name: String,
 }
 
@@ -64,6 +114,11 @@ impl Header {
         let mut x = MAGIC ^ self.frame_len ^ self.code_len ^ self.payload_len
             ^ self.payload_offset ^ self.code_offset ^ self.got_offset;
         x ^= (self.trailer_sig as u32) ^ ((self.trailer_sig >> 32) as u32);
+        x ^= (self.hop.origin_seq as u32) ^ ((self.hop.origin_seq >> 32) as u32);
+        x ^= (self.hop.origin_worker as u32)
+            | ((self.hop.hops as u32) << 16)
+            | ((self.hop.ttl as u32) << 24);
+        x ^= self.hop.kind as u32;
         for chunk in name_bytes.chunks(4) {
             x ^= u32::from_le_bytes(chunk.try_into().unwrap());
         }
@@ -84,7 +139,13 @@ impl Header {
         out[28..32].copy_from_slice(&self.payload_len.to_le_bytes());
         out[32..36].copy_from_slice(&self.got_offset.to_le_bytes());
         out[36..40].copy_from_slice(&self.check_word(&name_bytes).to_le_bytes());
-        out[40..56].copy_from_slice(&name_bytes);
+        out[40..48].copy_from_slice(&self.hop.origin_seq.to_le_bytes());
+        out[48..50].copy_from_slice(&self.hop.origin_worker.to_le_bytes());
+        out[50] = self.hop.hops;
+        out[51] = self.hop.ttl;
+        out[52] = self.hop.kind;
+        // out[53..56] reserved (zero).
+        out[56..72].copy_from_slice(&name_bytes);
         out
     }
 
@@ -104,7 +165,7 @@ impl Header {
             return Err(Error::InvalidMessage(format!("bad magic {magic:#010x}")));
         }
         let mut name_bytes = [0u8; NAME_BYTES];
-        name_bytes.copy_from_slice(&bytes[40..56]);
+        name_bytes.copy_from_slice(&bytes[56..72]);
         let h = Header {
             frame_len: word(4),
             trailer_sig: u64::from_le_bytes(bytes[8..16].try_into().unwrap()),
@@ -113,6 +174,13 @@ impl Header {
             payload_offset: word(24),
             payload_len: word(28),
             got_offset: word(32),
+            hop: Hop {
+                origin_seq: u64::from_le_bytes(bytes[40..48].try_into().unwrap()),
+                origin_worker: u16::from_le_bytes(bytes[48..50].try_into().unwrap()),
+                hops: bytes[50],
+                ttl: bytes[51],
+                kind: bytes[52],
+            },
             name: String::from_utf8_lossy(
                 &name_bytes[..name_bytes.iter().position(|&b| b == 0).unwrap_or(NAME_BYTES)],
             )
@@ -147,6 +215,9 @@ impl Header {
             || self.got_offset as usize + 4 > code_end
         {
             return bad("GOT slot outside code section");
+        }
+        if self.hop.kind > HOP_KIND_RELAY {
+            return bad("unknown frame kind");
         }
         Ok(())
     }
@@ -297,7 +368,7 @@ impl Default for IfuncMsgParams {
 
 /// A fully-built, sendable ifunc message (`ucp_ifunc_msg_t`). Reusable:
 /// sending does not consume it.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct IfuncMsg {
     frame: Vec<u8>,
     name: String,
@@ -378,6 +449,7 @@ impl IfuncMsg {
             payload_len: payload_len as u32,
             // The GOT slot is the first word of the code section.
             got_offset: code_offset as u32,
+            hop: Hop::default(),
             name: name.to_string(),
         };
         let mut frame = vec![0u8; frame_len];
@@ -407,6 +479,89 @@ impl IfuncMsg {
         self.frame[..HEADER_BYTES].copy_from_slice(&new_header.encode());
         self.frame[trailer_offset..].copy_from_slice(&new_header.trailer_sig.to_le_bytes());
         self.payload_len = used;
+    }
+
+    /// Rebuild a sendable message from an *executing* frame: copies the
+    /// code section verbatim (resetting the GOT slot to `UNPATCHED` so the
+    /// next hop relinks), installs `payload` as the new payload, and
+    /// stamps `hop`. This is how the `forward` host symbol re-injects a
+    /// frame to a peer — the poll loop consumes ring frames after
+    /// execution, so the engine is the last holder of the frame bytes.
+    pub fn reframe(src: &Header, src_frame: &[u8], payload: &[u8], hop: Hop) -> Result<IfuncMsg> {
+        let code_start = src.code_offset as usize;
+        let code_len = src.code_len as usize;
+        let code_bytes = src_frame
+            .get(code_start..code_start + code_len)
+            .ok_or_else(|| Error::InvalidMessage("reframe: code section out of range".into()))?;
+        let code_offset = HEADER_BYTES;
+        let payload_offset = (code_offset + code_len).next_multiple_of(8);
+        let trailer_offset = (payload_offset + payload.len()).next_multiple_of(8);
+        let frame_len = trailer_offset + TRAILER_BYTES;
+        if frame_len > MAX_FRAME_BYTES {
+            return Err(Error::InvalidMessage("reframe: frame too long".into()));
+        }
+        let header = Header {
+            frame_len: frame_len as u32,
+            trailer_sig: fresh_trailer_sig(),
+            code_offset: code_offset as u32,
+            code_len: code_len as u32,
+            payload_offset: payload_offset as u32,
+            payload_len: payload.len() as u32,
+            got_offset: (code_offset + (src.got_offset - src.code_offset) as usize) as u32,
+            hop,
+            name: src.name.clone(),
+        };
+        let mut frame = vec![0u8; frame_len];
+        frame[..HEADER_BYTES].copy_from_slice(&header.encode());
+        frame[code_offset..code_offset + code_len].copy_from_slice(code_bytes);
+        let got = header.got_offset as usize;
+        frame[got..got + 4].copy_from_slice(&GOT_UNPATCHED.to_le_bytes());
+        frame[payload_offset..payload_offset + payload.len()].copy_from_slice(payload);
+        frame[trailer_offset..].copy_from_slice(&header.trailer_sig.to_le_bytes());
+        Ok(IfuncMsg {
+            frame,
+            name: header.name,
+            payload_offset,
+            payload_len: payload.len(),
+        })
+    }
+
+    /// Build a mesh relay frame: kind [`HOP_KIND_RELAY`], no code, payload
+    /// `[ok u64][r0 u64][reply bytes…]`. The origin worker's mesh ingress
+    /// pushes it into its leader-facing reply writer under
+    /// `hop.origin_seq` instead of executing it.
+    pub fn relay(ok: bool, r0: u64, reply: &[u8], hop: Hop) -> Result<IfuncMsg> {
+        let mut payload = Vec::with_capacity(16 + reply.len());
+        payload.extend_from_slice(&(ok as u64).to_le_bytes());
+        payload.extend_from_slice(&r0.to_le_bytes());
+        payload.extend_from_slice(reply);
+        let mut msg =
+            IfuncMsg::assemble(RELAY_NAME, &CodeImage::default(), &payload, Default::default())?;
+        msg.set_hop(Hop { kind: HOP_KIND_RELAY, ..hop });
+        Ok(msg)
+    }
+
+    /// Inverse of [`IfuncMsg::relay`]'s payload encoding.
+    pub fn decode_relay_payload(payload: &[u8]) -> Result<(bool, u64, &[u8])> {
+        if payload.len() < 16 {
+            return Err(Error::InvalidMessage("short relay payload".into()));
+        }
+        let ok = u64::from_le_bytes(payload[0..8].try_into().unwrap()) != 0;
+        let r0 = u64::from_le_bytes(payload[8..16].try_into().unwrap());
+        Ok((ok, r0, &payload[16..]))
+    }
+
+    /// Hop metadata currently encoded in the frame header.
+    pub fn hop(&self) -> Hop {
+        Header::decode(&self.frame).expect("own header").expect("nonempty").hop
+    }
+
+    /// Re-stamp the hop metadata in place (trailer signal unchanged — the
+    /// header check word is recomputed over the new hop fields).
+    pub fn set_hop(&mut self, hop: Hop) {
+        let h = Header::decode(&self.frame).expect("own header").expect("nonempty");
+        let new_header = Header { hop, ..h };
+        self.frame[..HEADER_BYTES].copy_from_slice(&new_header.encode());
     }
 
     pub fn name(&self) -> &str {
@@ -569,6 +724,86 @@ mod tests {
         let cb = c.encode();
         let (_, cr) = CodeImage::decode_ref(&cb).unwrap();
         assert_ne!(ar.fingerprint(), cr.fingerprint());
+    }
+
+    #[test]
+    fn hop_defaults_on_fresh_frames() {
+        let msg = IfuncMsg::assemble("h", &sample_code(), b"p", Default::default()).unwrap();
+        let hop = msg.hop();
+        assert_eq!(hop, Hop::default());
+        assert_eq!(hop.ttl, DEFAULT_TTL);
+        assert_eq!(hop.origin_worker, NO_ORIGIN_WORKER);
+        assert_eq!(hop.kind, HOP_KIND_INVOKE);
+    }
+
+    #[test]
+    fn hop_roundtrips_through_set_hop() {
+        let mut msg = IfuncMsg::assemble("h", &sample_code(), b"p", Default::default()).unwrap();
+        let stamped = Hop { origin_seq: 42, origin_worker: 3, hops: 2, ttl: 6, kind: 0 };
+        msg.set_hop(stamped);
+        let h = Header::decode(msg.frame()).unwrap().unwrap();
+        assert_eq!(h.hop, stamped);
+        // set_hop keeps everything else intact: trailer still matches.
+        let t = u64::from_le_bytes(msg.frame()[msg.len() - 8..].try_into().unwrap());
+        assert_eq!(t, h.trailer_sig);
+        assert_eq!(h.name, "h");
+    }
+
+    #[test]
+    fn corrupt_hop_fields_rejected() {
+        let mut msg = IfuncMsg::assemble("h", &sample_code(), b"p", Default::default()).unwrap();
+        msg.set_hop(Hop { origin_seq: 7, origin_worker: 1, hops: 1, ttl: 4, kind: 0 });
+        for byte in [40usize, 48, 50, 51, 52] {
+            let mut bytes = msg.frame().to_vec();
+            bytes[byte] ^= 0xFF;
+            assert!(Header::decode(&bytes).is_err(), "flip at {byte} undetected");
+        }
+    }
+
+    #[test]
+    fn reframe_preserves_code_and_resets_got() {
+        let src = IfuncMsg::assemble("fwd", &sample_code(), b"original", Default::default())
+            .unwrap();
+        let mut frame = src.frame().to_vec();
+        let h = Header::decode(&frame).unwrap().unwrap();
+        // Simulate target-side GOT patching before the forward.
+        let got = h.got_offset as usize;
+        frame[got..got + 4].copy_from_slice(&7u32.to_le_bytes());
+        let hop = Hop { origin_seq: 9, origin_worker: 0, hops: 1, ttl: 7, kind: 0 };
+        let fwd = IfuncMsg::reframe(&h, &frame, b"next-hop-payload", hop).unwrap();
+        let fh = Header::decode(fwd.frame()).unwrap().unwrap();
+        assert_eq!(fh.name, "fwd");
+        assert_eq!(fh.hop, hop);
+        assert_eq!(fwd.payload(), b"next-hop-payload");
+        // Code section identical except the GOT slot, which is unpatched
+        // again so the next hop relinks.
+        let code = &fwd.frame()[fh.code_offset as usize..(fh.code_offset + fh.code_len) as usize];
+        let (slot, img) = CodeImage::decode(code).unwrap();
+        assert_eq!(slot, GOT_UNPATCHED);
+        assert_eq!(img, sample_code());
+        // Fresh trailer signal (stale ring bytes can't alias the new frame).
+        assert_ne!(fh.trailer_sig, h.trailer_sig);
+    }
+
+    #[test]
+    fn relay_frame_roundtrips() {
+        let hop = Hop { origin_seq: 33, origin_worker: 2, hops: 3, ttl: 5, kind: 0 };
+        let msg = IfuncMsg::relay(false, 0xDEAD, b"reply-bytes", hop).unwrap();
+        let h = Header::decode(msg.frame()).unwrap().unwrap();
+        assert_eq!(h.hop.kind, HOP_KIND_RELAY);
+        assert_eq!(h.hop.origin_seq, 33);
+        assert_eq!(h.name, RELAY_NAME);
+        let (ok, r0, reply) = IfuncMsg::decode_relay_payload(msg.payload()).unwrap();
+        assert!(!ok);
+        assert_eq!(r0, 0xDEAD);
+        assert_eq!(reply, b"reply-bytes");
+    }
+
+    #[test]
+    fn unknown_frame_kind_rejected() {
+        let mut msg = IfuncMsg::assemble("h", &sample_code(), b"p", Default::default()).unwrap();
+        msg.set_hop(Hop { kind: HOP_KIND_RELAY + 1, ..Hop::default() });
+        assert!(Header::decode(msg.frame()).is_err());
     }
 
     #[test]

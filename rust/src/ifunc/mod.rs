@@ -41,7 +41,15 @@
 //!   fan-out, and merges each worker's reply stream into a
 //!   `MultiReply` with per-worker attribution (the paper's closing
 //!   motivation — moving one query to every shard of data too big for
-//!   one device),
+//!   one device). Execution can also *continue* on another worker: the
+//!   `forward(worker, off, len)` host symbol re-injects the running
+//!   frame to a peer over the worker↔worker mesh — sPIN's
+//!   forward-onward handler model, and the paper's closing vision of
+//!   apps that "dynamically choose where code runs as the application
+//!   progresses" — with hop metadata in the frame header (origin
+//!   seq/worker, hop count, TTL) so the final hop's reply relays back
+//!   to the origin's leader-facing reply stream and intermediate hops
+//!   reply nothing,
 //! * [`cache`] — §3.4's hash table, extended to cache the *compiled
 //!   program* (threaded-dispatch form, see [`crate::vm::compile`]) so
 //!   repeat injections skip the bytecode verifier *and* the compiler
@@ -62,10 +70,10 @@ pub mod send;
 pub mod shm_transport;
 pub mod transport;
 
-pub use engine::ExecOutcome;
+pub use engine::{ExecOutcome, ForwardOutcome};
 pub use library::{HloIfuncLibrary, IfuncLibrary, LibraryDir, SourceArgs};
-pub use message::{CodeImage, IfuncMsg, IfuncMsgParams};
-pub use poll::PollResult;
+pub use message::{CodeImage, Hop, IfuncMsg, IfuncMsgParams, DEFAULT_TTL, NO_ORIGIN_WORKER};
+pub use poll::{MeshPollResult, PollResult};
 pub use registry::IfuncHandle;
 pub use reply::{
     Reply, ReplyCollector, ReplyRing, ReplyWriter, REPLY_INLINE_CAP, REPLY_SLOTS,
@@ -83,6 +91,17 @@ use std::sync::Arc;
 use crate::log;
 use crate::vm::SymbolTable;
 
+/// What the `forward` host symbol recorded for the current invocation:
+/// continue on `worker`, shipping `payload[off..off+len]` as the next
+/// hop's payload. The engine turns it into [`ForwardOutcome`] after a
+/// successful `HALT`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ForwardSpec {
+    pub worker: usize,
+    pub off: usize,
+    pub len: usize,
+}
+
 /// Target-process arguments handed to every invoked ifunc
 /// (`void *target_args` in Listing 1.1), plus the per-invocation bindings
 /// `ucp_poll_ifunc` stamps in (the HLO artifact name for `xla_exec`, the
@@ -99,16 +118,26 @@ pub struct TargetArgs {
     /// drains it into [`ExecOutcome::reply`] after `HALT`, from where the
     /// worker's reply writer ships it inline to the sender.
     pub(crate) reply: Vec<u8>,
+    /// Forward request of the *current* invocation (at most one — the
+    /// `forward` host symbol errors on a second call); cleared by the
+    /// engine before each run and taken into [`ExecOutcome::forward`].
+    pub(crate) forward: Option<ForwardSpec>,
 }
 
 impl TargetArgs {
     /// No application state.
     pub fn none() -> Self {
-        TargetArgs { user: Box::new(()), hlo_name: None, last_return: None, reply: Vec::new() }
+        Self::new(Box::new(()))
     }
 
     pub fn new(user: Box<dyn Any + Send>) -> Self {
-        TargetArgs { user, hlo_name: None, last_return: None, reply: Vec::new() }
+        TargetArgs {
+            user,
+            hlo_name: None,
+            last_return: None,
+            reply: Vec::new(),
+            forward: None,
+        }
     }
 
     /// Downcast the application state.
@@ -142,6 +171,10 @@ impl Symbols {
     /// * `record_result(v)` — stores `v` (checksums etc.),
     /// * `reply_put(off, len)` — append `payload[off..off+len]` to the
     ///   invocation's reply payload (shipped inline in the reply frame),
+    /// * `forward(worker, off, len)` — continue this invocation on
+    ///   `worker` over the worker↔worker mesh, shipping
+    ///   `payload[off..off+len]` as the next hop's payload (at most one
+    ///   per invocation; the final hop's reply relays to the origin),
     /// * `log(v)` — debug logging,
     /// * `xla_exec(...)` — run the current ifunc's HLO artifact via PJRT.
     pub fn with_builtins() -> Self {
@@ -167,6 +200,25 @@ impl Symbols {
                 .ok_or_else(|| "reply_put: target args are not ifunc TargetArgs".to_string())?;
             ta.reply.extend_from_slice(&ctx.payload[off..end]);
             Ok(ta.reply.len() as u64)
+        });
+        table.install_fn("forward", |ctx, [worker, off, len, _]| {
+            let (off, len) = (off as usize, len as usize);
+            let end = off
+                .checked_add(len)
+                .filter(|&e| e <= ctx.payload.len())
+                .ok_or_else(|| format!(
+                    "forward: {len} bytes at {off} outside payload of {}",
+                    ctx.payload.len()
+                ))?;
+            let ta = ctx
+                .user
+                .downcast_mut::<TargetArgs>()
+                .ok_or_else(|| "forward: target args are not ifunc TargetArgs".to_string())?;
+            if ta.forward.is_some() {
+                return Err("forward: at most one forward per invocation".to_string());
+            }
+            ta.forward = Some(ForwardSpec { worker: worker as usize, off, len: end - off });
+            Ok(0)
         });
         let r = results.clone();
         table.install_fn("record_result", move |_, args| {
@@ -226,6 +278,7 @@ mod tests {
         let s = Symbols::with_builtins();
         assert!(s.table().contains("counter_add"));
         assert!(s.table().contains("reply_put"));
+        assert!(s.table().contains("forward"));
         assert!(s.table().contains("xla_exec"));
         assert_eq!(s.counter_value(), 0);
     }

@@ -30,7 +30,7 @@ use crate::ucp::Context;
 use crate::{Error, Result};
 
 use super::engine::ExecOutcome;
-use super::message::{Header, HEADER_BYTES, MAGIC, WRAP_MAGIC};
+use super::message::{Header, Hop, HEADER_BYTES, HOP_KIND_RELAY, MAGIC, WRAP_MAGIC};
 use super::ring::IfuncRing;
 use super::TargetArgs;
 
@@ -40,6 +40,26 @@ pub enum PollResult {
     /// A message was received, linked, and executed; the outcome carries
     /// `r0` and any reply payload the injected function pushed.
     Executed(ExecOutcome),
+    /// No complete message at the cursor.
+    NoMessage,
+}
+
+/// Result of one mesh-ingress poll call ([`Context::poll_ifunc_mesh`]).
+/// Unlike the leader path, a mesh ring carries two frame kinds, and each
+/// consumed frame's hop metadata must travel out with the outcome — the
+/// caller needs the origin to route the reply and the hop count / TTL to
+/// report a broken chain.
+#[derive(Debug)]
+pub enum MeshPollResult {
+    /// An invoke-kind frame was consumed. `outcome` is the execution
+    /// result — `Err` for a frame that was consumed but failed
+    /// (decode/verify/runtime), which on the mesh must still produce a
+    /// failure relay to the origin rather than silence.
+    Executed { hop: Hop, outcome: Result<ExecOutcome> },
+    /// A relay-kind frame (a finished chain's reply in transit to its
+    /// origin) was consumed: the payload is `IfuncMsg::relay` encoding,
+    /// never executable code.
+    Relay { hop: Hop, payload: Vec<u8> },
     /// No complete message at the cursor.
     NoMessage,
 }
@@ -77,14 +97,14 @@ impl Context {
         }
     }
 
-    fn receive_one(
-        &self,
-        ring: &mut IfuncRing,
-        target_args: &mut TargetArgs,
-    ) -> Result<PollResult> {
+    /// Wait out the frame at the cursor: re-read the header until its
+    /// check word passes (the fabric orders only the final word of the
+    /// put), bound it against the ring, then spin on the trailer signal
+    /// (Fig. 2's WFE-style wait). Returns the validated header; the frame
+    /// bytes are fully arrived on `Ok`. Shared by the leader and mesh
+    /// receive paths.
+    fn await_frame(&self, ring: &IfuncRing) -> Result<Header> {
         let cursor = ring.cursor();
-        // The header may still be streaming in (the fabric orders only the
-        // final word of the put); re-read until its check word passes.
         let deadline = Instant::now() + TRAILER_TIMEOUT;
         let header = loop {
             match Header::decode(&ring.mr().local_slice()[cursor..cursor + HEADER_BYTES]) {
@@ -105,14 +125,12 @@ impl Context {
                 ring.size()
             )));
         }
-
-        // Fig. 2: wait for the trailer signal (WFE-style spin).
         let trailer_off = cursor + frame_len - 8;
         let mut trailer_spins = 0u32;
         loop {
             let t = ring.mr().load_u64_acquire(trailer_off)?;
             if t == header.trailer_sig {
-                break;
+                return Ok(header);
             }
             if Instant::now() > deadline {
                 return Err(Error::InvalidMessage(
@@ -122,6 +140,25 @@ impl Context {
             crate::fabric::wire::backoff(trailer_spins);
             trailer_spins += 1;
         }
+    }
+
+    /// Zero the frame's header + trailer words and advance the cursor.
+    fn consume_frame(&self, ring: &mut IfuncRing, frame_len: usize) -> Result<()> {
+        let cursor = ring.cursor();
+        ring.mr().store_u64_release(cursor, 0)?;
+        ring.mr().store_u64_release(cursor + frame_len - 8, 0)?;
+        ring.advance(frame_len);
+        Ok(())
+    }
+
+    fn receive_one(
+        &self,
+        ring: &mut IfuncRing,
+        target_args: &mut TargetArgs,
+    ) -> Result<PollResult> {
+        let header = self.await_frame(ring)?;
+        let cursor = ring.cursor();
+        let frame_len = header.frame_len as usize;
 
         // The frame has fully arrived: execute it in place in the ring.
         let outcome = {
@@ -135,10 +172,59 @@ impl Context {
         // Consume-on-reject: the frame is consumed whether it executed or
         // was rejected (decode/link/verify/runtime failure) — errors are
         // reported to the caller but never leave the frame in the ring.
-        ring.mr().store_u64_release(cursor, 0)?;
-        ring.mr().store_u64_release(trailer_off, 0)?;
-        ring.advance(frame_len);
+        self.consume_frame(ring, frame_len)?;
         Ok(PollResult::Executed(outcome?))
+    }
+
+    /// Poll a **mesh-ingress** ring for one frame. Same wire protocol as
+    /// [`Context::poll_ifunc`] (header word → validate → trailer spin →
+    /// consume), but kind-aware: a relay frame — a finished chain's reply
+    /// in transit to its origin — carries an *empty* code section and
+    /// must never reach the execution engine; its payload is copied out
+    /// and handed back instead. Errors that consumed the frame (a bad
+    /// invoke) are folded into [`MeshPollResult::Executed`] so the hop
+    /// metadata survives for the failure relay; header-integrity errors
+    /// stay non-consuming `Err`s at an unchanged cursor, exactly like the
+    /// leader path.
+    pub fn poll_ifunc_mesh(
+        &self,
+        ring: &mut IfuncRing,
+        target_args: &mut TargetArgs,
+    ) -> Result<MeshPollResult> {
+        loop {
+            let cursor = ring.cursor();
+            let word = ring.mr().load_u64_acquire(cursor)?;
+            if word == 0 {
+                return Ok(MeshPollResult::NoMessage);
+            }
+            if word as u32 == WRAP_MAGIC {
+                ring.mr().store_u64_release(cursor, 0)?;
+                ring.rewind();
+                continue;
+            }
+            if word as u32 != MAGIC {
+                return Err(Error::InvalidMessage(format!(
+                    "bad header word {word:#018x} at mesh ring offset {cursor}"
+                )));
+            }
+            let header = self.await_frame(ring)?;
+            let frame_len = header.frame_len as usize;
+            let hop = header.hop;
+            if hop.kind == HOP_KIND_RELAY {
+                let pay_start = cursor + header.payload_offset as usize;
+                let payload =
+                    ring.mr().local_slice()[pay_start..pay_start + header.payload_len as usize]
+                        .to_vec();
+                self.consume_frame(ring, frame_len)?;
+                return Ok(MeshPollResult::Relay { hop, payload });
+            }
+            let outcome = {
+                let frame = &mut ring.mr().local_slice_mut()[cursor..cursor + frame_len];
+                self.execute_frame(&header, frame, target_args)
+            };
+            self.consume_frame(ring, frame_len)?;
+            return Ok(MeshPollResult::Executed { hop, outcome });
+        }
     }
 
     /// Blocking receive helper: poll until one message executes

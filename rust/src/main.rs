@@ -49,6 +49,8 @@ SERVE OPTIONS:
   --listen <addr>         TCP listen address (default 127.0.0.1:7100)
   --transport <ring|am|shm>  frame delivery transport (default ring; shm =
                           colocated workers over intra-node shared memory)
+  --mesh                  wire the worker-to-worker mesh so injected code
+                          can continue on a peer via the forward symbol
   --max-clients <n>       concurrent connection cap (default 64; over-cap
                           connections get one JSON error line, then close)
   --session-window <n>    per-client pipelined requests in flight (default 16)
@@ -79,6 +81,7 @@ struct Opts {
     queue_depth: Option<usize>,
     batch_max: Option<usize>,
     no_coalesce: bool,
+    mesh: bool,
 }
 
 fn parse_opts(args: &[String]) -> Result<Opts, String> {
@@ -110,6 +113,7 @@ fn parse_opts(args: &[String]) -> Result<Opts, String> {
             "--queue-depth" => o.queue_depth = Some(parse_num(take(&mut i)?)?),
             "--batch-max" => o.batch_max = Some(parse_num(take(&mut i)?)?),
             "--no-coalesce" => o.no_coalesce = true,
+            "--mesh" => o.mesh = true,
             "--transport" => {
                 o.transport = take(&mut i)?.parse().map_err(|e| format!("{e}"))?
             }
@@ -346,7 +350,12 @@ fn main() -> Result<()> {
             }
             frontend.coalesce = !opts.no_coalesce;
             serve::serve(
-                &serve::ServeOpts { workers: opts.workers, transport: opts.transport, frontend },
+                &serve::ServeOpts {
+                    workers: opts.workers,
+                    transport: opts.transport,
+                    mesh: opts.mesh,
+                    frontend,
+                },
                 &opts.listen,
             )?;
         }

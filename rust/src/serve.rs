@@ -44,6 +44,9 @@ use two_chains::Result;
 pub struct ServeOpts {
     pub workers: usize,
     pub transport: TransportKind,
+    /// Wire the worker↔worker mesh (`--mesh`): enables the `forward`
+    /// host symbol for injected code and the `mesh` stats block.
+    pub mesh: bool,
     pub frontend: FrontendConfig,
 }
 
@@ -76,6 +79,7 @@ pub fn run(listener: TcpListener, opts: &ServeOpts, stop: &Arc<AtomicBool>) -> R
         ClusterConfig::builder()
             .workers(opts.workers)
             .transport(opts.transport)
+            .mesh(opts.mesh)
             .build()?,
         |_, _, _| {},
     )?);
@@ -223,7 +227,7 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let stop = Arc::new(AtomicBool::new(false));
-        let opts = ServeOpts { workers, transport, frontend };
+        let opts = ServeOpts { workers, transport, mesh: false, frontend };
         let server = {
             let stop = stop.clone();
             std::thread::spawn(move || run(listener, &opts, &stop).unwrap())
@@ -312,6 +316,8 @@ mod tests {
         let fe = stats.get("frontend").expect("frontend telemetry block");
         assert_eq!(fe.get("submitted").and_then(|v| v.as_u64()), Some(1), "{stats}");
         assert_eq!(fe.get("clients").and_then(|v| v.as_u64()), Some(1), "{stats}");
+        let mesh = stats.get("mesh").expect("mesh telemetry block");
+        assert_eq!(mesh.get("enabled"), Some(&Json::Bool(false)), "{stats}");
         drop(conn);
         stop.store(true, Ordering::Release);
         server.join().unwrap();

@@ -5,11 +5,13 @@
 //! shared memory) through the identical cluster harness.
 
 use two_chains::coordinator::{
-    Cluster, ClusterConfig, ClusterSnapshot, FilterIfunc, GetIfunc, InsertIfunc, Target,
-    TransportKind, GET_MISSING,
+    decode_forward_failure, Cluster, ClusterConfig, ClusterSnapshot, FilterIfunc, GetIfunc,
+    InsertIfunc, Target, TransportKind, GET_MISSING,
 };
-use two_chains::ifunc::builtin::{ChecksumIfunc, CounterIfunc, EchoIfunc, OutOfBoundsIfunc};
-use two_chains::ifunc::SourceArgs;
+use two_chains::ifunc::builtin::{
+    ChecksumIfunc, CounterIfunc, EchoIfunc, HopIfunc, OutOfBoundsIfunc,
+};
+use two_chains::ifunc::{SourceArgs, DEFAULT_TTL};
 use two_chains::util::XorShift;
 
 /// Run `scenario` once per transport, so every assertion below holds for
@@ -113,8 +115,8 @@ fn mixed_types_share_a_link() {
         // Two types -> exactly two auto-registration misses on the worker;
         // every later frame skips link + verify via the cached program.
         let snap = ClusterSnapshot::capture(&cluster);
-        assert_eq!(snap.workers[0].0.cache_misses, 2, "{transport:?}");
-        assert_eq!(snap.workers[0].0.cache_hits, 48, "{transport:?}");
+        assert_eq!(snap.workers[0].ctx.cache_misses, 2, "{transport:?}");
+        assert_eq!(snap.workers[0].ctx.cache_hits, 48, "{transport:?}");
         cluster.shutdown().unwrap();
     });
 }
@@ -153,9 +155,9 @@ fn telemetry_matches_ground_truth() {
         }
         d.barrier().unwrap();
         let snap = ClusterSnapshot::capture(&cluster);
-        let executed: u64 = snap.workers.iter().map(|(_, e, _, _)| *e).sum();
+        let executed: u64 = snap.workers.iter().map(|w| w.executed).sum();
         assert_eq!(executed, 120, "{transport:?}");
-        let flushes: u64 = snap.workers.iter().map(|(c, ..)| c.icache_flushes).sum();
+        let flushes: u64 = snap.workers.iter().map(|w| w.ctx.icache_flushes).sum();
         assert_eq!(flushes, 120, "{transport:?}");
         // JSON renders and parses back.
         let parsed = two_chains::util::Json::parse(&snap.to_json().to_string()).unwrap();
@@ -808,35 +810,143 @@ fn cluster_config_builder_validates() {
     assert_eq!(c.max_inflight, REPLY_SLOTS);
     assert!(!c.stream_replies);
     assert!(ClusterConfig::builder().no_reply_timeout().build().unwrap().reply_timeout.is_none());
+    // Mesh forwarding needs the streamed-reply collector: relayed chain
+    // replies land out of order.
+    assert!(ClusterConfig::builder().mesh(true).stream_replies(false).build().is_err());
+    assert!(ClusterConfig::builder().mesh(true).build().unwrap().mesh);
 }
 
-/// The deprecated pre-`Target` wrappers still compile and behave exactly
-/// like their replacements (this is the one place they may be used; all
-/// other call sites migrated).
+/// A cluster with the worker↔worker mesh wired and the multi-hop `hop`
+/// pipeline ifunc installed everywhere.
+fn mesh_cluster(workers: usize, transport: TransportKind) -> Cluster {
+    let cluster = Cluster::launch(
+        ClusterConfig::builder().workers(workers).transport(transport).mesh(true).build().unwrap(),
+        |_, ctx, _| {
+            ctx.library_dir().install(Box::new(HopIfunc));
+        },
+    )
+    .unwrap();
+    cluster.leader.library_dir().install(Box::new(HopIfunc));
+    cluster
+}
+
+/// The tentpole acceptance path: a two-hop `forward` pipeline
+/// (leader → w0 → w1 → w2, the graph_analysis-style stage chain) returns
+/// its result to the leader over every transport with **zero
+/// leader-relay frames** — the leader sends exactly one frame, to the
+/// chain's head, and the intermediate stage results travel
+/// worker→worker over the mesh. The final hop's reply relays back to
+/// the origin and is collected under the seq the leader registered at
+/// injection, like any local invocation.
 #[test]
-#[allow(deprecated)]
-fn deprecated_wrappers_match_target_entry_points() {
-    let cluster = counter_cluster(2, TransportKind::Ring);
-    let d = cluster.dispatcher();
-    let h = d.register("counter").unwrap();
-    let args = SourceArgs::bytes(vec![0u8; 32]);
-    let msg = h.msg_create(&args).unwrap();
+fn mesh_two_hop_pipeline_replies_without_leader_relay() {
+    for_each_transport(|transport| {
+        let cluster = mesh_cluster(3, transport);
+        let d = cluster.dispatcher();
+        let h = d.register("hop").unwrap();
+        let data: Vec<u8> = (0..64u8).map(|b| b.wrapping_mul(7)).collect();
+        let payload = HopIfunc::payload(&[1, 2], &data);
+        let before: Vec<u64> = (0..3).map(|w| d.debug_frames_sent(w).unwrap()).collect();
+        let msg = h.msg_create(&SourceArgs::bytes(payload)).unwrap();
+        let reply = d.invoke_begin(Target::Worker(0), &msg).unwrap().wait().unwrap();
+        assert!(reply.ok(), "{transport:?}: {:#x}", reply.r0);
+        assert_eq!(reply.payload, data, "{transport:?}");
+        // Zero leader-relay frames: one frame to the chain's head, none
+        // to the downstream stages.
+        let after: Vec<u64> = (0..3).map(|w| d.debug_frames_sent(w).unwrap()).collect();
+        assert_eq!(after[0] - before[0], 1, "{transport:?}");
+        assert_eq!(after[1], before[1], "{transport:?}");
+        assert_eq!(after[2], before[2], "{transport:?}");
+        // The intermediate results moved over the mesh instead, and every
+        // hop executed at its worker.
+        let forwarded: Vec<u64> = cluster.workers.iter().map(|w| w.forwarded()).collect();
+        assert_eq!(forwarded, vec![1, 1, 0], "{transport:?}");
+        for w in &cluster.workers {
+            assert_eq!(w.executed(), 1, "{transport:?} worker {}", w.index);
+            assert_eq!(w.forward_failed(), 0, "{transport:?} worker {}", w.index);
+        }
+        cluster.shutdown().unwrap();
+    });
+}
 
-    d.send_to(0, &msg).unwrap();
-    d.send_batch_to(0, &[msg.clone(), msg.clone()]).unwrap();
-    let placed = d.inject_by_key(&h, 11, &args).unwrap();
-    assert_eq!(placed, d.route_key(11));
-    let placements = d
-        .inject_batch_by_key(&h, &[(1, args.clone()), (2, args.clone())])
+/// An itinerary longer than the TTL dies *cleanly* at hop `DEFAULT_TTL`:
+/// the leader gets a FAILED reply whose `r0` names the worker the chain
+/// died on and the hop count — never a hang.
+#[test]
+fn mesh_ttl_exhaustion_fails_cleanly() {
+    for_each_transport(|transport| {
+        let cluster = mesh_cluster(3, transport);
+        let d = cluster.dispatcher();
+        let h = d.register("hop").unwrap();
+        // Ring itinerary 1,2,0,1,2,0,… one entry past the TTL.
+        let peers: Vec<usize> =
+            (0..DEFAULT_TTL as usize + 1).map(|i| (i + 1) % 3).collect();
+        let msg = h
+            .msg_create(&SourceArgs::bytes(HopIfunc::payload(&peers, b"doomed")))
+            .unwrap();
+        let reply = d.invoke_begin(Target::Worker(0), &msg).unwrap().wait().unwrap();
+        assert!(!reply.ok(), "{transport:?}");
+        let (worker, hops) = decode_forward_failure(reply.r0);
+        assert_eq!(hops, DEFAULT_TTL, "{transport:?}");
+        // Forward k targets peers[k-1]; the TTL dies on the 8th hop's
+        // receiver, peers[7] = (7 + 1) % 3 = 2.
+        assert_eq!(worker, 2, "{transport:?}");
+        let failed: u64 = cluster.workers.iter().map(|w| w.forward_failed()).sum();
+        assert_eq!(failed, 1, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
+}
+
+/// A two-worker A→B→A→… forwarding cycle is cut by the TTL, not spun
+/// forever: the loop executes exactly `DEFAULT_TTL` mesh hops and then
+/// reports the worker it was cut on.
+#[test]
+fn mesh_two_cycle_loop_cut_by_ttl() {
+    for_each_transport(|transport| {
+        let cluster = mesh_cluster(2, transport);
+        let d = cluster.dispatcher();
+        let h = d.register("hop").unwrap();
+        // Ping-pong itinerary 1,0,1,0,… longer than the TTL.
+        let peers: Vec<usize> =
+            (0..DEFAULT_TTL as usize + 4).map(|i| (i + 1) % 2).collect();
+        let msg = h
+            .msg_create(&SourceArgs::bytes(HopIfunc::payload(&peers, b"loop")))
+            .unwrap();
+        let reply = d.invoke_begin(Target::Worker(0), &msg).unwrap().wait().unwrap();
+        assert!(!reply.ok(), "{transport:?}");
+        let (worker, hops) = decode_forward_failure(reply.r0);
+        assert_eq!(hops, DEFAULT_TTL, "{transport:?}");
+        // Hop k lands on worker k % 2; hop 8 lands back on A (worker 0).
+        assert_eq!(worker, 0, "{transport:?}");
+        // The loop ran exactly TTL hop executions on the mesh (plus the
+        // leader-ingress execution at the head).
+        let executed: u64 = cluster.workers.iter().map(|w| w.executed()).sum();
+        assert_eq!(executed, 1 + DEFAULT_TTL as u64, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
+}
+
+/// `forward` on a cluster whose mesh is disabled fails the invocation
+/// cleanly at the ingress worker (hop 0) instead of hanging or crashing.
+#[test]
+fn forward_without_mesh_fails_cleanly() {
+    for_each_transport(|transport| {
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(2).transport(transport).build().unwrap(),
+            |_, ctx, _| {
+                ctx.library_dir().install(Box::new(HopIfunc));
+            },
+        )
         .unwrap();
-    assert_eq!(placements, vec![d.route_key(1), d.route_key(2)]);
-    d.barrier().unwrap();
-    assert_eq!(d.total_executed(), 6);
-
-    let reply = d.invoke(0, &msg).unwrap();
-    assert!(reply.ok());
-    let (reply, data) = d.invoke_get(0, &msg).unwrap();
-    assert!(reply.ok());
-    assert!(data.is_empty()); // counter pushes no reply payload
-    cluster.shutdown().unwrap();
+        cluster.leader.library_dir().install(Box::new(HopIfunc));
+        let d = cluster.dispatcher();
+        let h = d.register("hop").unwrap();
+        let msg =
+            h.msg_create(&SourceArgs::bytes(HopIfunc::payload(&[1], b"nope"))).unwrap();
+        let reply = d.invoke_begin(Target::Worker(0), &msg).unwrap().wait().unwrap();
+        assert!(!reply.ok(), "{transport:?}");
+        assert_eq!(decode_forward_failure(reply.r0), (0, 0), "{transport:?}");
+        assert_eq!(cluster.workers[0].forward_failed(), 1, "{transport:?}");
+        cluster.shutdown().unwrap();
+    });
 }
