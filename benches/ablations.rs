@@ -53,10 +53,17 @@
 //!   whose intermediate result hops worker→worker over the mesh and
 //!   never touches the leader. 2/4/8 workers on every transport; the
 //!   speedup column is what cutting the leader out of the datapath buys.
+//! * **M** — abstract-interpretation pass: the production fused engine
+//!   with every dynamic check in place (`vm::compile`) vs the same body
+//!   compiled against its `ProgramFacts` (`vm::compile_analyzed` —
+//!   proven-in-bounds memory ops lowered to unchecked handlers behind
+//!   entry guards, provably-bounded programs skipping the per-block
+//!   fuel check), per body. The elided column counts the memory ops the
+//!   analysis proved safe.
 //!
 //! Run: `cargo bench --bench ablations` (QUICK=1 for a smoke run;
 //! ABL=E,H runs only the named ablations — CI's bench smoke uses
-//! ABL=H,I,J,K,L).
+//! ABL=H,I,J,K,L,M).
 
 use std::time::{Duration, Instant};
 
@@ -812,6 +819,62 @@ fn main() {
                     fwd / relay
                 );
             }
+        }
+    }
+
+    // Abl M — what the analysis pass buys at execution time. Same
+    // verified body, same fused threaded engine; the only difference is
+    // whether the compiler consumed the ProgramFacts (unchecked memory
+    // handlers behind entry guards + fuel-check skip for provably
+    // bounded programs) or kept every dynamic check.
+    if run('M') {
+        use two_chains::coordinator::FilterIfunc;
+        use two_chains::ifunc::builtin::ChecksumIfunc;
+        use two_chains::ifunc::message::CodeImage;
+        use two_chains::ifunc::{IfuncLibrary, Symbols};
+        use two_chains::vm;
+
+        let syms = Symbols::with_builtins();
+        // Same stub as Abl J: price the VM, not the worker store.
+        syms.table().install_fn("db_filter", |_, [bits, _, _, _]| Ok(bits));
+
+        println!("\n== Abl M — analysis pass: checked vs elided compile (ns/op) ==");
+        println!(
+            "{:>14}  {:>7}  {:>9}  {:>12}  {:>12}  {:>10}",
+            "body", "elided", "may-loop", "checked", "analyzed", "speedup"
+        );
+        let bodies: [(&str, CodeImage, usize, usize); 3] = [
+            ("counter", CounterIfunc::default().code(), 64, if quick { 2_000 } else { 100_000 }),
+            ("checksum", ChecksumIfunc.code(), 8192, if quick { 50 } else { 1_000 }),
+            ("graph-filter", FilterIfunc.code(), 8, if quick { 2_000 } else { 100_000 }),
+        ];
+        for (name, image, paysize, iters) in bodies {
+            let prog = vm::verify(&image.vm_code, image.imports.len()).expect("verify");
+            let got = syms.table().resolve(&image.imports).expect("resolve");
+            let facts = vm::analyze(&prog);
+            let checked = vm::compile(prog.clone());
+            let analyzed = vm::compile_analyzed(prog.clone(), &facts);
+            let cfg = vm::VmConfig::default();
+            let mut payload = vec![1u8; paysize];
+
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(checked.run(&got, &mut payload, &mut (), &cfg).unwrap());
+            }
+            let checked_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(analyzed.run(&got, &mut payload, &mut (), &cfg).unwrap());
+            }
+            let analyzed_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+
+            println!(
+                "{name:>14}  {:>7}  {:>9}  {checked_ns:>12.0}  {analyzed_ns:>12.0}  {:>9.2}x",
+                facts.elided_ops,
+                facts.may_loop(),
+                checked_ns / analyzed_ns
+            );
         }
     }
 }

@@ -119,6 +119,18 @@ fn main() {
         );
     });
 
+    // What the engine actually runs since the analysis pass: the same
+    // body compiled against its ProgramFacts, with proven-in-bounds
+    // memory ops lowered to unchecked handlers behind entry guards and
+    // the per-block fuel check dropped for provably-bounded programs.
+    let facts = vm::analyze(&prog);
+    let analyzed = vm::compile_analyzed(prog.clone(), &facts);
+    t.bench("VM run (counter body, analyzed)", 30, 20000, || {
+        std::hint::black_box(
+            analyzed.run(&got, &mut payload, &mut (), &cfg).unwrap(),
+        );
+    });
+
     // Fabric stages (wire model off: pure software path).
     let fabric = Fabric::new(2, WireConfig::off());
     let mr = fabric.node(1).register(1 << 20, MemPerm::RWX);

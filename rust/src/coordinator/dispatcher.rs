@@ -199,6 +199,61 @@ impl<'c> Dispatcher<'c> {
         self.cluster.leader.register_ifunc(name)
     }
 
+    /// Static admission: refuse an invocation the analysis already proved
+    /// doomed, before any frame leaves the leader. Two checks, both
+    /// *sound* (they only reject programs that could never succeed on the
+    /// target):
+    ///
+    /// * **fuel floor** — the minimum instructions any halting execution
+    ///   retires exceeds the workers' fuel budget (a never-halting
+    ///   program has floor `u64::MAX`), so every worker would burn its
+    ///   whole budget and fault;
+    /// * **capabilities** — a reachable host call is outside the
+    ///   configured [`crate::vm::CapabilityPolicy`], so every worker's
+    ///   link-time gate would refuse the frame anyway.
+    ///
+    /// Messages without [`IfuncMsg::admission_facts`] (hand-assembled
+    /// frames, relays) pass through untouched — admission is an
+    /// optimization over the workers' authoritative checks, never a
+    /// substitute for them.
+    fn admit(&self, msg: &IfuncMsg) -> Result<()> {
+        let Some(facts) = msg.admission_facts() else { return Ok(()) };
+        let cfg = self.cluster.leader.config();
+        let reject = |why: String| {
+            self.cluster
+                .leader
+                .analysis_stats()
+                .static_rejections
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Err(Error::Verify(format!("static admission: {why}")))
+        };
+        if facts.fuel_floor > cfg.vm.fuel {
+            return reject(if facts.may_loop && facts.fuel_floor == u64::MAX {
+                format!(
+                    "`{}` can never halt (no reachable HALT); \
+                     it would exhaust any fuel budget",
+                    msg.name()
+                )
+            } else {
+                format!(
+                    "`{}` needs at least {} instructions to halt but workers \
+                     grant {} fuel",
+                    msg.name(),
+                    facts.fuel_floor,
+                    cfg.vm.fuel
+                )
+            });
+        }
+        let syms: Vec<&str> = facts.reachable_syms.iter().map(String::as_str).collect();
+        if let Some(denied) = cfg.caps.first_denied(&syms) {
+            return reject(format!(
+                "`{}` reaches host call `{denied}`, outside the capability allowlist",
+                msg.name()
+            ));
+        }
+        Ok(())
+    }
+
     /// The leader's outbound link to `worker` — everything per-worker
     /// goes through this.
     fn link(&self, worker: usize) -> Result<&PeerLink> {
@@ -265,6 +320,7 @@ impl<'c> Dispatcher<'c> {
     /// delivered once per worker — the program is injected once and
     /// fanned out, not re-created per destination.
     pub fn send(&self, target: Target<'_>, msg: &IfuncMsg) -> Result<()> {
+        self.admit(msg)?;
         for worker in self.resolve_set(target)? {
             self.link(worker)?.send(msg)?;
         }
@@ -279,6 +335,9 @@ impl<'c> Dispatcher<'c> {
     pub fn send_batch(&self, target: Target<'_>, msgs: &[IfuncMsg]) -> Result<()> {
         if msgs.is_empty() {
             return Ok(());
+        }
+        for msg in msgs {
+            self.admit(msg)?;
         }
         let workers = self.resolve_set(target)?;
         for &worker in &workers {
@@ -298,6 +357,7 @@ impl<'c> Dispatcher<'c> {
     /// (the call blocks while the window is full). Collective targets
     /// are rejected; use [`Dispatcher::invoke_multi`].
     pub fn invoke_begin(&self, target: Target<'_>, msg: &IfuncMsg) -> Result<PendingReply> {
+        self.admit(msg)?;
         self.link(self.resolve_one(target)?)?.invoke_begin(msg, true)
     }
 
@@ -320,6 +380,7 @@ impl<'c> Dispatcher<'c> {
         target: Target<'_>,
         msg: &IfuncMsg,
     ) -> Result<Option<PendingReply>> {
+        self.admit(msg)?;
         self.link(self.resolve_one(target)?)?.try_invoke_begin(msg)
     }
 
@@ -338,6 +399,9 @@ impl<'c> Dispatcher<'c> {
         target: Target<'_>,
         msgs: &[IfuncMsg],
     ) -> Result<Vec<PendingReply>> {
+        for msg in msgs {
+            self.admit(msg)?;
+        }
         self.link(self.resolve_one(target)?)?.try_invoke_batch(msgs)
     }
 
@@ -354,6 +418,7 @@ impl<'c> Dispatcher<'c> {
     /// slots released, their collector registrations removed — by the
     /// partial handle set dropping.
     pub fn invoke_multi(&self, target: Target<'_>, msg: &IfuncMsg) -> Result<MultiPendingReply> {
+        self.admit(msg)?;
         let workers = self.resolve_set(target)?;
         let mut pending = Vec::with_capacity(workers.len());
         for &worker in &workers {
@@ -407,7 +472,9 @@ impl<'c> Dispatcher<'c> {
         let mut placed = Vec::with_capacity(reqs.len());
         for (key, args) in reqs {
             let worker = route_key(*key, n);
-            buckets[worker].push(handle.msg_create(args)?);
+            let msg = handle.msg_create(args)?;
+            self.admit(&msg)?;
+            buckets[worker].push(msg);
             placed.push(worker);
         }
         for (worker, msgs) in buckets.iter().enumerate() {
@@ -720,6 +787,114 @@ mod tests {
             .unwrap()
             .expect("freed window must admit");
         assert!(p.wait().unwrap().ok());
+        cluster.shutdown().unwrap();
+    }
+
+    /// Registered-handle messages carry [`crate::vm::AdmissionFacts`];
+    /// the dispatcher refuses provably-doomed invocations at the leader,
+    /// before any frame is posted.
+    #[test]
+    fn static_admission_rejects_doomed_invocations() {
+        use crate::ifunc::library::IfuncLibrary;
+        use crate::ifunc::message::CodeImage;
+        use crate::vm::Assembler;
+
+        /// `jmp @0`: no reachable HALT, so the fuel floor is `u64::MAX`.
+        struct SpinIfunc;
+        impl IfuncLibrary for SpinIfunc {
+            fn name(&self) -> &str {
+                "spin"
+            }
+            fn payload_get_max_size(&self, a: &SourceArgs) -> usize {
+                a.len()
+            }
+            fn payload_init(
+                &self,
+                p: &mut [u8],
+                a: &SourceArgs,
+            ) -> crate::Result<usize> {
+                p[..a.len()].copy_from_slice(a.as_bytes());
+                Ok(a.len())
+            }
+            fn code(&self) -> CodeImage {
+                let mut asm = Assembler::new();
+                let top = asm.label();
+                asm.bind(top);
+                asm.jmp(top);
+                let (vm_code, imports) = asm.assemble();
+                CodeImage { imports, vm_code, hlo: vec![] }
+            }
+        }
+
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(1).build().unwrap(),
+            |_, _, _| {},
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(SpinIfunc));
+        let d = cluster.dispatcher();
+        let h = d.register("spin").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 8])).unwrap();
+        for attempt in [
+            d.send(Target::Worker(0), &msg).unwrap_err(),
+            d.invoke_begin(Target::Worker(0), &msg).map(|_| ()).unwrap_err(),
+            d.invoke_multi(Target::All, &msg).map(|_| ()).unwrap_err(),
+        ] {
+            let text = attempt.to_string();
+            assert!(text.contains("static admission"), "{text}");
+            assert!(text.contains("never halt"), "{text}");
+        }
+        assert_eq!(cluster.leader.analysis_stats().snapshot().2, 3);
+        d.barrier().unwrap();
+        assert_eq!(d.total_executed(), 0, "nothing reached a worker");
+        cluster.shutdown().unwrap();
+    }
+
+    /// Finite-but-insufficient fuel and capability mismatches are also
+    /// caught at admission, using the leader's (cluster-wide) config.
+    #[test]
+    fn static_admission_checks_fuel_floor_and_capabilities() {
+        use crate::ucp::ContextConfig;
+        use crate::vm::interp::VmConfig;
+        use crate::vm::CapabilityPolicy;
+
+        // counter's body retires 3 instructions minimum; grant only 2.
+        let tight = ContextConfig {
+            vm: VmConfig { fuel: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(1).ctx(tight).build().unwrap(),
+            |_, _, _| {},
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+        let d = cluster.dispatcher();
+        let h = d.register("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 8])).unwrap();
+        let text = d.send(Target::Worker(0), &msg).unwrap_err().to_string();
+        assert!(text.contains("static admission"), "{text}");
+        assert!(text.contains("2 fuel"), "{text}");
+        cluster.shutdown().unwrap();
+
+        // Ample fuel, restricted capabilities: counter reaches
+        // `counter_add`, which the allowlist refuses.
+        let gated = ContextConfig {
+            caps: CapabilityPolicy::only(["log"]),
+            ..Default::default()
+        };
+        let cluster = Cluster::launch(
+            ClusterConfig::builder().workers(1).ctx(gated).build().unwrap(),
+            |_, _, _| {},
+        )
+        .unwrap();
+        cluster.leader.library_dir().install(Box::new(CounterIfunc::default()));
+        let d = cluster.dispatcher();
+        let h = d.register("counter").unwrap();
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 8])).unwrap();
+        let text = d.send(Target::All, &msg).unwrap_err().to_string();
+        assert!(text.contains("counter_add"), "{text}");
+        assert_eq!(cluster.leader.analysis_stats().snapshot().2, 1);
         cluster.shutdown().unwrap();
     }
 

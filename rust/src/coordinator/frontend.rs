@@ -28,6 +28,15 @@
 //!   blocking wait, via the dispatcher's non-blocking window admission —
 //!   and the queue drains round-robin across clients, so one firehose
 //!   client cannot starve the others.
+//! * **Static admission**: every frame the front-end ships was created
+//!   from a registered handle, so it carries
+//!   [`crate::vm::AdmissionFacts`] and passes through the dispatcher's
+//!   static admission gate (fuel floor, capability allowlist). A
+//!   rejection surfaces to the client as a normal
+//!   `{"ok":false,"error":"static admission: …"}` response — the doomed
+//!   program is refused at the leader without ever reaching a worker,
+//!   so a misconfigured (or hostile) client cannot burn worker fuel on
+//!   invocations the analysis already proved can't succeed.
 //!
 //! Per-key ordering is preserved end to end: a key always routes to one
 //! worker ([`route_key`]), a client's ops for that worker stay in one

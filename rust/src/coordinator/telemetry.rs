@@ -24,12 +24,20 @@ pub struct ContextSnapshot {
     pub icache_flushes: u64,
     pub icache_flushed_bytes: u64,
     pub icache_flush_ns: u64,
+    /// Dynamic bounds checks the analysis pass elided (per link).
+    pub analysis_elided: u64,
+    /// Frames refused at link time by the capability gate.
+    pub analysis_cap_denials: u64,
+    /// Invocations refused by static admission before fan-out (nonzero
+    /// on the leader only — workers never dispatch).
+    pub analysis_rejections: u64,
 }
 
 impl ContextSnapshot {
     pub fn capture(ctx: &Context) -> Self {
         let stats = &ctx.node().stats;
         let ic = ctx.icache_stats();
+        let (elided, denials, rejections) = ctx.analysis_stats().snapshot();
         ContextSnapshot {
             node: ctx.node().id(),
             fabric_puts: stats.puts.load(Ordering::Relaxed),
@@ -43,6 +51,9 @@ impl ContextSnapshot {
             icache_flushes: ic.flushes.load(Ordering::Relaxed),
             icache_flushed_bytes: ic.flushed_bytes.load(Ordering::Relaxed),
             icache_flush_ns: ic.flush_ns.load(Ordering::Relaxed),
+            analysis_elided: elided,
+            analysis_cap_denials: denials,
+            analysis_rejections: rejections,
         }
     }
 
@@ -59,6 +70,9 @@ impl ContextSnapshot {
             ("cache_misses", Json::from(self.cache_misses)),
             ("icache_flushes", Json::from(self.icache_flushes)),
             ("icache_flush_ns", Json::from(self.icache_flush_ns)),
+            ("analysis_elided", Json::from(self.analysis_elided)),
+            ("analysis_cap_denials", Json::from(self.analysis_cap_denials)),
+            ("analysis_rejections", Json::from(self.analysis_rejections)),
         ])
     }
 }
@@ -253,6 +267,8 @@ mod tests {
         }
         let json = snap.to_json().to_string();
         assert!(json.contains("\"workers\""));
+        assert!(json.contains("\"analysis_elided\""), "{json}");
+        assert!(json.contains("\"analysis_rejections\""), "{json}");
         assert!(!snap.render().is_empty());
         cluster.shutdown().unwrap();
     }

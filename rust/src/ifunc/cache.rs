@@ -20,7 +20,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use crate::vm::{CompiledProgram, GotTable};
+use crate::vm::{CompiledProgram, GotTable, ProgramFacts};
 
 use super::message::CodeImageRef;
 
@@ -44,6 +44,11 @@ pub struct LinkedIfunc {
     /// Whether this type shipped an HLO artifact (compiled per-thread by
     /// the PJRT runtime; the engine re-ensures it on every arrival).
     pub has_hlo: bool,
+    /// Static-analysis artifact for the same verified code — elision
+    /// bounds, fuel floor, reachable host-call surface. Cached here so
+    /// repeat injections skip the analysis pass along with verify and
+    /// compile.
+    pub facts: Arc<ProgramFacts>,
 }
 
 impl LinkedIfunc {
@@ -101,6 +106,7 @@ impl CodeCache {
     }
 
     /// Insert (or replace) the entry for `name`; returns it with a fresh id.
+    #[allow(clippy::too_many_arguments)]
     pub fn insert(
         &self,
         name: &str,
@@ -109,6 +115,7 @@ impl CodeCache {
         prog: CompiledProgram,
         code_fp: u64,
         has_hlo: bool,
+        facts: Arc<ProgramFacts>,
     ) -> Arc<LinkedIfunc> {
         let entry = Arc::new(LinkedIfunc {
             id: self.next_id.fetch_add(1, Ordering::Relaxed) as u32,
@@ -118,6 +125,7 @@ impl CodeCache {
             prog,
             code_fp,
             has_hlo,
+            facts,
         });
         if self.enabled.load(Ordering::Relaxed) {
             self.map.write().unwrap().insert(name.to_string(), entry.clone());
@@ -151,7 +159,15 @@ mod tests {
 
     fn insert_for(c: &CodeCache, name: &str, image_bytes: &[u8]) -> Arc<LinkedIfunc> {
         let (_, r) = CodeImage::decode_ref(image_bytes).unwrap();
-        c.insert(name, vec![], GotTable::empty(), crate::vm::compile(Vec::new()), r.fingerprint(), false)
+        c.insert(
+            name,
+            vec![],
+            GotTable::empty(),
+            crate::vm::compile(Vec::new()),
+            r.fingerprint(),
+            false,
+            Arc::new(crate::vm::analyze(&[])),
+        )
     }
 
     #[test]
@@ -214,6 +230,7 @@ mod tests {
             crate::vm::compile(Vec::new()),
             r.fingerprint(),
             false,
+            Arc::new(crate::vm::analyze(&[])),
         );
         assert!(c.lookup_matching("f", &r).is_some(), "same image hits");
 
@@ -239,7 +256,15 @@ mod tests {
         let (_, r) = CodeImage::decode_ref(&bytes).unwrap();
         let c = CodeCache::new();
         // fingerprint 0 ≠ r.fingerprint(): a stale entry under the name.
-        c.insert("f", vec![], GotTable::empty(), crate::vm::compile(Vec::new()), 0, false);
+        c.insert(
+            "f",
+            vec![],
+            GotTable::empty(),
+            crate::vm::compile(Vec::new()),
+            0,
+            false,
+            Arc::new(crate::vm::analyze(&[])),
+        );
         assert!(c.lookup_matching("f", &r).is_none());
         assert_eq!(c.hits.load(Ordering::Relaxed), 0);
         assert_eq!(c.misses.load(Ordering::Relaxed), 1);

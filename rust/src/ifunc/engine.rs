@@ -9,11 +9,15 @@
 //! 2. **code-cache lookup** ([`super::cache::CodeCache::lookup_matching`]:
 //!    name + import table + code fingerprint),
 //! 3. on a miss, **GOT link** (resolve imports against the local symbol
-//!    table), **verify** the bytecode, and **compile** the verified
-//!    program into its threaded form ([`crate::vm::compile`]); the
-//!    compiled program is cached alongside the GOT so repeat injections
-//!    skip decode-side work entirely — this is the crate's only verifier
-//!    and compiler call site,
+//!    table), **verify** the bytecode, **analyze** it
+//!    ([`crate::vm::analyze`] — interval abstract interpretation), gate
+//!    its reachable host-call surface against the context's
+//!    [`crate::vm::CapabilityPolicy`], and **compile** the verified
+//!    program into its threaded form ([`crate::vm::compile_analyzed`],
+//!    which drops dynamic checks the analysis proved redundant); program
+//!    *and* facts are cached alongside the GOT so repeat injections skip
+//!    decode-side work entirely — this is the crate's only verifier,
+//!    analyzer, and compiler call site,
 //! 4. **HLO ensure**: hand the shipped artifact to this thread's PJRT
 //!    runtime (memoized per thread — a cache entry created on another
 //!    thread still compiles here on first use),
@@ -106,13 +110,30 @@ impl Context {
                 None => {
                     // First-seen type (or changed code/imports under the
                     // name): reconstruct the GOT from the local symbol
-                    // table, then verify + compile the shipped bytecode
-                    // once.
+                    // table, then verify + analyze + compile the shipped
+                    // bytecode once.
                     let got =
                         self.symbols().table().resolve_iter(image.imports.iter().copied())?;
-                    let prog = vm::compile(vm::verify(image.vm_code, image.imports.len())?);
                     let owned: Vec<String> =
                         image.imports.iter().map(|s| s.to_string()).collect();
+                    let instrs = vm::verify(image.vm_code, image.imports.len())?;
+                    let facts = vm::analyze(&instrs);
+                    // Capability gate: only CALLs the analysis proved
+                    // reachable count — dead imports are harmless.
+                    let caps = &self.config().caps;
+                    if let Some(denied) = caps.first_denied(&facts.reachable_syms(&owned)) {
+                        self.analysis_stats()
+                            .cap_denials
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        return Err(Error::Verify(format!(
+                            "capability denied: reachable host call `{denied}` \
+                             is outside this context's allowlist"
+                        )));
+                    }
+                    let prog = vm::compile_analyzed(instrs, &facts);
+                    self.analysis_stats()
+                        .elided_checks
+                        .fetch_add(facts.elided_ops as u64, std::sync::atomic::Ordering::Relaxed);
                     let entry = self.cache.insert(
                         &header.name,
                         owned,
@@ -120,6 +141,7 @@ impl Context {
                         prog,
                         image.fingerprint(),
                         !image.hlo.is_empty(),
+                        std::sync::Arc::new(facts),
                     );
                     (entry, false)
                 }
@@ -310,6 +332,57 @@ mod tests {
         let mut args = TargetArgs::none();
         let out = c.execute_frame(&h, &mut frame, &mut args).unwrap();
         assert_eq!(out.forward, Some(ForwardOutcome::TtlExhausted { worker: 1 }));
+    }
+
+    #[test]
+    fn capability_gate_rejects_reachable_call_outside_allowlist() {
+        let f = Fabric::new(1, WireConfig::off());
+        let cfg = ContextConfig {
+            caps: crate::vm::CapabilityPolicy::only(["log"]),
+            ..Default::default()
+        };
+        let c = Context::new(f.node(0), cfg).unwrap();
+        // CounterIfunc's only CALL reaches `counter_add` — outside the
+        // allowlist, so the link is refused before compilation.
+        let code = CounterIfunc::default().code();
+        let (h, mut frame) = frame_for(&code, &[0u8; 8]);
+        let mut args = TargetArgs::none();
+        let err = c.execute_frame(&h, &mut frame, &mut args).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("capability denied"), "{msg}");
+        assert!(msg.contains("counter_add"), "{msg}");
+        assert_eq!(c.analysis_stats().snapshot().1, 1, "denial counted");
+        assert!(c.ifunc_cache().is_empty(), "rejected frame is not cached");
+        assert_eq!(c.symbols().counter_value(), 0, "nothing executed");
+
+        // Code whose reachable surface stays inside the allowlist (here:
+        // no calls at all) still links and runs under the same policy.
+        let mut a = crate::vm::Assembler::new();
+        a.ldi(0, 7).halt();
+        let (vm_code, imports) = a.assemble();
+        let image = CodeImage { imports, vm_code, hlo: vec![] };
+        let (h2, mut f2) = frame_for(&image, &[0u8; 8]);
+        let out = c.execute_frame(&h2, &mut f2, &mut args).unwrap();
+        assert_eq!(out.ret, 7);
+    }
+
+    #[test]
+    fn elided_checks_counted_once_per_link_not_per_run() {
+        let c = ctx();
+        // Constant-index 8-byte load at payload offset 0: provably in
+        // bounds under the analysis' payload assumption → elided.
+        let mut a = crate::vm::Assembler::new();
+        a.ldw(0, 0, crate::vm::isa::SPACE_PAYLOAD, 0).halt();
+        let (vm_code, imports) = a.assemble();
+        let image = CodeImage { imports, vm_code, hlo: vec![] };
+        let (h, frame) = frame_for(&image, &42u64.to_le_bytes());
+        let mut args = TargetArgs::none();
+        let out = c.execute_frame(&h, &mut frame.clone(), &mut args).unwrap();
+        assert_eq!(out.ret, 42);
+        assert_eq!(c.analysis_stats().snapshot().0, 1, "one load elided");
+        // A cache hit reuses the facts — the tally does not grow per run.
+        c.execute_frame(&h, &mut frame.clone(), &mut args).unwrap();
+        assert_eq!(c.analysis_stats().snapshot().0, 1);
     }
 
     #[test]

@@ -22,7 +22,9 @@
 //! reconstructed GOT before invocation.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
+use crate::vm::AdmissionFacts;
 use crate::{Error, Result};
 
 /// First word of a live frame header.
@@ -374,6 +376,15 @@ pub struct IfuncMsg {
     name: String,
     payload_offset: usize,
     payload_len: usize,
+    /// Source-side static-analysis summary of the shipped code, stamped by
+    /// `msg_create` when the local context could verify + analyze the
+    /// program. Advisory: the dispatcher uses it to refuse doomed
+    /// invocations (fuel floor above the target budget, capability
+    /// mismatch) *before* fan-out; targets never trust it — they re-run
+    /// the full verify → analyze pipeline on cache misses regardless.
+    /// `None` on hand-assembled or relayed frames, which simply skip
+    /// source-side admission.
+    facts: Option<Arc<AdmissionFacts>>,
 }
 
 impl IfuncMsg {
@@ -456,7 +467,7 @@ impl IfuncMsg {
         frame[..HEADER_BYTES].copy_from_slice(&header.encode());
         frame[code_offset..code_offset + code_bytes.len()].copy_from_slice(&code_bytes);
         frame[trailer_offset..].copy_from_slice(&header.trailer_sig.to_le_bytes());
-        Ok(IfuncMsg { frame, name: name.to_string(), payload_offset, payload_len })
+        Ok(IfuncMsg { frame, name: name.to_string(), payload_offset, payload_len, facts: None })
     }
 
     /// Shrink the payload to `used` bytes, moving the trailer up and
@@ -523,6 +534,7 @@ impl IfuncMsg {
             name: header.name,
             payload_offset,
             payload_len: payload.len(),
+            facts: None,
         })
     }
 
@@ -549,6 +561,17 @@ impl IfuncMsg {
         let ok = u64::from_le_bytes(payload[0..8].try_into().unwrap()) != 0;
         let r0 = u64::from_le_bytes(payload[8..16].try_into().unwrap());
         Ok((ok, r0, &payload[16..]))
+    }
+
+    /// Static admission summary, if the source analyzed the code (see the
+    /// field doc — advisory only, never trusted by targets).
+    pub fn admission_facts(&self) -> Option<&AdmissionFacts> {
+        self.facts.as_deref()
+    }
+
+    /// Stamp (or clear) the admission summary on this message.
+    pub fn set_admission_facts(&mut self, facts: Option<Arc<AdmissionFacts>>) {
+        self.facts = facts;
     }
 
     /// Hop metadata currently encoded in the frame header.

@@ -4,6 +4,7 @@
 use std::sync::Arc;
 
 use crate::ucp::Context;
+use crate::vm::{self, AdmissionFacts};
 use crate::Result;
 
 use super::library::{IfuncLibrary, SourceArgs};
@@ -16,6 +17,11 @@ pub struct IfuncHandle {
     lib: Arc<dyn IfuncLibrary>,
     code: CodeImage,
     params: IfuncMsgParams,
+    /// Source-side static summary (fuel floor, may-loop verdict, reachable
+    /// host calls), computed once here so every `msg_create` stamps it for
+    /// free. `None` when the code fails local verification — the message
+    /// still ships and the *target* produces the authoritative rejection.
+    facts: Option<Arc<AdmissionFacts>>,
 }
 
 impl IfuncHandle {
@@ -27,15 +33,17 @@ impl IfuncHandle {
         &self.code
     }
 
+    /// The admission summary stamped onto messages from this handle.
+    pub fn admission_facts(&self) -> Option<&AdmissionFacts> {
+        self.facts.as_deref()
+    }
+
     /// `ucp_ifunc_msg_create`: size the payload with
     /// `payload_get_max_size`, build the frame, fill the payload in place
     /// with `payload_init` ("this way, we eliminate unnecessary memory
     /// copies", §3.1), and shrink the frame if init used less than max.
     pub fn msg_create(&self, source_args: &SourceArgs) -> Result<IfuncMsg> {
-        let max = self.lib.payload_get_max_size(source_args);
-        IfuncMsg::assemble_with(self.name(), &self.code, max, self.params, |payload| {
-            self.lib.payload_init(payload, source_args)
-        })
+        self.msg_create_with(source_args, self.params)
     }
 
     /// `msg_create` with explicit frame parameters (payload alignment —
@@ -46,9 +54,12 @@ impl IfuncHandle {
         params: IfuncMsgParams,
     ) -> Result<IfuncMsg> {
         let max = self.lib.payload_get_max_size(source_args);
-        IfuncMsg::assemble_with(self.name(), &self.code, max, params, |payload| {
-            self.lib.payload_init(payload, source_args)
-        })
+        let mut msg =
+            IfuncMsg::assemble_with(self.name(), &self.code, max, params, |payload| {
+                self.lib.payload_init(payload, source_args)
+            })?;
+        msg.set_admission_facts(self.facts.clone());
+        Ok(msg)
     }
 }
 
@@ -59,7 +70,15 @@ impl Context {
     pub fn register_ifunc(&self, name: &str) -> Result<IfuncHandle> {
         let lib = self.library_dir().open(name)?;
         let code = lib.code();
-        Ok(IfuncHandle { lib, code, params: IfuncMsgParams::default() })
+        // One source-side verify + analyze per registration: its
+        // AdmissionFacts ride every message this handle creates, letting
+        // dispatchers refuse doomed invocations before fan-out.
+        let facts = vm::verify(&code.vm_code, code.imports.len())
+            .map(|instrs| {
+                Arc::new(AdmissionFacts::derive(&vm::analyze(&instrs), &code.imports))
+            })
+            .ok();
+        Ok(IfuncHandle { lib, code, params: IfuncMsgParams::default(), facts })
     }
 
     /// `ucp_deregister_ifunc`: drop the handle and invalidate any
@@ -97,6 +116,27 @@ mod tests {
         let msg = h.msg_create(&SourceArgs::bytes(vec![9u8; 100])).unwrap();
         assert_eq!(msg.name(), "counter");
         assert_eq!(msg.payload(), &[9u8; 100]);
+    }
+
+    #[test]
+    fn messages_carry_admission_facts() {
+        let c = ctx();
+        c.library_dir().install(Box::new(CounterIfunc::default()));
+        let h = c.register_ifunc("counter").unwrap();
+        let facts = h.admission_facts().expect("counter verifies locally");
+        assert!(!facts.may_loop, "straight-line body");
+        assert!(facts.fuel_floor > 0, "at least the halt must retire");
+        assert!(
+            facts.reachable_syms.iter().any(|s| s == "counter_add"),
+            "reachable call surface names the import: {:?}",
+            facts.reachable_syms
+        );
+        let msg = h.msg_create(&SourceArgs::bytes(vec![0u8; 8])).unwrap();
+        assert_eq!(msg.admission_facts(), h.admission_facts());
+        // Hand-assembled frames carry no facts (and thus skip admission).
+        let raw = IfuncMsg::assemble("counter", h.code(), &[0u8; 8], Default::default())
+            .unwrap();
+        assert!(raw.admission_facts().is_none());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! **auto-registration cache** (§3.4's hash table), and the I-cache model.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::fabric::{MemPerm, MemoryRegion, Node};
@@ -14,6 +15,7 @@ use crate::ifunc::icache::{IcacheConfig, IcacheStats};
 use crate::ifunc::library::LibraryDir;
 use crate::ifunc::Symbols;
 use crate::vm::interp::VmConfig;
+use crate::vm::CapabilityPolicy;
 use crate::Result;
 
 use super::am::AmParams;
@@ -33,6 +35,12 @@ pub struct ContextConfig {
     /// `<name>.json`) are loaded from here; if unset, the env var of the
     /// same name is honored, then `./artifacts`.
     pub lib_dir: Option<PathBuf>,
+    /// Which host symbols injected code may *reach* (statically, per the
+    /// analysis pass). The default allows everything the symbol table
+    /// exports; a restricted policy makes link-time a capability check:
+    /// frames whose reachable CALL set strays outside the allowlist are
+    /// rejected before compilation.
+    pub caps: CapabilityPolicy,
 }
 
 impl Default for ContextConfig {
@@ -42,6 +50,7 @@ impl Default for ContextConfig {
             icache: IcacheConfig::non_coherent(),
             vm: VmConfig::default(),
             lib_dir: None,
+            caps: CapabilityPolicy::allow_all(),
         }
     }
 }
@@ -59,6 +68,32 @@ impl ContextConfig {
     }
 }
 
+/// Counters for the static-analysis pass (telemetry surface). All relaxed:
+/// they are monotonic tallies, never synchronization.
+#[derive(Debug, Default)]
+pub struct AnalysisStats {
+    /// Dynamic bounds checks removed from compiled programs (summed over
+    /// cache inserts — each elided op is counted once per link, not per
+    /// executed instruction).
+    pub elided_checks: AtomicU64,
+    /// Frames rejected at link time because their reachable CALL surface
+    /// strayed outside the configured [`CapabilityPolicy`].
+    pub cap_denials: AtomicU64,
+    /// Invocations refused by *dispatcher* admission (fuel floor above the
+    /// target budget, or capability mismatch) before any fan-out.
+    pub static_rejections: AtomicU64,
+}
+
+impl AnalysisStats {
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.elided_checks.load(Ordering::Relaxed),
+            self.cap_denials.load(Ordering::Relaxed),
+            self.static_rejections.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// Per-process UCP state. Cheap to share (`Arc`); one per simulated
 /// machine in tests and benchmarks.
 pub struct Context {
@@ -68,6 +103,7 @@ pub struct Context {
     symbols: Symbols,
     pub(crate) cache: CodeCache,
     icache_stats: IcacheStats,
+    analysis_stats: AnalysisStats,
 }
 
 impl Context {
@@ -81,6 +117,7 @@ impl Context {
             symbols: Symbols::with_builtins(),
             cache: CodeCache::new(),
             icache_stats: IcacheStats::default(),
+            analysis_stats: AnalysisStats::default(),
         }))
     }
 
@@ -113,6 +150,12 @@ impl Context {
     /// Simulated I-cache flush counters.
     pub fn icache_stats(&self) -> &IcacheStats {
         &self.icache_stats
+    }
+
+    /// Static-analysis counters (elided checks, capability denials,
+    /// admission rejections).
+    pub fn analysis_stats(&self) -> &AnalysisStats {
+        &self.analysis_stats
     }
 
     /// `ucp_mem_map` analog: register a length of memory for remote access.

@@ -10,6 +10,6 @@ pub mod endpoint;
 pub mod worker;
 
 pub use am::{AmParams, AmProto};
-pub use context::{Context, ContextConfig};
+pub use context::{AnalysisStats, Context, ContextConfig};
 pub use endpoint::Endpoint;
 pub use worker::{progress_n, AmHandler, Worker};

@@ -1,0 +1,786 @@
+//! Abstract interpretation over verified TCVM programs — the static
+//! layer between [`super::verify`] and [`super::compile`].
+//!
+//! The verifier proves *structural* properties (fields decode, targets
+//! are in range); the compiled engine then still pays a bounds check on
+//! every memory op and a fuel check at every block entry, and the §3.5
+//! trust story stops at "it cannot escape the sandbox". This pass runs
+//! once per (name, code) — at the same point as verify/compile, so the
+//! [`ProgramFacts`] artifact is cached in the §3.4 code cache — and
+//! computes a sound over-approximation of every register's value range
+//! at every reachable pc (interval domain, widened at join points so the
+//! fixpoint terminates on loops). Three consumers:
+//!
+//! * **Check elision** — a memory op whose address interval is provably
+//!   bounded is lowered by [`super::compile::compile_analyzed`] to an
+//!   unchecked fast-path handler, guarded by a single whole-program
+//!   bound check at entry ([`ProgramFacts::pay_bound`] /
+//!   [`ProgramFacts::scr_bound`]); a loop-free program additionally
+//!   carries [`ProgramFacts::max_steps`], letting the engine skip every
+//!   per-block fuel comparison when the budget covers the worst case.
+//! * **Static cost & admission** — [`ProgramFacts::fuel_floor`] is a
+//!   lower bound on the fuel any *successful* run must retire
+//!   (`u64::MAX` when no `halt` is reachable), so a dispatcher can
+//!   reject a program that can never complete under the configured
+//!   budget before burning a worker; [`Lint`]s flag
+//!   divide-by-constant-zero and unreachable code with disassembly.
+//! * **Capability gating** — [`ProgramFacts::reachable_slots`] is the
+//!   set of GOT slots a program can actually call, checked against a
+//!   [`CapabilityPolicy`] allowlist at injection time.
+//!
+//! Soundness contract: every fact is an over-approximation of the
+//! dynamic semantics of **both** engines (`run_reference` and the
+//! threaded compiler), locked by the differential property harness in
+//! `rust/tests/prop.rs`. Anything the domain cannot prove stays TOP and
+//! keeps its dynamic check; arithmetic that may wrap is never narrowed.
+
+use std::collections::{BTreeSet, VecDeque};
+
+use super::disasm::disasm_instr;
+use super::isa::{Instr, Op, NUM_REGS, SCRATCH_BYTES, SPACE_PAYLOAD, SPACE_SCRATCH};
+
+/// Elision cap for payload addresses: a proven bound above this is not
+/// worth eliding (the entry guard would demand an implausibly large
+/// payload and force the reference fallback on every invocation).
+pub const ELIDE_PAY_LIMIT: u64 = 1 << 20;
+
+/// Join count at one pc after which intervals are widened to their
+/// extremes — guarantees the fixpoint terminates on loops.
+const WIDEN_AFTER: u8 = 3;
+
+/// An unsigned value interval `[lo, hi]`, both inclusive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Interval {
+    pub const TOP: Interval = Interval { lo: 0, hi: u64::MAX };
+
+    pub fn exact(v: u64) -> Interval {
+        Interval { lo: v, hi: v }
+    }
+
+    fn new(lo: u64, hi: u64) -> Interval {
+        debug_assert!(lo <= hi);
+        Interval { lo, hi }
+    }
+
+    fn join(self, other: Interval) -> Interval {
+        Interval { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi) }
+    }
+
+    fn is_const(&self) -> Option<u64> {
+        (self.lo == self.hi).then_some(self.lo)
+    }
+}
+
+/// Machine-checkable lint categories surfaced by the analysis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LintKind {
+    /// A reachable `divu` whose divisor register is provably zero —
+    /// every execution reaching it faults.
+    DivByConstZero,
+    /// An instruction no path from the entry can reach.
+    Unreachable,
+}
+
+/// One diagnostic finding, with the disassembled instruction inline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lint {
+    pub pc: u32,
+    pub kind: LintKind,
+    pub message: String,
+}
+
+/// The cached artifact of one [`analyze`] run — stored alongside the
+/// [`super::CompiledProgram`] in the code cache so repeat injections
+/// skip the analysis too.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ProgramFacts {
+    /// Per source pc: is this memory op's address interval proven in
+    /// bounds (given the entry guards below)? Always `false` for
+    /// non-memory ops.
+    pub elidable: Vec<bool>,
+    /// Per source pc: reachable from the entry?
+    pub reachable: Vec<bool>,
+    /// Entry guard for elided payload ops: every elided payload access
+    /// is in bounds whenever `payload.len() >= pay_bound`.
+    pub pay_bound: u64,
+    /// Entry guard for elided scratch ops, against the configured
+    /// scratch size.
+    pub scr_bound: u64,
+    /// Worst-case retired-instruction bound, present only when the
+    /// reachable control-flow graph is loop-free (a DAG): the sum of
+    /// full block costs along the heaviest block path. A budget at or
+    /// above this can skip every per-block fuel comparison.
+    pub max_steps: Option<u64>,
+    /// Fuel floor: the minimum instructions any run must retire to reach
+    /// (and retire) a `halt`. `u64::MAX` when no `halt` is reachable —
+    /// the program can never complete successfully.
+    pub fuel_floor: u64,
+    /// GOT slots of reachable `call` instructions, sorted and deduped —
+    /// the host symbols this program can actually invoke.
+    pub reachable_slots: Vec<u32>,
+    pub lints: Vec<Lint>,
+    /// Count of memory ops lowered to unchecked handlers.
+    pub elided_ops: usize,
+}
+
+impl ProgramFacts {
+    /// `true` when a cycle is reachable — the program *may* loop
+    /// (fuel still bounds it dynamically).
+    pub fn may_loop(&self) -> bool {
+        self.max_steps.is_none()
+    }
+
+    /// Map [`ProgramFacts::reachable_slots`] through the import table.
+    /// Slots past the table (unverified input) are skipped.
+    pub fn reachable_syms<'a>(&self, imports: &'a [String]) -> Vec<&'a str> {
+        self.reachable_slots
+            .iter()
+            .filter_map(|&s| imports.get(s as usize).map(String::as_str))
+            .collect()
+    }
+}
+
+/// Per-client / per-worker host-symbol allowlist enforced at injection
+/// time against [`ProgramFacts::reachable_slots`]. The default permits
+/// everything (the pre-analysis behavior); a restricted policy lists the
+/// symbols injected code may call — e.g. a serve deployment that never
+/// wired the mesh can refuse `forward`-capable programs outright.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CapabilityPolicy {
+    /// `None` = allow every linked symbol; `Some(set)` = only these.
+    pub allow: Option<BTreeSet<String>>,
+}
+
+impl CapabilityPolicy {
+    /// The permissive default.
+    pub fn allow_all() -> CapabilityPolicy {
+        CapabilityPolicy { allow: None }
+    }
+
+    /// Restrict injected code to exactly these host symbols.
+    pub fn only<I, S>(syms: I) -> CapabilityPolicy
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        CapabilityPolicy { allow: Some(syms.into_iter().map(Into::into).collect()) }
+    }
+
+    pub fn permits(&self, sym: &str) -> bool {
+        match &self.allow {
+            None => true,
+            Some(set) => set.contains(sym),
+        }
+    }
+
+    pub fn is_restricted(&self) -> bool {
+        self.allow.is_some()
+    }
+
+    /// First reachable symbol the policy refuses, if any.
+    pub fn first_denied<'a>(&self, syms: &[&'a str]) -> Option<&'a str> {
+        syms.iter().find(|s| !self.permits(s)).copied()
+    }
+}
+
+/// Leader-side admission summary stamped onto an outgoing message by
+/// `IfuncHandle::msg_create`: the slice of [`ProgramFacts`] a dispatcher
+/// needs to reject a doomed injection *before* fan-out, with the slot →
+/// symbol mapping already applied.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdmissionFacts {
+    pub fuel_floor: u64,
+    pub may_loop: bool,
+    /// Host symbols reachable `call`s can invoke (names, not slots).
+    pub reachable_syms: Vec<String>,
+}
+
+impl AdmissionFacts {
+    pub fn derive(facts: &ProgramFacts, imports: &[String]) -> AdmissionFacts {
+        AdmissionFacts {
+            fuel_floor: facts.fuel_floor,
+            may_loop: facts.may_loop(),
+            reachable_syms: facts
+                .reachable_syms(imports)
+                .into_iter()
+                .map(str::to_string)
+                .collect(),
+        }
+    }
+}
+
+/// Analyze a decoded (normally verified) program. Total on any input —
+/// unverified out-of-range jump targets are treated as dead edges, an
+/// empty program yields empty facts — and never panics, so the engine
+/// can run it unconditionally between verify and compile.
+pub fn analyze(prog: &[Instr]) -> ProgramFacts {
+    let n = prog.len();
+    let mut facts = ProgramFacts {
+        elidable: vec![false; n],
+        reachable: vec![false; n],
+        fuel_floor: u64::MAX,
+        ..ProgramFacts::default()
+    };
+    if n == 0 {
+        return facts;
+    }
+
+    // ---- interval fixpoint over the instruction-level CFG ------------
+    // state[pc] = register intervals *before* executing prog[pc].
+    let mut state: Vec<Option<[Interval; NUM_REGS]>> = vec![None; n];
+    let mut joins = vec![0u8; n];
+    let mut work = VecDeque::new();
+    let mut entry = [Interval::exact(0); NUM_REGS];
+    entry[1] = Interval::TOP; // r1 = payload length, unknown statically
+    state[0] = Some(entry);
+    work.push_back(0usize);
+
+    while let Some(pc) = work.pop_front() {
+        let mut s = state[pc].expect("worklist entries have a state");
+        let i = &prog[pc];
+        transfer(i, &mut s);
+        for succ in successors(pc, i, n) {
+            let changed = match &mut state[succ] {
+                slot @ None => {
+                    *slot = Some(s);
+                    true
+                }
+                Some(cur) => {
+                    let mut any = false;
+                    for r in 0..NUM_REGS {
+                        let joined = if joins[succ] >= WIDEN_AFTER {
+                            widen(cur[r], s[r])
+                        } else {
+                            cur[r].join(s[r])
+                        };
+                        if joined != cur[r] {
+                            cur[r] = joined;
+                            any = true;
+                        }
+                    }
+                    if any {
+                        joins[succ] = joins[succ].saturating_add(1);
+                    }
+                    any
+                }
+            };
+            if changed {
+                work.push_back(succ);
+            }
+        }
+    }
+
+    for pc in 0..n {
+        facts.reachable[pc] = state[pc].is_some();
+    }
+
+    // ---- consumers over the reachable states -------------------------
+    let mut slots = BTreeSet::new();
+    for pc in 0..n {
+        let i = &prog[pc];
+        let Some(s) = &state[pc] else {
+            facts.lints.push(Lint {
+                pc: pc as u32,
+                kind: LintKind::Unreachable,
+                message: format!(
+                    "pc {pc} (offset {:#x}): unreachable: {}",
+                    pc * super::isa::INSTR_BYTES,
+                    disasm_instr(i, None)
+                ),
+            });
+            continue;
+        };
+        match i.op {
+            Op::Call => {
+                slots.insert(i.imm);
+            }
+            Op::Divu => {
+                if s[i.c as usize % NUM_REGS].is_const() == Some(0) {
+                    facts.lints.push(Lint {
+                        pc: pc as u32,
+                        kind: LintKind::DivByConstZero,
+                        message: format!(
+                            "pc {pc} (offset {:#x}): divisor r{} is provably zero: {}",
+                            pc * super::isa::INSTR_BYTES,
+                            i.c,
+                            disasm_instr(i, None)
+                        ),
+                    });
+                }
+            }
+            Op::Ldb | Op::Ldw | Op::Stb | Op::Stw => {
+                let width: u64 = if matches!(i.op, Op::Ldb | Op::Stb) { 1 } else { 8 };
+                let base = s[i.b as usize % NUM_REGS];
+                // End of the access if the address arithmetic cannot
+                // wrap; a possible wrap keeps the dynamic check.
+                let end = base
+                    .hi
+                    .checked_add(i.imm as u64)
+                    .and_then(|a| a.checked_add(width));
+                if let Some(end) = end {
+                    let (limit, bound) = match i.c {
+                        SPACE_PAYLOAD => (ELIDE_PAY_LIMIT, &mut facts.pay_bound),
+                        SPACE_SCRATCH => (SCRATCH_BYTES as u64, &mut facts.scr_bound),
+                        _ => continue, // unverified space selector
+                    };
+                    if end <= limit {
+                        facts.elidable[pc] = true;
+                        facts.elided_ops += 1;
+                        *bound = (*bound).max(end);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    facts.reachable_slots = slots.into_iter().collect();
+
+    // ---- fuel floor: BFS shortest retire-count to a reachable halt ---
+    let mut dist = vec![u64::MAX; n];
+    let mut q = VecDeque::new();
+    dist[0] = 0;
+    q.push_back(0usize);
+    while let Some(pc) = q.pop_front() {
+        let i = &prog[pc];
+        if i.op == Op::Halt {
+            facts.fuel_floor = facts.fuel_floor.min(dist[pc] + 1);
+            continue;
+        }
+        for succ in successors(pc, i, n) {
+            if dist[succ] == u64::MAX {
+                dist[succ] = dist[pc] + 1;
+                q.push_back(succ);
+            }
+        }
+    }
+
+    // ---- loop-freedom and the worst-case block-fuel bound ------------
+    facts.max_steps = max_steps(prog, &facts.reachable);
+    facts
+}
+
+/// Widening join: a bound that moved since the last join at this pc is
+/// sent straight to its extreme, so each register can change at most
+/// twice more and the fixpoint terminates on any loop nest.
+fn widen(cur: Interval, incoming: Interval) -> Interval {
+    Interval {
+        lo: if incoming.lo < cur.lo { 0 } else { cur.lo },
+        hi: if incoming.hi > cur.hi { u64::MAX } else { cur.hi },
+    }
+}
+
+/// CFG successors of `pc`. Out-of-range targets (possible only on
+/// unverified input) and running off the code end are dead edges — those
+/// executions fault, so no abstract state flows onward.
+fn successors(pc: usize, i: &Instr, n: usize) -> Vec<usize> {
+    let fall = || (pc + 1 < n).then_some(pc + 1);
+    let target = || ((i.imm as usize) < n).then_some(i.imm as usize);
+    match i.op {
+        Op::Halt => Vec::new(),
+        Op::Jmp => target().into_iter().collect(),
+        Op::Jz | Op::Jnz => target().into_iter().chain(fall()).collect(),
+        _ => fall().into_iter().collect(),
+    }
+}
+
+/// Transfer function: `s` is the state before `i`; update it to the
+/// state after. Every rule over-approximates the wrapping u64 semantics
+/// of both engines — any case that could wrap or is data-dependent goes
+/// to TOP.
+fn transfer(i: &Instr, s: &mut [Interval; NUM_REGS]) {
+    // Verified programs have in-range fields; the masks keep the pass
+    // total (and trivially sound) on unverified ones.
+    let a = i.a as usize % NUM_REGS;
+    let b = i.b as usize % NUM_REGS;
+    let c = i.c as usize % NUM_REGS;
+    let imm = i.imm as u64;
+    match i.op {
+        Op::Halt | Op::Nop | Op::Jmp | Op::Jz | Op::Jnz | Op::Stb | Op::Stw => {}
+        Op::Ldi => s[a] = Interval::exact(imm),
+        // High half becomes imm; the (unknown) low half survives.
+        Op::Ldih => s[a] = Interval::new(imm << 32, (imm << 32) | 0xFFFF_FFFF),
+        Op::Mov => s[a] = s[b],
+        Op::Add => s[a] = add_iv(s[b], s[c]),
+        Op::Addi => s[a] = add_iv(s[b], Interval::exact(imm)),
+        Op::Sub => {
+            // Borrow-free only when every minuend >= every subtrahend.
+            s[a] = if s[b].lo >= s[c].hi {
+                Interval::new(s[b].lo - s[c].hi, s[b].hi - s[c].lo)
+            } else {
+                Interval::TOP
+            };
+        }
+        Op::Mul => {
+            s[a] = match s[b].hi.checked_mul(s[c].hi) {
+                Some(hi) => Interval::new(s[b].lo.wrapping_mul(s[c].lo), hi),
+                None => Interval::TOP,
+            };
+        }
+        Op::Divu => {
+            // On the non-faulting continuation the divisor was >= 1, so
+            // the quotient never exceeds the dividend.
+            s[a] = match s[c].is_const() {
+                Some(k) if k > 0 => Interval::new(s[b].lo / k, s[b].hi / k),
+                _ => Interval::new(0, s[b].hi),
+            };
+        }
+        Op::And => s[a] = Interval::new(0, s[b].hi.min(s[c].hi)),
+        Op::Or => {
+            // a|b keeps the operands' highest bit: bound by the mask of
+            // the larger operand's bit width; never below either input.
+            s[a] = Interval::new(s[b].lo.max(s[c].lo), bit_mask(s[b].hi | s[c].hi));
+        }
+        Op::Xor => s[a] = Interval::new(0, bit_mask(s[b].hi | s[c].hi)),
+        Op::Shl => {
+            s[a] = match s[c].is_const() {
+                Some(k) => {
+                    let k = (k & 63) as u32;
+                    if k == 0 {
+                        s[b]
+                    } else if s[b].hi.leading_zeros() >= k {
+                        Interval::new(s[b].lo << k, s[b].hi << k)
+                    } else {
+                        Interval::TOP // shifts bits out: wraps
+                    }
+                }
+                None => Interval::TOP,
+            };
+        }
+        Op::Shr => {
+            s[a] = match s[c].is_const() {
+                Some(k) => {
+                    let k = (k & 63) as u32;
+                    Interval::new(s[b].lo >> k, s[b].hi >> k)
+                }
+                // Any shift only shrinks the value.
+                None => Interval::new(0, s[b].hi),
+            };
+        }
+        Op::Sltu | Op::Eq => s[a] = Interval::new(0, 1),
+        Op::Call => s[0] = Interval::TOP, // host result is opaque
+        Op::Ldb => s[a] = Interval::new(0, 0xFF),
+        Op::Ldw | Op::Paylen => s[a] = Interval::TOP,
+    }
+}
+
+fn add_iv(x: Interval, y: Interval) -> Interval {
+    match x.hi.checked_add(y.hi) {
+        Some(hi) => Interval::new(x.lo + y.lo, hi), // lo can't overflow if hi didn't
+        None => Interval::TOP,
+    }
+}
+
+/// Smallest all-ones mask covering `v` — the tight upper bound for
+/// bitwise or/xor of values bounded by `v`.
+fn bit_mask(v: u64) -> u64 {
+    if v == 0 {
+        0
+    } else {
+        u64::MAX >> v.leading_zeros()
+    }
+}
+
+/// If the reachable CFG is a DAG, the heaviest block path measured in
+/// *full* block costs — the compiled engine charges a block's whole cost
+/// at entry (even if it faults mid-block), so this is the exact ceiling
+/// on total fuel charged by any execution.
+fn max_steps(prog: &[Instr], reachable: &[bool]) -> Option<u64> {
+    let n = prog.len();
+    // Leaders, exactly as the compiler computes them.
+    let mut leader = vec![false; n];
+    leader[0] = true;
+    for (pc, i) in prog.iter().enumerate() {
+        match i.op {
+            Op::Jmp | Op::Jz | Op::Jnz => {
+                let t = i.imm as usize;
+                if t < n {
+                    leader[t] = true;
+                }
+                if pc + 1 < n {
+                    leader[pc + 1] = true;
+                }
+            }
+            Op::Halt => {
+                if pc + 1 < n {
+                    leader[pc + 1] = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    let block_end = |start: usize| {
+        let mut e = start;
+        while e + 1 < n && !leader[e + 1] {
+            e += 1;
+        }
+        e
+    };
+    // Iterative DFS from block 0: detects cycles (gray hit) and computes
+    // longest-path weights in post-order. Weight of a block = its full
+    // cost plus the heaviest successor.
+    const WHITE: u8 = 0;
+    const GRAY: u8 = 1;
+    const BLACK: u8 = 2;
+    let mut color = vec![WHITE; n];
+    let mut weight = vec![0u64; n]; // indexed by leader pc
+    let mut stack: Vec<(usize, usize)> = vec![(0, 0)]; // (leader, next succ idx)
+    while let Some(frame) = stack.last_mut() {
+        let (l, next) = (frame.0, frame.1);
+        debug_assert!(reachable[l], "DFS only walks reachable leaders");
+        if next == 0 {
+            color[l] = GRAY;
+        }
+        let e = block_end(l);
+        let succs = block_successors(prog, l, e, n);
+        if let Some(&s) = succs.get(next) {
+            frame.1 += 1;
+            match color[s] {
+                WHITE => stack.push((s, 0)),
+                GRAY => return None, // back edge: reachable loop
+                _ => {}
+            }
+        } else {
+            let best = succs.iter().map(|&s| weight[s]).max().unwrap_or(0);
+            weight[l] = (e - l + 1) as u64 + best;
+            color[l] = BLACK;
+            stack.pop();
+        }
+    }
+    Some(weight[0])
+}
+
+/// Successor *leaders* of the block `[start, end]`.
+fn block_successors(prog: &[Instr], _start: usize, end: usize, n: usize) -> Vec<usize> {
+    let i = &prog[end];
+    let fall = || (end + 1 < n).then_some(end + 1);
+    let target = || ((i.imm as usize) < n).then_some(i.imm as usize);
+    match i.op {
+        Op::Halt => Vec::new(),
+        Op::Jmp => target().into_iter().collect(),
+        Op::Jz | Op::Jnz => target().into_iter().chain(fall()).collect(),
+        _ => fall().into_iter().collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::verify::verify;
+    use crate::vm::Assembler;
+
+    fn analyzed(build: impl FnOnce(&mut Assembler)) -> (Vec<Instr>, Vec<String>, ProgramFacts) {
+        let mut a = Assembler::new();
+        build(&mut a);
+        let (code, imports) = a.assemble();
+        let prog = verify(&code, imports.len()).expect("test program verifies");
+        let facts = analyze(&prog);
+        (prog, imports, facts)
+    }
+
+    #[test]
+    fn empty_program_yields_empty_facts() {
+        let facts = analyze(&[]);
+        assert_eq!(facts.elided_ops, 0);
+        assert_eq!(facts.fuel_floor, u64::MAX);
+        assert_eq!(facts.max_steps, None, "no entry, no bound");
+    }
+
+    #[test]
+    fn constant_header_reads_are_elidable() {
+        // The builtin shape: read two u64 header words at fixed offsets.
+        let (_, _, facts) = analyzed(|a| {
+            a.ldw(2, 0, 0, 0);
+            a.ldw(3, 0, 0, 8);
+            a.add(0, 2, 3);
+            a.halt();
+        });
+        assert_eq!(facts.elided_ops, 2);
+        assert!(facts.elidable[0] && facts.elidable[1]);
+        assert_eq!(facts.pay_bound, 16);
+        assert_eq!(facts.scr_bound, 0);
+        assert_eq!(facts.max_steps, Some(4), "straight line: 4 instructions");
+        assert_eq!(facts.fuel_floor, 4);
+        assert!(!facts.may_loop());
+    }
+
+    #[test]
+    fn paylen_derived_index_stays_checked() {
+        // r2 = paylen - 1 is dynamic: the access must keep its check.
+        let (_, _, facts) = analyzed(|a| {
+            a.paylen(2);
+            a.ldi(3, 1);
+            a.sub(2, 2, 3);
+            a.ldb(0, 2, 0, 0);
+            a.halt();
+        });
+        assert_eq!(facts.elided_ops, 0);
+        assert!(!facts.elidable[3]);
+    }
+
+    #[test]
+    fn loaded_index_stays_checked_but_masked_index_does_not() {
+        // An attacker-controlled byte as an index is TOP-255; a byte is
+        // provably < 256, so scratch (64 KiB) accesses elide but payload
+        // beyond the bound would not.
+        let (_, _, facts) = analyzed(|a| {
+            a.ldb(2, 0, 0, 0); // r2 = payload[0] in [0, 255]
+            a.stb(2, 2, 1, 0); // scratch[r2] — bound 256 <= 64 KiB
+            a.ldw(3, 2, 0, 0); // payload[r2 .. r2+8] — bound 263
+            a.halt();
+        });
+        assert!(facts.elidable[0], "constant payload[0] read");
+        assert!(facts.elidable[1], "byte-bounded scratch store");
+        assert!(facts.elidable[2], "byte-bounded payload word read");
+        assert_eq!(facts.scr_bound, 256);
+        assert_eq!(facts.pay_bound, 263, "max addr 255 + 8-byte width");
+    }
+
+    #[test]
+    fn wrapping_address_arithmetic_stays_checked() {
+        // r2 = 0xFFFF_FFFF << 32 | 0xFFFF_FFFF = u64::MAX, +imm wraps.
+        let (_, _, facts) = analyzed(|a| {
+            a.ldi64(2, u64::MAX);
+            a.ldb(0, 2, 0, 1); // addr wraps to 0 dynamically — not provable
+            a.halt();
+        });
+        assert_eq!(facts.elided_ops, 0);
+    }
+
+    #[test]
+    fn loop_has_no_max_steps_but_keeps_floor() {
+        let (_, _, facts) = analyzed(|a| {
+            let top = a.label();
+            let done = a.label();
+            a.paylen(3);
+            a.ldi(2, 0);
+            a.bind(top);
+            a.sltu(5, 2, 3);
+            a.jz(5, done);
+            a.addi(2, 2, 1);
+            a.jmp(top);
+            a.bind(done);
+            a.halt();
+        });
+        assert!(facts.may_loop());
+        assert_eq!(facts.max_steps, None);
+        // Shortest completing path: paylen, ldi, sltu, jz, halt.
+        assert_eq!(facts.fuel_floor, 5);
+    }
+
+    #[test]
+    fn spin_loop_can_never_halt() {
+        let (_, _, facts) = analyzed(|a| {
+            let top = a.label();
+            a.bind(top);
+            a.jmp(top);
+        });
+        assert_eq!(facts.fuel_floor, u64::MAX);
+        assert!(facts.may_loop());
+    }
+
+    #[test]
+    fn reachable_slots_skip_dead_calls() {
+        let (_, imports, facts) = analyzed(|a| {
+            let dead = a.label();
+            let out = a.label();
+            a.call("live");
+            a.jmp(out);
+            a.bind(dead);
+            a.call("dead"); // no path reaches this
+            a.bind(out);
+            a.halt();
+        });
+        assert_eq!(imports, vec!["live".to_string(), "dead".to_string()]);
+        assert_eq!(facts.reachable_slots, vec![0]);
+        assert_eq!(facts.reachable_syms(&imports), vec!["live"]);
+        assert!(facts
+            .lints
+            .iter()
+            .any(|l| l.kind == LintKind::Unreachable && l.message.contains("call")));
+    }
+
+    #[test]
+    fn div_by_const_zero_lints_with_disasm() {
+        let (_, _, facts) = analyzed(|a| {
+            a.ldi(2, 10);
+            a.ldi(3, 0);
+            a.divu(0, 2, 3);
+            a.halt();
+        });
+        let lint = facts
+            .lints
+            .iter()
+            .find(|l| l.kind == LintKind::DivByConstZero)
+            .expect("lint present");
+        assert_eq!(lint.pc, 2);
+        assert!(lint.message.contains("divu"), "{}", lint.message);
+        assert!(lint.message.contains("offset 0x10"), "{}", lint.message);
+    }
+
+    #[test]
+    fn widening_terminates_on_nested_loops() {
+        // r2 grows without bound through a nested loop; the fixpoint
+        // must converge (widening) and the growing index stays checked.
+        let (_, _, facts) = analyzed(|a| {
+            let outer = a.label();
+            let inner = a.label();
+            let out = a.label();
+            a.ldi(2, 0);
+            a.bind(outer);
+            a.bind(inner);
+            a.addi(2, 2, 8);
+            a.ldb(4, 2, 0, 0); // index grows every iteration
+            a.jnz(4, inner);
+            a.ldi(5, 1000);
+            a.sltu(6, 2, 5);
+            a.jnz(6, outer);
+            a.bind(out);
+            a.halt();
+        });
+        assert!(!facts.elidable[2], "unbounded loop index must stay checked");
+        assert!(facts.may_loop());
+    }
+
+    #[test]
+    fn capability_policy_defaults_open_and_restricts() {
+        let open = CapabilityPolicy::default();
+        assert!(open.permits("forward"));
+        assert!(!open.is_restricted());
+        let tight = CapabilityPolicy::only(["counter_add", "reply_put"]);
+        assert!(tight.permits("reply_put"));
+        assert!(!tight.permits("forward"));
+        assert_eq!(tight.first_denied(&["counter_add", "forward"]), Some("forward"));
+    }
+
+    #[test]
+    fn admission_facts_carry_symbol_names() {
+        let (_, imports, facts) = analyzed(|a| {
+            a.call("forward");
+            a.halt();
+        });
+        let adm = AdmissionFacts::derive(&facts, &imports);
+        assert_eq!(adm.reachable_syms, vec!["forward".to_string()]);
+        assert_eq!(adm.fuel_floor, 2);
+        assert!(!adm.may_loop);
+    }
+
+    #[test]
+    fn sub_and_shift_transfer_precision() {
+        // shl by a constant with headroom keeps exact bounds; the
+        // elision below depends on it.
+        let (_, _, facts) = analyzed(|a| {
+            a.ldb(2, 0, 0, 0); // [0, 255]
+            a.ldi(3, 3);
+            a.shl(2, 2, 3); // [0, 2040]
+            a.ldb(0, 2, 1, 0); // scratch[0..2041] ⊂ 64 KiB
+            a.halt();
+        });
+        assert!(facts.elidable[3]);
+        assert_eq!(facts.scr_bound, 2041);
+    }
+}

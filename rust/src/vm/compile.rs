@@ -37,6 +37,7 @@
 
 use std::any::Any;
 
+use super::analysis::ProgramFacts;
 use super::got::{GotTable, HostCtx};
 use super::interp::{self, VmConfig, VmOutcome};
 use super::isa::{Instr, Op, NUM_REGS, SPACE_PAYLOAD};
@@ -118,21 +119,43 @@ pub struct CompiledProgram {
     uses_scratch: bool,
     fused: usize,
     blocks: usize,
+    /// Entry guards for analysis-elided memory ops: the minimum payload
+    /// length / scratch size under which every unchecked access is
+    /// proven in bounds. A run that cannot meet them falls back to
+    /// reference semantics for the whole invocation.
+    guard_pay: u64,
+    guard_scr: u64,
+    /// Worst-case total fuel charge when the program is loop-free — a
+    /// budget covering it skips every per-block fuel comparison.
+    static_max_steps: Option<u64>,
+    /// Memory ops lowered to unchecked fast-path handlers.
+    elided: usize,
 }
 
 /// Lower a verified program with superinstruction fusion enabled (the
 /// production configuration).
 pub fn compile(src: Vec<Instr>) -> CompiledProgram {
-    compile_with(src, true)
+    compile_with(src, true, None)
 }
 
 /// Lower without the fusion pass — the "threaded, no fusion" column of
 /// Abl J, isolating what dispatch vs fusion each buy.
 pub fn compile_unfused(src: Vec<Instr>) -> CompiledProgram {
-    compile_with(src, false)
+    compile_with(src, false, None)
 }
 
-fn compile_with(src: Vec<Instr>, fuse: bool) -> CompiledProgram {
+/// Lower with [`super::analysis`] facts applied: memory ops the interval
+/// analysis proved in bounds become unchecked fast-path handlers (behind
+/// the entry guards), and a loop-free program records its worst-case
+/// fuel charge so a covering budget skips per-block fuel checks. `facts`
+/// must come from [`super::analysis::analyze`] over the *same* verified
+/// program — the engine computes both at the single verify/compile point
+/// and caches them together.
+pub fn compile_analyzed(src: Vec<Instr>, facts: &ProgramFacts) -> CompiledProgram {
+    compile_with(src, true, Some(facts))
+}
+
+fn compile_with(src: Vec<Instr>, fuse: bool, facts: Option<&ProgramFacts>) -> CompiledProgram {
     let n = src.len();
 
     // Basic-block leaders: entry, every jump target, and the successor
@@ -196,15 +219,18 @@ fn compile_with(src: Vec<Instr>, fuse: bool) -> CompiledProgram {
     }
     map[n] = idx;
 
-    // Emit.
+    // Emit. `elidable` marks memory ops the analysis proved in bounds
+    // (given the entry guards) — they get unchecked handlers.
+    let elidable =
+        |pc: usize| facts.is_some_and(|f| f.elidable.get(pc).copied().unwrap_or(false));
     let mut ops = Vec::with_capacity(idx as usize + 1);
     let mut pc = 0;
     while pc < n {
         if fused_with_next[pc] {
-            ops.push(emit_fused(&src[pc], &src[pc + 1], pc as u32, &map, n));
+            ops.push(emit_fused(&src[pc], &src[pc + 1], pc as u32, &map, n, elidable(pc)));
             pc += 2;
         } else {
-            ops.push(emit_one(&src[pc], pc as u32, &map, n));
+            ops.push(emit_one(&src[pc], pc as u32, &map, n, elidable(pc)));
             pc += 1;
         }
     }
@@ -230,7 +256,21 @@ fn compile_with(src: Vec<Instr>, fuse: bool) -> CompiledProgram {
     }
 
     let uses_scratch = src.iter().any(Instr::touches_scratch);
-    CompiledProgram { ops, src, uses_scratch, fused, blocks }
+    let (guard_pay, guard_scr, static_max_steps, elided) = match facts {
+        Some(f) => (f.pay_bound, f.scr_bound, f.max_steps, f.elided_ops),
+        None => (0, 0, None, 0),
+    };
+    CompiledProgram {
+        ops,
+        src,
+        uses_scratch,
+        fused,
+        blocks,
+        guard_pay,
+        guard_scr,
+        static_max_steps,
+        elided,
+    }
 }
 
 fn fusible(first: &Instr, second: &Instr) -> bool {
@@ -251,10 +291,20 @@ fn target(imm: u32, map: &[u32], n: usize) -> u64 {
     map[(imm as usize).min(n)] as u64
 }
 
-fn emit_one(i: &Instr, pc: u32, map: &[u32], n: usize) -> CompiledOp {
+fn emit_one(i: &Instr, pc: u32, map: &[u32], n: usize, elide: bool) -> CompiledOp {
     let (a, b, c) = (i.a as usize, i.b as usize, i.c as usize);
     let imm = i.imm as u64;
     let base = |h: Handler| CompiledOp::new(h, pc, 1);
+    // Memory handler: (space, checked/unchecked) → specialized fn.
+    let mem = |pay: Handler, pay_fast: Handler, scr: Handler, scr_fast: Handler| match (
+        i.c == SPACE_PAYLOAD,
+        elide,
+    ) {
+        (true, false) => pay,
+        (true, true) => pay_fast,
+        (false, false) => scr,
+        (false, true) => scr_fast,
+    };
     match i.op {
         Op::Halt => base(op_halt),
         Op::Nop => base(op_nop),
@@ -282,34 +332,41 @@ fn emit_one(i: &Instr, pc: u32, map: &[u32], n: usize) -> CompiledOp {
             b,
             c,
             imm,
-            ..base(if i.c == SPACE_PAYLOAD { op_ldb_pay } else { op_ldb_scr })
+            ..base(mem(op_ldb_pay, op_ldb_pay_fast, op_ldb_scr, op_ldb_scr_fast))
         },
         Op::Ldw => CompiledOp {
             a,
             b,
             c,
             imm,
-            ..base(if i.c == SPACE_PAYLOAD { op_ldw_pay } else { op_ldw_scr })
+            ..base(mem(op_ldw_pay, op_ldw_pay_fast, op_ldw_scr, op_ldw_scr_fast))
         },
         Op::Stb => CompiledOp {
             a,
             b,
             c,
             imm,
-            ..base(if i.c == SPACE_PAYLOAD { op_stb_pay } else { op_stb_scr })
+            ..base(mem(op_stb_pay, op_stb_pay_fast, op_stb_scr, op_stb_scr_fast))
         },
         Op::Stw => CompiledOp {
             a,
             b,
             c,
             imm,
-            ..base(if i.c == SPACE_PAYLOAD { op_stw_pay } else { op_stw_scr })
+            ..base(mem(op_stw_pay, op_stw_pay_fast, op_stw_scr, op_stw_scr_fast))
         },
         Op::Paylen => CompiledOp { a, ..base(op_paylen) },
     }
 }
 
-fn emit_fused(first: &Instr, second: &Instr, pc: u32, map: &[u32], n: usize) -> CompiledOp {
+fn emit_fused(
+    first: &Instr,
+    second: &Instr,
+    pc: u32,
+    map: &[u32],
+    n: usize,
+    elide: bool,
+) -> CompiledOp {
     let base = |h: Handler| CompiledOp::new(h, pc, 2);
     match (first.op, second.op) {
         (Op::Sltu, Op::Jz) => CompiledOp {
@@ -328,7 +385,12 @@ fn emit_fused(first: &Instr, second: &Instr, pc: u32, map: &[u32], n: usize) -> 
             d: second.a as usize,
             e: second.b as usize,
             f: second.c as usize,
-            ..base(if first.c == SPACE_PAYLOAD { op_ldb_add_pay } else { op_ldb_add_scr })
+            ..base(match (first.c == SPACE_PAYLOAD, elide) {
+                (true, false) => op_ldb_add_pay,
+                (true, true) => op_ldb_add_pay_fast,
+                (false, false) => op_ldb_add_scr,
+                (false, true) => op_ldb_add_scr_fast,
+            })
         },
         (Op::Addi, Op::Jmp) => CompiledOp {
             a: first.a as usize,
@@ -360,6 +422,27 @@ impl CompiledProgram {
     ) -> Result<VmOutcome> {
         let mut scratch =
             if self.uses_scratch { vec![0u8; cfg.scratch_bytes] } else { Vec::new() };
+        // Analysis-elision guards: every unchecked handler was proven in
+        // bounds *given* at least this much payload/scratch. A run that
+        // cannot meet a guard (the sender controls payload length, the
+        // host configures scratch) executes under reference semantics
+        // instead — checked throughout, identical outcomes.
+        if self.guard_pay > payload.len() as u64 || self.guard_scr > cfg.scratch_bytes as u64
+        {
+            let mut regs = [0u64; NUM_REGS];
+            regs[1] = payload.len() as u64;
+            let (ret, steps) = interp::run_from(
+                &self.src,
+                got,
+                payload,
+                &mut scratch,
+                user,
+                &mut regs,
+                0,
+                cfg.fuel,
+            )?;
+            return Ok(VmOutcome { ret, steps });
+        }
         let mut m = Machine {
             regs: [0u64; NUM_REGS],
             fuel: cfg.fuel,
@@ -371,6 +454,20 @@ impl CompiledProgram {
         // Entry convention: r1 = payload length (see interp).
         m.regs[1] = m.payload.len() as u64;
         let mut ip = 0usize;
+        // Loop-free program whose worst-case charge the budget covers:
+        // no block can ever run dry, so skip the per-block comparison.
+        // Fuel is still decremented — the retired-step accounting and
+        // the trap's exhausted-vs-fell-off choice depend on it.
+        if matches!(self.static_max_steps, Some(bound) if cfg.fuel >= bound) {
+            loop {
+                let op = &self.ops[ip];
+                m.fuel -= op.block_cost as u64;
+                ip = (op.handler)(op, ip, &mut m)?;
+                if ip == HALT {
+                    return Ok(VmOutcome { ret: m.regs[0], steps: cfg.fuel - m.fuel });
+                }
+            }
+        }
         loop {
             let op = &self.ops[ip];
             if op.block_cost != 0 {
@@ -428,6 +525,22 @@ impl CompiledProgram {
     /// Compiled ops, excluding the trailing trap.
     pub fn op_count(&self) -> usize {
         self.ops.len() - 1
+    }
+
+    /// Memory ops lowered to unchecked handlers (0 unless built by
+    /// [`compile_analyzed`]).
+    pub fn elided_ops(&self) -> usize {
+        self.elided
+    }
+
+    /// The loop-free worst-case fuel charge, when proven.
+    pub fn static_max_steps(&self) -> Option<u64> {
+        self.static_max_steps
+    }
+
+    /// The `(payload, scratch)` entry guards for elided accesses.
+    pub fn guards(&self) -> (u64, u64) {
+        (self.guard_pay, self.guard_scr)
     }
 }
 
@@ -658,6 +771,60 @@ fn op_stw_scr(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
     Ok(ip + 1)
 }
 
+// Unchecked fast-path memory handlers, selected by `compile_analyzed`
+// for ops whose address interval the analysis proved in bounds (and only
+// run behind the entry guards in `run`). Plain indexing, no fault
+// construction: a panic here would mean the analysis mis-proved a bound,
+// which the differential property harness exists to catch.
+
+fn op_ldb_pay_fast(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = m.payload[addr] as u64;
+    Ok(ip + 1)
+}
+
+fn op_ldb_scr_fast(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = m.scratch[addr] as u64;
+    Ok(ip + 1)
+}
+
+fn op_ldw_pay_fast(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = u64::from_le_bytes(m.payload[addr..addr + 8].try_into().unwrap());
+    Ok(ip + 1)
+}
+
+fn op_ldw_scr_fast(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = u64::from_le_bytes(m.scratch[addr..addr + 8].try_into().unwrap());
+    Ok(ip + 1)
+}
+
+fn op_stb_pay_fast(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.payload[addr] = m.regs[o.a] as u8;
+    Ok(ip + 1)
+}
+
+fn op_stb_scr_fast(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.scratch[addr] = m.regs[o.a] as u8;
+    Ok(ip + 1)
+}
+
+fn op_stw_pay_fast(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.payload[addr..addr + 8].copy_from_slice(&m.regs[o.a].to_le_bytes());
+    Ok(ip + 1)
+}
+
+fn op_stw_scr_fast(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.scratch[addr..addr + 8].copy_from_slice(&m.regs[o.a].to_le_bytes());
+    Ok(ip + 1)
+}
+
 // Superinstruction handlers.
 
 fn op_sltu_jz(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
@@ -675,6 +842,20 @@ fn op_ldb_add_pay(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usiz
 fn op_ldb_add_scr(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
     let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
     m.regs[o.a] = load_b(m.scratch, addr, o.c, o.orig_pc)?;
+    m.regs[o.d] = m.regs[o.e].wrapping_add(m.regs[o.f]);
+    Ok(ip + 1)
+}
+
+fn op_ldb_add_pay_fast(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = m.payload[addr] as u64;
+    m.regs[o.d] = m.regs[o.e].wrapping_add(m.regs[o.f]);
+    Ok(ip + 1)
+}
+
+fn op_ldb_add_scr_fast(o: &CompiledOp, ip: usize, m: &mut Machine<'_>) -> Result<usize> {
+    let addr = m.regs[o.b].wrapping_add(o.imm) as usize;
+    m.regs[o.a] = m.scratch[addr] as u64;
     m.regs[o.d] = m.regs[o.e].wrapping_add(m.regs[o.f]);
     Ok(ip + 1)
 }
@@ -945,6 +1126,128 @@ mod tests {
         assert_conformant(&prog, &got, &[], &VmConfig::default());
         // ... and with fuel exactly 1, the trap reports exhaustion.
         assert_conformant(&prog, &got, &[], &VmConfig { fuel: 1, scratch_bytes: 0 });
+    }
+
+    /// Like `assert_conformant`, but against the analyzed/elided build —
+    /// the fast path and its guard fallback must match the reference
+    /// byte for byte too.
+    fn assert_analyzed_conformant(
+        prog: &[Instr],
+        got: &GotTable,
+        payload: &[u8],
+        cfg: &VmConfig,
+    ) -> Option<VmOutcome> {
+        let facts = crate::vm::analysis::analyze(prog);
+        let compiled = compile_analyzed(prog.to_vec(), &facts);
+        let mut p_ref = payload.to_vec();
+        let mut p_cmp = payload.to_vec();
+        let r = run_reference(prog, got, &mut p_ref, &mut (), cfg);
+        let c = compiled.run(got, &mut p_cmp, &mut (), cfg);
+        assert_eq!(p_ref, p_cmp, "payload mutation diverged");
+        match (r, c) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a, b, "outcome diverged");
+                Some(a)
+            }
+            (Err(a), Err(b)) => {
+                assert_eq!(a.to_string(), b.to_string(), "fault diverged");
+                None
+            }
+            (a, b) => panic!("engines disagree: reference {a:?} vs analyzed {b:?}"),
+        }
+    }
+
+    #[test]
+    fn analyzed_header_reader_elides_and_matches() {
+        // Fixed-offset header reads — the builtin-ifunc shape the
+        // elision is aimed at.
+        let prog = verified(
+            &[
+                ins(Op::Ldw, 2, 0, 0, 0),
+                ins(Op::Ldw, 3, 0, 0, 8),
+                ins(Op::Add, 0, 2, 3, 0),
+                ins(Op::Halt, 0, 0, 0, 0),
+            ],
+            0,
+        );
+        let facts = crate::vm::analysis::analyze(&prog);
+        let compiled = compile_analyzed(prog.clone(), &facts);
+        assert_eq!(compiled.elided_ops(), 2);
+        assert_eq!(compiled.static_max_steps(), Some(4));
+        assert_eq!(compiled.guards(), (16, 0));
+        let got = GotTable::empty();
+        let mut payload = [0u8; 16];
+        payload[0] = 7;
+        payload[8] = 35;
+        let out =
+            assert_analyzed_conformant(&prog, &got, &payload, &VmConfig::default()).unwrap();
+        assert_eq!(out.ret, 42);
+        assert_eq!(out.steps, 4);
+        // Short payload: the entry guard fails and the whole run falls
+        // back to reference semantics — identical oob fault message.
+        assert!(assert_analyzed_conformant(&prog, &got, &[0u8; 10], &VmConfig::default())
+            .is_none());
+        // Fuel sweep across the static-skip threshold: accounting and
+        // exhaustion messages must stay identical on both loop variants.
+        for fuel in 0..6 {
+            assert_analyzed_conformant(
+                &prog,
+                &got,
+                &payload,
+                &VmConfig { fuel, scratch_bytes: 0 },
+            );
+        }
+    }
+
+    #[test]
+    fn analyzed_loop_keeps_checks_and_matches() {
+        let prog = checksum_prog();
+        let facts = crate::vm::analysis::analyze(&prog);
+        let compiled = compile_analyzed(prog.clone(), &facts);
+        assert_eq!(compiled.static_max_steps(), None, "loops keep fuel checks");
+        assert_eq!(compiled.elided_ops(), 0, "loop-indexed access stays checked");
+        let got = GotTable::empty();
+        for fuel in 0..40 {
+            assert_analyzed_conformant(
+                &prog,
+                &got,
+                &[1, 2, 3, 4, 5],
+                &VmConfig { fuel, scratch_bytes: 0 },
+            );
+        }
+    }
+
+    #[test]
+    fn analyzed_scratch_guard_respects_configured_size() {
+        // scratch[128] elides against the 64 KiB architectural cap, but
+        // a smaller configured scratch must take the checked fallback
+        // (and fault identically to the reference).
+        let prog = verified(
+            &[
+                ins(Op::Ldi, 1, 0, 0, 0xAB),
+                ins(Op::Ldi, 2, 0, 0, 128),
+                ins(Op::Stb, 1, 2, 1, 0),
+                ins(Op::Ldb, 0, 2, 1, 0),
+                ins(Op::Halt, 0, 0, 0, 0),
+            ],
+            0,
+        );
+        let facts = crate::vm::analysis::analyze(&prog);
+        let compiled = compile_analyzed(prog.clone(), &facts);
+        assert_eq!(compiled.elided_ops(), 2);
+        assert_eq!(compiled.guards().1, 129);
+        let got = GotTable::empty();
+        let out =
+            assert_analyzed_conformant(&prog, &got, &[], &VmConfig::default()).unwrap();
+        assert_eq!(out.ret, 0xAB);
+        for scratch_bytes in [0usize, 64, 129] {
+            assert_analyzed_conformant(
+                &prog,
+                &got,
+                &[],
+                &VmConfig { fuel: 1000, scratch_bytes },
+            );
+        }
     }
 
     #[test]

@@ -53,6 +53,97 @@ pub fn disasm_instr(i: &Instr, imports: Option<&[String]>) -> String {
     }
 }
 
+/// Parse one line of [`disasm_instr`] output back into an [`Instr`] —
+/// the inverse direction of the round-trip property (assemble →
+/// disassemble → reparse → byte-identical, asserted in
+/// `rust/tests/prop.rs`). Accepts exactly the canonical listing forms;
+/// unused operand fields come back zeroed, matching what the assembler
+/// emits. Returns `None` on anything else (including the `bad` space
+/// marker, whose original selector the listing does not preserve).
+pub fn parse_instr(text: &str) -> Option<Instr> {
+    fn reg(t: &str) -> Option<u8> {
+        t.strip_prefix('r')?.parse().ok()
+    }
+    fn num(t: &str) -> Option<u32> {
+        match t.strip_prefix("0x") {
+            Some(h) => u32::from_str_radix(h, 16).ok(),
+            None => t.parse().ok(),
+        }
+    }
+    fn space(t: &str) -> Option<u8> {
+        match t {
+            "pay" => Some(SPACE_PAYLOAD),
+            "scr" => Some(SPACE_SCRATCH),
+            _ => None,
+        }
+    }
+    /// `{space}[r{b}+{imm:#x}]` → (c, b, imm).
+    fn mem(t: &str) -> Option<(u8, u8, u32)> {
+        let open = t.find('[')?;
+        let c = space(&t[..open])?;
+        let inner = t[open + 1..].strip_suffix(']')?;
+        let (r, off) = inner.split_once('+')?;
+        Some((c, reg(r)?, num(off)?))
+    }
+    let text = text.trim();
+    let (mnemonic, rest) = match text.split_once(char::is_whitespace) {
+        Some((m, r)) => (m, r.trim()),
+        None => (text, ""),
+    };
+    let args: Vec<&str> =
+        if rest.is_empty() { Vec::new() } else { rest.split(',').map(str::trim).collect() };
+    let ins = |op, a, b, c, imm| Some(Instr { op, a, b, c, imm });
+    let three = |op: Op, args: &[&str]| match args {
+        [a, b, c] => ins(op, reg(a)?, reg(b)?, reg(c)?, 0),
+        _ => None,
+    };
+    match (mnemonic, args.as_slice()) {
+        ("halt", []) => ins(Op::Halt, 0, 0, 0, 0),
+        ("nop", []) => ins(Op::Nop, 0, 0, 0, 0),
+        ("ldi", [a, imm]) => ins(Op::Ldi, reg(a)?, 0, 0, num(imm)?),
+        ("ldih", [a, imm]) => ins(Op::Ldih, reg(a)?, 0, 0, num(imm)?),
+        ("mov", [a, b]) => ins(Op::Mov, reg(a)?, reg(b)?, 0, 0),
+        ("add", _) => three(Op::Add, &args),
+        ("sub", _) => three(Op::Sub, &args),
+        ("mul", _) => three(Op::Mul, &args),
+        ("divu", _) => three(Op::Divu, &args),
+        ("and", _) => three(Op::And, &args),
+        ("or", _) => three(Op::Or, &args),
+        ("xor", _) => three(Op::Xor, &args),
+        ("shl", _) => three(Op::Shl, &args),
+        ("shr", _) => three(Op::Shr, &args),
+        ("sltu", _) => three(Op::Sltu, &args),
+        ("eq", _) => three(Op::Eq, &args),
+        ("addi", [a, b, imm]) => ins(Op::Addi, reg(a)?, reg(b)?, 0, num(imm)?),
+        ("jmp", [t]) => ins(Op::Jmp, 0, 0, 0, num(t.strip_prefix('@')?)?),
+        ("jz", [a, t]) => ins(Op::Jz, reg(a)?, 0, 0, num(t.strip_prefix('@')?)?),
+        ("jnz", [a, t]) => ins(Op::Jnz, reg(a)?, 0, 0, num(t.strip_prefix('@')?)?),
+        ("call", [slot]) => {
+            // `got[{imm}]`, optionally followed by ` <name>`.
+            let slot = slot.split_whitespace().next()?;
+            ins(Op::Call, 0, 0, 0, num(slot.strip_prefix("got[")?.strip_suffix(']')?)?)
+        }
+        ("ldb", [a, m]) => {
+            let (c, b, imm) = mem(m)?;
+            ins(Op::Ldb, reg(a)?, b, c, imm)
+        }
+        ("ldw", [a, m]) => {
+            let (c, b, imm) = mem(m)?;
+            ins(Op::Ldw, reg(a)?, b, c, imm)
+        }
+        ("stb", [m, a]) => {
+            let (c, b, imm) = mem(m)?;
+            ins(Op::Stb, reg(a)?, b, c, imm)
+        }
+        ("stw", [m, a]) => {
+            let (c, b, imm) = mem(m)?;
+            ins(Op::Stw, reg(a)?, b, c, imm)
+        }
+        ("paylen", [a]) => ins(Op::Paylen, reg(a)?, 0, 0, 0),
+        _ => None,
+    }
+}
+
 /// Disassemble a full code section. Undecodable input yields an error
 /// string rather than panicking (it may be hostile bytes).
 pub fn disasm(code: &[u8], imports: Option<&[String]>) -> String {
@@ -99,6 +190,48 @@ mod tests {
     fn garbage_reports_instead_of_panicking() {
         let s = disasm(&[0xFF; 9], None);
         assert!(s.contains("undecodable"));
+    }
+
+    #[test]
+    fn parse_inverts_disasm_for_canonical_instrs() {
+        // Canonical = unused operand fields zero, exactly what the
+        // assembler emits. Cover every opcode with live fields.
+        let cases = [
+            Instr { op: Op::Halt, a: 0, b: 0, c: 0, imm: 0 },
+            Instr { op: Op::Nop, a: 0, b: 0, c: 0, imm: 0 },
+            Instr { op: Op::Ldi, a: 3, b: 0, c: 0, imm: 0xDEAD },
+            Instr { op: Op::Ldih, a: 15, b: 0, c: 0, imm: 0xBEEF },
+            Instr { op: Op::Mov, a: 1, b: 2, c: 0, imm: 0 },
+            Instr { op: Op::Add, a: 1, b: 2, c: 3, imm: 0 },
+            Instr { op: Op::Divu, a: 0, b: 9, c: 10, imm: 0 },
+            Instr { op: Op::Addi, a: 4, b: 4, c: 0, imm: 1 },
+            Instr { op: Op::Jmp, a: 0, b: 0, c: 0, imm: 12 },
+            Instr { op: Op::Jz, a: 5, b: 0, c: 0, imm: 0 },
+            Instr { op: Op::Jnz, a: 5, b: 0, c: 0, imm: 9 },
+            Instr { op: Op::Call, a: 0, b: 0, c: 0, imm: 2 },
+            Instr { op: Op::Ldb, a: 6, b: 2, c: 0, imm: 0x10 },
+            Instr { op: Op::Ldw, a: 6, b: 2, c: 1, imm: 0 },
+            Instr { op: Op::Stb, a: 6, b: 2, c: 1, imm: 0xFF },
+            Instr { op: Op::Stw, a: 6, b: 2, c: 0, imm: 8 },
+            Instr { op: Op::Paylen, a: 7, b: 0, c: 0, imm: 0 },
+        ];
+        for i in cases {
+            let text = disasm_instr(&i, None);
+            let back = parse_instr(&text).unwrap_or_else(|| panic!("unparsable: {text}"));
+            assert_eq!(back, i, "round trip of {text:?}");
+            assert_eq!(back.encode(), i.encode());
+        }
+    }
+
+    #[test]
+    fn parse_accepts_named_call_and_rejects_garbage() {
+        let i = Instr { op: Op::Call, a: 0, b: 0, c: 0, imm: 0 };
+        let named = disasm_instr(&i, Some(&["counter_add".to_string()]));
+        assert_eq!(parse_instr(&named), Some(i));
+        assert_eq!(parse_instr(""), None);
+        assert_eq!(parse_instr("frobnicate r1, r2"), None);
+        assert_eq!(parse_instr("ldb   r1, bad[r2+0x0]"), None, "lossy space selector");
+        assert_eq!(parse_instr("add   r1, r2"), None, "arity mismatch");
     }
 
     #[test]

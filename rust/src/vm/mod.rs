@@ -1,21 +1,34 @@
 //! TCVM — the portable injected-code substrate.
 //!
 //! Stands in for the paper's native `.text` + GOT-rewriting toolchain
-//! (DESIGN.md §2, row 2). Five pieces:
+//! (DESIGN.md §2, row 2). Six pieces, forming the target-side pipeline
+//! **verify → analyze → compile**:
 //!
 //! * [`isa`] — fixed-width register ISA the code sections are encoded in,
 //! * [`asm`] — source-side assembler (the "toolchain"),
-//! * [`verify`] — target-side static verifier (§3.5 security),
+//! * [`verify`] — target-side static verifier (§3.5 security):
+//!   structural soundness — fields decode, targets in range,
+//! * [`analysis`] — abstract interpretation over the verified program
+//!   (interval value ranges per register per pc). Produces a
+//!   [`ProgramFacts`]: which memory ops are provably in bounds (so
+//!   [`compile_analyzed`] can drop their dynamic checks behind a single
+//!   entry guard), a worst-case fuel bound for loop-free programs (so
+//!   the engine can skip per-block fuel checks), a fuel *floor* and
+//!   may-loop verdict for dispatcher admission, the reachable host-call
+//!   surface for [`CapabilityPolicy`] gating, and lints
+//!   (divide-by-constant-zero, unreachable code) with disassembly,
 //! * [`compile`] — target-side lowering of the verified program into a
 //!   threaded [`CompiledProgram`] (pre-resolved handlers, fused
-//!   superinstructions, block-level fuel). This is what the §3.4
-//!   hash-table cache stores, so repeat injections skip decode, verify
-//!   *and* compile,
+//!   superinstructions, block-level fuel, analysis-elided fast paths).
+//!   This is what the §3.4 hash-table cache stores, so repeat
+//!   injections skip decode, verify, analysis *and* compile,
 //! * [`got`] + [`interp`] — target-side linking (symbol resolution into a
 //!   GOT table) and execution. [`interp`] keeps the original match-loop
 //!   as [`run_reference`], the semantic ground truth the compiled engine
-//!   is differentially tested against (`rust/tests/prop.rs`).
+//!   is differentially tested against (`rust/tests/prop.rs`) — including
+//!   every analysis-elided fast path and its guard fallback.
 
+pub mod analysis;
 pub mod asm;
 pub mod compile;
 pub mod disasm;
@@ -24,9 +37,12 @@ pub mod interp;
 pub mod isa;
 pub mod verify;
 
+pub use analysis::{
+    analyze, AdmissionFacts, CapabilityPolicy, Interval, Lint, LintKind, ProgramFacts,
+};
 pub use asm::{Assembler, Label};
-pub use compile::{compile, compile_unfused, CompiledProgram};
-pub use disasm::{disasm, disasm_instr};
+pub use compile::{compile, compile_analyzed, compile_unfused, CompiledProgram};
+pub use disasm::{disasm, disasm_instr, parse_instr};
 pub use got::{GotTable, HostCtx, HostFn, SymbolTable};
 pub use interp::{VmConfig, VmOutcome, DEFAULT_FUEL};
 pub use isa::{decode_all, Instr, Op, INSTR_BYTES, MAX_INSTRS, NUM_REGS};

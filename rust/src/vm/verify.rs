@@ -16,7 +16,10 @@
 //! Dynamic properties (payload bounds, fuel) are enforced by the
 //! interpreter at run time.
 
-use super::isa::{decode_all, Instr, Op, MAX_INSTRS, NUM_REGS, SPACE_PAYLOAD, SPACE_SCRATCH};
+use super::disasm::disasm_instr;
+use super::isa::{
+    decode_all, Instr, Op, INSTR_BYTES, MAX_INSTRS, NUM_REGS, SPACE_PAYLOAD, SPACE_SCRATCH,
+};
 use crate::{Error, Result};
 
 /// Verify a raw code section against an import table of `n_imports` names.
@@ -39,35 +42,45 @@ pub fn verify(code: &[u8], n_imports: usize) -> Result<Vec<Instr>> {
     Ok(instrs)
 }
 
-fn reg(pc: usize, r: u8) -> Result<()> {
+/// Build a `Verify` error that locates the instruction (pc + byte
+/// offset) and shows its disassembly next to the specific violation.
+fn fail(pc: usize, i: &Instr, what: impl std::fmt::Display) -> Error {
+    Error::Verify(format!(
+        "pc {pc} (offset {:#x}): `{}`: {what}",
+        pc * INSTR_BYTES,
+        disasm_instr(i, None)
+    ))
+}
+
+fn reg(pc: usize, i: &Instr, r: u8) -> Result<()> {
     if (r as usize) < NUM_REGS {
         Ok(())
     } else {
-        Err(Error::Verify(format!("pc {pc}: register r{r} out of range")))
+        Err(fail(pc, i, format_args!("register r{r} out of range")))
     }
 }
 
-fn space(pc: usize, s: u8) -> Result<()> {
+fn space(pc: usize, i: &Instr, s: u8) -> Result<()> {
     if s == SPACE_PAYLOAD || s == SPACE_SCRATCH {
         Ok(())
     } else {
-        Err(Error::Verify(format!("pc {pc}: invalid memory space {s}")))
+        Err(fail(pc, i, format_args!("invalid memory space {s}")))
     }
 }
 
-fn target(pc: usize, imm: u32, n: usize) -> Result<()> {
+fn target(pc: usize, i: &Instr, imm: u32, n: usize) -> Result<()> {
     if (imm as usize) < n {
         Ok(())
     } else {
-        Err(Error::Verify(format!("pc {pc}: jump target {imm} outside code of {n} instrs")))
+        Err(fail(pc, i, format_args!("jump target {imm} outside code of {n} instrs")))
     }
 }
 
 fn check_instr(pc: usize, i: &Instr, n: usize, n_imports: usize) -> Result<()> {
     match i.op {
         Op::Halt | Op::Nop => Ok(()),
-        Op::Ldi | Op::Ldih | Op::Paylen => reg(pc, i.a),
-        Op::Mov => reg(pc, i.a).and_then(|_| reg(pc, i.b)),
+        Op::Ldi | Op::Ldih | Op::Paylen => reg(pc, i, i.a),
+        Op::Mov => reg(pc, i, i.a).and_then(|_| reg(pc, i, i.b)),
         Op::Add
         | Op::Sub
         | Op::Mul
@@ -78,22 +91,25 @@ fn check_instr(pc: usize, i: &Instr, n: usize, n_imports: usize) -> Result<()> {
         | Op::Shl
         | Op::Shr
         | Op::Sltu
-        | Op::Eq => reg(pc, i.a).and_then(|_| reg(pc, i.b)).and_then(|_| reg(pc, i.c)),
-        Op::Addi => reg(pc, i.a).and_then(|_| reg(pc, i.b)),
-        Op::Jmp => target(pc, i.imm, n),
-        Op::Jz | Op::Jnz => reg(pc, i.a).and_then(|_| target(pc, i.imm, n)),
+        | Op::Eq => {
+            reg(pc, i, i.a).and_then(|_| reg(pc, i, i.b)).and_then(|_| reg(pc, i, i.c))
+        }
+        Op::Addi => reg(pc, i, i.a).and_then(|_| reg(pc, i, i.b)),
+        Op::Jmp => target(pc, i, i.imm, n),
+        Op::Jz | Op::Jnz => reg(pc, i, i.a).and_then(|_| target(pc, i, i.imm, n)),
         Op::Call => {
             if (i.imm as usize) < n_imports {
                 Ok(())
             } else {
-                Err(Error::Verify(format!(
-                    "pc {pc}: CALL slot {} outside GOT of {n_imports} entries",
-                    i.imm
-                )))
+                Err(fail(
+                    pc,
+                    i,
+                    format_args!("CALL slot {} outside GOT of {n_imports} entries", i.imm),
+                ))
             }
         }
         Op::Ldb | Op::Ldw | Op::Stb | Op::Stw => {
-            reg(pc, i.a).and_then(|_| reg(pc, i.b)).and_then(|_| space(pc, i.c))
+            reg(pc, i, i.a).and_then(|_| reg(pc, i, i.b)).and_then(|_| space(pc, i, i.c))
         }
     }
 }
@@ -143,6 +159,40 @@ mod tests {
     fn bad_space_rejected() {
         let i = crate::vm::isa::Instr { op: Op::Ldb, a: 0, b: 0, c: 7, imm: 0 };
         assert!(verify(&i.encode(), 0).is_err());
+    }
+
+    /// Every structural rejection names the offending instruction: the
+    /// disassembled mnemonic and the byte offset appear in the message.
+    #[test]
+    fn errors_include_disasm_and_offset() {
+        // Second instruction bad → pc 1, byte offset 8.
+        let bad_mov = [
+            crate::vm::isa::Instr { op: Op::Nop, a: 0, b: 0, c: 0, imm: 0 },
+            crate::vm::isa::Instr { op: Op::Mov, a: 16, b: 0, c: 0, imm: 0 },
+        ];
+        let bytes: Vec<u8> = bad_mov.iter().flat_map(|i| i.encode()).collect();
+        let msg = verify(&bytes, 0).unwrap_err().to_string();
+        assert!(msg.contains("mov"), "mnemonic missing: {msg}");
+        assert!(msg.contains("pc 1 (offset 0x8)"), "location missing: {msg}");
+        assert!(msg.contains("register r16 out of range"), "{msg}");
+
+        let i = crate::vm::isa::Instr { op: Op::Jmp, a: 0, b: 0, c: 0, imm: 99 };
+        let msg = verify(&i.encode(), 0).unwrap_err().to_string();
+        assert!(msg.contains("jmp"), "mnemonic missing: {msg}");
+        assert!(msg.contains("offset 0x0"), "{msg}");
+        assert!(msg.contains("jump target"), "{msg}");
+
+        let mut a = Assembler::new();
+        a.call("f").halt();
+        let (code, _) = a.assemble();
+        let msg = verify(&code, 0).unwrap_err().to_string();
+        assert!(msg.contains("call"), "mnemonic missing: {msg}");
+        assert!(msg.contains("CALL slot"), "{msg}");
+
+        let i = crate::vm::isa::Instr { op: Op::Stw, a: 0, b: 0, c: 9, imm: 4 };
+        let msg = verify(&i.encode(), 0).unwrap_err().to_string();
+        assert!(msg.contains("stw"), "mnemonic missing: {msg}");
+        assert!(msg.contains("invalid memory space 9"), "{msg}");
     }
 
     #[test]

@@ -109,12 +109,17 @@ fn prop_verifier_total_on_garbage() {
     assert!(accepted > 0, "no random program ever verified");
 }
 
-/// Differential conformance: the compiled engine (fused and unfused) is
-/// equivalent to the reference interpreter on random *verified* programs
-/// — same return value, same retired-step count, same payload bytes on
-/// success; same fault kind (fuel / fell-off-end / div0 / oob / GOT /
-/// host) and same payload bytes on failure — across tiny fuel budgets
-/// (mid-block exhaustion) and moderate ones (loops that halt).
+/// Differential conformance: the compiled engine (fused, unfused, and
+/// **analyzed** — bounds checks elided where the abstract interpretation
+/// proved them redundant, per-block fuel checks skipped on proven-bound
+/// programs) is equivalent to the reference interpreter on random
+/// *verified* programs — same return value, same retired-step count,
+/// same payload bytes on success; same fault kind (fuel / fell-off-end /
+/// div0 / oob / GOT / host) and same payload bytes on failure — across
+/// tiny fuel budgets (mid-block exhaustion) and moderate ones (loops
+/// that halt). This is the soundness lock for check elision: an unsound
+/// `ProgramFacts` would surface here as a missing fault or a diverged
+/// payload.
 #[test]
 fn prop_compiled_engine_matches_reference() {
     use two_chains::vm::{Instr, Op, SymbolTable, VmConfig};
@@ -312,6 +317,7 @@ fn prop_compiled_engine_matches_reference() {
         });
         let fused = vm::compile(decoded.clone());
         let unfused = vm::compile_unfused(decoded.clone());
+        let analyzed = vm::compile_analyzed(decoded.clone(), &vm::analyze(&decoded));
         let base_payload = rng.bytes(rng.below(64) as usize);
 
         for fuel in [rng.below(64), rng.range(1_000, 5_000)] {
@@ -319,12 +325,16 @@ fn prop_compiled_engine_matches_reference() {
             let mut p_ref = base_payload.clone();
             let mut p_fus = base_payload.clone();
             let mut p_unf = base_payload.clone();
+            let mut p_ana = base_payload.clone();
             let r_ref = vm::run_reference(&decoded, &got, &mut p_ref, &mut (), &cfg);
             let r_fus = fused.run(&got, &mut p_fus, &mut (), &cfg);
             let r_unf = unfused.run(&got, &mut p_unf, &mut (), &cfg);
-            for (label, r_cmp, p_cmp) in
-                [("fused", &r_fus, &p_fus), ("unfused", &r_unf, &p_unf)]
-            {
+            let r_ana = analyzed.run(&got, &mut p_ana, &mut (), &cfg);
+            for (label, r_cmp, p_cmp) in [
+                ("fused", &r_fus, &p_fus),
+                ("unfused", &r_unf, &p_unf),
+                ("analyzed", &r_ana, &p_ana),
+            ] {
                 match (&r_ref, r_cmp) {
                     (Ok(a), Ok(b)) => {
                         assert_eq!(a, b, "case {case} fuel {fuel}: {label} outcome diverged");
@@ -347,6 +357,117 @@ fn prop_compiled_engine_matches_reference() {
     // Sanity: a healthy share of runs must actually halt cleanly, or the
     // generator degenerated into fault-only coverage.
     assert!(halted > 100, "only {halted} runs halted cleanly — generator too fault-heavy");
+}
+
+/// Disassembler/parser round trip: for any decodable instruction, the
+/// listing parses back, the reparse is canonical (unused operand fields
+/// zeroed) and byte-stable, and the listing text is a fixpoint —
+/// `disasm(parse(disasm(i))) == disasm(i)`.
+#[test]
+fn prop_disasm_parse_roundtrip() {
+    use two_chains::vm::isa::{Instr, Op};
+    use two_chains::vm::{disasm_instr, parse_instr};
+    let mut rng = XorShift::new(0xD15A);
+    for case in 0..800 {
+        let op = Op::from_u8(rng.below(26) as u8).unwrap();
+        let mem = matches!(op, Op::Ldb | Op::Ldw | Op::Stb | Op::Stw);
+        let i = Instr {
+            op,
+            a: rng.below(16) as u8,
+            b: rng.below(16) as u8,
+            c: if mem { rng.below(2) as u8 } else { rng.below(16) as u8 },
+            imm: rng.next_u64() as u32,
+        };
+        let text = disasm_instr(&i, None);
+        let parsed = parse_instr(&text)
+            .unwrap_or_else(|| panic!("case {case}: `{text}` did not parse"));
+        assert_eq!(parsed.op, i.op, "case {case}: `{text}`");
+        assert_eq!(disasm_instr(&parsed, None), text, "case {case}: text not a fixpoint");
+        // The reparse is canonical, so it round-trips byte-exactly.
+        let again = parse_instr(&text).unwrap();
+        assert_eq!(again.encode(), parsed.encode(), "case {case}: `{text}`");
+    }
+}
+
+/// Adversarial elision soundness: programs *designed* to look elidable
+/// while being out of bounds must keep their dynamic checks (or hit the
+/// entry-guard fallback) and fault byte-identically to the reference
+/// interpreter. A missing fault here means the abstract interpretation
+/// proved something false.
+#[test]
+fn prop_adversarial_elision_stays_checked() {
+    use two_chains::vm::isa::{SPACE_PAYLOAD, SPACE_SCRATCH};
+    use two_chains::vm::{Assembler, VmConfig};
+
+    let got = two_chains::vm::GotTable::empty();
+    let cfg = VmConfig { fuel: 1_000, scratch_bytes: 64 };
+
+    // Run `code` through reference and analyzed engines over several
+    // payload lengths; outcomes (including exact fault text) must match.
+    let check = |label: &str, code: &[u8], must_fault_at: &[usize]| {
+        let prog = vm::verify(code, 0).unwrap();
+        let facts = vm::analyze(&prog);
+        let analyzed = vm::compile_analyzed(prog.clone(), &facts);
+        for len in [0usize, 1, 8, 16, 63, 64, 256] {
+            let mut p_ref = vec![0xABu8; len];
+            let mut p_ana = p_ref.clone();
+            let r_ref = vm::run_reference(&prog, &got, &mut p_ref, &mut (), &cfg);
+            let r_ana = analyzed.run(&got, &mut p_ana, &mut (), &cfg);
+            match (&r_ref, &r_ana) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "{label} len {len}"),
+                (Err(a), Err(b)) => {
+                    assert_eq!(a.to_string(), b.to_string(), "{label} len {len}")
+                }
+                _ => panic!("{label} len {len}: {r_ref:?} vs {r_ana:?}"),
+            }
+            assert_eq!(p_ref, p_ana, "{label} len {len}: payload diverged");
+            if must_fault_at.contains(&len) {
+                assert!(r_ref.is_err(), "{label} len {len}: expected a fault");
+            }
+        }
+    };
+
+    // Paylen-derived index: addr == payload length is out of bounds for
+    // *every* payload. TOP interval → never elidable, always faults.
+    let mut a = Assembler::new();
+    a.paylen(1).ldb(2, 1, SPACE_PAYLOAD, 0).halt();
+    let (code, _) = a.assemble();
+    assert!(
+        !vm::analyze(&vm::verify(&code, 0).unwrap()).elidable[1],
+        "paylen-derived load must not be elided"
+    );
+    check("paylen-derived", &code, &[0, 1, 8, 16, 63, 64, 256]);
+
+    // Wrapping address arithmetic: base u64::MAX + imm 1 wraps to 0 at
+    // run time (defined ISA behavior), which the interval transfer must
+    // not prove in-bounds — the op stays checked and both engines agree
+    // on the wrapped semantics (fault only on the empty payload).
+    let mut a = Assembler::new();
+    a.ldi64(1, u64::MAX).ldb(2, 1, SPACE_PAYLOAD, 1).halt();
+    let (code, _) = a.assemble();
+    assert!(
+        !vm::analyze(&vm::verify(&code, 0).unwrap()).elidable.iter().any(|&e| e),
+        "wrapping address must not be elided"
+    );
+    check("wrapping-address", &code, &[0]);
+
+    // Guard fallback: a genuinely elidable 8-byte load at offset 8 needs
+    // a 16-byte payload; shorter payloads take the reference fallback
+    // and fault with the reference's exact message.
+    let mut a = Assembler::new();
+    a.ldw(0, 0, SPACE_PAYLOAD, 8).halt();
+    let (code, _) = a.assemble();
+    let facts = vm::analyze(&vm::verify(&code, 0).unwrap());
+    assert!(facts.elidable[0] && facts.pay_bound == 16, "expected an elided load");
+    check("guard-fallback", &code, &[0, 1, 8]);
+
+    // Scratch bound vs *configured* scratch: the analysis assumes the ISA
+    // scratch size; the entry guard must catch a smaller configured one
+    // (cfg.scratch_bytes = 64, store at offset 100).
+    let mut a = Assembler::new();
+    a.stb(0, 0, SPACE_SCRATCH, 100).halt();
+    let (code, _) = a.assemble();
+    check("small-scratch", &code, &[0, 1, 8, 16, 63, 64, 256]);
 }
 
 /// XOR ifunc: applying the injected transform twice restores any payload

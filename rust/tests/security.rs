@@ -116,6 +116,76 @@ fn runaway_loop_exhausts_fuel_not_the_host() {
     assert!(err.to_string().contains("fuel"), "{err}");
 }
 
+/// Capability gating (the analysis pass's third consumer): a target whose
+/// context restricts the host-call allowlist refuses injected code whose
+/// *reachable* call surface strays outside it — at link time, before a
+/// single instruction runs. The denial is counted, the hostile frame is
+/// consumed, and code within the envelope still executes afterwards.
+#[test]
+fn capability_gate_contains_unauthorized_host_calls() {
+    use two_chains::vm::CapabilityPolicy;
+
+    let fabric = Fabric::new(2, WireConfig::off());
+    let src = Context::new(fabric.node(0), ContextConfig::default()).unwrap();
+    let dst = Context::new(
+        fabric.node(1),
+        ContextConfig { caps: CapabilityPolicy::only(["log"]), ..Default::default() },
+    )
+    .unwrap();
+    let ws = Worker::new(&src);
+    let wd = Worker::new(&dst);
+    let ep = ws.connect(&wd).unwrap();
+    let mut ring = IfuncRing::new(&dst, 1 << 16).unwrap();
+
+    src.library_dir().install(Box::new(CounterIfunc::default()));
+    let h = src.register_ifunc("counter").unwrap();
+    let msg = h.msg_create(&SourceArgs::bytes(vec![0; 8])).unwrap();
+    ep.ifunc_msg_send_nbix(&msg, 0, ring.rkey()).unwrap();
+    ep.flush().unwrap();
+
+    let mut args = TargetArgs::none();
+    let err = dst.poll_ifunc_blocking(&mut ring, &mut args).unwrap_err();
+    assert!(err.to_string().contains("capability denied"), "{err}");
+    assert!(err.to_string().contains("counter_add"), "{err}");
+    assert_eq!(dst.symbols().counter_value(), 0, "denied code must never run");
+    assert_eq!(dst.analysis_stats().snapshot().1, 1, "denial is counted");
+    assert_eq!(ring.consumed, 1, "denied frame must be consumed");
+
+    // The target keeps serving code inside its envelope: a pure-compute
+    // ifunc with no reachable host calls executes fine.
+    struct PureIfunc;
+    impl two_chains::ifunc::IfuncLibrary for PureIfunc {
+        fn name(&self) -> &str {
+            "pure"
+        }
+        fn payload_get_max_size(&self, a: &SourceArgs) -> usize {
+            a.len()
+        }
+        fn payload_init(&self, p: &mut [u8], a: &SourceArgs) -> two_chains::Result<usize> {
+            p[..a.len()].copy_from_slice(a.as_bytes());
+            Ok(a.len())
+        }
+        fn code(&self) -> CodeImage {
+            let mut a = Assembler::new();
+            a.ldi(0, 7).halt();
+            let (vm_code, imports) = a.assemble();
+            CodeImage { imports, vm_code, hlo: vec![] }
+        }
+    }
+    src.library_dir().install(Box::new(PureIfunc));
+    let h2 = src.register_ifunc("pure").unwrap();
+    let msg2 = h2.msg_create(&SourceArgs::bytes(vec![0; 8])).unwrap();
+    let mut cursor = SenderCursor::new(ring.size());
+    cursor.place(msg.len()).unwrap();
+    ep.ifunc_msg_send_cursor(&msg2, &mut cursor, ring.rkey()).unwrap();
+    ep.flush().unwrap();
+    assert!(matches!(
+        dst.poll_ifunc(&mut ring, &mut args).unwrap(),
+        PollResult::Executed(_)
+    ));
+    assert_eq!(dst.analysis_stats().snapshot().1, 1, "no further denials");
+}
+
 #[test]
 fn unresolved_import_is_a_link_error() {
     let (src, dst, ep) = pair();
